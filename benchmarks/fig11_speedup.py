@@ -1,0 +1,52 @@
+"""Paper Figs 11/12 + §VII-C: speedup and energy vs the TPU-like baseline
+and UCNN, via the ScaleSim-flavoured analytical model (repro.perfmodel).
+
+Reports the paper-faithful serialized-baseline setting AND the
+conservative fair-overlap variant (DESIGN.md §7) — the gap between them is
+an explicit finding about where the paper's 2.61x comes from.
+"""
+from __future__ import annotations
+
+from repro.models.paper import PAPER_MODELS, fc_matrices
+from repro.perfmodel import compare_schemes
+
+PAPER_FIG11 = {"DS2": 2.75, "GNMT": 2.96, "Transformer": 2.50,
+               "Kaldi": 2.26, "PTBLM": 2.60}  # read off Fig 11 (avg 2.61)
+PAPER_FIG12 = 2.42  # average energy savings
+
+
+def main(fast: bool = False):
+    rows = []
+    names = ["Kaldi"] if fast else list(PAPER_MODELS)
+    geo = {"crew": 1.0, "ucnn": 1.0, "crew_e": 1.0}
+    for name in names:
+        mats = fc_matrices(PAPER_MODELS[name])
+        serial = compare_schemes(name, mats, overlap_baseline=False)
+        fair = compare_schemes(name, mats, overlap_baseline=True)
+        rows.append({
+            "bench": "fig11", "model": name,
+            "crew_speedup": round(serial["crew"]["speedup"], 2),
+            "crew_energy": round(serial["crew"]["energy_savings"], 2),
+            "ucnn_speedup": round(serial["ucnn"]["speedup"], 2),
+            "ucnn_energy": round(serial["ucnn"]["energy_savings"], 2),
+            "crew_speedup_fair_overlap": round(fair["crew"]["speedup"], 2),
+            "paper_crew_speedup": PAPER_FIG11[name],
+        })
+        geo["crew"] *= serial["crew"]["speedup"]
+        geo["ucnn"] *= serial["ucnn"]["speedup"]
+        geo["crew_e"] *= serial["crew"]["energy_savings"]
+    n = len(names)
+    rows.append({
+        "bench": "fig11-geomean", "model": "ALL",
+        "crew_speedup": round(geo["crew"] ** (1 / n), 2),
+        "crew_energy": round(geo["crew_e"] ** (1 / n), 2),
+        "ucnn_speedup": round(geo["ucnn"] ** (1 / n), 2),
+        "crew_over_ucnn": round((geo["crew"] / geo["ucnn"]) ** (1 / n), 2),
+        "paper": "2.61x / 2.42x / 1.25x / 2.10x",
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(r)

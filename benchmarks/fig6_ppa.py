@@ -1,0 +1,63 @@
+"""Paper Fig 5/6: PPA threshold sweep — extra compression vs distortion.
+
+Sweeps the Algorithm-1 threshold 0..20% in 5% steps (the paper's grid) and
+reports, per threshold: extra model compression over plain CREW, the
+fraction of rows whose indices lost a bit, and the moved weight mass (the
+distortion the paper bounds via end-task accuracy; the trained-LM
+end-to-end accuracy counterpart lives in examples/train_and_crew.py).
+Also reports the paper's aggressive 2-bit variant.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (analyze_matrix, aggregate_stats, layout_stats, ppa_layout,
+                        quantize_matrix)
+from repro.models.paper import PAPER_MODELS, fc_matrices
+
+
+def sweep_model(name: str, thresholds=(0.0, 0.05, 0.10, 0.15, 0.20),
+                max_bits: int = 1):
+    layouts = []
+    for lname, w in fc_matrices(PAPER_MODELS[name]):
+        qm = quantize_matrix(w)
+        layouts.append(analyze_matrix(qm.q))
+    base = aggregate_stats([layout_stats(l) for l in layouts])
+    rows = []
+    for thr in thresholds:
+        if thr == 0.0:
+            agg, approx, mass = base, 0, 0.0
+        else:
+            results = [ppa_layout(l, thr, max_bits=max_bits) for l in layouts]
+            agg = aggregate_stats([layout_stats(r.layout) for r in results])
+            approx = sum(r.rows_approximated for r in results)
+            n_rows = sum(l.n_in for l in layouts)
+            mass = sum(r.weight_mass_moved * l.n_in * l.n_out
+                       for r, l in zip(results, layouts)) / \
+                sum(l.n_in * l.n_out for l in layouts)
+            approx = approx / n_rows
+        rows.append({
+            "bench": f"fig6-ppa{max_bits}b", "model": name, "thr%": int(100 * thr),
+            "extra_compression%": round(
+                100 * (1 - agg.crew_bits_storage / base.crew_bits_storage), 1),
+            "rows_approximated%": round(100 * approx, 1) if thr else 0.0,
+            "weight_mass_moved%": round(100 * mass, 2) if thr else 0.0,
+        })
+    return rows
+
+
+def main(fast: bool = False):
+    rows = []
+    names = ["Kaldi"] if fast else ["Kaldi", "PTBLM", "Transformer"]
+    for name in names:
+        rows += sweep_model(name)
+    if not fast:
+        # the paper's aggressive 2-bit variant for Transformer/PTBLM
+        for name in ("Transformer", "PTBLM"):
+            rows += sweep_model(name, thresholds=(0.10,), max_bits=2)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(r)

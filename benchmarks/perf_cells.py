@@ -1,0 +1,75 @@
+"""§Perf hillclimb driver: the three chosen cells, baseline vs optimized.
+
+Cells (chosen per the §Perf selection rule):
+  A. granite-20b x prefill_32k  — most collective-bound baseline
+     (opt: GQA-group-sharded softmax carries + flash-attention kernel)
+  B. qwen2-0.5b x train_4k      — worst roofline fraction
+     (opt: DP-first parallelism rules, no grad-accumulation split)
+  C. granite-34b x decode_32k (crew) — most representative of the paper
+     (opt: int8 KV cache with native int8 attention, on top of CREW)
+
+Reads/writes experiments/dryrun (baseline) and experiments/dryrun_opt.
+Run the records first:
+  python -m repro.launch.dryrun --all ... --out experiments/dryrun
+  python -m repro.launch.dryrun --arch ... --variant opt --out experiments/dryrun_opt
+"""
+from __future__ import annotations
+
+import json
+import os
+
+BASE = os.path.join(os.path.dirname(__file__), "..", "experiments")
+
+CELLS = [
+    ("granite-20b", "prefill_32k", "dense"),
+    ("qwen2-0.5b", "train_4k", "dense"),
+    ("granite-34b", "decode_32k", "crew"),
+]
+
+
+def _load(root, arch, shape, mode, mesh="single"):
+    path = os.path.join(BASE, root, mesh, f"{arch}__{shape}__{mode}.json")
+    if not os.path.exists(path):
+        return None
+    r = json.load(open(path))
+    return r if r.get("status") == "ok" else None
+
+
+def main(fast: bool = False):
+    rows = []
+    for arch, shape, mode in CELLS:
+        base = _load("dryrun", arch, shape, mode)
+        opt = _load("dryrun_opt", arch, shape, mode)
+        for tag, rec in (("base", base), ("opt", opt)):
+            if rec is None:
+                rows.append({"bench": "perf-cells",
+                             "cell": f"{arch}/{shape}/{mode}", "variant": tag,
+                             "note": "record missing"})
+                continue
+            rf = rec["roofline"]
+            t_bound = max(rf["t_compute_s"], rf["t_memory_s"],
+                          rf["t_collective_s"])
+            ideal = rec["model_flops_per_dev"] / 197e12
+            rows.append({
+                "bench": "perf-cells", "cell": f"{arch}/{shape}/{mode}",
+                "variant": tag,
+                "t_comp_s": round(rf["t_compute_s"], 3),
+                "t_mem_s": round(rf["t_memory_s"], 3),
+                "t_coll_s": round(rf["t_collective_s"], 3),
+                "bound": rf["bound"],
+                "roofline_frac%": round(100 * ideal / t_bound, 2),
+            })
+        if base and opt:
+            tb = max(base["roofline"][k] for k in
+                     ("t_compute_s", "t_memory_s", "t_collective_s"))
+            to = max(opt["roofline"][k] for k in
+                     ("t_compute_s", "t_memory_s", "t_collective_s"))
+            rows.append({"bench": "perf-cells",
+                         "cell": f"{arch}/{shape}/{mode}",
+                         "variant": "gain", "speedup": round(tb / to, 2)})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(r)

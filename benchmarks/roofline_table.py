@@ -1,0 +1,44 @@
+"""§Roofline table: read the dry-run records and print the three-term
+roofline per (arch x shape x mesh x mode) — deliverable (g)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+BASE = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def load_records(mesh: str = "single"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(BASE, mesh, "*.json"))):
+        r = json.load(open(f))
+        if r.get("status") == "ok":
+            recs.append(r)
+    return recs
+
+
+def main(fast: bool = False, mesh: str = "single"):
+    rows = []
+    for r in load_records(mesh):
+        rf = r["roofline"]
+        rows.append({
+            "bench": f"roofline-{mesh}",
+            "cell": f"{r['arch']}/{r['shape']}/{r['mode']}",
+            "t_comp_ms": round(1e3 * rf["t_compute_s"], 3),
+            "t_mem_ms": round(1e3 * rf["t_memory_s"], 3),
+            "t_coll_ms": round(1e3 * rf["t_collective_s"], 3),
+            "bound": rf["bound"],
+            "hlo/model_flops": (round(r["hlo_over_model_flops"], 2)
+                                if r.get("hlo_over_model_flops") else None),
+            "fits": r["memory"]["fits_tpu_est"],
+        })
+    if not rows:
+        rows.append({"bench": f"roofline-{mesh}", "cell": "NO-RECORDS",
+                     "note": "run python -m repro.launch.dryrun --all first"})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(r)

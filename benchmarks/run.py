@@ -1,0 +1,51 @@
+"""Benchmark aggregator — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Default is the fast subset (CI-friendly); --full runs every paper model.
+Each module returns rows of dicts; they are printed as aligned key=value
+lines plus a trailing ``name,seconds,rows`` CSV block.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from . import fig6_ppa, fig11_speedup, perf_cells, roofline_table, \
+    tab1_unique_weights, tab2_compression, traffic
+
+MODULES = [
+    ("tab1_unique_weights", tab1_unique_weights),
+    ("tab2_compression", tab2_compression),
+    ("fig6_ppa", fig6_ppa),
+    ("fig11_speedup", fig11_speedup),
+    ("traffic", traffic),
+    ("roofline_table", roofline_table),
+    ("perf_cells", perf_cells),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="run every paper model (slower)")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    fast = not args.full
+
+    csv = ["name,seconds,rows"]
+    for name, mod in MODULES:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        rows = mod.main(fast=fast)
+        dt = time.time() - t0
+        print(f"\n=== {name} ({dt:.1f}s) ===")
+        for r in rows:
+            print("  " + "  ".join(f"{k}={v}" for k, v in r.items()))
+        csv.append(f"{name},{dt:.2f},{len(rows)}")
+    print("\n" + "\n".join(csv))
+
+
+if __name__ == "__main__":
+    main()

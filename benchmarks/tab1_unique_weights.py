@@ -1,0 +1,66 @@
+"""Paper Table I + Figs 1/3: unique weights per input neuron.
+
+Measures UW/I and MULs% on the paper's five DNNs (synthesized trained-like
+weights at the exact published FC dims), plus the distribution-sensitivity
+control (gaussian weights) that DESIGN.md §8 commits to reporting.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import analyze_matrix, layout_stats, aggregate_stats, quantize_matrix
+from repro.models.paper import PAPER_MODELS, fc_matrices
+
+PAPER_TABLE1 = {"DS2": (38, 1.67), "GNMT": (29, 0.57), "Transformer": (49, 3.77),
+                "Kaldi": (59, 2.95), "PTBLM": (43, 0.71)}
+
+
+def analyze_model(name: str, kind: str = "trained", seed: int = 0):
+    stats = []
+    for lname, w in fc_matrices(PAPER_MODELS[name], seed=seed, kind=kind):
+        qm = quantize_matrix(w)
+        stats.append(layout_stats(analyze_matrix(qm.q)))
+    return aggregate_stats(stats)
+
+
+def cumulative_under(name: str, threshold: int = 64, kind: str = "trained"):
+    """Fraction of input neurons with < `threshold` unique weights (Fig 1)."""
+    total = under = 0
+    for lname, w in fc_matrices(PAPER_MODELS[name], kind=kind):
+        qm = quantize_matrix(w)
+        uw = analyze_matrix(qm.q).unique_per_input
+        under += int((uw < threshold).sum())
+        total += uw.size
+    return under / total
+
+
+def main(fast: bool = False):
+    rows = []
+    names = list(PAPER_MODELS) if not fast else ["Kaldi", "PTBLM"]
+    for name in names:
+        agg = analyze_model(name)
+        frac64 = cumulative_under(name)
+        p_uw, p_muls = PAPER_TABLE1[name]
+        rows.append({
+            "bench": "tab1", "model": name,
+            "UW/I": round(agg.uw_per_input_mean, 1),
+            "MULs%": round(100 * agg.muls_fraction, 2),
+            "frac_under_64uw%": round(100 * frac64, 1),
+            "paper_UW/I": p_uw, "paper_MULs%": p_muls,
+        })
+        if not fast:
+            g = analyze_model(name, kind="gaussian")
+            rows.append({
+                "bench": "tab1-sensitivity", "model": name + "(gaussian)",
+                "UW/I": round(g.uw_per_input_mean, 1),
+                "MULs%": round(100 * g.muls_fraction, 2),
+                "frac_under_64uw%": round(
+                    100 * cumulative_under(name, kind="gaussian"), 1),
+                "paper_UW/I": "-", "paper_MULs%": "-",
+            })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(r)

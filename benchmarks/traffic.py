@@ -1,0 +1,79 @@
+"""TPU-side CREW value proposition: HBM weight traffic per decode step.
+
+For each assigned architecture, compare bytes-from-HBM per token for the
+weight stream under: dense bf16, dense int8, CREW (packed words + unique
+tables, the Pallas-kernel traffic), and the XLA-level CREW fallback
+(reconstruct-then-matmul: words + uniq + materialized W — what the dry-run
+measures without the fused kernel).  This is the table the §Perf
+hillclimbs of the decode cells are judged against.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.core.pack import elems_per_word
+from repro.models import build_model
+
+ASSUMED_WIDTH = 6  # measured network-wide max index width at 8-bit quant
+
+
+def weight_bytes(cfg, width: int = ASSUMED_WIDTH):
+    """Per-decode-token weight traffic (bytes) for the FC weights of one
+    full forward pass, by format.  MoE counts only routed (top-k) experts."""
+    import jax
+    import jax.numpy as jnp
+    api = build_model(cfg)
+    params = api.abstract_params(dtype=jnp.bfloat16)
+    epw = elems_per_word(width)
+    k = 1 << width
+    dense = dense_active = crew = crew_xla = 0
+
+    def moe_scale(path):
+        if cfg.moe and "/moe/" in path and "router" not in path:
+            return cfg.moe.top_k / cfg.moe.n_experts
+        return 1.0
+
+    def rec(path, node):
+        nonlocal dense, dense_active, crew, crew_xla
+        if isinstance(node, dict):
+            for key, val in node.items():
+                if key == "w" and hasattr(val, "ndim") and val.ndim >= 2 \
+                        and val.shape[-1] >= 128 and "router" not in path:
+                    n, m = val.shape[-2:]
+                    stack = int(np.prod(val.shape[:-2], initial=1))
+                    s = moe_scale(path + "/w")
+                    n_words = -(-m // epw)
+                    dense += stack * s * n * m * 2           # bf16
+                    dense_active += stack * s * n * m        # int8
+                    c = stack * s * (n * n_words * 4 + n * k * 2)
+                    crew += c                                # words + uniq
+                    crew_xla += c + stack * s * n * m * 2    # + W materialized
+                else:
+                    rec(f"{path}/{key}", val)
+
+    rec("", params)
+    return dense, dense_active, crew, crew_xla
+
+
+def main(fast: bool = False):
+    rows = []
+    archs = ["qwen2-0.5b", "granite-34b"] if fast else sorted(ARCHS)
+    for arch_id in archs:
+        cfg = ARCHS[arch_id]
+        dense, int8, crew, crew_xla = weight_bytes(cfg)
+        rows.append({
+            "bench": "traffic", "arch": arch_id,
+            "dense_bf16_GB": round(dense / 1e9, 2),
+            "int8_GB": round(int8 / 1e9, 2),
+            "crew_kernel_GB": round(crew / 1e9, 2),
+            "crew_xla_GB": round(crew_xla / 1e9, 2),
+            "crew_vs_bf16": round(dense / max(crew, 1), 2),
+            "crew_vs_int8": round(int8 / max(crew, 1), 2),
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(r)

@@ -1,0 +1,92 @@
+"""Train a small LM for a few hundred steps, then validate the paper's
+premise on *genuinely trained* weights (not synthetic):
+
+  * UW/I before vs after training (quantization-induced weight repetition),
+  * CREW storage/multiplication reduction on the trained checkpoint,
+  * PPA threshold sweep with the end-task metric (validation loss) — the
+    trained-model counterpart of paper Fig 6's accuracy-vs-compression.
+
+    PYTHONPATH=src python examples/train_and_crew.py [--steps 300]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.data import batch_for
+from repro.models import build_model
+from repro.serve import crewize_params
+from repro.train import adamw, cosine_warmup, init_state, make_loss_fn, make_train_step
+
+
+def eval_loss(api, params, cfg, *, steps=4, seed=1234):
+    loss_fn = make_loss_fn(api, remat=False, q_chunk=16, kv_chunk=16)
+    tot = 0.0
+    for i in range(steps):
+        batch = batch_for(cfg, 10_000 + i, 16, 64, seed=seed)
+        tot += float(loss_fn(params, batch)[0])
+    return tot / steps
+
+
+def uw_report(params, label):
+    _, report = crewize_params(params, min_cols=64)
+    agg = report.aggregate()
+    print(f"[crew] {label:14s} UW/I={agg.uw_per_input_mean:6.1f} "
+          f"MULs%={100*agg.muls_fraction:6.2f} "
+          f"storage {100*agg.storage_reduction:+6.1f}% "
+          f"(runtime {100*agg.runtime_reduction:+6.1f}%)")
+    return agg
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--wide", action="store_true",
+                    help="d_ff=1024 FC matrices — the paper's regime "
+                         "(CREW needs rows much longer than 2^q levels)")
+    args = ap.parse_args()
+
+    cfg = ARCHS["qwen2-0.5b"].reduced()
+    if args.wide:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, d_model=256, d_ff=1024, n_layers=4,
+                                  n_heads=4, n_kv=2, d_head=64, vocab=8192)
+    api = build_model(cfg)
+    opt = adamw(cosine_warmup(3e-3, 30, args.steps), weight_decay=0.01)
+    state = init_state(api, opt, jax.random.PRNGKey(0))
+    step_fn = jax.jit(make_train_step(api, opt, q_chunk=16, kv_chunk=16))
+
+    uw_init = uw_report(state.params, "at init")
+
+    t0 = time.time()
+    for i in range(args.steps):
+        state, m = step_fn(state, batch_for(cfg, i, args.batch, args.seq))
+        if i % 50 == 0 or i == args.steps - 1:
+            print(f"[train] step {i:4d} loss {float(m['loss']):.4f} "
+                  f"({time.time()-t0:.0f}s)")
+    uw_trained = uw_report(state.params, "after training")
+
+    base_loss = eval_loss(api, state.params, cfg)
+    print(f"\n[eval] dense validation loss {base_loss:.4f}")
+    print(f"{'thr%':>5s} {'val loss':>9s} {'delta':>8s} {'extra comp%':>12s}")
+    crew0, rep0 = crewize_params(state.params, min_cols=64)
+    loss0 = eval_loss(api, crew0, cfg)
+    print(f"{'0':>5s} {loss0:9.4f} {loss0-base_loss:+8.4f} {0.0:12.1f}")
+    bits0 = rep0.aggregate().crew_bits_storage
+    for thr in (0.05, 0.10, 0.20):
+        crew_t, rep_t = crewize_params(state.params, ppa_thr=thr, min_cols=64)
+        loss_t = eval_loss(api, crew_t, cfg)
+        extra = 100 * (1 - rep_t.aggregate().crew_bits_storage / bits0)
+        print(f"{int(100*thr):>5d} {loss_t:9.4f} {loss_t-base_loss:+8.4f} "
+              f"{extra:12.1f}")
+    print("\nOK — trained-weight UW statistics above validate the paper's "
+          "premise beyond synthetic weights.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Architecture registry: ``--arch <id>`` -> ModelConfig.
+
+Each assigned architecture has a module with its exact published dims; the
+paper's own five evaluation networks (DS2, GNMT, Transformer, Kaldi, PTBLM)
+are registered too so the paper benchmarks drive through the same API.
+"""
+from __future__ import annotations
+
+from .base import (
+    HybridCfg,
+    ModelConfig,
+    MoECfg,
+    ShapeConfig,
+    SHAPES,
+    SHAPES_BY_NAME,
+    SSMCfg,
+    XLSTMCfg,
+    runnable_shapes,
+)
+
+from . import (  # noqa: E402
+    granite_20b,
+    granite_34b,
+    hubert_xlarge,
+    mistral_nemo_12b,
+    moonshot_v1_16b_a3b,
+    olmoe_1b_7b,
+    phi_3_vision_4_2b,
+    qwen2_0_5b,
+    xlstm_125m,
+    zamba2_7b,
+)
+
+ARCHS = {
+    m.CONFIG.arch_id: m.CONFIG
+    for m in (
+        zamba2_7b,
+        qwen2_0_5b,
+        mistral_nemo_12b,
+        granite_20b,
+        granite_34b,
+        moonshot_v1_16b_a3b,
+        olmoe_1b_7b,
+        xlstm_125m,
+        hubert_xlarge,
+        phi_3_vision_4_2b,
+    )
+}
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in ARCHS:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(ARCHS)}")
+    return ARCHS[arch_id]
+
+
+def all_cells():
+    """Every runnable (arch, shape) pair — the dry-run/roofline work list."""
+    for arch_id, cfg in ARCHS.items():
+        for shape in runnable_shapes(cfg):
+            yield cfg, shape
+
+
+__all__ = [
+    "ARCHS", "get_config", "all_cells",
+    "ModelConfig", "ShapeConfig", "MoECfg", "SSMCfg", "HybridCfg", "XLSTMCfg",
+    "SHAPES", "SHAPES_BY_NAME", "runnable_shapes",
+]

@@ -1,0 +1,172 @@
+"""Model / shape / run configuration dataclasses.
+
+Every assigned architecture gets a module in this package exporting
+``CONFIG`` (exact published dims) built from these dataclasses; the
+registry maps ``--arch <id>`` to it.  ``reduced()`` returns a
+CPU-smoke-test-sized config of the same family.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+__all__ = ["MoECfg", "SSMCfg", "HybridCfg", "XLSTMCfg", "ModelConfig",
+           "ShapeConfig", "SHAPES", "runnable_shapes"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoECfg:
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    group_size: int = 512
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMCfg:
+    state: int = 64
+    head_dim: int = 64
+    expand: int = 2
+    chunk: int = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridCfg:
+    # one shared transformer block applied every `attn_every` SSM layers
+    attn_every: int = 9
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMCfg:
+    # layers alternate (mLSTM, sLSTM) pairs
+    mlstm_pf: float = 2.0
+    slstm_pf: float = 4.0 / 3.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    arch_id: str
+    family: str  # dense | moe | ssm_mamba | ssm_xlstm | hybrid | encoder | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    d_head: Optional[int] = None
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    mlp: str = "swiglu"  # "swiglu" (llama family) | "gelu" (gpt-bigcode)
+    moe: Optional[MoECfg] = None
+    ssm: Optional[SSMCfg] = None
+    hybrid: Optional[HybridCfg] = None
+    xlstm: Optional[XLSTMCfg] = None
+    # vlm: number of image patch embeddings prepended to the sequence
+    vision_patches: int = 0
+    # encoder: inputs are precomputed frame embeddings, no decode step
+    notes: str = ""
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head if self.d_head is not None else self.d_model // self.n_heads
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if the arch supports the long_500k cell (SSM/hybrid)."""
+        return self.family in ("ssm_mamba", "ssm_xlstm", "hybrid")
+
+    @property
+    def has_decode(self) -> bool:
+        return self.family != "encoder"
+
+    def reduced(self) -> "ModelConfig":
+        """Smoke-test-sized config of the same family (CPU-runnable)."""
+        return dataclasses.replace(
+            self,
+            arch_id=self.arch_id + "-reduced",
+            n_layers=max(2, min(4, self.n_layers)),
+            d_model=64,
+            n_heads=4,
+            n_kv=max(1, min(self.n_kv, 2)) if self.n_kv < self.n_heads else 4,
+            d_head=16,
+            d_ff=128 if self.d_ff else 0,
+            vocab=256,
+            vision_patches=8 if self.vision_patches else 0,
+            moe=MoECfg(n_experts=4, top_k=2, group_size=64) if self.moe else None,
+            ssm=SSMCfg(state=8, head_dim=16, expand=2, chunk=16) if self.ssm else None,
+            hybrid=HybridCfg(attn_every=2) if self.hybrid else None,
+            xlstm=self.xlstm,
+        )
+
+    def param_count(self) -> int:
+        """Analytical parameter count (embedding + blocks + head)."""
+        d, l, v = self.d_model, self.n_layers, self.vocab
+        hd = self.head_dim
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        if self.family in ("dense", "vlm", "encoder"):
+            attn = d * hd * (self.n_heads + 2 * self.n_kv) + self.n_heads * hd * d
+            ff_mult = 2 if (self.family == "encoder" or self.mlp == "gelu") else 3
+            blk = attn + ff_mult * d * self.d_ff
+            return emb + l * blk
+        if self.family == "moe":
+            attn = d * hd * (self.n_heads + 2 * self.n_kv) + self.n_heads * hd * d
+            blk = attn + self.moe.n_experts * 3 * d * self.d_ff + d * self.moe.n_experts
+            return emb + l * blk
+        if self.family == "ssm_mamba":
+            di = self.ssm.expand * d
+            blk = d * (2 * di + 2 * self.ssm.state + di // self.ssm.head_dim) + di * d
+            return emb + l * blk
+        if self.family == "hybrid":
+            di = self.ssm.expand * d
+            mamba_blk = d * (2 * di + 2 * self.ssm.state + di // self.ssm.head_dim) + di * d
+            attn = d * hd * (self.n_heads + 2 * self.n_kv) + self.n_heads * hd * d
+            shared = attn + 3 * d * self.d_ff
+            return emb + l * mamba_blk + shared
+        if self.family == "ssm_xlstm":
+            di = int(self.xlstm.mlstm_pf * d)
+            m_blk = d * 2 * di + 3 * di * di + di * d
+            s_blk = d * 4 * d + 4 * d * d // self.n_heads + 2 * d * int(self.xlstm.slstm_pf * d)
+            return emb + (l // 2) * (m_blk + s_blk)
+        raise ValueError(self.family)
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top_k experts only)."""
+        if self.family != "moe":
+            return self.param_count()
+        d, l = self.d_model, self.n_layers
+        hd = self.head_dim
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        attn = d * hd * (self.n_heads + 2 * self.n_kv) + self.n_heads * hd * d
+        blk = attn + self.moe.top_k * 3 * d * self.d_ff + d * self.moe.n_experts
+        return emb + l * blk
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Tuple[ShapeConfig, ...] = (
+    ShapeConfig("train_4k", 4096, 256, "train"),
+    ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    ShapeConfig("decode_32k", 32768, 128, "decode"),
+    ShapeConfig("long_500k", 524288, 1, "decode"),
+)
+
+SHAPES_BY_NAME = {s.name: s for s in SHAPES}
+
+
+def runnable_shapes(cfg: ModelConfig):
+    """Apply the mandated skip rules (DESIGN.md §4)."""
+    out = []
+    for s in SHAPES:
+        if s.kind == "decode" and not cfg.has_decode:
+            continue  # encoder-only: no decode step
+        if s.name == "long_500k" and not cfg.sub_quadratic:
+            continue  # full-attention archs skip 500k decode
+        out.append(s)
+    return tuple(out)

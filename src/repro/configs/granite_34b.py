@@ -1,0 +1,19 @@
+"""granite-34b — llama-arch code model, MQA. [arXiv:2405.04324; hf]
+
+88L d_model=6144 48H (GQA kv=1) d_ff=24576 vocab=49152.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="granite-34b",
+    family="dense",
+    n_layers=88,
+    d_model=6144,
+    n_heads=48,
+    n_kv=1,
+    d_head=128,
+    d_ff=24576,
+    vocab=49152,
+    mlp="gelu",  # gpt-bigcode-style 2-matrix MLP (arXiv:2405.04324)
+    notes="MQA kv=1: KV projections replicate under TP; long_500k skipped",
+)

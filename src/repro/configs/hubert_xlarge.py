@@ -1,0 +1,21 @@
+"""hubert-xlarge — encoder-only audio transformer. [arXiv:2106.07447; unverified]
+
+48L d_model=1280 16H d_ff=5120 vocab=504 (target codebook / CTC dim).
+The conv waveform frontend is a STUB per the assignment: input_specs()
+provides precomputed frame embeddings [B, S, d_model].
+No decode step -> decode_32k and long_500k are skipped.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="hubert-xlarge",
+    family="encoder",
+    n_layers=48,
+    d_model=1280,
+    n_heads=16,
+    n_kv=16,
+    d_head=80,
+    d_ff=5120,
+    vocab=504,
+    notes="encoder-only: no decode shapes; audio frontend stubbed",
+)

@@ -1,0 +1,20 @@
+"""mistral-nemo-12b — dense GQA, 128k ctx.
+[hf:mistralai/Mistral-Nemo-Base-2407; hf]
+
+40L d_model=5120 32H (GQA kv=8) d_ff=14336 vocab=131072, head_dim=128.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="mistral-nemo-12b",
+    family="dense",
+    n_layers=40,
+    d_model=5120,
+    n_heads=32,
+    n_kv=8,
+    d_head=128,
+    d_ff=14336,
+    vocab=131072,
+    rope_theta=1e6,
+    notes="full attention -> long_500k skipped",
+)

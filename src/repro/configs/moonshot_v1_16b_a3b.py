@@ -1,0 +1,22 @@
+"""moonshot-v1-16b-a3b (kimi/moonlight) — MoE 64e top-6.
+[hf:moonshotai/Moonlight-16B-A3B; hf]
+
+48L d_model=2048 16H (GQA kv=16) d_ff=1408 (per expert) vocab=163840,
+MoE 64 experts top-6.  Moonlight's shared expert and first-dense-layer are
+omitted (uniform MoE stack keeps the layer scan; noted in DESIGN.md §4).
+"""
+from .base import ModelConfig, MoECfg
+
+CONFIG = ModelConfig(
+    arch_id="moonshot-v1-16b-a3b",
+    family="moe",
+    n_layers=48,
+    d_model=2048,
+    n_heads=16,
+    n_kv=16,
+    d_head=128,
+    d_ff=1408,
+    vocab=163840,
+    moe=MoECfg(n_experts=64, top_k=6),
+    notes="full attention -> long_500k skipped",
+)

@@ -1,0 +1,19 @@
+"""olmoe-1b-7b — MoE 64e top-8. [arXiv:2409.02060; hf]
+
+16L d_model=2048 16H (GQA kv=16) d_ff=1024 (per expert) vocab=50304.
+"""
+from .base import ModelConfig, MoECfg
+
+CONFIG = ModelConfig(
+    arch_id="olmoe-1b-7b",
+    family="moe",
+    n_layers=16,
+    d_model=2048,
+    n_heads=16,
+    n_kv=16,
+    d_head=128,
+    d_ff=1024,
+    vocab=50304,
+    moe=MoECfg(n_experts=64, top_k=8),
+    notes="full attention -> long_500k skipped",
+)

@@ -1,0 +1,22 @@
+"""phi-3-vision-4.2b — phi3-mini text backbone + CLIP vision stub.
+[hf:microsoft/Phi-3-vision-128k-instruct; hf]
+
+32L d_model=3072 32H (kv=32) d_ff=8192 vocab=32064.  The CLIP tower is a
+STUB per the assignment: input_specs() provides precomputed patch
+embeddings [B, P, d_model] prepended to the token sequence.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="phi-3-vision-4.2b",
+    family="vlm",
+    n_layers=32,
+    d_model=3072,
+    n_heads=32,
+    n_kv=32,
+    d_head=96,
+    d_ff=8192,
+    vocab=32064,
+    vision_patches=576,
+    notes="vision frontend stubbed; full attention -> long_500k skipped",
+)

@@ -1,0 +1,21 @@
+"""qwen2-0.5b — dense GQA with QKV bias. [arXiv:2407.10671; hf]
+
+24L d_model=896 14H (GQA kv=2) d_ff=4864 vocab=151936.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="qwen2-0.5b",
+    family="dense",
+    n_layers=24,
+    d_model=896,
+    n_heads=14,
+    n_kv=2,
+    d_head=64,
+    d_ff=4864,
+    vocab=151936,
+    qkv_bias=True,
+    rope_theta=1e6,
+    tie_embeddings=True,
+    notes="full attention -> long_500k skipped",
+)

@@ -1,0 +1,19 @@
+"""xlstm-125m — sLSTM + mLSTM blocks. [arXiv:2405.04517; unverified]
+
+12L d_model=768 4H d_ff=0 (no separate FFN; mLSTM pf=2, sLSTM pf=4/3)
+vocab=50304.  Layers alternate (mLSTM, sLSTM) pairs (6 of each).
+"""
+from .base import ModelConfig, XLSTMCfg
+
+CONFIG = ModelConfig(
+    arch_id="xlstm-125m",
+    family="ssm_xlstm",
+    n_layers=12,
+    d_model=768,
+    n_heads=4,
+    n_kv=4,
+    d_ff=0,
+    vocab=50304,
+    xlstm=XLSTMCfg(),
+    notes="recurrent (O(1) state) -> long_500k runs",
+)

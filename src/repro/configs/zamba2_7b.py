@@ -1,0 +1,26 @@
+"""zamba2-7b — hybrid Mamba2 backbone + shared attention blocks.
+
+[arXiv:2411.15242; unverified]  81L d_model=3584 32H (GQA kv=32)
+d_ff=14336 vocab=32000, ssm_state=64.
+
+Zamba2 applies a *shared* transformer block (one set of weights reused at
+every application) interleaved with the Mamba2 backbone.  We apply it every
+9 Mamba2 layers (81 = 9x9 keeps the layer scan uniform; the paper uses ~6 —
+FLOPs delta < 2 %, noted in DESIGN.md §4).
+"""
+from .base import HybridCfg, ModelConfig, SSMCfg
+
+CONFIG = ModelConfig(
+    arch_id="zamba2-7b",
+    family="hybrid",
+    n_layers=81,
+    d_model=3584,
+    n_heads=32,
+    n_kv=32,
+    d_head=112,
+    d_ff=14336,
+    vocab=32000,
+    ssm=SSMCfg(state=64, head_dim=64, expand=2),
+    hybrid=HybridCfg(attn_every=9),
+    notes="Mamba2 + shared attn block; sub-quadratic -> long_500k runs",
+)

@@ -1,0 +1,44 @@
+"""CREW core — the paper's contribution as a composable JAX module.
+
+Offline pipeline (numpy): quantize -> analyze -> (PPA) -> pack.
+Runtime (jnp pytrees): CrewMatrixUniform / CrewMatrixVar + matmul paths.
+Pallas TPU kernels live in repro.kernels and consume these containers.
+"""
+from .quant import QuantConfig, QuantizedMatrix, quantize_matrix, dequantize_matrix
+from .unique import CrewLayout, RowUnique, analyze_matrix, reconstruct, index_width
+from .pack import (
+    pack_bits_straddled,
+    unpack_bits_straddled,
+    straddled_size_bits,
+    pack_rows_word_aligned,
+    unpack_rows_word_aligned,
+    build_width_classes,
+    elems_per_word,
+)
+from .ppa import PPAResult, ppa_layout, ppa_row, force_max_unique
+from .convert import (
+    CrewMatrixUniform,
+    CrewMatrixVar,
+    crew_uniform_from_dense,
+    crew_var_from_dense,
+    crew_reconstruct_uniform,
+    crew_reconstruct_var,
+    crew_matmul_uniform,
+    crew_matmul_var,
+    unpack_words,
+)
+from .stats import CrewStats, layout_stats, aggregate_stats, unique_histogram, frequency_histogram
+
+__all__ = [
+    "QuantConfig", "QuantizedMatrix", "quantize_matrix", "dequantize_matrix",
+    "CrewLayout", "RowUnique", "analyze_matrix", "reconstruct", "index_width",
+    "pack_bits_straddled", "unpack_bits_straddled", "straddled_size_bits",
+    "pack_rows_word_aligned", "unpack_rows_word_aligned", "build_width_classes",
+    "elems_per_word",
+    "PPAResult", "ppa_layout", "ppa_row", "force_max_unique",
+    "CrewMatrixUniform", "CrewMatrixVar", "crew_uniform_from_dense",
+    "crew_var_from_dense", "crew_reconstruct_uniform", "crew_reconstruct_var",
+    "crew_matmul_uniform", "crew_matmul_var", "unpack_words",
+    "CrewStats", "layout_stats", "aggregate_stats", "unique_histogram",
+    "frequency_histogram",
+]

@@ -1,0 +1,279 @@
+"""Dense <-> CREW conversion and the XLA (pure-jnp) CREW matmul paths.
+
+Runtime representations (JAX pytrees):
+
+* ``CrewMatrixUniform`` — single index width for the whole matrix
+  (DESIGN.md §3 "uniform mode").  Structure is identical across layers, so
+  converted networks remain `lax.scan`-stackable and TP-shardable.  This is
+  the deployment format used by the big-architecture serve paths.
+
+* ``CrewMatrixVar`` — per-row variable widths grouped into word-aligned
+  width classes (paper-faithful compression).  Used by the paper-model
+  benchmarks and the kernel tests.
+
+XLA apply strategies (the Pallas kernel lives in repro/kernels):
+
+* ``dense``  — decompress W = uniq[i, idx[i, j]] then ``x @ W``.  Keeps the
+  paper's *storage/bandwidth* saving (packed indices are what stream from
+  HBM), spends MXU FLOPs to skip the irregular accumulation.  Best for
+  compute-rich shapes (prefill/training-like).
+* ``gather`` — memoized partial products ``P[b, i, k] = x[b, i] * uniq[i, k]``
+  then an indexed sum over rows (the paper's actual dataflow).  Best for
+  memory-bound decode; the blocked variant bounds the [B, N, Mblk]
+  intermediate.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..utils.pytree import register_dataclass_pytree, static_field
+from . import pack as packlib
+from .ppa import force_max_unique, ppa_layout
+from .quant import QuantConfig, quantize_matrix
+from .unique import CrewLayout, analyze_matrix, index_width
+
+__all__ = [
+    "CrewMatrixUniform",
+    "CrewMatrixVar",
+    "crew_uniform_from_dense",
+    "crew_var_from_dense",
+    "crew_reconstruct_uniform",
+    "crew_reconstruct_var",
+    "crew_matmul_uniform",
+    "crew_matmul_var",
+    "unpack_words",
+]
+
+
+# --------------------------------------------------------------------------
+# jnp word unpack (runtime analogue of pack.unpack_rows_word_aligned)
+# --------------------------------------------------------------------------
+
+def unpack_words(words: jnp.ndarray, width: int, m: int) -> jnp.ndarray:
+    """words[..., R, W] uint32 -> idx[..., R, M] int32 (shift+mask decode)."""
+    epw = 32 // width
+    shifts = (jnp.arange(epw, dtype=jnp.uint32) * np.uint32(width))
+    mask = np.uint32((1 << width) - 1)
+    fields = (words[..., :, :, None] >> shifts) & mask  # [..., R, W, epw]
+    flat = fields.reshape(*words.shape[:-1], -1)
+    return flat[..., :m].astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# Pytree containers
+# --------------------------------------------------------------------------
+
+@register_dataclass_pytree
+class CrewMatrixUniform:
+    """CREW-compressed [N, M] matrix with one index width for every row.
+
+    words:  [N, W] uint32 packed indices (W = ceil(M_pad/epw)).
+    uniq:   [N, K] dequantized unique values (compute dtype), rows padded
+            with their last value.
+    width:  static index bit width (K == 2**width unless K padded smaller).
+    n_out:  static logical M.
+    """
+
+    words: jnp.ndarray
+    uniq: jnp.ndarray
+    width: int = static_field()
+    n_out: int = static_field()
+
+    @property
+    def n_in(self) -> int:
+        return self.uniq.shape[0]
+
+    @property
+    def k(self) -> int:
+        return self.uniq.shape[1]
+
+
+@register_dataclass_pytree
+class CrewWidthClass:
+    """One width class of a variable-width CREW matrix."""
+
+    row_ids: jnp.ndarray  # [R] int32, rows of the original matrix
+    words: jnp.ndarray    # [R, W] uint32
+    uniq: jnp.ndarray     # [R, 2**width] dequantized values
+    width: int = static_field()
+
+
+@register_dataclass_pytree
+class CrewMatrixVar:
+    """Paper-faithful variable-width CREW matrix as width classes."""
+
+    classes: Tuple[CrewWidthClass, ...]
+    n_in: int = static_field()
+    n_out: int = static_field()
+
+
+# --------------------------------------------------------------------------
+# Conversion (offline, numpy in / pytree out)
+# --------------------------------------------------------------------------
+
+def _dequant_table(layout: CrewLayout, k: int, scale: np.ndarray, dtype) -> np.ndarray:
+    table = layout.padded_unique_table(k).astype(np.float32)
+    return (table * float(scale)).astype(dtype)
+
+
+def crew_uniform_from_dense(
+    w: np.ndarray,
+    *,
+    bits: int = 8,
+    max_unique: Optional[int] = None,
+    ppa_thr: Optional[float] = None,
+    dtype=jnp.bfloat16,
+    qcfg: Optional[QuantConfig] = None,
+):
+    """Quantize + CREW-decompose + (optionally) PPA + uniform-width pack.
+
+    Returns (CrewMatrixUniform, CrewLayout, QuantizedMatrix).  With
+    ``max_unique=None`` the width is the max over rows (lossless vs the
+    quantized model); a smaller cap invokes ``force_max_unique``.
+    """
+    qcfg = qcfg or QuantConfig(bits=bits)
+    qm = quantize_matrix(w, qcfg)
+    layout = analyze_matrix(qm.q)
+    if ppa_thr is not None:
+        layout = ppa_layout(layout, ppa_thr).layout
+    if max_unique is not None and layout.max_unique() > max_unique:
+        layout = force_max_unique(layout, max_unique).layout
+    width = index_width(layout.max_unique())
+    k = 1 << width
+    words = packlib.pack_rows_word_aligned(layout.idx, width)
+    uniq = _dequant_table(layout, k, qm.scale, np.float32)
+    cm = CrewMatrixUniform(
+        words=jnp.asarray(words),
+        uniq=jnp.asarray(uniq, dtype=dtype),
+        width=width,
+        n_out=w.shape[1],
+    )
+    return cm, layout, qm
+
+
+def crew_var_from_dense(
+    w: np.ndarray,
+    *,
+    bits: int = 8,
+    ppa_thr: Optional[float] = None,
+    dtype=jnp.bfloat16,
+    qcfg: Optional[QuantConfig] = None,
+):
+    """Quantize + CREW-decompose + variable-width width-class pack."""
+    qcfg = qcfg or QuantConfig(bits=bits)
+    qm = quantize_matrix(w, qcfg)
+    layout = analyze_matrix(qm.q)
+    if ppa_thr is not None:
+        layout = ppa_layout(layout, ppa_thr).layout
+    classes = []
+    for c in packlib.build_width_classes(layout.idx, layout.widths):
+        k = 1 << c.width
+        sub_rows = [layout.rows[i] for i in c.row_ids]
+        table = np.zeros((len(sub_rows), k), dtype=np.float32)
+        for r, row in enumerate(sub_rows):
+            table[r, : row.n_unique] = row.values
+            table[r, row.n_unique :] = row.values[-1]
+        table *= float(qm.scale)
+        classes.append(
+            CrewWidthClass(
+                row_ids=jnp.asarray(c.row_ids),
+                words=jnp.asarray(c.words),
+                uniq=jnp.asarray(table, dtype=dtype),
+                width=c.width,
+            )
+        )
+    cm = CrewMatrixVar(classes=tuple(classes), n_in=w.shape[0], n_out=w.shape[1])
+    return cm, layout, qm
+
+
+# --------------------------------------------------------------------------
+# Reconstruction (for exactness tests) and apply paths
+# --------------------------------------------------------------------------
+
+def crew_reconstruct_uniform(cm: CrewMatrixUniform) -> jnp.ndarray:
+    """Decompress to the dequantized dense matrix W'[N, M]."""
+    idx = unpack_words(cm.words, cm.width, cm.n_out)
+    return jnp.take_along_axis(cm.uniq, idx, axis=1)
+
+
+def crew_reconstruct_var(cm: CrewMatrixVar) -> jnp.ndarray:
+    w = jnp.zeros((cm.n_in, cm.n_out), dtype=cm.classes[0].uniq.dtype)
+    for c in cm.classes:
+        idx = unpack_words(c.words, c.width, cm.n_out)
+        w = w.at[c.row_ids].set(jnp.take_along_axis(c.uniq, idx, axis=1))
+    return w
+
+
+def _gather_blocked(x, uniq, idx, block_m: int):
+    """out[b, j] = sum_i x[b, i] * uniq[i, idx[i, j]] with M blocked.
+
+    P = x[:, :, None] * uniq stays resident ([B, N, K]); each M-block
+    gathers [B, N, blk] then reduces — the XLA sketch of the Pallas
+    dataflow (kernel keeps the block in VMEM instead).
+    """
+    b, n = x.shape
+    m = idx.shape[1]
+    p = x[:, :, None] * uniq[None]  # [B, N, K]
+    n_blocks = (m + block_m - 1) // block_m
+    m_pad = n_blocks * block_m
+    idx_p = jnp.pad(idx, ((0, 0), (0, m_pad - m)))
+    idx_b = idx_p.T.reshape(n_blocks, block_m, n)  # [nb, blk, N]
+
+    def one_block(ib):  # ib: [blk, N]
+        # gathered[b, i, j] = p[b, i, ib[j, i]]
+        g = jnp.take_along_axis(p, ib.T[None], axis=2)  # [B, N, blk]
+        return g.sum(axis=1)                            # [B, blk]
+
+    out = jax.lax.map(one_block, idx_b)  # [nb, B, blk]
+    out = jnp.moveaxis(out, 0, 1).reshape(b, m_pad)
+    return out[:, :m]
+
+
+def crew_matmul_uniform(
+    x: jnp.ndarray,
+    cm: CrewMatrixUniform,
+    *,
+    strategy: str = "dense",
+    block_m: int = 1024,
+) -> jnp.ndarray:
+    """x[..., N] @ crew(W[N, M]) -> [..., M] via the XLA path."""
+    lead = x.shape[:-1]
+    xb = x.reshape(-1, x.shape[-1])
+    if strategy == "dense":
+        w = crew_reconstruct_uniform(cm).astype(x.dtype)
+        out = xb @ w
+    elif strategy == "gather":
+        idx = unpack_words(cm.words, cm.width, cm.n_out)
+        out = _gather_blocked(xb, cm.uniq.astype(x.dtype), idx, block_m)
+    else:
+        raise ValueError(f"unknown strategy {strategy!r}")
+    return out.reshape(*lead, cm.n_out)
+
+
+def crew_matmul_var(
+    x: jnp.ndarray,
+    cm: CrewMatrixVar,
+    *,
+    strategy: str = "gather",
+    block_m: int = 1024,
+) -> jnp.ndarray:
+    """Variable-width apply: sum of per-width-class contributions."""
+    lead = x.shape[:-1]
+    xb = x.reshape(-1, x.shape[-1])
+    out = jnp.zeros((xb.shape[0], cm.n_out), dtype=x.dtype)
+    for c in cm.classes:
+        xc = xb[:, c.row_ids]  # [B, R]
+        idx = unpack_words(c.words, c.width, cm.n_out)
+        if strategy == "dense":
+            wc = jnp.take_along_axis(c.uniq, idx, axis=1).astype(x.dtype)
+            out = out + xc @ wc
+        elif strategy == "gather":
+            out = out + _gather_blocked(xc, c.uniq.astype(x.dtype), idx, block_m)
+        else:
+            raise ValueError(f"unknown strategy {strategy!r}")
+    return out.reshape(*lead, cm.n_out)

@@ -1,0 +1,177 @@
+"""Index bit-packing — paper §IV-A / §V-B, TPU-adapted per DESIGN.md §3.
+
+Two formats:
+
+1. **Straddled storage format** (paper-faithful).  Indices of row i are
+   written as width_i-bit fields, bit-contiguous, rows concatenated; a 3-bit
+   side channel per row records width_i (paper: "a single value of three
+   bits per input neuron").  This is the *model file* format and what the
+   storage-reduction numbers (paper Table II) are computed from.  Pure
+   NumPy, offline.
+
+2. **Word-aligned runtime format** (TPU adaptation).  Rows are permuted
+   into *width classes* (all rows sharing a width w), and each row packs
+   floor(32/w) indices per uint32 with no straddling, so in-register decode
+   is a shift+mask — the vectorized replacement for the paper's per-PE
+   hardware decoder.  Padding overhead vs format 1 is <= 32 % worst-case
+   (w=7 -> 4/word) and ~7 % typical; EXPERIMENTS.md reports both sizes.
+
+Both formats round-trip exactly; the hypothesis tests sweep widths 1..8.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import numpy as np
+
+__all__ = [
+    "pack_bits_straddled",
+    "unpack_bits_straddled",
+    "straddled_size_bits",
+    "elems_per_word",
+    "pack_rows_word_aligned",
+    "unpack_rows_word_aligned",
+    "WidthClass",
+    "build_width_classes",
+]
+
+ROW_WIDTH_SIDE_CHANNEL_BITS = 3  # paper §V-B
+
+
+# --------------------------------------------------------------------------
+# Format 1: straddled bitstream (storage / model file)
+# --------------------------------------------------------------------------
+
+def pack_bits_straddled(idx: np.ndarray, widths: np.ndarray) -> np.ndarray:
+    """Pack idx[N, M] with per-row bit widths into a uint8 bitstream.
+
+    Bit order: row-major, little-endian within the stream (bit b of the
+    stream is bit b%8 of byte b//8).
+    """
+    n, m = idx.shape
+    widths = np.asarray(widths, dtype=np.int64)
+    total_bits = int((widths * m).sum())
+    out = np.zeros(((total_bits + 7) // 8,), dtype=np.uint8)
+    bitpos = 0
+    for i in range(n):
+        w = int(widths[i])
+        row = idx[i].astype(np.uint64)
+        if np.any(row >= (1 << w)):
+            raise ValueError(f"row {i}: index exceeds {w} bits")
+        # Vectorized scatter of w-bit fields into the byte stream.
+        starts = bitpos + w * np.arange(m, dtype=np.int64)
+        for b in range(w):
+            pos = starts + b
+            bit = ((row >> np.uint64(b)) & np.uint64(1)).astype(np.int64)
+            np.bitwise_or.at(out, pos >> 3, (bit << (pos & 7)).astype(np.uint8))
+        bitpos += w * m
+    return out
+
+
+def unpack_bits_straddled(stream: np.ndarray, widths: np.ndarray, m: int) -> np.ndarray:
+    """Inverse of pack_bits_straddled -> idx[N, M] int32."""
+    widths = np.asarray(widths, dtype=np.int64)
+    n = widths.size
+    idx = np.zeros((n, m), dtype=np.int64)
+    bitpos = 0
+    bits = np.unpackbits(stream, bitorder="little").astype(np.int64)
+    for i in range(n):
+        w = int(widths[i])
+        starts = bitpos + w * np.arange(m, dtype=np.int64)
+        acc = np.zeros((m,), dtype=np.int64)
+        for b in range(w):
+            acc |= bits[starts + b] << b
+        idx[i] = acc
+        bitpos += w * m
+    return idx.astype(np.int32)
+
+
+def straddled_size_bits(widths: np.ndarray, m: int, include_side_channel: bool = True) -> int:
+    """Exact storage-format size in bits (paper's accounting)."""
+    widths = np.asarray(widths, dtype=np.int64)
+    bits = int((widths * m).sum())
+    if include_side_channel:
+        bits += ROW_WIDTH_SIDE_CHANNEL_BITS * widths.size
+    return bits
+
+
+# --------------------------------------------------------------------------
+# Format 2: word-aligned width classes (runtime / kernels)
+# --------------------------------------------------------------------------
+
+def elems_per_word(width: int) -> int:
+    if not 1 <= width <= 16:
+        raise ValueError(f"width {width} out of range")
+    return 32 // width
+
+
+def pack_rows_word_aligned(idx: np.ndarray, width: int) -> np.ndarray:
+    """Pack idx[R, M] (all rows share `width`) -> words[R, ceil(M/epw)] uint32.
+
+    Index j of a row lives in word j // epw, bit-slot (j % epw) * width.
+    No field straddles a word boundary.
+    """
+    r, m = idx.shape
+    epw = elems_per_word(width)
+    n_words = (m + epw - 1) // epw
+    if np.any(idx < 0) or np.any(idx >= (1 << width)):
+        raise ValueError(f"index exceeds {width} bits")
+    padded = np.zeros((r, n_words * epw), dtype=np.uint64)
+    padded[:, :m] = idx.astype(np.uint64)
+    padded = padded.reshape(r, n_words, epw)
+    shifts = (np.arange(epw, dtype=np.uint64) * np.uint64(width))[None, None, :]
+    words = (padded << shifts).sum(axis=2, dtype=np.uint64)
+    return words.astype(np.uint32)
+
+
+def unpack_rows_word_aligned(words: np.ndarray, width: int, m: int) -> np.ndarray:
+    """Inverse of pack_rows_word_aligned -> idx[R, M] int32 (NumPy oracle;
+    the jnp/in-kernel versions live in kernels/ref.py and the Pallas body)."""
+    r, n_words = words.shape
+    epw = elems_per_word(width)
+    mask = np.uint64((1 << width) - 1)
+    shifts = (np.arange(epw, dtype=np.uint64) * np.uint64(width))[None, None, :]
+    fields = (words.astype(np.uint64)[:, :, None] >> shifts) & mask
+    return fields.reshape(r, n_words * epw)[:, :m].astype(np.int32)
+
+
+@dataclasses.dataclass
+class WidthClass:
+    """All rows of a matrix whose index width is `width`.
+
+    row_ids: [R_w] original row indices (into the [N, M] matrix).
+    words:   [R_w, ceil(M/epw)] uint32 packed indices.
+    """
+
+    width: int
+    row_ids: np.ndarray
+    words: np.ndarray
+
+    @property
+    def n_rows(self) -> int:
+        return int(self.row_ids.size)
+
+    def size_bits(self) -> int:
+        return int(self.words.size) * 32
+
+
+def build_width_classes(idx: np.ndarray, widths: np.ndarray) -> List[WidthClass]:
+    """Group the rows of idx[N, M] by index width and pack each class.
+
+    Returned classes are sorted by width ascending; every original row
+    appears in exactly one class.
+    """
+    widths = np.asarray(widths)
+    classes: List[WidthClass] = []
+    for w in sorted(set(int(x) for x in widths)):
+        rid = np.nonzero(widths == w)[0]
+        classes.append(
+            WidthClass(width=w, row_ids=rid.astype(np.int32),
+                       words=pack_rows_word_aligned(idx[rid], w))
+        )
+    return classes
+
+
+def word_aligned_size_bits(classes: List[WidthClass]) -> int:
+    return sum(c.size_bits() for c in classes)

@@ -1,0 +1,156 @@
+"""Partial Product Approximation (PPA) — paper §IV-B, Algorithm 1.
+
+PPA shrinks a row's unique-weight count below the next-lower power of two by
+merging its *least frequently used* unique values into their nearest
+surviving neighbour, which removes one bit from every index of that row.
+A threshold on the merged frequency mass (`thr`, paper sweeps 0..20 % in 5 %
+steps) bounds the distortion; rows whose low-frequency mass exceeds the
+threshold are left untouched.
+
+Two entry points:
+
+* ``ppa_row`` / ``ppa_layout``: the paper's heuristic, per-row, possibly
+  reducing multiple bits (``max_bits``; the paper uses 1, and 2 for
+  Transformer/PTBLM).
+* ``force_max_unique``: deployment helper (DESIGN.md §3) that merges *only
+  overflow rows* down to a cap K so a whole network can use one uniform
+  index width — the scan/stacking-friendly mode.  With a cap of 2^8 this is
+  a no-op for 8-bit quantization.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from .unique import CrewLayout, RowUnique, index_width
+
+__all__ = ["PPAResult", "ppa_row", "ppa_layout", "force_max_unique"]
+
+
+@dataclasses.dataclass
+class PPAResult:
+    layout: CrewLayout
+    rows_approximated: int
+    uniques_removed: int
+    weight_mass_moved: float  # fraction of all weights whose value changed
+
+
+def _merge_row(row: RowUnique, idx_row: np.ndarray, keep_mask: np.ndarray):
+    """Remap removed uniques of one row onto their nearest kept value.
+
+    Returns (new RowUnique, new idx_row).  Nearest = closest on the integer
+    quantization grid, ties toward the smaller value (stable).
+    """
+    values = row.values
+    kept = values[keep_mask]
+    # nearest kept value for every original unique
+    pos = np.searchsorted(kept, values)
+    pos = np.clip(pos, 0, kept.size - 1)
+    left = np.clip(pos - 1, 0, kept.size - 1)
+    choose_left = np.abs(values - kept[left]) <= np.abs(values - kept[pos])
+    nearest = np.where(choose_left, left, pos)
+    # old unique-id -> new unique-id (kept values keep identity)
+    old_to_new = np.where(keep_mask, np.cumsum(keep_mask) - 1, nearest)
+    new_idx = old_to_new[idx_row]
+    new_counts = np.bincount(new_idx, minlength=kept.size).astype(np.int64)
+    return RowUnique(values=kept.astype(np.int32), counts=new_counts), new_idx.astype(np.int32)
+
+
+def ppa_row(row: RowUnique, idx_row: np.ndarray, thr: float, max_bits: int = 1):
+    """Apply Algorithm 1 to a single row.
+
+    Tries to reduce the index width by up to ``max_bits`` bits; each bit
+    reduction requires the frequency mass of the merged uniques to stay
+    under ``thr``.  Returns (row', idx_row', removed, mass_moved).
+    """
+    removed_total = 0
+    mass_total = 0.0
+    n_weights = idx_row.size
+    for _ in range(max_bits):
+        uw = row.n_unique
+        width = index_width(uw)
+        if width <= 1:
+            break
+        target = 1 << (width - 1)  # next lower power of two
+        dist = uw - target
+        if dist <= 0:
+            # already a power of two: halving means removing uw/2
+            target = uw // 2
+            dist = uw - target
+        order = np.argsort(row.counts, kind="stable")  # least frequent first
+        low = order[:dist]
+        low_mass = float(row.counts[low].sum()) / float(n_weights)
+        if low_mass >= thr:
+            break
+        keep = np.ones(uw, dtype=bool)
+        keep[low] = False
+        row, idx_row = _merge_row(row, idx_row, keep)
+        removed_total += dist
+        mass_total += low_mass
+    return row, idx_row, removed_total, mass_total
+
+
+def ppa_layout(layout: CrewLayout, thr: float, max_bits: int = 1) -> PPAResult:
+    """Paper Algorithm 1 over a whole matrix decomposition."""
+    n, m = layout.idx.shape
+    new_rows: List[RowUnique] = []
+    new_idx = np.empty_like(layout.idx)
+    approx = 0
+    removed = 0
+    mass = 0.0
+    for i in range(n):
+        row, idx_row, rem, mm = ppa_row(layout.rows[i], layout.idx[i], thr, max_bits)
+        new_rows.append(row)
+        new_idx[i] = idx_row
+        if rem > 0:
+            approx += 1
+            removed += rem
+            mass += mm * m  # weights moved in this row
+    widths = np.array([index_width(r.n_unique) for r in new_rows], dtype=np.int32)
+    return PPAResult(
+        layout=CrewLayout(rows=new_rows, idx=new_idx, widths=widths),
+        rows_approximated=approx,
+        uniques_removed=removed,
+        weight_mass_moved=mass / float(n * m),
+    )
+
+
+def force_max_unique(layout: CrewLayout, k: int) -> PPAResult:
+    """Merge overflow rows (UW_i > k) down to exactly k uniques.
+
+    Unlike Algorithm 1 this ignores the threshold: it is the deployment
+    knob that guarantees a uniform index width of ceil(log2 k) across the
+    whole network (DESIGN.md §3, scan-stackable CREW).  The number of rows
+    touched and the weight mass moved are reported so callers can assert
+    the approximation stayed negligible (it is exactly zero when
+    k >= max UW_i, e.g. k=256 for 8-bit quantization).
+    """
+    n, m = layout.idx.shape
+    new_rows: List[RowUnique] = []
+    new_idx = np.empty_like(layout.idx)
+    approx = 0
+    removed = 0
+    moved = 0.0
+    for i in range(n):
+        row = layout.rows[i]
+        idx_row = layout.idx[i]
+        if row.n_unique > k:
+            order = np.argsort(row.counts, kind="stable")
+            low = order[: row.n_unique - k]
+            keep = np.ones(row.n_unique, dtype=bool)
+            keep[low] = False
+            moved += float(row.counts[low].sum())
+            row, idx_row = _merge_row(row, idx_row, keep)
+            approx += 1
+            removed += low.size
+        new_rows.append(row)
+        new_idx[i] = idx_row
+    widths = np.array([index_width(r.n_unique) for r in new_rows], dtype=np.int32)
+    return PPAResult(
+        layout=CrewLayout(rows=new_rows, idx=new_idx, widths=widths),
+        rows_approximated=approx,
+        uniques_removed=removed,
+        weight_mass_moved=moved / float(n * m),
+    )

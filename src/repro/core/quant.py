@@ -1,0 +1,126 @@
+"""Linear (uniform) quantization of FC weights — paper §III.
+
+The paper applies symmetric, uniformly-distributed linear quantization to
+the weights of every FC layer (8-bit by default, as in the TPU baseline),
+with activations following the same scheme at run time and activation
+functions evaluated in fp32.  Quantization is the *enabler* of CREW: it
+collapses the continuous weight distribution into <= 2^q discrete levels,
+and the per-input-row unique count UW_i is measured on the quantized grid.
+
+This module is pure NumPy: it runs offline, once per model, exactly like
+the paper's static analysis pass.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+__all__ = [
+    "QuantConfig",
+    "QuantizedMatrix",
+    "quantize_matrix",
+    "dequantize_matrix",
+    "quantize_activations",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Symmetric linear quantization config.
+
+    bits:       total bits per weight (paper: 8).
+    per_channel: if True, one scale per output column (axis=1 of [N, M]);
+                 the paper uses per-tensor scales, which is the default.
+    clip_percentile: optional percentile-based range calibration.  The paper
+                 uses plain max-abs; percentile clipping is exposed because
+                 the UW statistics are sensitive to the calibration rule and
+                 EXPERIMENTS.md reports that sensitivity.
+    """
+
+    bits: int = 8
+    per_channel: bool = False
+    clip_percentile: Optional[float] = None
+
+    @property
+    def qmax(self) -> int:
+        return (1 << (self.bits - 1)) - 1
+
+    @property
+    def levels(self) -> int:
+        return 1 << self.bits
+
+
+@dataclasses.dataclass
+class QuantizedMatrix:
+    """An [N, M] weight matrix on the integer grid.
+
+    q:     int32 array [N, M] of quantized levels in [-qmax, qmax].
+           (int32 so downstream index math never overflows; values fit int8
+           for bits<=8.)
+    scale: per-tensor scalar or per-column [M] float32 scale such that
+           W ~= q * scale.
+    cfg:   the quantization config used.
+    """
+
+    q: np.ndarray
+    scale: np.ndarray
+    cfg: QuantConfig
+
+    @property
+    def n_in(self) -> int:
+        return self.q.shape[0]
+
+    @property
+    def n_out(self) -> int:
+        return self.q.shape[1]
+
+    def dequantize(self) -> np.ndarray:
+        return dequantize_matrix(self)
+
+    def storage_bits_dense(self) -> int:
+        """Bits to store this matrix densely at `bits` per weight."""
+        return self.q.size * self.cfg.bits
+
+
+def _calibrate_range(w: np.ndarray, cfg: QuantConfig, axis=None) -> np.ndarray:
+    a = np.abs(w)
+    if cfg.clip_percentile is not None:
+        r = np.percentile(a, cfg.clip_percentile, axis=axis)
+    else:
+        r = a.max(axis=axis)
+    return np.maximum(r, np.finfo(np.float32).tiny)
+
+
+def quantize_matrix(w: np.ndarray, cfg: QuantConfig = QuantConfig()) -> QuantizedMatrix:
+    """Symmetric linear quantization of a [N, M] weight matrix."""
+    if w.ndim != 2:
+        raise ValueError(f"expected [N, M] weight matrix, got shape {w.shape}")
+    w = np.asarray(w, dtype=np.float32)
+    if cfg.per_channel:
+        rng = _calibrate_range(w, cfg, axis=0)  # [M]
+        scale = (rng / cfg.qmax).astype(np.float32)
+        q = np.rint(w / scale[None, :])
+    else:
+        rng = _calibrate_range(w, cfg)
+        scale = np.float32(rng / cfg.qmax)
+        q = np.rint(w / scale)
+    q = np.clip(q, -cfg.qmax, cfg.qmax).astype(np.int32)
+    return QuantizedMatrix(q=q, scale=np.asarray(scale, dtype=np.float32), cfg=cfg)
+
+
+def dequantize_matrix(qm: QuantizedMatrix) -> np.ndarray:
+    if qm.scale.ndim == 0:
+        return qm.q.astype(np.float32) * float(qm.scale)
+    return qm.q.astype(np.float32) * qm.scale[None, :]
+
+
+def quantize_activations(x: np.ndarray, bits: int = 8):
+    """Symmetric per-tensor activation quantization (used by the perf model
+    to count integer-datapath traffic; the JAX runtime keeps activations in
+    bf16/fp32 like a TPU serving stack would)."""
+    qmax = (1 << (bits - 1)) - 1
+    scale = max(float(np.abs(x).max()), np.finfo(np.float32).tiny) / qmax
+    q = np.clip(np.rint(x / scale), -qmax, qmax).astype(np.int32)
+    return q, np.float32(scale)

@@ -1,0 +1,135 @@
+"""CREW compression / reuse statistics — paper Tables I & II, Figs 1/3/5.
+
+All accounting matches the paper's definitions:
+
+* UW/I           — mean unique weights per input neuron (Table I).
+* MULs %         — (sum_i UW_i) / (N*M): multiplications CREW performs as a
+                   fraction of the dense dot products (Table I).
+* saved MULs %   — 1 - MULs% (Table II reports ~96-99 %).
+* storage        — dense quantized model vs CREW model *including all
+                   metadata* (unique values at q bits, per-row unique counts,
+                   3-bit width side channel, straddled variable-width index
+                   stream) — Table II reports 16-34 % reduction.
+* runtime storage— the word-aligned width-class format actually streamed on
+                   TPU (DESIGN.md §3), reported alongside.
+* memory access reduction — bytes fetched per inference for weights/indices
+                   (paper: ~40 % fewer memory accesses).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from . import pack as packlib
+from .unique import CrewLayout
+
+__all__ = ["CrewStats", "layout_stats", "aggregate_stats", "unique_histogram",
+           "frequency_histogram"]
+
+UW_COUNT_BITS = 9  # per-row "number of unique weights" metadata (<=256 -> 9 bits)
+
+
+@dataclasses.dataclass
+class CrewStats:
+    n_in: int
+    n_out: int
+    bits: int
+    uw_per_input_mean: float
+    uw_per_input_max: int
+    total_unique: int
+    muls_fraction: float            # Table I "MULs (%)" / 100
+    dense_bits: int                 # quantized dense storage
+    crew_bits_storage: int          # straddled + all metadata (paper Table II)
+    crew_bits_runtime: int          # word-aligned width classes + tables
+    index_bits_mean: float          # mean index width
+
+    @property
+    def saved_muls(self) -> float:
+        return 1.0 - self.muls_fraction
+
+    @property
+    def storage_reduction(self) -> float:
+        return 1.0 - self.crew_bits_storage / self.dense_bits
+
+    @property
+    def runtime_reduction(self) -> float:
+        return 1.0 - self.crew_bits_runtime / self.dense_bits
+
+    def row(self) -> Dict[str, float]:
+        return {
+            "UW/I": round(self.uw_per_input_mean, 1),
+            "MULs%": round(100 * self.muls_fraction, 2),
+            "saved_MULs%": round(100 * self.saved_muls, 2),
+            "storage_red%": round(100 * self.storage_reduction, 2),
+            "runtime_red%": round(100 * self.runtime_reduction, 2),
+            "idx_bits": round(self.index_bits_mean, 2),
+        }
+
+
+def layout_stats(layout: CrewLayout, bits: int = 8) -> CrewStats:
+    n, m = layout.idx.shape
+    uw = layout.unique_per_input
+    total_unique = int(uw.sum())
+
+    dense_bits = n * m * bits
+    idx_bits = packlib.straddled_size_bits(layout.widths, m, include_side_channel=True)
+    meta_bits = total_unique * bits + n * UW_COUNT_BITS
+    crew_storage = idx_bits + meta_bits
+
+    classes = packlib.build_width_classes(layout.idx, layout.widths)
+    runtime_idx_bits = packlib.word_aligned_size_bits(classes)
+    # runtime tables are padded to 2^w per row, stored at `bits` per entry
+    runtime_table_bits = sum(c.n_rows * (1 << c.width) * bits for c in classes)
+    crew_runtime = runtime_idx_bits + runtime_table_bits + n * 32  # row perm ids
+
+    return CrewStats(
+        n_in=n,
+        n_out=m,
+        bits=bits,
+        uw_per_input_mean=float(uw.mean()),
+        uw_per_input_max=int(uw.max()),
+        total_unique=total_unique,
+        muls_fraction=total_unique / float(n * m),
+        dense_bits=dense_bits,
+        crew_bits_storage=crew_storage,
+        crew_bits_runtime=crew_runtime,
+        index_bits_mean=float(layout.widths.mean()),
+    )
+
+
+def aggregate_stats(stats: List[CrewStats]) -> CrewStats:
+    """Aggregate per-layer stats into model-level numbers (weight-weighted)."""
+    if not stats:
+        raise ValueError("no stats to aggregate")
+    tot_w = sum(s.n_in * s.n_out for s in stats)
+    tot_in = sum(s.n_in for s in stats)
+    return CrewStats(
+        n_in=tot_in,
+        n_out=tot_w // max(tot_in, 1),
+        bits=stats[0].bits,
+        uw_per_input_mean=sum(s.uw_per_input_mean * s.n_in for s in stats) / tot_in,
+        uw_per_input_max=max(s.uw_per_input_max for s in stats),
+        total_unique=sum(s.total_unique for s in stats),
+        muls_fraction=sum(s.total_unique for s in stats) / float(tot_w),
+        dense_bits=sum(s.dense_bits for s in stats),
+        crew_bits_storage=sum(s.crew_bits_storage for s in stats),
+        crew_bits_runtime=sum(s.crew_bits_runtime for s in stats),
+        index_bits_mean=sum(s.index_bits_mean * s.n_in for s in stats) / tot_in,
+    )
+
+
+def unique_histogram(layout: CrewLayout, max_uw: int = 256) -> np.ndarray:
+    """Histogram of UW_i (paper Fig. 3); bin i = #rows with UW == i."""
+    return np.bincount(layout.unique_per_input, minlength=max_uw + 1)
+
+
+def frequency_histogram(layout: CrewLayout, bins: int = 50) -> np.ndarray:
+    """Histogram of per-unique usage frequency (paper Fig. 5)."""
+    freqs: List[float] = []
+    m = layout.n_out
+    for r in layout.rows:
+        freqs.extend((r.counts / m).tolist())
+    hist, _ = np.histogram(np.array(freqs), bins=bins, range=(0.0, 1.0))
+    return hist

@@ -1,0 +1,120 @@
+"""Per-input-neuron unique-weight analysis — paper §III and §IV-A.
+
+For a quantized FC matrix q[N, M] (N input neurons, M output neurons) CREW
+observes that each *row* q[i, :] contains few distinct values (UW_i ~ 44 on
+average for 8-bit quantization across the paper's five DNNs).  This module
+computes, offline:
+
+  * the per-row unique value tables  u[i, 0:UW_i]           (sorted),
+  * the per-row index tables         idx[i, j] in [0, UW_i)  such that
+        q[i, j] == u[i, idx[i, j]],
+  * the per-row index bit-widths     width_i = max(1, ceil(log2 UW_i)),
+  * per-row usage frequencies        (for the PPA heuristic, paper Fig. 5).
+
+The decomposition is *exact*: reconstructing q from (u, idx) is lossless,
+which is the basis of the hypothesis property tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import numpy as np
+
+__all__ = ["RowUnique", "CrewLayout", "analyze_matrix", "reconstruct", "index_width"]
+
+
+def index_width(n_unique: int) -> int:
+    """Bits needed to index a table of `n_unique` entries (min 1)."""
+    if n_unique <= 1:
+        return 1
+    return int(np.ceil(np.log2(n_unique)))
+
+
+@dataclasses.dataclass
+class RowUnique:
+    """Unique-weight decomposition of one input row."""
+
+    values: np.ndarray  # [UW_i] int32, sorted ascending
+    counts: np.ndarray  # [UW_i] int64, occurrences of each unique value
+
+    @property
+    def n_unique(self) -> int:
+        return int(self.values.size)
+
+    @property
+    def width(self) -> int:
+        return index_width(self.n_unique)
+
+
+@dataclasses.dataclass
+class CrewLayout:
+    """Whole-matrix CREW decomposition (variable-width, paper-faithful).
+
+    rows:   per-input-row unique tables (ragged).
+    idx:    [N, M] int32 indices into each row's table.
+    widths: [N] int32 per-row index bit-widths.
+    """
+
+    rows: List[RowUnique]
+    idx: np.ndarray
+    widths: np.ndarray
+
+    @property
+    def n_in(self) -> int:
+        return self.idx.shape[0]
+
+    @property
+    def n_out(self) -> int:
+        return self.idx.shape[1]
+
+    @property
+    def total_unique(self) -> int:
+        return int(sum(r.n_unique for r in self.rows))
+
+    @property
+    def unique_per_input(self) -> np.ndarray:
+        return np.array([r.n_unique for r in self.rows], dtype=np.int64)
+
+    def max_unique(self) -> int:
+        return int(max(r.n_unique for r in self.rows))
+
+    def padded_unique_table(self, k: int | None = None) -> np.ndarray:
+        """[N, K] int32 table, rows padded with their own last value (so any
+        out-of-range index still reads a *valid* level — keeps padded lanes
+        NaN-free in kernels)."""
+        if k is None:
+            k = self.max_unique()
+        n = len(self.rows)
+        out = np.zeros((n, k), dtype=np.int32)
+        for i, r in enumerate(self.rows):
+            if r.n_unique > k:
+                raise ValueError(f"row {i} has {r.n_unique} uniques > K={k}")
+            out[i, : r.n_unique] = r.values
+            out[i, r.n_unique :] = r.values[-1]
+        return out
+
+
+def analyze_matrix(q: np.ndarray) -> CrewLayout:
+    """Compute the CREW decomposition of a quantized matrix q[N, M]."""
+    if q.ndim != 2:
+        raise ValueError(f"expected [N, M], got {q.shape}")
+    n, m = q.shape
+    idx = np.empty((n, m), dtype=np.int32)
+    rows: List[RowUnique] = []
+    widths = np.empty((n,), dtype=np.int32)
+    for i in range(n):
+        vals, inv, counts = np.unique(q[i], return_inverse=True, return_counts=True)
+        rows.append(RowUnique(values=vals.astype(np.int32), counts=counts))
+        idx[i] = inv.astype(np.int32)
+        widths[i] = index_width(vals.size)
+    return CrewLayout(rows=rows, idx=idx, widths=widths)
+
+
+def reconstruct(layout: CrewLayout) -> np.ndarray:
+    """Losslessly rebuild q[N, M] from the decomposition."""
+    n, m = layout.idx.shape
+    q = np.empty((n, m), dtype=np.int32)
+    for i in range(n):
+        q[i] = layout.rows[i].values[layout.idx[i]]
+    return q

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for CREW's compute hot-spot (the FC matmul).
+
+crew_matmul.py — pl.pallas_call kernel (VMEM BlockSpec tiling, two step-2
+                 strategies: VPU gather / one-hot MXU), in-kernel packed
+                 index decode.
+ops.py         — jit'd dispatch wrapper used by layers.
+ref.py         — pure-jnp oracles for the allclose sweeps.
+"""
+from .crew_matmul import crew_matmul_pallas
+from .ops import crew_matmul, pick_strategy
+from . import ref
+
+__all__ = ["crew_matmul_pallas", "crew_matmul", "pick_strategy", "ref"]

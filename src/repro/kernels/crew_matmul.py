@@ -1,0 +1,153 @@
+"""CREW matmul as a Pallas TPU kernel — DESIGN.md §3.
+
+The kernel fuses the paper's two dataflow steps inside one VMEM-resident
+block pipeline:
+
+  step 1 (VPU):  P[b, i, k] = x[b, i] * uniq[i, k]  for a row block
+                 (the paper's "multiply each input by its unique weights";
+                 P is the on-chip Partial Product Buffer — it never touches
+                 HBM),
+  decode (VPU):  shift+mask unpack of the word-aligned index block (the
+                 vectorized replacement for the paper's per-PE decoder),
+  step 2:        indexed accumulation out[b, j] += P[b, i, idx[i, j]],
+                 realized either as
+                   * ``gather``  — jnp.take_along_axis inside VMEM, or
+                   * ``onehot``  — (P reshaped [B, bn*K]) @ onehot(idx)
+                     reshaped [bn*K, bm] on the MXU (burns idle MXU FLOPs
+                     to keep the VPU free; memory-bound-safe for
+                     B * K * width <~ 960*8, see DESIGN.md napkin math).
+
+Grid: (M blocks, N blocks) with N innermost, so each output block stays
+resident in VMEM while the reduction over row blocks streams through —
+Pallas's automatic double-buffering of the index/unique blocks plays the
+role of the paper's double-buffered local buffers.
+
+HBM traffic per output tile: packed words (width/8 bytes per weight) +
+unique tables (amortized over M) — this is the entire point of CREW on TPU.
+
+The container runs on CPU, so tests exercise ``interpret=True``; the
+BlockSpecs below are the TPU tiling contract (bm multiple of 128 lanes,
+bn multiple of 8 sublanes for f32).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+__all__ = ["crew_matmul_pallas", "DEFAULT_BLOCK_N", "DEFAULT_BLOCK_WORDS"]
+
+DEFAULT_BLOCK_N = 128      # input rows per block (sublane-aligned)
+DEFAULT_BLOCK_WORDS = 32   # packed words per block -> bm = 32 * epw
+
+
+def _kernel(x_ref, words_ref, uniq_ref, out_ref, *, width: int, strategy: str,
+            n_blocks_n: int):
+    """One (m-block, n-block) grid step."""
+    nn = pl.program_id(1)
+
+    @pl.when(nn == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[...].astype(jnp.float32)          # [B, bn]
+    words = words_ref[...]                      # [bn, bw] uint32
+    uniq = uniq_ref[...].astype(jnp.float32)    # [bn, K]
+    b, bn = x.shape
+    k = uniq.shape[1]
+    epw = 32 // width
+    bw = words.shape[1]
+    bm = bw * epw
+
+    # ---- decode: word-aligned shift+mask unpack -> idx [bn, bm] ----
+    shifts = (jax.lax.broadcasted_iota(jnp.uint32, (1, 1, epw), 2)
+              * np.uint32(width))
+    mask = np.uint32((1 << width) - 1)
+    fields = (words[:, :, None] >> shifts) & mask
+    idx = fields.reshape(bn, bm).astype(jnp.int32)
+
+    # ---- step 1: partial products, VMEM-resident ----
+    p = x[:, :, None] * uniq[None]              # [B, bn, K]
+
+    # ---- step 2: indexed accumulation ----
+    if strategy == "gather":
+        gathered = jnp.take_along_axis(
+            p, jnp.broadcast_to(idx[None], (b, bn, bm)), axis=2
+        )                                        # [B, bn, bm]
+        contrib = gathered.sum(axis=1)           # [B, bm]
+    elif strategy == "onehot":
+        kk = jax.lax.broadcasted_iota(jnp.int32, (bn, k, bm), 1)
+        oh = (idx[:, None, :] == kk).astype(jnp.float32)  # [bn, K, bm]
+        contrib = jnp.dot(
+            p.reshape(b, bn * k),
+            oh.reshape(bn * k, bm),
+            preferred_element_type=jnp.float32,
+        )
+    else:
+        raise ValueError(f"unknown strategy {strategy!r}")
+
+    out_ref[...] += contrib
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("width", "m_out", "strategy", "block_n", "block_words",
+                     "interpret"),
+)
+def crew_matmul_pallas(
+    x: jnp.ndarray,
+    words: jnp.ndarray,
+    uniq: jnp.ndarray,
+    *,
+    width: int,
+    m_out: int,
+    strategy: str = "gather",
+    block_n: int = DEFAULT_BLOCK_N,
+    block_words: int = DEFAULT_BLOCK_WORDS,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """CREW matmul: x[B, N] x crew(W[N, M]) -> f32 [B, M].
+
+    words: [N, W] uint32, uniq: [N, K].  Pads N and W to block multiples
+    (zero rows contribute zero: x pad is 0 so P rows are 0; padded words
+    decode to index 0 which reads a zero P row).  Slices the M padding off.
+    """
+    b, n = x.shape
+    n_words = words.shape[1]
+    k = uniq.shape[1]
+    epw = 32 // width
+
+    block_n = min(block_n, max(8, n))
+    block_words = min(block_words, n_words)
+
+    n_pad = (n + block_n - 1) // block_n * block_n
+    w_pad = (n_words + block_words - 1) // block_words * block_words
+    if n_pad != n:
+        x = jnp.pad(x, ((0, 0), (0, n_pad - n)))
+        words = jnp.pad(words, ((0, n_pad - n), (0, 0)))
+        uniq = jnp.pad(uniq, ((0, n_pad - n), (0, 0)))
+    if w_pad != n_words:
+        words = jnp.pad(words, ((0, 0), (0, w_pad - n_words)))
+
+    bm = block_words * epw
+    grid = (w_pad // block_words, n_pad // block_n)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, width=width, strategy=strategy, n_blocks_n=grid[1]
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, block_n), lambda im, inn: (0, inn)),
+            pl.BlockSpec((block_n, block_words), lambda im, inn: (inn, im)),
+            pl.BlockSpec((block_n, k), lambda im, inn: (inn, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, bm), lambda im, inn: (0, im)),
+        out_shape=jax.ShapeDtypeStruct((b, grid[0] * bm), jnp.float32),
+        interpret=interpret,
+    )(x, words, uniq)
+    return out[:, :m_out]

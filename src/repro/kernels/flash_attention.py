@@ -1,0 +1,156 @@
+"""Flash-attention Pallas TPU kernel — §Perf iteration A2 (and the
+standard production attention for every arch's prefill/train path).
+
+Why it exists here: the XLA-level chunked attention materializes every
+[cq, ck] score block at ~3 HBM fusion boundaries; at granite-20b
+prefill_32k that is 52 x 64 x 64 x 25 MB x 3 ≈ 16 TB/device of score
+traffic — the dominant roofline term after the collective fix.  Keeping
+the running softmax in VMEM reduces attention HBM traffic to the q/k/v
+chunk reads + output writes, a ~35x cut of the attention term.
+
+Layout: q [N, Sq, D], k/v [N, Sk, D] with N = B * KV * G flattened by the
+wrapper (GQA folds the group dim into N; the K/V BlockSpec index maps
+divide out G so KV heads are never materialized per-group).
+
+Grid (n, iq, ik) with ik innermost: the output block and the (m, l)
+running stats stay resident in VMEM scratch across the KV sweep (Pallas
+revisiting semantics), exactly the paper-era flash dataflow.  Causal
+masking adds a [cq, ck] f32 bias from block-position iotas; fully-masked
+blocks are skipped with pl.when.
+
+Validated in interpret mode against layers.attention.chunked_attention
+(itself validated against the naive softmax) across shape sweeps in
+tests/test_flash.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention", "flash_attention_nhd"]
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, out_ref, m_ref, l_ref, acc_ref, *,
+            causal: bool, scale: float, kv_len: int, block_q: int,
+            block_k: int, n_k: int):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    iq = pl.program_id(1)
+    q_start = iq * block_q
+    k_start = ik * block_k
+
+    run = True
+    if causal:
+        # skip blocks fully above the diagonal
+        run = q_start + block_q - 1 >= k_start
+
+    @pl.when(run if causal else True)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)          # [bq, D]
+        k = k_ref[0].astype(jnp.float32)          # [bk, D]
+        v = v_ref[0].astype(jnp.float32)          # [bk, D]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        bias = jnp.where(k_pos < kv_len, 0.0, NEG_INF)  # KV padding
+        if causal:
+            bias = bias + jnp.where(q_pos >= k_pos, 0.0, NEG_INF)
+        s = s + bias
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jnp.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ik == n_k - 1)
+    def _finalize():
+        out_ref[0] = (acc_ref[...]
+                      / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                      ).astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret",
+                              "kv_repeat"))
+def flash_attention_nhd(
+    q: jnp.ndarray,                # [N, Sq, D]
+    k: jnp.ndarray,                # [Nkv, Sk, D]
+    v: jnp.ndarray,                # [Nkv, Sk, D]
+    *,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    kv_repeat: int = 1,            # N // Nkv (GQA group), via index map
+    interpret: bool = True,
+) -> jnp.ndarray:
+    n, sq, d = q.shape
+    sk = k.shape[1]
+    scale = d ** -0.5
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    sq_p = -(-sq // block_q) * block_q
+    sk_p = -(-sk // block_k) * block_k
+    if sq_p != sq:
+        q = jnp.pad(q, ((0, 0), (0, sq_p - sq), (0, 0)))
+    if sk_p != sk:
+        k = jnp.pad(k, ((0, 0), (0, sk_p - sk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, sk_p - sk), (0, 0)))
+    n_q = sq_p // block_q
+    n_k = sk_p // block_k
+    grid = (n, n_q, n_k)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, causal=causal, scale=scale, kv_len=sk,
+                          block_q=block_q, block_k=block_k, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda h, iq, ik: (h, iq, 0)),
+            pl.BlockSpec((1, block_k, d),
+                         lambda h, iq, ik: (h // kv_repeat, ik, 0)),
+            pl.BlockSpec((1, block_k, d),
+                         lambda h, iq, ik: (h // kv_repeat, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda h, iq, ik: (h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, sq_p, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),      # running max m
+            pltpu.VMEM((block_q,), jnp.float32),      # running denom l
+            pltpu.VMEM((block_q, d), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :sq]
+
+
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = True):
+    """GQA wrapper matching layers.attention conventions.
+
+    q [B, Sq, H, D]; k, v [B, Sk, KV, D] -> [B, Sq, H, D].
+    """
+    b, sq, h, d = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    qn = jnp.moveaxis(q, 2, 1).reshape(b * h, sq, d)
+    kn = jnp.moveaxis(k, 2, 1).reshape(b * kv, sk, d)
+    vn = jnp.moveaxis(v, 2, 1).reshape(b * kv, sk, d)
+    out = flash_attention_nhd(qn, kn, vn, causal=causal, block_q=block_q,
+                              block_k=block_k, kv_repeat=g,
+                              interpret=interpret)
+    return jnp.moveaxis(out.reshape(b, h, sq, d), 1, 2)

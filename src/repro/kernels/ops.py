@@ -1,0 +1,90 @@
+"""Public jit'd wrappers around the CREW kernels.
+
+``crew_matmul`` is the one entry point layers use; it dispatches between
+
+  * ``pallas-gather`` / ``pallas-onehot`` — the fused TPU kernel
+    (interpret-mode on CPU),
+  * ``xla-dense`` / ``xla-gather``        — the pure-XLA paths from
+    repro.core.convert (used by the big-model serve graphs and the
+    512-device dry-runs, where a CPU-interpreted kernel is not meaningful),
+  * ``auto`` — decode-shaped calls (small B) take the CREW dataflow,
+    compute-rich calls decompress-and-matmul (DESIGN.md §3 napkin math).
+"""
+from __future__ import annotations
+
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from ..core.convert import (
+    CrewMatrixUniform,
+    CrewMatrixVar,
+    crew_matmul_uniform,
+    crew_matmul_var,
+)
+from .crew_matmul import crew_matmul_pallas
+
+__all__ = ["crew_matmul", "pick_strategy"]
+
+# B*K*width budget below which the one-hot MXU path stays memory bound on a
+# v5e-like chip (197 TFLOP/s vs 819 GB/s * 8/width idx/s) — DESIGN.md §3.
+_ONEHOT_BUDGET = 960 * 8
+
+
+def pick_strategy(batch: int, width: int, compute_rich: bool) -> str:
+    if compute_rich:
+        return "xla-dense"
+    k = 1 << width
+    if batch * k * width <= _ONEHOT_BUDGET:
+        return "pallas-onehot"
+    return "pallas-gather"
+
+
+def crew_matmul(
+    x: jnp.ndarray,
+    cm: Union[CrewMatrixUniform, CrewMatrixVar],
+    *,
+    strategy: str = "auto",
+    interpret: bool = True,
+    block_m: int = 1024,
+) -> jnp.ndarray:
+    """x[..., N] @ crew(W[N, M]) -> [..., M] in x.dtype."""
+    lead = x.shape[:-1]
+    xb = x.reshape(-1, x.shape[-1])
+    b = xb.shape[0]
+
+    if isinstance(cm, CrewMatrixVar):
+        if strategy in ("auto", "xla-dense"):
+            out = crew_matmul_var(xb, cm, strategy="dense")
+        elif strategy == "xla-gather":
+            out = crew_matmul_var(xb, cm, strategy="gather", block_m=block_m)
+        elif strategy in ("pallas-gather", "pallas-onehot"):
+            ks = strategy.split("-")[1]
+            out = jnp.zeros((b, cm.n_out), dtype=jnp.float32)
+            for c in cm.classes:
+                xc = xb[:, c.row_ids]
+                out = out + crew_matmul_pallas(
+                    xc, c.words, c.uniq, width=c.width, m_out=cm.n_out,
+                    strategy=ks, interpret=interpret,
+                )
+            out = out.astype(x.dtype)
+        else:
+            raise ValueError(f"unknown strategy {strategy!r}")
+        return out.reshape(*lead, cm.n_out).astype(x.dtype)
+
+    # uniform matrix
+    if strategy == "auto":
+        strategy = pick_strategy(b, cm.width, compute_rich=b >= 64)
+    if strategy == "xla-dense":
+        out = crew_matmul_uniform(xb, cm, strategy="dense")
+    elif strategy == "xla-gather":
+        out = crew_matmul_uniform(xb, cm, strategy="gather", block_m=block_m)
+    elif strategy in ("pallas-gather", "pallas-onehot"):
+        out = crew_matmul_pallas(
+            xb, cm.words, cm.uniq, width=cm.width, m_out=cm.n_out,
+            strategy=strategy.split("-")[1], interpret=interpret,
+        )
+    else:
+        raise ValueError(f"unknown strategy {strategy!r}")
+    return out.reshape(*lead, cm.n_out).astype(x.dtype)

@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for the CREW Pallas kernels.
+
+Every kernel in this package must match its oracle here to numerical
+tolerance across the shape/dtype sweeps in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["unpack_ref", "crew_matmul_ref", "crew_partial_products_ref"]
+
+
+def unpack_ref(words: jnp.ndarray, width: int, m: int) -> jnp.ndarray:
+    """words[R, W] uint32 -> idx[R, M] int32 (word-aligned format)."""
+    epw = 32 // width
+    shifts = jnp.arange(epw, dtype=jnp.uint32) * np.uint32(width)
+    mask = np.uint32((1 << width) - 1)
+    fields = (words[:, :, None] >> shifts[None, None, :]) & mask
+    return fields.reshape(words.shape[0], -1)[:, :m].astype(jnp.int32)
+
+
+def crew_partial_products_ref(x: jnp.ndarray, uniq: jnp.ndarray) -> jnp.ndarray:
+    """Step 1 of the paper's dataflow: P[b, i, k] = x[b, i] * uniq[i, k]."""
+    return x[:, :, None].astype(jnp.float32) * uniq[None].astype(jnp.float32)
+
+
+def crew_matmul_ref(
+    x: jnp.ndarray,
+    words: jnp.ndarray,
+    uniq: jnp.ndarray,
+    *,
+    width: int,
+    m: int,
+) -> jnp.ndarray:
+    """Oracle: decompress W'[i, j] = uniq[i, idx[i, j]], return x @ W' in f32.
+
+    x:     [B, N]
+    words: [N, W] uint32 packed indices (word-aligned, `width` bits)
+    uniq:  [N, K] dequantized unique values
+    """
+    idx = unpack_ref(words, width, m)
+    w = jnp.take_along_axis(uniq, idx, axis=1).astype(jnp.float32)
+    return x.astype(jnp.float32) @ w

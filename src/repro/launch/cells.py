@@ -1,0 +1,221 @@
+"""Cell builder: one (architecture x input-shape x mesh x mode) dry-run unit.
+
+A *cell* bundles everything ``dryrun.py`` needs to lower+compile one entry
+of the assignment matrix:
+
+    fn          — the step function (train_step / prefill forward / decode)
+    args        — abstract ShapeDtypeStruct arguments (params, batch, cache)
+    in_shard    — NamedSharding tree resolved from the logical specs
+    out_shard   — NamedSharding tree (or None -> GSPMD-chosen)
+    donate      — argnums to donate (train state / decode cache)
+
+Modes:
+    dense — bf16 dense weights (serve) / f32 master weights (train).
+    crew  — CREW-compressed weights (serve cells): packed uint32 index
+            words + bf16 unique tables, sharded exactly like the dense
+            weights they replace.  Training always runs dense (CREW is a
+            post-training format, §Arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs import SHAPES_BY_NAME, get_config, runnable_shapes
+from ..configs.base import ModelConfig, ShapeConfig
+from ..dist.ctx import sharding_ctx
+from ..dist.sharding import (SERVE_RULES, TRAIN_RULES, TRAIN_RULES_DP,
+                             named_sharding_tree)
+from ..models import ModelApi, build_model
+from ..serve.convert import abstract_crew_params, crewize_spec
+from ..train import TrainState, adamw, cosine_warmup, make_train_step
+
+__all__ = ["Cell", "make_cell", "batch_spec"]
+
+# Default training knobs for the dry-run (production-shaped, per DESIGN.md):
+# 8 microbatches of grad accumulation; selective remat; bf16 activations.
+TRAIN_MICROBATCHES = 8
+CREW_ASSUMED_WIDTH = 6  # measured network-wide max index width (8-bit quant)
+
+
+@dataclasses.dataclass
+class Cell:
+    cfg: ModelConfig
+    shape: ShapeConfig
+    mode: str
+    fn: Callable
+    args: Tuple[Any, ...]
+    in_shard: Tuple[Any, ...]
+    out_shard: Any
+    donate: Tuple[int, ...]
+    static: Dict[str, Any]
+    mesh: Any = None
+    rules: Any = None
+
+    def jitted(self):
+        fn = self.fn
+        if self.mesh is not None:
+            mesh, rules, inner = self.mesh, self.rules, self.fn
+
+            def fn(*args):
+                # activation sharding constraints resolve at trace time
+                with sharding_ctx(mesh, rules):
+                    return inner(*args)
+
+        return jax.jit(fn, in_shardings=self.in_shard,
+                       out_shardings=self.out_shard,
+                       donate_argnums=self.donate)
+
+
+def batch_spec(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, P]:
+    """Logical PartitionSpec tree for the input batch of a cell."""
+    if shape.kind == "decode":
+        return {"tokens": P("batch", None)}
+    spec: Dict[str, P] = {}
+    if cfg.family == "encoder":
+        spec["frames"] = P("batch", "seq", None)
+    else:
+        spec["tokens"] = P("batch", "seq")
+        if cfg.family == "vlm":
+            spec["patches"] = P("batch", "seq", None)
+    if shape.kind == "train":
+        spec["labels"] = P("batch", "seq")
+    return spec
+
+
+def _opt_spec(param_spec):
+    return {"mu": param_spec, "nu": param_spec}
+
+
+def _replicated(mesh, tree):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def _train_cell(api: ModelApi, shape: ShapeConfig, mesh: Mesh,
+                n_micro: int, variant: str = "base") -> Cell:
+    cfg = api.cfg
+    # variant "opt": DP-first rules — batch claims all mesh axes; right for
+    # models whose head/ff dims fight 16-way TP (§Perf iteration B).  Grad
+    # accumulation off so the full global batch covers the device count
+    # (micro-batching would drop the per-step batch below 256 and strand
+    # the model axis again).
+    rules = TRAIN_RULES_DP if variant == "opt" else TRAIN_RULES
+    if variant == "opt":
+        n_micro = 1
+    opt = adamw(cosine_warmup(3e-4, 2000, 100_000))
+    step_fn = make_train_step(api, opt, n_microbatches=n_micro,
+                              dtype=jnp.bfloat16, remat=True)
+
+    rng = jax.random.PRNGKey(0)
+    params_abs = api.abstract_params(dtype=jnp.float32)
+    state_abs = TrainState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        params=params_abs,
+        opt=jax.eval_shape(opt.init, params_abs),
+    )
+    batch_abs = api.input_specs(shape, dtype=jnp.float32)
+
+    p_spec = api.param_spec()
+    state_spec = TrainState(step=P(), params=p_spec, opt=_opt_spec(p_spec))
+    state_shard = named_sharding_tree(state_spec, state_abs, mesh, rules)
+    batch_shard = named_sharding_tree(batch_spec(cfg, shape), batch_abs,
+                                      mesh, rules)
+
+    metrics_abs = jax.eval_shape(step_fn, state_abs, batch_abs)[1]
+    out_shard = (state_shard, _replicated(mesh, metrics_abs))
+
+    return Cell(cfg=cfg, shape=shape, mode="dense", fn=step_fn,
+                args=(state_abs, batch_abs),
+                in_shard=(state_shard, batch_shard), out_shard=out_shard,
+                donate=(0,), static={"n_microbatches": n_micro},
+                mesh=mesh, rules=rules)
+
+
+def _serve_params(api: ModelApi, mode: str, mesh: Mesh):
+    params_abs = api.abstract_params(dtype=jnp.bfloat16)
+    p_spec = api.param_spec()
+    if mode == "crew":
+        params_abs = abstract_crew_params(params_abs,
+                                          width=CREW_ASSUMED_WIDTH,
+                                          pad_words_to=16)
+        p_spec = crewize_spec(p_spec, params_abs)
+    shard = named_sharding_tree(p_spec, params_abs, mesh, SERVE_RULES)
+    return params_abs, shard
+
+
+def _prefill_cell(api: ModelApi, shape: ShapeConfig, mesh: Mesh,
+                  mode: str, variant: str = "base") -> Cell:
+    cfg = api.cfg
+    params_abs, params_shard = _serve_params(api, mode, mesh)
+    batch_abs = api.input_specs(shape, dtype=jnp.bfloat16)
+    batch_shard = named_sharding_tree(batch_spec(cfg, shape), batch_abs,
+                                      mesh, SERVE_RULES)
+    logits_mode = "all" if cfg.family == "encoder" else "last"
+    crew_strategy = "xla-dense" if mode == "crew" else "auto"
+    # variant "opt": flash-attention Pallas kernel via shard_map (§Perf)
+    attn_impl = "flash" if variant == "opt" else "chunked"
+
+    def prefill_step(params, batch):
+        logits, _ = api.forward(params, batch, dtype=jnp.bfloat16,
+                                remat=False, logits_mode=logits_mode,
+                                crew_strategy=crew_strategy,
+                                attn_impl=attn_impl)
+        return logits
+
+    return Cell(cfg=cfg, shape=shape, mode=mode, fn=prefill_step,
+                args=(params_abs, batch_abs),
+                in_shard=(params_shard, batch_shard), out_shard=None,
+                donate=(), static={}, mesh=mesh, rules=SERVE_RULES)
+
+
+def _decode_cell(api: ModelApi, shape: ShapeConfig, mesh: Mesh,
+                 mode: str, variant: str = "base") -> Cell:
+    cfg = api.cfg
+    params_abs, params_shard = _serve_params(api, mode, mesh)
+    tokens_abs = api.input_specs(shape, dtype=jnp.bfloat16)["tokens"]
+    # variant "opt": int8 KV cache — halves the dominant decode HBM stream;
+    # attention runs natively int8 (§Perf iteration C).  SSM/xLSTM states
+    # stay bf16 (they are O(1)-sized).
+    cache_dtype = jnp.int8 if (variant == "opt"
+                               and cfg.family in ("dense", "moe", "vlm"))         else jnp.bfloat16
+    cache_abs = api.abstract_cache(shape.global_batch, shape.seq_len,
+                                   dtype=cache_dtype)
+    tok_shard = named_sharding_tree({"tokens": P("batch", None)},
+                                    {"tokens": tokens_abs}, mesh,
+                                    SERVE_RULES)["tokens"]
+    cache_shard = named_sharding_tree(api.cache_spec(), cache_abs, mesh,
+                                      SERVE_RULES)
+    crew_strategy = "xla-dense" if mode == "crew" else "auto"
+
+    def decode(params, tokens, cache):
+        return api.decode_step(params, tokens, cache, dtype=jnp.bfloat16,
+                               crew_strategy=crew_strategy)
+
+    out_shard = (None, cache_shard)
+    return Cell(cfg=cfg, shape=shape, mode=mode, fn=decode,
+                args=(params_abs, tokens_abs, cache_abs),
+                in_shard=(params_shard, tok_shard, cache_shard),
+                out_shard=out_shard, donate=(2,), static={},
+                mesh=mesh, rules=SERVE_RULES)
+
+
+def make_cell(arch_id: str, shape_name: str, mesh: Mesh, *,
+              mode: str = "dense", variant: str = "base",
+              n_micro: int = TRAIN_MICROBATCHES) -> Cell:
+    cfg = get_config(arch_id)
+    shape = SHAPES_BY_NAME[shape_name]
+    if shape not in runnable_shapes(cfg):
+        raise ValueError(f"cell ({arch_id}, {shape_name}) is a mandated skip")
+    api = build_model(cfg)
+    if shape.kind == "train":
+        if mode != "dense":
+            raise ValueError("training runs dense (CREW is post-training)")
+        return _train_cell(api, shape, mesh, n_micro, variant)
+    if shape.kind == "prefill":
+        return _prefill_cell(api, shape, mesh, mode, variant)
+    return _decode_cell(api, shape, mesh, mode, variant)

@@ -1,0 +1,182 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh x mode).
+
+The two lines above MUST execute before any other import (jax locks the
+device count on first init): this process sees 512 host-platform devices so
+``jax.make_mesh`` can build the production meshes.  Nothing is allocated at
+model scale — params/batches/caches are ShapeDtypeStructs; ``compile()``
+produces an executable and its memory/cost analyses without touching data.
+
+Per cell this records into ``experiments/dryrun/<mesh>/<arch>__<shape>__<mode>.json``:
+  * memory_analysis (per-device argument/output/temp bytes) — proves fit,
+  * cost_analysis   (per-device FLOPs / bytes accessed),
+  * per-kind collective bytes parsed from the optimized HLO,
+  * the three §Roofline terms + dominant bound,
+  * MODEL_FLOPS and the HLO/model FLOP ratio,
+  * compile wall-time.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-0.5b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both          # full matrix
+  python -m repro.launch.dryrun --all --modes dense,crew   # + CREW serve cells
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+
+def run_cell(arch_id: str, shape_name: str, mesh_kind: str, mode: str,
+             out_dir: str, variant: str = "base") -> dict:
+    from ..configs import SHAPES_BY_NAME, get_config
+    from ..roofline import TPU_V5E, model_flops, roofline_terms
+    from .cells import make_cell
+    from .mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.devices.size
+    rec = {
+        "arch": arch_id, "shape": shape_name, "mesh": mesh_kind,
+        "mode": mode, "variant": variant,
+        "chips": int(n_chips), "status": "error",
+    }
+    t0 = time.time()
+    try:
+        cell = make_cell(arch_id, shape_name, mesh, mode=mode,
+                         variant=variant)
+        with mesh:
+            jitted = cell.jitted()
+            lowered = jitted.lower(*cell.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        ma = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        from ..roofline.hlo import account
+        acc = account(hlo)
+        terms = roofline_terms(cost, hlo)
+
+        cfg = get_config(arch_id)
+        shape = SHAPES_BY_NAME[shape_name]
+        mf = model_flops(cfg, shape, backward=(shape.kind == "train"))
+        mf_dev = mf / n_chips
+        hlo_flops = terms.flops
+
+        rec.update({
+            "status": "ok",
+            "t_lower_s": round(t_lower, 2),
+            "t_compile_s": round(t_compile, 2),
+            "memory": {
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "alias_bytes": ma.alias_size_in_bytes,
+                "total_nonalias_bytes": (
+                    ma.argument_size_in_bytes + ma.output_size_in_bytes
+                    + ma.temp_size_in_bytes - ma.alias_size_in_bytes),
+                "hbm_per_chip": TPU_V5E.hbm_bytes,
+                # CPU-backend lowering materializes f32 twins of every bf16
+                # buffer (no native bf16 on CPU), so `temp` is a ~2x upper
+                # bound on TPU temp; report both verdicts (EXPERIMENTS.md
+                # §Dry-run discusses).
+                "fits": (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                         + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+                        < TPU_V5E.hbm_bytes,
+                "fits_tpu_est": (
+                    ma.argument_size_in_bytes + ma.output_size_in_bytes
+                    + ma.temp_size_in_bytes / 2 - ma.alias_size_in_bytes)
+                    < TPU_V5E.hbm_bytes,
+            },
+            "cost_raw": {k: float(v) for k, v in cost.items()
+                         if k in ("flops", "bytes accessed", "transcendentals")},
+            "collectives": acc.collectives,
+            "loop_trip_counts": acc.trip_counts,
+            "roofline": terms.as_dict(),
+            "model_flops_total": mf,
+            "model_flops_per_dev": mf_dev,
+            "hlo_over_model_flops": (hlo_flops / mf_dev) if mf_dev else None,
+        })
+        print(f"[dryrun] {arch_id} x {shape_name} x {mesh_kind} x {mode}: OK "
+              f"(lower {t_lower:.1f}s compile {t_compile:.1f}s, "
+              f"bound={terms.bound}, fits={rec['memory']['fits']}"
+              f"/tpu_est={rec['memory']['fits_tpu_est']})")
+        print(f"  memory_analysis: arg={ma.argument_size_in_bytes/1e9:.2f}GB "
+              f"out={ma.output_size_in_bytes/1e9:.2f}GB "
+              f"temp={ma.temp_size_in_bytes/1e9:.2f}GB "
+              f"alias={ma.alias_size_in_bytes/1e9:.2f}GB")
+        print(f"  cost_analysis: flops/dev={terms.flops:.3e} "
+              f"bytes/dev={terms.bytes_hbm:.3e} coll/dev={terms.bytes_collective:.3e}")
+    except Exception as e:  # noqa: BLE001 — record and continue the queue
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[dryrun] {arch_id} x {shape_name} x {mesh_kind} x {mode}: "
+              f"FAIL {rec['error']}")
+
+    if out_dir:
+        os.makedirs(os.path.join(out_dir, mesh_kind), exist_ok=True)
+        path = os.path.join(out_dir, mesh_kind,
+                            f"{arch_id}__{shape_name}__{mode}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--modes", default="dense")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--variant", default="base")
+    args = ap.parse_args()
+
+    from ..configs import ARCHS, runnable_shapes
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    modes = args.modes.split(",")
+
+    cells = []
+    if args.all:
+        for arch_id, cfg in ARCHS.items():
+            for shape in runnable_shapes(cfg):
+                for mode in modes:
+                    if mode == "crew" and shape.kind == "train":
+                        continue
+                    cells.append((arch_id, shape.name, mode))
+    else:
+        cells = [(args.arch, args.shape, m) for m in modes]
+
+    n_ok = 0
+    results = []
+    for mesh_kind in meshes:
+        for arch_id, shape_name, mode in cells:
+            if args.skip_existing:
+                p = os.path.join(args.out, mesh_kind,
+                                 f"{arch_id}__{shape_name}__{mode}.json")
+                if os.path.exists(p):
+                    with open(p) as f:
+                        if json.load(f).get("status") == "ok":
+                            print(f"[dryrun] skip existing {p}")
+                            n_ok += 1
+                            continue
+            rec = run_cell(arch_id, shape_name, mesh_kind, mode, args.out,
+                           variant=args.variant)
+            results.append(rec)
+            n_ok += rec["status"] == "ok"
+    total = len(cells) * len(meshes)
+    print(f"[dryrun] {n_ok}/{total} cells OK")
+    if n_ok < total:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

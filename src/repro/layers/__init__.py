@@ -1,0 +1,13 @@
+"""NN substrate: functional layers with (params, logical-axis spec) pairs.
+
+Conventions
+-----------
+* Params are nested dicts of jnp arrays (or CREW matrix pytrees after
+  serving-time conversion).
+* Every ``*_init`` has a matching ``*_spec`` returning the same tree shape
+  with ``jax.sharding.PartitionSpec`` leaves over *logical* axis names
+  ("embed", "mlp", "heads", "vocab", "expert", ...).  repro.dist.sharding
+  maps logical -> physical mesh axes.
+* Scanned stacks carry a leading "layers" axis on every leaf.
+"""
+from . import linear, norms, rope, attention, mlp, moe, mamba2, xlstm, embed, recurrent  # noqa: F401

@@ -1,0 +1,371 @@
+"""Attention: GQA/MQA/MHA projections + chunked (flash-style) softmax.
+
+Training/prefill use ``chunked_attention`` — an online-softmax sweep over
+KV chunks (and a map over Q chunks) so the [Sq, Skv] score matrix never
+materializes; this is the memory-bounded, GSPMD-friendly formulation
+(collectives appear automatically when the KV sequence axis is sharded,
+as in the long-context decode cells).
+
+Decode uses ``decode_attention`` — one new token against a static-size KV
+cache with a length mask (S up to 512k stays cheap because the score tensor
+is [B, H, 1, S]).
+
+GQA is expressed by grouping query heads over KV heads; MQA (kv=1) falls
+out as group = H.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..dist.ctx import constrain
+from . import linear
+from .rope import apply_rope, rope_freqs
+
+__all__ = [
+    "init", "spec", "crew_names",
+    "chunked_attention", "decode_attention",
+    "attend", "attend_decode", "init_kv_cache", "cache_spec",
+]
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# Projections
+# --------------------------------------------------------------------------
+
+def init(rng, d_model: int, n_heads: int, n_kv: int, d_head: int, *,
+         qkv_bias: bool = False, dtype=jnp.float32, stack=()):
+    ks = jax.random.split(rng, 4)
+    return {
+        "q": linear.init(ks[0], d_model, n_heads * d_head, bias=qkv_bias, dtype=dtype, stack=stack),
+        "k": linear.init(ks[1], d_model, n_kv * d_head, bias=qkv_bias, dtype=dtype, stack=stack),
+        "v": linear.init(ks[2], d_model, n_kv * d_head, bias=qkv_bias, dtype=dtype, stack=stack),
+        "o": linear.init(ks[3], n_heads * d_head, d_model, bias=False, dtype=dtype,
+                         scale=(n_heads * d_head) ** -0.5, stack=stack),
+    }
+
+
+def spec(*, qkv_bias: bool = False, stack_axes=(), shard_kv: bool = True):
+    """Logical axes: q/k/v column-parallel over "heads"; o row-parallel.
+
+    shard_kv=False replicates the K/V projections (MQA with kv=1 cannot
+    split a single head across the TP axis)."""
+    kv_axis = "heads" if shard_kv else None
+    return {
+        "q": linear.spec("embed", "heads", bias=qkv_bias, stack_axes=stack_axes),
+        "k": linear.spec("embed", kv_axis, bias=qkv_bias, stack_axes=stack_axes),
+        "v": linear.spec("embed", kv_axis, bias=qkv_bias, stack_axes=stack_axes),
+        "o": linear.spec("heads", "embed", bias=False, stack_axes=stack_axes),
+    }
+
+
+def crew_names():
+    """Weight leaves that serving-time CREW conversion targets."""
+    return ("q", "k", "v", "o")
+
+
+# --------------------------------------------------------------------------
+# Core softmax attention
+# --------------------------------------------------------------------------
+
+def _group_scores(q, k):
+    """q [B, Sq, H, D] x k [B, Sk, KV, D] -> f32 scores [B, KV, G, Sq, Sk].
+
+    Operands stay in their storage dtype with f32 accumulation
+    (preferred_element_type) — an explicit ``.astype(f32)`` on the K/V
+    cache gets loop-hoisted by XLA into a full-stack f32 copy of the cache
+    (+860 MB/device per tensor on the granite decode cell).
+    """
+    b, sq, h, d = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, sq, kv, g, d)
+    return jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(qg.dtype),
+                      preferred_element_type=jnp.float32)
+
+
+def chunked_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    q_chunk: int = 512,
+    kv_chunk: int = 512,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    """Online-softmax attention. q [B, Sq, H, D]; k, v [B, Sk, KV, D].
+
+    Returns [B, Sq, H, D] in q.dtype.  Sq/Sk are padded internally to chunk
+    multiples; padded KV positions are masked out, padded Q rows sliced off.
+    """
+    b, sq, h, d = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = d ** -0.5
+
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, sk)
+    sq_p = -(-sq // q_chunk) * q_chunk
+    sk_p = -(-sk // kv_chunk) * kv_chunk
+    if sq_p != sq:
+        q = jnp.pad(q, ((0, 0), (0, sq_p - sq), (0, 0), (0, 0)))
+    if sk_p != sk:
+        k = jnp.pad(k, ((0, 0), (0, sk_p - sk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, sk_p - sk), (0, 0), (0, 0)))
+    nq, nk = sq_p // q_chunk, sk_p // kv_chunk
+
+    # Pin the chunked scan inputs: GSPMD propagation through while-loop
+    # bodies is unreliable and silently replicates the whole attention
+    # region otherwise (batch dim must stay data-sharded inside the loops).
+    chunk_spec = (None, "batch", None, "kv_heads", None)
+    k_ch = constrain(jnp.moveaxis(k.reshape(b, nk, kv_chunk, kv, d), 1, 0),
+                     *chunk_spec)
+    v_ch = constrain(jnp.moveaxis(v.reshape(b, nk, kv_chunk, kv, d), 1, 0),
+                     *chunk_spec)
+
+    def one_q_chunk(args):
+        iq, q_blk = args  # q_blk [B, cq, H, D]
+        q_pos = q_offset + iq * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            ik, k_blk, v_blk = inp
+            k_pos = ik * kv_chunk + jnp.arange(kv_chunk)
+            s = _group_scores(q_blk, k_blk) * scale  # [B, KV, G, cq, ck]
+            # Additive [cq, ck] f32 bias, NOT a broadcast `where` over the
+            # full score shape: a pred mask broadcast to [B, KV, G, cq, ck]
+            # gets materialized + loop-hoisted by XLA into multi-GB stacked
+            # buffers (observed 44 GB/device on the 4k-train dry-run); the
+            # rank-2 bias fuses into the score add.
+            bias = jnp.zeros((q_chunk, kv_chunk), dtype=jnp.float32)
+            if causal:
+                bias = jnp.where(q_pos[:, None] >= k_pos[None, :], 0.0, NEG_INF)
+            if sk_p != sk:  # static: KV padding exists
+                bias = bias + jnp.where(k_pos[None, :] < sk, 0.0, NEG_INF)
+            s = s + bias[None, None, None]
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            # p cast to the V storage dtype, f32 accumulation — same
+            # loop-hoisting hazard as _group_scores (and the MXU-native
+            # mixed-precision form: bf16 x bf16 -> f32).
+            pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(v_blk.dtype),
+                            v_blk, preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            # Carries shard KV heads when divisible, else the query-group
+            # dim G ("heads" — e.g. MQA kv=1 has G=48): forcing only
+            # kv_heads replicated the carries while the PV einsum output
+            # was G-sharded, making GSPMD all-gather the accumulator on
+            # EVERY kv step (observed: 25 MB x 212,992 on granite prefill).
+            cs = ("batch", "kv_heads", "heads", None)
+            return (constrain(m_new, *cs), constrain(l_new, *cs),
+                    constrain(acc_new, *cs, None)), None
+
+        cs0 = ("batch", "kv_heads", "heads", None)
+        m0 = constrain(jnp.full((b, kv, g, q_chunk), NEG_INF,
+                                dtype=jnp.float32), *cs0)
+        l0 = constrain(jnp.zeros((b, kv, g, q_chunk), dtype=jnp.float32), *cs0)
+        a0 = constrain(jnp.zeros((b, kv, g, q_chunk, d), dtype=jnp.float32),
+                       *cs0, None)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk), k_ch, v_ch)
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]   # [B, KV, G, cq, D]
+        return jnp.moveaxis(out, 3, 1).reshape(b, q_chunk, h, d)
+
+    q_blocks = constrain(jnp.moveaxis(q.reshape(b, nq, q_chunk, h, d), 1, 0),
+                         None, "batch", None, "heads", None)
+    out = jax.lax.map(one_q_chunk, (jnp.arange(nq), q_blocks))  # [nq, B, cq, H, D]
+    out = jnp.moveaxis(out, 0, 1).reshape(b, sq_p, h, d)
+    return out[:, :sq].astype(q.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    cache_len: jnp.ndarray,
+) -> jnp.ndarray:
+    """q [B, 1, H, D] vs cache [B, S, KV, D]; positions >= cache_len masked.
+
+    An int8 cache runs the score and PV contractions natively in
+    int8 x int8 -> int32 (the MXU's 2x-rate int8 mode): the cache streams
+    from HBM at half the bf16 bytes and is never dequantized into a bf16
+    twin — the §Perf decode-cell optimization.
+    """
+    b, _, h, d = q.shape
+    s, kv = k_cache.shape[1], k_cache.shape[2]
+    g = h // kv
+    scale = d ** -0.5
+    int8_kv = k_cache.dtype == jnp.int8
+    if int8_kv:
+        qg = jnp.clip(jnp.round(
+            q.reshape(b, 1, kv, g, d).astype(jnp.float32) * KV_INT8_SCALE),
+            -127, 127).astype(jnp.int8)
+        scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k_cache,
+                            preferred_element_type=jnp.int32)
+        scores = scores.astype(jnp.float32) * (scale / KV_INT8_SCALE ** 2)
+    else:
+        scores = _group_scores(q, k_cache) * scale      # [B, KV, G, 1, S]
+    pos = jnp.arange(s)
+    mask = pos[None, :] < cache_len.reshape(-1, 1)      # [B, S]
+    scores = jnp.where(mask[:, None, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    if int8_kv:
+        pq = jnp.clip(jnp.round(p * 127.0), 0, 127).astype(jnp.int8)
+        out = jnp.einsum("bkgqs,bskd->bqkgd", pq, v_cache,
+                         preferred_element_type=jnp.int32)
+        out = out.astype(jnp.float32) / (127.0 * KV_INT8_SCALE)
+    else:
+        out = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v_cache.dtype),
+                         v_cache, preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# Full attention block (projections + rope + softmax + out-proj)
+# --------------------------------------------------------------------------
+
+def flash_sharded(q, k, v, *, causal=True, block_q=512, block_k=512):
+    """Flash-attention Pallas kernel under shard_map (data x heads).
+
+    GSPMD cannot partition a pallas_call, so the kernel runs on local
+    shards: batch over ("pod","data"), heads over "model" when the head
+    count divides (MQA/GQA groups divide out inside the kernel's K/V
+    index maps; an indivisible head count falls back to replication,
+    matching the dense path's behavior).  Outside a sharding ctx this is
+    a plain single-device kernel call.
+    """
+    from functools import partial
+    from jax import shard_map
+    from jax.sharding import PartitionSpec as P
+    from ..dist.ctx import current_ctx
+    from ..dist.sharding import resolve
+    from ..kernels.flash_attention import flash_attention
+
+    fn = partial(flash_attention, causal=causal, block_q=block_q,
+                 block_k=block_k)
+    ctx = current_ctx()
+    if ctx is None:
+        return fn(q, k, v)
+    mesh, rules = ctx
+    qs = resolve(P("batch", None, "heads", None), q.shape, mesh, rules)
+    kvs = resolve(P("batch", None, "kv_heads", None), k.shape, mesh, rules)
+    if len(qs) > 2 and qs[2] is not None and not (
+            len(kvs) > 2 and kvs[2] is not None):
+        # q heads sharded but KV heads indivisible: only legal if every
+        # shard's local head count still covers whole GQA groups — i.e.
+        # kv divides the per-shard head count.  Otherwise replicate heads.
+        import math
+        sizes = dict(mesh.shape)
+        n_shard = math.prod(sizes[a] for a in
+                            ((qs[2],) if isinstance(qs[2], str) else qs[2]))
+        if (q.shape[2] // n_shard) % k.shape[2] != 0:
+            qs = P(*qs[:2], None, *qs[3:])
+    return shard_map(fn, mesh=mesh, in_specs=(qs, kvs, kvs), out_specs=qs,
+                     check_vma=False)(q, k, v)
+
+
+def attend(params, x, *, n_heads, n_kv, d_head, rope_theta=10000.0,
+           causal=True, q_chunk=512, kv_chunk=512, crew_strategy="auto",
+           positions=None, impl="chunked"):
+    """Training/prefill path. x [B, S, d] -> ([B, S, d], (k, v) for cache).
+
+    impl="chunked" — pure-XLA online softmax (differentiable, default).
+    impl="flash"   — Pallas flash kernel via shard_map (serving/dry-run
+                     forward path; scores never leave VMEM).
+    """
+    b, s, _ = x.shape
+    q = linear.apply(params["q"], x, crew_strategy=crew_strategy)
+    k = linear.apply(params["k"], x, crew_strategy=crew_strategy)
+    v = linear.apply(params["v"], x, crew_strategy=crew_strategy)
+    q = constrain(q.reshape(b, s, n_heads, d_head), "batch", None, "heads", None)
+    k = constrain(k.reshape(b, s, n_kv, d_head), "batch", None, "kv_heads", None)
+    v = constrain(v.reshape(b, s, n_kv, d_head), "batch", None, "kv_heads", None)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    inv = rope_freqs(d_head, rope_theta)
+    q = apply_rope(q, positions, inv)
+    k = apply_rope(k, positions, inv)
+    if impl == "flash":
+        out = flash_sharded(q, k, v, causal=causal, block_q=q_chunk,
+                            block_k=kv_chunk)
+    else:
+        out = chunked_attention(q, k, v, causal=causal, q_chunk=q_chunk,
+                                kv_chunk=kv_chunk)
+    out = out.reshape(b, s, n_heads * d_head)
+    return linear.apply(params["o"], out, crew_strategy=crew_strategy), (k, v)
+
+
+# int8 KV-cache quantization scale (§Perf decode iteration): K/V entries
+# after RoPE are O(1)-scaled; a fixed power-of-two scale keeps the
+# quant/dequant to a shift-like multiply and halves the dominant decode
+# HBM stream vs bf16.  Per-block scales would be the production refinement.
+KV_INT8_SCALE = 32.0
+
+
+def _maybe_quant_kv(t: jnp.ndarray, like: jnp.ndarray) -> jnp.ndarray:
+    if like.dtype == jnp.int8:
+        return jnp.clip(jnp.round(t.astype(jnp.float32) * KV_INT8_SCALE),
+                        -127, 127).astype(jnp.int8)
+    return t.astype(like.dtype)
+
+
+def _maybe_dequant_kv(t: jnp.ndarray, dtype) -> jnp.ndarray:
+    if t.dtype == jnp.int8:
+        return (t.astype(jnp.float32) / KV_INT8_SCALE).astype(dtype)
+    return t
+
+
+def attend_decode(params, x, cache, *, n_heads, n_kv, d_head,
+                  rope_theta=10000.0, crew_strategy="auto"):
+    """Decode path. x [B, 1, d]; cache {"k","v","len"} -> (out, new_cache).
+
+    An int8 cache (``init_kv_cache(dtype=jnp.int8)``) is quantized on
+    write and dequantized on read at a fixed scale.
+    """
+    b = x.shape[0]
+    q = linear.apply(params["q"], x, crew_strategy=crew_strategy)
+    k = linear.apply(params["k"], x, crew_strategy=crew_strategy)
+    v = linear.apply(params["v"], x, crew_strategy=crew_strategy)
+    q = q.reshape(b, 1, n_heads, d_head)
+    k = k.reshape(b, 1, n_kv, d_head)
+    v = v.reshape(b, 1, n_kv, d_head)
+    pos = jnp.broadcast_to(cache["len"].reshape(1, 1), (b, 1))
+    inv = rope_freqs(d_head, rope_theta)
+    q = apply_rope(q, pos, inv)
+    k = apply_rope(k, pos, inv)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], _maybe_quant_kv(k, cache["k"]), cache["len"], axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], _maybe_quant_kv(v, cache["v"]), cache["len"], axis=1)
+    out = decode_attention(q, k_cache, v_cache, cache["len"] + 1)
+    out = out.reshape(b, 1, n_heads * d_head)
+    y = linear.apply(params["o"], out, crew_strategy=crew_strategy)
+    return y, {"k": k_cache, "v": v_cache, "len": cache["len"] + 1}
+
+
+def init_kv_cache(batch: int, seq_len: int, n_kv: int, d_head: int,
+                  dtype=jnp.bfloat16, stack=()):
+    return {
+        "k": jnp.zeros((*stack, batch, seq_len, n_kv, d_head), dtype=dtype),
+        "v": jnp.zeros((*stack, batch, seq_len, n_kv, d_head), dtype=dtype),
+        "len": jnp.zeros((), dtype=jnp.int32),
+    }
+
+
+def cache_spec(stack_axes=(), shard_kv: bool = True):
+    kv_axis = "kv_heads" if shard_kv else None
+    return {
+        "k": P(*stack_axes, "batch", "kv_seq", kv_axis, None),
+        "v": P(*stack_axes, "batch", "kv_seq", kv_axis, None),
+        "len": P(),
+    }

@@ -1,0 +1,44 @@
+"""Token embeddings and the output head (tied or untied)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..dist.ctx import constrain
+
+__all__ = ["init", "spec", "embed", "logits"]
+
+
+def init(rng, vocab: int, d_model: int, *, tie: bool = True, dtype=jnp.float32):
+    ks = jax.random.split(rng, 2)
+    params = {"table": jax.random.normal(ks[0], (vocab, d_model)).astype(dtype) * 0.02}
+    if not tie:
+        params["head"] = (
+            jax.random.normal(ks[1], (d_model, vocab)).astype(dtype) * d_model ** -0.5
+        )
+    return params
+
+
+def spec(*, tie: bool = True):
+    s = {"table": P("vocab", "embed")}
+    if not tie:
+        s["head"] = P("embed", "vocab")
+    return s
+
+
+def embed(params, tokens: jnp.ndarray, dtype=jnp.bfloat16) -> jnp.ndarray:
+    # The gather from a vocab-sharded table involuntarily replicates under
+    # GSPMD; pin the output back to batch sharding so replication does not
+    # poison every downstream activation (observed on the train dry-run).
+    x = params["table"].astype(dtype)[tokens]
+    return constrain(x, "batch", None, None)
+
+
+def logits(params, x: jnp.ndarray) -> jnp.ndarray:
+    """x [..., d] -> [..., vocab] in fp32 (stable softmax/loss)."""
+    if "head" in params:
+        out = x.astype(jnp.float32) @ params["head"].astype(jnp.float32)
+    else:
+        out = x.astype(jnp.float32) @ params["table"].astype(jnp.float32).T
+    return constrain(out, "batch", None, "vocab")

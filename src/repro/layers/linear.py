@@ -1,0 +1,74 @@
+"""Linear layer — dense or CREW-backed.
+
+The weight leaf is either a jnp array [N, M] (training / dense serving) or
+a ``CrewMatrixUniform`` (serving after ``repro.serve.convert`` CREW-izes the
+checkpoint).  ``apply`` dispatches on the leaf type so every model in the
+framework gets CREW support for free.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..core.convert import CrewMatrixUniform, CrewMatrixVar
+from ..kernels.ops import crew_matmul
+
+__all__ = ["init", "spec", "apply"]
+
+
+def init(rng, n_in: int, n_out: int, *, bias: bool = False,
+         dtype=jnp.float32, scale: Optional[float] = None,
+         stack: Sequence[int] = ()):
+    """Create params {"w": [*stack, N, M], ("b": [*stack, M])}.
+
+    ``stack`` prepends scan axes (e.g. (L,) for a scanned layer stack).
+    """
+    if scale is None:
+        scale = n_in ** -0.5
+    k_w, _ = jax.random.split(rng)
+    w = jax.random.normal(k_w, (*stack, n_in, n_out), dtype=jnp.float32) * scale
+    params = {"w": w.astype(dtype)}
+    if bias:
+        params["b"] = jnp.zeros((*stack, n_out), dtype=dtype)
+    return params
+
+
+def spec(in_axis: Optional[str], out_axis: Optional[str], *, bias: bool = False,
+         stack_axes: Sequence[Optional[str]] = ()):
+    s = {"w": P(*stack_axes, in_axis, out_axis)}
+    if bias:
+        s["b"] = P(*stack_axes, out_axis)
+    return s
+
+
+def crew_spec(in_axis: Optional[str], out_axis: Optional[str], *, bias: bool = False,
+              stack_axes: Sequence[Optional[str]] = ()):
+    """Spec tree for a CREW-converted weight: packed words shard like the
+    [N, M] weight (word dim follows M because packing is per-row and
+    word-aligned); unique tables shard on N only and replicate across the
+    TP axis (small)."""
+    s = {
+        "w": CrewMatrixUniform(
+            words=P(*stack_axes, in_axis, out_axis),
+            uniq=P(*stack_axes, in_axis, None),
+            width=0,   # static fields ignored by sharding code
+            n_out=0,
+        )
+    }
+    if bias:
+        s["b"] = P(*stack_axes, out_axis)
+    return s
+
+
+def apply(params, x: jnp.ndarray, *, crew_strategy: str = "auto") -> jnp.ndarray:
+    w = params["w"]
+    if isinstance(w, (CrewMatrixUniform, CrewMatrixVar)):
+        y = crew_matmul(x, w, strategy=crew_strategy)
+    else:
+        y = x @ w.astype(x.dtype)
+    if "b" in params:
+        y = y + params["b"].astype(y.dtype)
+    return y

@@ -1,0 +1,215 @@
+"""Mamba2 (SSD) block — chunked train/prefill + O(1)-state decode.
+
+Scalar-per-head decay SSD recurrence (n_groups = 1):
+
+    h_t = a_t * h_{t-1} + dt_t * (B_t outer x_t)        a_t = exp(-exp(A_log) dt_t)
+    y_t = (C_t . h_t) + D * x_t
+
+Train/prefill uses the chunked semi-parallel SSD form: a quadratic
+intra-chunk term (masked decay matrix L[t, s] = exp(cum[t] - cum[s])) plus
+an inter-chunk state scan — sub-quadratic in sequence length, which is what
+qualifies the SSM/hybrid archs for the long_500k cells.  Decode is the
+plain one-step recurrence against a [B, H, P, N] state cache.
+
+Shapes: d_inner = expand * d_model, H = d_inner / head_dim, state N.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..dist.ctx import constrain
+from . import linear
+
+__all__ = ["init", "spec", "apply_chunked", "apply_decode", "init_state",
+           "state_spec", "dims"]
+
+CONV_W = 4  # causal depthwise conv window
+
+
+def dims(d_model: int, *, expand: int = 2, head_dim: int = 64, state: int = 64):
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    conv_ch = d_inner + 2 * state
+    return d_inner, n_heads, conv_ch
+
+
+def init(rng, d_model: int, *, expand: int = 2, head_dim: int = 64,
+         state: int = 64, dtype=jnp.float32, stack=()):
+    d_inner, n_heads, conv_ch = dims(d_model, expand=expand,
+                                     head_dim=head_dim, state=state)
+    ks = jax.random.split(rng, 4)
+    d_proj = 2 * d_inner + 2 * state + n_heads  # z, x, B, C, dt
+    return {
+        "in_proj": linear.init(ks[0], d_model, d_proj, dtype=dtype, stack=stack),
+        "conv_w": jax.random.normal(ks[1], (*stack, CONV_W, conv_ch)).astype(dtype) * 0.1,
+        "conv_b": jnp.zeros((*stack, conv_ch), dtype=dtype),
+        "a_log": jnp.zeros((*stack, n_heads), dtype=jnp.float32),
+        "dt_bias": jnp.zeros((*stack, n_heads), dtype=jnp.float32),
+        "d_skip": jnp.ones((*stack, n_heads), dtype=jnp.float32),
+        "norm": jnp.ones((*stack, d_inner), dtype=dtype),
+        "out_proj": linear.init(ks[3], d_inner, d_model, dtype=dtype,
+                                scale=d_inner ** -0.5, stack=stack),
+    }
+
+
+def spec(stack_axes=()):
+    sa = stack_axes
+    return {
+        "in_proj": linear.spec("embed", "heads", stack_axes=sa),
+        "conv_w": P(*sa, None, "heads"),
+        "conv_b": P(*sa, "heads"),
+        "a_log": P(*sa, "heads"),
+        "dt_bias": P(*sa, "heads"),
+        "d_skip": P(*sa, "heads"),
+        "norm": P(*sa, "heads"),
+        "out_proj": linear.spec("heads", "embed", stack_axes=sa),
+    }
+
+
+def _split_proj(proj, d_inner, state, n_heads):
+    z = proj[..., :d_inner]
+    xbc = proj[..., d_inner: 2 * d_inner + 2 * state]
+    dt = proj[..., 2 * d_inner + 2 * state:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, conv_w, conv_b, carry=None):
+    """Depthwise causal conv, window CONV_W. xbc [B, S, C].
+
+    carry: optional [B, CONV_W-1, C] left context (decode).  Returns
+    (y, new_carry)."""
+    b, s, c = xbc.shape
+    if carry is None:
+        carry = jnp.zeros((b, CONV_W - 1, c), dtype=xbc.dtype)
+    ext = jnp.concatenate([carry, xbc], axis=1)  # [B, S+3, C]
+    y = sum(
+        ext[:, i: i + s] * conv_w[i][None, None].astype(xbc.dtype)
+        for i in range(CONV_W)
+    ) + conv_b[None, None].astype(xbc.dtype)
+    new_carry = ext[:, -(CONV_W - 1):]
+    return jax.nn.silu(y), new_carry
+
+
+def _ssd_chunk(carry, blk, *, n_heads, head_dim, state):
+    """One SSD chunk. carry h [B, H, P, N]; blk tensors over chunk len Q."""
+    h = carry
+    x, b_in, c_in, dt, loga = blk  # x [B,Q,H,P], b/c [B,Q,N], dt/loga [B,Q,H]
+    cum = jnp.cumsum(loga, axis=1)                       # [B, Q, H]
+    # intra-chunk quadratic term
+    scores = jnp.einsum("btn,bsn->bts", c_in, b_in)      # [B, Q, Q]
+    ldecay = jnp.exp(cum[:, :, None] - cum[:, None])     # [B, Qt, Qs, H]
+    q = x.shape[1]
+    mask = jnp.tril(jnp.ones((q, q), dtype=bool))
+    ldecay = jnp.where(mask[None, :, :, None], ldecay, 0.0)
+    w = scores[..., None] * ldecay * dt[:, None]         # [B, Qt, Qs, H]
+    y_intra = jnp.einsum("btsh,bshp->bthp", w, x)
+    # contribution of the carried state
+    y_inter = jnp.einsum("btn,bhpn,bth->bthp", c_in, h, jnp.exp(cum))
+    # state update to the end of the chunk: contribution of step s to h_Q is
+    # prod_{r=s+1..Q} a_r * dt_s B_s x_s = exp(cum_Q - cum_s) dt_s B_s x_s
+    # (cum includes a_s at position s, so the difference excludes a_s itself)
+    decay_to_end = jnp.exp(cum[:, -1:, :] - cum)         # [B, Q, H]
+    upd = jnp.einsum("bsh,bsn,bshp->bhpn", decay_to_end * dt, b_in, x)
+    h_new = h * jnp.exp(cum[:, -1])[:, :, None, None] + upd
+    return h_new, y_intra + y_inter
+
+
+def apply_chunked(params, xin, *, head_dim: int = 64, state: int = 64,
+                  chunk: int = 256, crew_strategy="auto", h0=None):
+    """Training/prefill forward. xin [B, S, d] -> ([B, S, d], final_state)."""
+    b, s, d_model = xin.shape
+    proj = linear.apply(params["in_proj"], xin, crew_strategy=crew_strategy)
+    d_inner = params["norm"].shape[-1]
+    n_heads = d_inner // head_dim
+    z, xbc, dt_pre = _split_proj(proj, d_inner, state, n_heads)
+    xbc, _ = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+    x = xbc[..., :d_inner].reshape(b, s, n_heads, head_dim).astype(jnp.float32)
+    b_in = xbc[..., d_inner: d_inner + state].astype(jnp.float32)
+    c_in = xbc[..., d_inner + state:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_pre.astype(jnp.float32) + params["dt_bias"])
+    loga = -jnp.exp(params["a_log"])[None, None] * dt    # [B, S, H]
+
+    chunk = min(chunk, s)
+    n_chunks = -(-s // chunk)
+    s_pad = n_chunks * chunk
+    def padq(t):
+        return jnp.pad(t, [(0, 0), (0, s_pad - s)] + [(0, 0)] * (t.ndim - 2))
+    xc, bc, cc, dtc, lc = map(padq, (x, b_in, c_in, dt, loga))
+
+    def to_chunks(t):
+        # [nc, B, chunk, ...]: pin batch (+ heads where present) so the SSD
+        # chunk scan keeps data sharding inside the while body.
+        out = jnp.moveaxis(t.reshape(b, n_chunks, chunk, *t.shape[2:]), 1, 0)
+        spec = [None, "batch", None] + [
+            "heads" if d == n_heads else None for d in t.shape[2:]]
+        return constrain(out, *spec)
+
+    if h0 is None:
+        h0 = jnp.zeros((b, n_heads, head_dim, state), dtype=jnp.float32)
+    h0 = constrain(h0, "batch", "heads", None, None)
+    h_fin, ys = jax.lax.scan(
+        lambda c, blk: _ssd_chunk(c, blk, n_heads=n_heads, head_dim=head_dim,
+                                  state=state),
+        h0,
+        tuple(map(to_chunks, (xc, bc, cc, dtc, lc))),
+    )
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s_pad, n_heads, head_dim)[:, :s]
+    y = y + params["d_skip"][None, None, :, None] * x
+    y = y.reshape(b, s, d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    # gated RMSNorm
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-6) * params["norm"].astype(jnp.float32)
+    y = y.astype(xin.dtype)
+    return linear.apply(params["out_proj"], y, crew_strategy=crew_strategy), h_fin
+
+
+def apply_decode(params, xin, cache, *, head_dim: int = 64, state: int = 64,
+                 crew_strategy="auto"):
+    """Single-token decode. xin [B, 1, d]; cache {"conv", "h"}."""
+    b = xin.shape[0]
+    proj = linear.apply(params["in_proj"], xin, crew_strategy=crew_strategy)
+    d_inner = params["norm"].shape[-1]
+    n_heads = d_inner // head_dim
+    z, xbc, dt_pre = _split_proj(proj, d_inner, state, n_heads)
+    xbc, conv_carry = _causal_conv(xbc, params["conv_w"], params["conv_b"],
+                                   carry=cache["conv"])
+    x = xbc[..., :d_inner].reshape(b, n_heads, head_dim).astype(jnp.float32)
+    b_in = xbc[:, 0, d_inner: d_inner + state].astype(jnp.float32)
+    c_in = xbc[:, 0, d_inner + state:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_pre[:, 0].astype(jnp.float32) + params["dt_bias"])
+    a = jnp.exp(-jnp.exp(params["a_log"])[None] * dt)    # [B, H]
+    x = x.reshape(b, n_heads, head_dim)
+    h = cache["h"] * a[:, :, None, None] + jnp.einsum(
+        "bh,bn,bhp->bhpn", dt, b_in, x)
+    y = jnp.einsum("bn,bhpn->bhp", c_in, h)
+    y = y + params["d_skip"][None, :, None] * x
+    y = y.reshape(b, 1, d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-6) * params["norm"].astype(jnp.float32)
+    y = y.astype(xin.dtype)
+    out = linear.apply(params["out_proj"], y, crew_strategy=crew_strategy)
+    return out, {"conv": conv_carry, "h": h}
+
+
+def init_state(batch: int, d_model: int, *, expand: int = 2,
+               head_dim: int = 64, state: int = 64, dtype=jnp.float32, stack=()):
+    d_inner, n_heads, conv_ch = dims(d_model, expand=expand,
+                                     head_dim=head_dim, state=state)
+    return {
+        "conv": jnp.zeros((*stack, batch, CONV_W - 1, conv_ch), dtype=dtype),
+        "h": jnp.zeros((*stack, batch, n_heads, head_dim, state),
+                       dtype=jnp.float32),
+    }
+
+
+def state_spec(stack_axes=()):
+    return {
+        "conv": P(*stack_axes, "batch", None, "heads"),
+        "h": P(*stack_axes, "batch", "heads", None, None),
+    }

@@ -1,0 +1,56 @@
+"""Feed-forward blocks: SwiGLU (llama family) and GELU (encoder family)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import linear
+
+__all__ = ["swiglu_init", "swiglu_spec", "swiglu_apply",
+           "gelu_init", "gelu_spec", "gelu_apply"]
+
+
+def swiglu_init(rng, d_model: int, d_ff: int, *, dtype=jnp.float32, stack=()):
+    ks = jax.random.split(rng, 3)
+    return {
+        "gate": linear.init(ks[0], d_model, d_ff, dtype=dtype, stack=stack),
+        "up": linear.init(ks[1], d_model, d_ff, dtype=dtype, stack=stack),
+        "down": linear.init(ks[2], d_ff, d_model, dtype=dtype,
+                            scale=d_ff ** -0.5, stack=stack),
+    }
+
+
+def swiglu_spec(stack_axes=()):
+    return {
+        "gate": linear.spec("embed", "mlp", stack_axes=stack_axes),
+        "up": linear.spec("embed", "mlp", stack_axes=stack_axes),
+        "down": linear.spec("mlp", "embed", stack_axes=stack_axes),
+    }
+
+
+def swiglu_apply(params, x, *, crew_strategy="auto"):
+    g = linear.apply(params["gate"], x, crew_strategy=crew_strategy)
+    u = linear.apply(params["up"], x, crew_strategy=crew_strategy)
+    return linear.apply(params["down"], jax.nn.silu(g) * u,
+                        crew_strategy=crew_strategy)
+
+
+def gelu_init(rng, d_model: int, d_ff: int, *, dtype=jnp.float32, stack=()):
+    ks = jax.random.split(rng, 2)
+    return {
+        "up": linear.init(ks[0], d_model, d_ff, bias=True, dtype=dtype, stack=stack),
+        "down": linear.init(ks[1], d_ff, d_model, bias=True, dtype=dtype,
+                            scale=d_ff ** -0.5, stack=stack),
+    }
+
+
+def gelu_spec(stack_axes=()):
+    return {
+        "up": linear.spec("embed", "mlp", bias=True, stack_axes=stack_axes),
+        "down": linear.spec("mlp", "embed", bias=True, stack_axes=stack_axes),
+    }
+
+
+def gelu_apply(params, x, *, crew_strategy="auto"):
+    h = jax.nn.gelu(linear.apply(params["up"], x, crew_strategy=crew_strategy))
+    return linear.apply(params["down"], h, crew_strategy=crew_strategy)

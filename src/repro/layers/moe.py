@@ -1,0 +1,126 @@
+"""Mixture-of-Experts with GShard-style grouped one-hot dispatch.
+
+Tokens are split into fixed-size groups; within a group each token picks
+top-k experts, positions inside an expert's capacity buffer come from a
+cumulative sum, and dispatch/combine are einsums against a one-hot
+[groups, tokens, experts, capacity] tensor.
+
+SPMD structure: the group axis G is the sharded data axis (it inherits the
+batch sharding), experts shard over the "model" axis (EP), so the
+dispatch/combine einsums lower to the expected all-to-all-style
+collectives.  All groups are processed *vectorized* — never a scan over
+groups, which would serialize data parallelism; the dispatch one-hot
+[G, gs, E, C] is the largest intermediate and stays modest once sharded
+over G x E (~tens of MB/device at the 4k-train shape).  Capacity overflow
+drops tokens (standard GShard semantics); the residual path keeps them
+alive.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..dist.ctx import constrain
+from . import linear
+
+__all__ = ["init", "spec", "apply", "MoEStats"]
+
+
+class MoEStats(NamedTuple):
+    aux_loss: jnp.ndarray        # load-balance loss (Switch style)
+    dropped_fraction: jnp.ndarray
+
+
+def init(rng, d_model: int, d_ff: int, n_experts: int, *, dtype=jnp.float32,
+         stack=()):
+    ks = jax.random.split(rng, 4)
+    e = n_experts
+    return {
+        "router": linear.init(ks[0], d_model, e, dtype=jnp.float32, stack=stack),
+        "gate": linear.init(ks[1], d_model, d_ff, dtype=dtype, stack=(*stack, e)),
+        "up": linear.init(ks[2], d_model, d_ff, dtype=dtype, stack=(*stack, e)),
+        "down": linear.init(ks[3], d_ff, d_model, dtype=dtype,
+                            scale=d_ff ** -0.5, stack=(*stack, e)),
+    }
+
+
+def spec(stack_axes=()):
+    return {
+        "router": linear.spec("embed", None, stack_axes=stack_axes),
+        "gate": linear.spec("embed", "mlp", stack_axes=(*stack_axes, "expert")),
+        "up": linear.spec("embed", "mlp", stack_axes=(*stack_axes, "expert")),
+        "down": linear.spec("mlp", "embed", stack_axes=(*stack_axes, "expert")),
+    }
+
+
+def apply(params, x, *, top_k: int, capacity_factor: float = 1.25,
+          group_size: int = 512, crew_strategy="auto"):
+    """x [B, S, d] -> ([B, S, d], MoEStats)."""
+    b, s, d = x.shape
+    e = params["router"]["w"].shape[-1]
+    tokens = x.reshape(b * s, d)
+    t = tokens.shape[0]
+
+    group_size = min(group_size, t)
+    n_groups = -(-t // group_size)
+    t_pad = n_groups * group_size
+    if t_pad != t:
+        tokens = jnp.pad(tokens, ((0, t_pad - t), (0, 0)))
+    groups = constrain(tokens.reshape(n_groups, group_size, d),
+                       "batch", None, None)
+
+    capacity = max(1, int(group_size * top_k / e * capacity_factor))
+
+    logits = linear.apply(params["router"], groups.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                 # [G, gs, E]
+    gate_vals, sel = jax.lax.top_k(probs, top_k)            # [G, gs, k]
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # Switch-style load balance loss over the whole batch
+    me = probs.mean(axis=(0, 1))                            # [E]
+    sel_onehot = jax.nn.one_hot(sel, e, dtype=jnp.float32)  # [G, gs, k, E]
+    ce = sel_onehot.mean(axis=(0, 1)).sum(axis=0) / top_k   # [E] pick fraction
+    aux = e * jnp.sum(me * ce)
+
+    # position of each (token, k) inside its expert's buffer, per group
+    flat = sel_onehot.reshape(n_groups, group_size * top_k, e)
+    pos = (jnp.cumsum(flat, axis=1) - flat)                 # [G, gs*k, E]
+    pos = jnp.einsum("gte,gte->gt", pos, flat)              # selected pos
+    pos = pos.reshape(n_groups, group_size, top_k).astype(jnp.int32)
+    keep = pos < capacity
+    dropped = 1.0 - keep.mean()
+
+    pos_onehot = jax.nn.one_hot(pos, capacity, dtype=jnp.float32) * keep[..., None]
+    # dispatch[g, t, e, c]
+    disp = jnp.einsum("gtke,gtkc->gtec", sel_onehot, pos_onehot)
+    comb = jnp.einsum("gtke,gtkc,gtk->gtec", sel_onehot, pos_onehot, gate_vals)
+
+    def expert_w(name, dtype):
+        """Expert weight [E, din, dout]; CREW leaves decompress on the fly
+        (vmapped gather over the expert axis) — the packed indices are what
+        streamed from HBM, which is CREW's bandwidth saving; the matmul
+        itself runs dense on the MXU (DESIGN.md §3 'dense' strategy, the
+        right one for the compute-rich grouped-expert einsum)."""
+        from ..core.convert import CrewMatrixUniform, crew_reconstruct_uniform
+        w = params[name]["w"]
+        if isinstance(w, CrewMatrixUniform):
+            return jax.vmap(crew_reconstruct_uniform)(w).astype(dtype)
+        return w.astype(dtype)
+
+    # All groups vectorized: G shards over the data axis, E over the model
+    # axis (EP); the dispatch/combine einsums are the all-to-all boundary.
+    xe = jnp.einsum("gtd,gtec->gecd", groups, disp.astype(groups.dtype))
+    xe = constrain(xe, "batch", "expert", None, None)       # [G, E, C, d]
+    gg = jnp.einsum("gecd,edf->gecf", xe, expert_w("gate", xe.dtype))
+    uu = jnp.einsum("gecd,edf->gecf", xe, expert_w("up", xe.dtype))
+    hh = jax.nn.silu(gg) * uu
+    ye = jnp.einsum("gecf,efd->gecd", hh, expert_w("down", xe.dtype))
+    ye = constrain(ye, "batch", "expert", None, None)
+    out = jnp.einsum("gecd,gtec->gtd", ye, comb.astype(ye.dtype))
+    out = constrain(out, "batch", None, None)               # [G, gs, d]
+    out = out.reshape(t_pad, d)[:t].reshape(b, s, d)
+    return out.astype(x.dtype), MoEStats(aux_loss=aux, dropped_fraction=dropped)

@@ -1,0 +1,45 @@
+"""RMSNorm / LayerNorm (fp32 statistics, cast back to input dtype)."""
+from __future__ import annotations
+
+from typing import Sequence, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["rms_init", "rms_spec", "rms_apply", "ln_init", "ln_spec", "ln_apply"]
+
+
+def rms_init(d: int, *, dtype=jnp.float32, stack: Sequence[int] = ()):
+    return {"scale": jnp.ones((*stack, d), dtype=dtype)}
+
+
+def rms_spec(stack_axes: Sequence[Optional[str]] = ()):
+    return {"scale": P(*stack_axes, None)}
+
+
+def rms_apply(params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def ln_init(d: int, *, dtype=jnp.float32, stack: Sequence[int] = ()):
+    return {
+        "scale": jnp.ones((*stack, d), dtype=dtype),
+        "bias": jnp.zeros((*stack, d), dtype=dtype),
+    }
+
+
+def ln_spec(stack_axes: Sequence[Optional[str]] = ()):
+    return {"scale": P(*stack_axes, None), "bias": P(*stack_axes, None)}
+
+
+def ln_apply(params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(axis=-1, keepdims=True)
+    y = (xf - mu) * (var + eps) ** -0.5
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)

@@ -1,0 +1,120 @@
+"""Classic LSTM / GRU cells and stacks — the paper's RNN workloads.
+
+DS2 (GRU), GNMT (LSTM), PTBLM (LSTM) and the Kaldi MLP are built from
+these.  The gate projections are plain FC matrices, i.e. exactly the
+layers CREW targets; ``gate_matrices()`` exposes them for the offline
+CREW analysis/benchmarks.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import linear
+
+__all__ = [
+    "lstm_init", "lstm_spec", "lstm_apply",
+    "gru_init", "gru_spec", "gru_apply",
+    "gate_matrices",
+]
+
+
+def lstm_init(rng, d_in: int, d_hidden: int, *, dtype=jnp.float32, stack=()):
+    ks = jax.random.split(rng, 2)
+    return {
+        "wx": linear.init(ks[0], d_in, 4 * d_hidden, bias=True, dtype=dtype, stack=stack),
+        "wh": linear.init(ks[1], d_hidden, 4 * d_hidden, dtype=dtype, stack=stack),
+    }
+
+
+def lstm_spec(stack_axes=()):
+    return {
+        "wx": linear.spec("embed", "heads", bias=True, stack_axes=stack_axes),
+        "wh": linear.spec("embed", "heads", stack_axes=stack_axes),
+    }
+
+
+def _hidden_dim(wh):
+    """Hidden width from the recurrent weight — dense array or CREW leaf."""
+    w = wh["w"]
+    if hasattr(w, "shape"):
+        return w.shape[-2]
+    return w.uniq.shape[-2]  # CrewMatrixUniform: [N, K] unique table
+
+
+def lstm_apply(params, x, state=None):
+    """x [B, S, d_in] -> ([B, S, d_hidden], (h, c))."""
+    b, s, _ = x.shape
+    dh = _hidden_dim(params["wh"])
+    if state is None:
+        state = (jnp.zeros((b, dh), x.dtype), jnp.zeros((b, dh), x.dtype))
+    wx = linear.apply(params["wx"], x)  # [B, S, 4dh]
+
+    def step(carry, wx_t):
+        h, c = carry
+        pre = wx_t + linear.apply(params["wh"], h)
+        i, f, g, o = jnp.split(pre, 4, axis=-1)
+        c_new = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h_new = jax.nn.sigmoid(o) * jnp.tanh(c_new)
+        return (h_new, c_new), h_new
+
+    state, hs = jax.lax.scan(step, state, jnp.moveaxis(wx, 1, 0))
+    return jnp.moveaxis(hs, 0, 1), state
+
+
+def gru_init(rng, d_in: int, d_hidden: int, *, dtype=jnp.float32, stack=()):
+    ks = jax.random.split(rng, 2)
+    return {
+        "wx": linear.init(ks[0], d_in, 3 * d_hidden, bias=True, dtype=dtype, stack=stack),
+        "wh": linear.init(ks[1], d_hidden, 3 * d_hidden, dtype=dtype, stack=stack),
+    }
+
+
+def gru_spec(stack_axes=()):
+    return {
+        "wx": linear.spec("embed", "heads", bias=True, stack_axes=stack_axes),
+        "wh": linear.spec("embed", "heads", stack_axes=stack_axes),
+    }
+
+
+def gru_apply(params, x, state=None):
+    """x [B, S, d_in] -> ([B, S, d_hidden], h)."""
+    b, s, _ = x.shape
+    dh = _hidden_dim(params["wh"])
+    if state is None:
+        state = jnp.zeros((b, dh), x.dtype)
+    wx = linear.apply(params["wx"], x)
+
+    def step(h, wx_t):
+        xr, xz, xn = jnp.split(wx_t, 3, axis=-1)
+        hr, hz, hn = jnp.split(linear.apply(params["wh"], h), 3, axis=-1)
+        r = jax.nn.sigmoid(xr + hr)
+        z = jax.nn.sigmoid(xz + hz)
+        n = jnp.tanh(xn + r * hn)
+        h_new = (1 - z) * n + z * h
+        return h_new, h_new
+
+    state, hs = jax.lax.scan(step, state, jnp.moveaxis(wx, 1, 0))
+    return jnp.moveaxis(hs, 0, 1), state
+
+
+def gate_matrices(params: Dict) -> List[Tuple[str, jnp.ndarray]]:
+    """Collect every FC weight matrix in a (possibly nested) param tree —
+    the offline CREW analysis input."""
+    out = []
+
+    def rec(prefix, node):
+        if isinstance(node, dict):
+            if "w" in node and hasattr(node["w"], "ndim") and node["w"].ndim == 2:
+                out.append((prefix, node["w"]))
+            for k, v in node.items():
+                if k != "w":
+                    rec(f"{prefix}/{k}", v)
+        elif hasattr(node, "ndim") and node.ndim == 2:
+            out.append((prefix, node))
+
+    rec("", params)
+    return out

@@ -1,0 +1,28 @@
+"""Rotary position embeddings (interleaved-pair convention)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["rope_freqs", "apply_rope"]
+
+
+def rope_freqs(d_head: int, theta: float = 10000.0) -> jnp.ndarray:
+    """Inverse frequencies [d_head // 2] (fp32)."""
+    exponent = jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head
+    return 1.0 / (theta ** exponent)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, inv_freq: jnp.ndarray) -> jnp.ndarray:
+    """x: [B, S, H, D], positions: [B, S] int32 -> same shape/dtype.
+
+    Split-half convention (first D/2 dims paired with last D/2), matching
+    the HF Llama/Qwen family.
+    """
+    angles = positions[..., None].astype(jnp.float32) * inv_freq  # [B, S, D/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    xf = x.astype(jnp.float32)
+    d2 = x.shape[-1] // 2
+    x1, x2 = xf[..., :d2], xf[..., d2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,210 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+Gating math follows the xLSTM paper (exponential input gate, stabilizer
+state m).  Block wiring is the standard form: the mLSTM block up-projects
+(pf=2), runs the cell, applies the learned output gate and down-projects;
+the sLSTM block runs the cell at model width then applies a pf=4/3 GELU
+MLP.  Both cells run as a `lax.scan` over time — O(1)-state recurrence is
+what qualifies xLSTM for the long_500k decode cell; a chunked-parallel
+mLSTM is a recorded perf-iteration candidate (EXPERIMENTS §Perf).
+
+States: mLSTM (C [B, H, dk, dv], n [B, H, dk], m [B, H]);
+        sLSTM (c, n, h [B, d], m [B, d]).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..dist.ctx import constrain
+from . import linear
+
+__all__ = [
+    "mlstm_init", "mlstm_spec", "mlstm_apply", "mlstm_state", "mlstm_state_spec",
+    "slstm_init", "slstm_spec", "slstm_apply", "slstm_state", "slstm_state_spec",
+]
+
+
+# --------------------------------------------------------------------------
+# mLSTM
+# --------------------------------------------------------------------------
+
+def mlstm_init(rng, d_model: int, n_heads: int, *, pf: float = 2.0,
+               dtype=jnp.float32, stack=()):
+    di = int(pf * d_model)
+    ks = jax.random.split(rng, 7)
+    return {
+        "up": linear.init(ks[0], d_model, 2 * di, dtype=dtype, stack=stack),
+        "q": linear.init(ks[1], di, di, dtype=dtype, stack=stack),
+        "k": linear.init(ks[2], di, di, dtype=dtype, stack=stack),
+        "v": linear.init(ks[3], di, di, dtype=dtype, stack=stack),
+        "ifg": linear.init(ks[4], di, 2 * n_heads, dtype=jnp.float32, stack=stack),
+        "down": linear.init(ks[5], di, d_model, dtype=dtype,
+                            scale=di ** -0.5, stack=stack),
+    }
+
+
+def mlstm_spec(stack_axes=()):
+    sa = stack_axes
+    return {
+        "up": linear.spec("embed", "mlp", stack_axes=sa),
+        "q": linear.spec("mlp", "heads", stack_axes=sa),
+        "k": linear.spec("mlp", "heads", stack_axes=sa),
+        "v": linear.spec("mlp", "heads", stack_axes=sa),
+        "ifg": linear.spec("mlp", None, stack_axes=sa),
+        "down": linear.spec("mlp", "embed", stack_axes=sa),
+    }
+
+
+def mlstm_state(batch: int, d_model: int, n_heads: int, *, pf: float = 2.0,
+                stack=()):
+    di = int(pf * d_model)
+    dh = di // n_heads
+    return {
+        "C": jnp.zeros((*stack, batch, n_heads, dh, dh), dtype=jnp.float32),
+        "n": jnp.zeros((*stack, batch, n_heads, dh), dtype=jnp.float32),
+        "m": jnp.zeros((*stack, batch, n_heads), dtype=jnp.float32),
+    }
+
+
+def mlstm_state_spec(stack_axes=()):
+    return {
+        "C": P(*stack_axes, "batch", "heads", None, None),
+        "n": P(*stack_axes, "batch", "heads", None),
+        "m": P(*stack_axes, "batch", "heads"),
+    }
+
+
+def _mlstm_step(state, inp):
+    c, n, m = state["C"], state["n"], state["m"]
+    q, k, v, ig, fg = inp  # q/k/v [B, H, dh]; ig/fg [B, H]
+    m_new = jnp.maximum(fg + m, ig)
+    i_p = jnp.exp(ig - m_new)
+    f_p = jnp.exp(fg + m - m_new)
+    c_new = f_p[..., None, None] * c + i_p[..., None, None] * (
+        k[..., :, None] * v[..., None, :])
+    n_new = f_p[..., None] * n + i_p[..., None] * k
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n_new, q)), 1.0)
+    y = jnp.einsum("bhk,bhkv->bhv", q, c_new) / denom[..., None]
+    return {"C": c_new, "n": n_new, "m": m_new}, y
+
+
+def mlstm_apply(params, x, state=None, *, n_heads: int, pf: float = 2.0,
+                crew_strategy="auto"):
+    """x [B, S, d] -> ([B, S, d], final_state)."""
+    b, s, d = x.shape
+    di = int(pf * d)
+    dh = di // n_heads
+    up = linear.apply(params["up"], x, crew_strategy=crew_strategy)
+    xm, og = jnp.split(up, 2, axis=-1)
+    q = linear.apply(params["q"], xm, crew_strategy=crew_strategy)
+    k = linear.apply(params["k"], xm, crew_strategy=crew_strategy) * dh ** -0.5
+    v = linear.apply(params["v"], xm, crew_strategy=crew_strategy)
+    gates = linear.apply(params["ifg"], xm.astype(jnp.float32))
+    ig, fg = jnp.split(gates, 2, axis=-1)                  # [B, S, H]
+    fg = jax.nn.log_sigmoid(fg)
+
+    def resh(t):
+        out = jnp.moveaxis(
+            t.reshape(b, s, n_heads, dh).astype(jnp.float32), 1, 0)
+        return constrain(out, None, "batch", "heads", None)
+
+    qs, ks_, vs = map(resh, (q, k, v))
+    igs = constrain(jnp.moveaxis(ig, 1, 0), None, "batch", "heads")
+    fgs = constrain(jnp.moveaxis(fg, 1, 0), None, "batch", "heads")
+    if state is None:
+        state = mlstm_state(b, d, n_heads, pf=pf)
+    state = {
+        "C": constrain(state["C"], "batch", "heads", None, None),
+        "n": constrain(state["n"], "batch", "heads", None),
+        "m": constrain(state["m"], "batch", "heads"),
+    }
+    state, ys = jax.lax.scan(_mlstm_step, state, (qs, ks_, vs, igs, fgs))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, di)           # [B, S, di]
+    y = y * jax.nn.silu(og.astype(jnp.float32))
+    y = y.astype(x.dtype)
+    return linear.apply(params["down"], y, crew_strategy=crew_strategy), state
+
+
+# --------------------------------------------------------------------------
+# sLSTM
+# --------------------------------------------------------------------------
+
+def slstm_init(rng, d_model: int, n_heads: int, *, pf: float = 4.0 / 3.0,
+               dtype=jnp.float32, stack=()):
+    ks = jax.random.split(rng, 7)
+    dh = d_model // n_heads
+    dff = int(pf * d_model)
+    return {
+        # input projections for z, i, f, o (fused)
+        "wx": linear.init(ks[0], d_model, 4 * d_model, dtype=dtype, stack=stack),
+        # block-diagonal recurrent weights, per head [H, dh, 4*dh]
+        "r": jax.random.normal(ks[1], (*stack, n_heads, dh, 4 * dh)).astype(dtype)
+        * dh ** -0.5,
+        "b": jnp.zeros((*stack, 4 * d_model), dtype=jnp.float32),
+        "up": linear.init(ks[2], d_model, dff, dtype=dtype, stack=stack),
+        "down": linear.init(ks[3], dff, d_model, dtype=dtype,
+                            scale=dff ** -0.5, stack=stack),
+    }
+
+
+def slstm_spec(stack_axes=()):
+    sa = stack_axes
+    return {
+        "wx": linear.spec("embed", None, stack_axes=sa),
+        "r": P(*sa, "heads", None, None),
+        "b": P(*sa, None),
+        "up": linear.spec("embed", "mlp", stack_axes=sa),
+        "down": linear.spec("mlp", "embed", stack_axes=sa),
+    }
+
+
+def slstm_state(batch: int, d_model: int, stack=()):
+    z = jnp.zeros((*stack, batch, d_model), dtype=jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": z}
+
+
+def slstm_state_spec(stack_axes=()):
+    return {k: P(*stack_axes, "batch", None) for k in ("c", "n", "h", "m")}
+
+
+def _slstm_step(params_r, params_b, n_heads, state, wx_t):
+    c, n, h, m = state["c"], state["n"], state["h"], state["m"]
+    b, d = h.shape
+    dh = d // n_heads
+    hh = h.reshape(b, n_heads, dh)
+    rec = jnp.einsum("bhd,hdf->bhf", hh, params_r.astype(jnp.float32))
+    rec = rec.reshape(b, n_heads, 4, dh).transpose(0, 2, 1, 3).reshape(b, 4 * d)
+    pre = wx_t + rec + params_b
+    zt, it, ft, ot = jnp.split(pre, 4, axis=-1)
+    zt = jnp.tanh(zt)
+    ot = jax.nn.sigmoid(ot)
+    ft = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(ft + m, it)
+    i_p = jnp.exp(it - m_new)
+    f_p = jnp.exp(ft + m - m_new)
+    c_new = f_p * c + i_p * zt
+    n_new = f_p * n + i_p
+    h_new = ot * c_new / jnp.maximum(n_new, 1e-6)
+    return {"c": c_new, "n": n_new, "h": h_new, "m": m_new}, h_new
+
+
+def slstm_apply(params, x, state=None, *, n_heads: int,
+                crew_strategy="auto"):
+    """x [B, S, d] -> ([B, S, d], final_state)."""
+    b, s, d = x.shape
+    wx = linear.apply(params["wx"], x.astype(jnp.float32))  # [B, S, 4d]
+    wx = constrain(wx, "batch", None, None)
+    # reorder fused projection to (z, i, f, o) per-head contiguity handled
+    # inside the step; scan over time.
+    if state is None:
+        state = slstm_state(b, d)
+    state = {k: constrain(v, "batch", None) for k, v in state.items()}
+    step = lambda st, wx_t: _slstm_step(params["r"], params["b"], n_heads, st, wx_t)
+    state, hs = jax.lax.scan(step, state, jnp.moveaxis(wx, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)              # [B, S, d]
+    h = jax.nn.gelu(linear.apply(params["up"], y, crew_strategy=crew_strategy))
+    return linear.apply(params["down"], h, crew_strategy=crew_strategy), state

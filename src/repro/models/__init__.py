@@ -1,0 +1,120 @@
+"""Unified model API: ``build_model(cfg) -> ModelApi``.
+
+Every family exposes the same functional surface so train/serve/launch code
+is family-agnostic:
+
+    api.init(rng, dtype)                  -> params            (real arrays)
+    api.abstract_params(dtype)            -> ShapeDtypeStructs (no allocation)
+    api.param_spec()                      -> logical PartitionSpec tree
+    api.forward(params, batch, **kw)      -> (logits, aux)     (train/prefill)
+    api.init_cache(batch, seq_len, dtype) -> decode state
+    api.abstract_cache(batch, seq_len)    -> ShapeDtypeStructs
+    api.cache_spec()                      -> logical PartitionSpec tree
+    api.decode_step(params, tok, cache)   -> (logits, cache)
+    api.input_specs(shape)                -> abstract batch for the cell
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from . import hybrid, transformer, xlstm_stack
+from . import paper  # noqa: F401  (re-export)
+
+__all__ = ["ModelApi", "build_model", "paper"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    cfg: ModelConfig
+    _mod: Any
+
+    # ---- params ----
+    def init(self, rng, dtype=jnp.float32):
+        return self._mod.init(rng, self.cfg, dtype=dtype)
+
+    def abstract_params(self, dtype=jnp.float32):
+        rng = jax.random.PRNGKey(0)
+        return jax.eval_shape(lambda r: self._mod.init(r, self.cfg, dtype=dtype), rng)
+
+    def param_spec(self):
+        return self._mod.param_spec(self.cfg)
+
+    # ---- compute ----
+    def forward(self, params, batch, **kw):
+        return self._mod.forward(params, self.cfg, batch, **kw)
+
+    def decode_step(self, params, tokens, cache, **kw):
+        return self._mod.decode_step(params, self.cfg, tokens, cache, **kw)
+
+    def prefill(self, params, batch, cache_len: int, **kw):
+        if not hasattr(self._mod, "prefill"):
+            raise NotImplementedError(
+                f"{self.cfg.family} has no prefill-with-cache path")
+        return self._mod.prefill(params, self.cfg, batch, cache_len, **kw)
+
+    # ---- decode state ----
+    def init_cache(self, batch: int, seq_len: int, dtype=jnp.bfloat16):
+        return self._mod.init_cache(self.cfg, batch, seq_len, dtype=dtype)
+
+    def abstract_cache(self, batch: int, seq_len: int, dtype=jnp.bfloat16):
+        return jax.eval_shape(
+            lambda: self._mod.init_cache(self.cfg, batch, seq_len, dtype=dtype))
+
+    def cache_spec(self):
+        return self._mod.cache_spec(self.cfg)
+
+    # ---- abstract inputs per (arch x shape) cell ----
+    def input_specs(self, shape: ShapeConfig, *, dtype=jnp.bfloat16) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for the batch of a given cell.
+
+        train/prefill: the full-sequence batch (tokens+labels / frames /
+        tokens+patches).  decode: the one-token step input; the KV/SSM cache
+        comes from ``abstract_cache`` (sized to shape.seq_len).
+        """
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        i32 = functools.partial(jax.ShapeDtypeStruct, dtype=jnp.int32)
+        if shape.kind == "decode":
+            if not cfg.has_decode:
+                raise ValueError(f"{cfg.arch_id} is encoder-only: no decode")
+            return {"tokens": i32((b, 1))}
+        if cfg.family == "encoder":
+            batch = {"frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), dtype)}
+            if shape.kind == "train":
+                batch["labels"] = i32((b, s))
+            return batch
+        if cfg.family == "vlm":
+            p = cfg.vision_patches
+            batch = {
+                "tokens": i32((b, s - p)),
+                "patches": jax.ShapeDtypeStruct((b, p, cfg.d_model), dtype),
+            }
+            if shape.kind == "train":
+                batch["labels"] = i32((b, s - p))
+            return batch
+        batch = {"tokens": i32((b, s))}
+        if shape.kind == "train":
+            batch["labels"] = i32((b, s))
+        return batch
+
+
+_FAMILY_MODULES = {
+    "dense": transformer,
+    "moe": transformer,
+    "vlm": transformer,
+    "encoder": transformer,
+    "hybrid": hybrid,
+    "ssm_xlstm": xlstm_stack,
+}
+
+
+def build_model(cfg: ModelConfig) -> ModelApi:
+    if cfg.family not in _FAMILY_MODULES:
+        raise KeyError(f"unknown family {cfg.family!r}")
+    return ModelApi(cfg=cfg, _mod=_FAMILY_MODULES[cfg.family])

@@ -1,0 +1,200 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one *shared* attention block.
+
+The backbone is ``n_layers`` Mamba2 (SSD) blocks; after every
+``hybrid.attn_every`` of them, a single shared transformer block (attention
++ SwiGLU, one set of weights reused at every application) runs — Zamba2's
+parameter-efficient global-attention design.  CREW compounds here: the
+shared block's weights are CREW-ized once and their partial-product reuse
+applies at every one of the L/attn_every applications.
+
+Layer scan structure: outer scan over G = n_layers/attn_every groups; inner
+scan over the attn_every Mamba2 layers of the group; the shared block
+(closure-captured, no scan axis) closes each group.
+
+Decode state: per-layer Mamba2 (conv tail + SSD state) stacked [G, per, ...]
+plus one KV cache per shared-block application, stacked [G, ...].  The KV
+cache shards its sequence axis over "data" in the long_500k cell (SP) —
+batch=1 gives DP nothing to do.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from ..dist.ctx import constrain
+from ..layers import attention, embed, mamba2, mlp, norms
+
+__all__ = [
+    "init", "param_spec", "forward", "decode_step",
+    "init_cache", "cache_spec",
+]
+
+
+def _groups(cfg: ModelConfig) -> Tuple[int, int]:
+    per = cfg.hybrid.attn_every
+    if cfg.n_layers % per != 0:
+        raise ValueError(f"n_layers {cfg.n_layers} not divisible by attn_every {per}")
+    return cfg.n_layers // per, per
+
+
+def init(rng, cfg: ModelConfig, *, dtype=jnp.float32) -> Dict[str, Any]:
+    g, per = _groups(cfg)
+    ks = jax.random.split(rng, 6)
+    s = cfg.ssm
+    return {
+        "embed": embed.init(ks[0], cfg.vocab, cfg.d_model,
+                            tie=cfg.tie_embeddings, dtype=dtype),
+        "mamba": {
+            "norm": norms.rms_init(cfg.d_model, dtype=dtype, stack=(g, per)),
+            "mixer": mamba2.init(ks[1], cfg.d_model, expand=s.expand,
+                                 head_dim=s.head_dim, state=s.state,
+                                 dtype=dtype, stack=(g, per)),
+        },
+        "shared": {
+            "n1": norms.rms_init(cfg.d_model, dtype=dtype),
+            "attn": attention.init(ks[2], cfg.d_model, cfg.n_heads, cfg.n_kv,
+                                   cfg.head_dim, dtype=dtype),
+            "n2": norms.rms_init(cfg.d_model, dtype=dtype),
+            "ffn": mlp.swiglu_init(ks[3], cfg.d_model, cfg.d_ff, dtype=dtype),
+        },
+        "final_norm": norms.rms_init(cfg.d_model, dtype=dtype),
+    }
+
+
+def param_spec(cfg: ModelConfig) -> Dict[str, Any]:
+    sa = (None, None)  # (group, layer-in-group) scan axes
+    return {
+        "embed": embed.spec(tie=cfg.tie_embeddings),
+        "mamba": {
+            "norm": norms.rms_spec(stack_axes=sa),
+            "mixer": mamba2.spec(stack_axes=sa),
+        },
+        "shared": {
+            "n1": norms.rms_spec(),
+            "attn": attention.spec(shard_kv=cfg.n_kv > 1),
+            "n2": norms.rms_spec(),
+            "ffn": mlp.swiglu_spec(),
+        },
+        "final_norm": norms.rms_spec(),
+    }
+
+
+# --------------------------------------------------------------------------
+# Forward (train / prefill)
+# --------------------------------------------------------------------------
+
+def forward(
+    params,
+    cfg: ModelConfig,
+    batch: Dict[str, jnp.ndarray],
+    *,
+    dtype=jnp.bfloat16,
+    remat: bool = False,
+    q_chunk: int = 512,
+    kv_chunk: int = 512,
+    crew_strategy: str = "auto",
+    logits_mode: str = "all",
+    attn_impl: str = "chunked",
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    s = cfg.ssm
+    x = embed.embed(params["embed"], batch["tokens"], dtype=dtype)
+    shared = params["shared"]
+
+    def mamba_layer(x, lp):
+        x = constrain(x, "batch", None, None)
+        h = norms.rms_apply(lp["norm"], x)
+        y, _ = mamba2.apply_chunked(lp["mixer"], h, head_dim=s.head_dim,
+                                    state=s.state, chunk=s.chunk,
+                                    crew_strategy=crew_strategy)
+        return constrain(x + y, "batch", None, None), None
+
+    if remat:
+        mamba_layer = jax.checkpoint(mamba_layer)
+
+    def group(x, gp):
+        x, _ = jax.lax.scan(mamba_layer, x, gp)
+        h = norms.rms_apply(shared["n1"], x)
+        y, _ = attention.attend(shared["attn"], h, n_heads=cfg.n_heads,
+                                n_kv=cfg.n_kv, d_head=cfg.head_dim,
+                                rope_theta=cfg.rope_theta, causal=True,
+                                q_chunk=q_chunk, kv_chunk=kv_chunk,
+                                crew_strategy=crew_strategy, impl=attn_impl)
+        x = x + y
+        h = norms.rms_apply(shared["n2"], x)
+        x = x + mlp.swiglu_apply(shared["ffn"], h, crew_strategy=crew_strategy)
+        return x, None
+
+    x, _ = jax.lax.scan(group, x, params["mamba"])
+    x = norms.rms_apply(params["final_norm"], x)
+    if logits_mode == "last":
+        x = x[:, -1:]
+    logits = embed.logits(params["embed"], x)
+    return logits, {"moe_aux": jnp.zeros(())}
+
+
+# --------------------------------------------------------------------------
+# Decode
+# --------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, *,
+               dtype=jnp.bfloat16) -> Dict[str, Any]:
+    g, per = _groups(cfg)
+    s = cfg.ssm
+    ssm = mamba2.init_state(batch, cfg.d_model, expand=s.expand,
+                            head_dim=s.head_dim, state=s.state,
+                            dtype=dtype, stack=(g, per))
+    kv = attention.init_kv_cache(batch, seq_len, cfg.n_kv, cfg.head_dim,
+                                 dtype=dtype, stack=(g,))
+    return {"ssm": ssm, "k": kv["k"], "v": kv["v"], "len": kv["len"]}
+
+
+def cache_spec(cfg: ModelConfig) -> Dict[str, Any]:
+    ssm = mamba2.state_spec(stack_axes=(None, None))
+    kv = attention.cache_spec(stack_axes=(None,), shard_kv=cfg.n_kv > 1)
+    return {"ssm": ssm, "k": kv["k"], "v": kv["v"], "len": kv["len"]}
+
+
+def decode_step(
+    params,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,
+    cache: Dict[str, Any],
+    *,
+    dtype=jnp.bfloat16,
+    crew_strategy: str = "auto",
+) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    s = cfg.ssm
+    x = embed.embed(params["embed"], tokens, dtype=dtype)
+    shared = params["shared"]
+    ln = cache["len"]
+
+    def mamba_layer(x, inp):
+        lp, st = inp
+        h = norms.rms_apply(lp["norm"], x)
+        y, st_new = mamba2.apply_decode(lp["mixer"], h, st, head_dim=s.head_dim,
+                                        state=s.state,
+                                        crew_strategy=crew_strategy)
+        return x + y, st_new
+
+    def group(x, inp):
+        gp, g_ssm, k_c, v_c = inp
+        x, ssm_new = jax.lax.scan(mamba_layer, x, (gp, g_ssm))
+        h = norms.rms_apply(shared["n1"], x)
+        y, new = attention.attend_decode(
+            shared["attn"], h, {"k": k_c, "v": v_c, "len": ln},
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv, d_head=cfg.head_dim,
+            rope_theta=cfg.rope_theta, crew_strategy=crew_strategy)
+        x = x + y
+        h = norms.rms_apply(shared["n2"], x)
+        x = x + mlp.swiglu_apply(shared["ffn"], h, crew_strategy=crew_strategy)
+        return x, (ssm_new, new["k"], new["v"])
+
+    x, (ssm_new, k_new, v_new) = jax.lax.scan(
+        group, x, (params["mamba"], cache["ssm"], cache["k"], cache["v"]))
+    x = norms.rms_apply(params["final_norm"], x)
+    logits = embed.logits(params["embed"], x)[:, 0]
+    return logits, {"ssm": ssm_new, "k": k_new, "v": v_new, "len": ln + 1}

@@ -1,0 +1,142 @@
+"""The paper's five evaluation networks (Table IV), built from the substrate.
+
+These drive the paper-reproduction benchmarks (Tables I/II, Figs 1/3/5/6,
+Fig 11/12 via the perfmodel): the CREW offline analysis consumes their FC
+weight matrices exactly as the paper's static pass does.
+
+Dims are set so the FC parameter volume matches Table IV's model sizes
+(FP32 FC params only):
+  DS2    144 MB — 5 bidirectional GRU layers, hidden 800          (~36 M)
+  GNMT   518 MB — 8+8 encoder/decoder LSTM layers, hidden 1024    (~130 M)
+  Transf 336 MB — 6+6 encoder/decoder, d=704 ff=2816 (WMT16 base+) (~84 M)
+  Kaldi   18 MB — MLP 440 -> 3x1024 -> 1953 senones               (~4.5 M)
+  PTBLM  137 MB — 2-layer LSTM, hidden 1500 (Zaremba large)       (~34 M)
+
+Weights are synthesized heavy-tailed ("trained-like", student-t mixture) by
+default — no pretrained checkpoints exist offline, and the UW statistics
+depend on the weight distribution's kurtosis; EXPERIMENTS.md reports the
+sensitivity and cross-checks against a small actually-trained LM.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Tuple
+
+import numpy as np
+
+__all__ = ["PAPER_MODELS", "PaperModel", "fc_matrices", "synth_weights"]
+
+
+def synth_weights(rng: np.random.Generator, n: int, m: int,
+                  kind: str = "trained") -> np.ndarray:
+    """Synthesize an FC weight matrix with a trained-network-like histogram.
+
+    "trained": student-t(4) body + a sparse outlier tail — heavy-tailed like
+    post-training weight matrices (outliers stretch the quantization scale,
+    collapsing the body onto few levels: the effect CREW measures).
+    "gaussian": control distribution for the sensitivity study.
+    """
+    if kind == "gaussian":
+        return (rng.standard_normal((n, m)) * 0.05).astype(np.float32)
+    w = rng.standard_t(4, size=(n, m)) * 0.02
+    out_mask = rng.random((n, m)) < 1e-4
+    w = np.where(out_mask, w * 8.0, w)
+    return w.astype(np.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class PaperModel:
+    name: str
+    kind: str          # gru | lstm | transformer | mlp
+    accuracy_metric: str
+    # list of (layer_name, n_in, n_out) for every FC matrix in the model
+    fc_shapes: Tuple[Tuple[str, int, int], ...]
+
+    def fc_param_count(self) -> int:
+        return sum(n * m for _, n, m in self.fc_shapes)
+
+    def size_mb_fp32(self) -> float:
+        return self.fc_param_count() * 4 / 2 ** 20
+
+
+def _gru_shapes(name, d_in, hidden, bidir=False):
+    """GRU gate matrices: wx [d_in, 3h], wh [h, 3h] (per direction)."""
+    dirs = ("fwd", "bwd") if bidir else ("fwd",)
+    out = []
+    for d in dirs:
+        out.append((f"{name}/{d}/wx", d_in, 3 * hidden))
+        out.append((f"{name}/{d}/wh", hidden, 3 * hidden))
+    return out
+
+
+def _lstm_shapes(name, d_in, hidden):
+    return [(f"{name}/wx", d_in, 4 * hidden), (f"{name}/wh", hidden, 4 * hidden)]
+
+
+def _transformer_layer(name, d, ff, dec=False):
+    out = [(f"{name}/q", d, d), (f"{name}/k", d, d), (f"{name}/v", d, d),
+           (f"{name}/o", d, d)]
+    if dec:
+        out += [(f"{name}/xq", d, d), (f"{name}/xk", d, d),
+                (f"{name}/xv", d, d), (f"{name}/xo", d, d)]
+    out += [(f"{name}/ff1", d, ff), (f"{name}/ff2", ff, d)]
+    return out
+
+
+def _ds2() -> PaperModel:
+    # deepspeech.pytorch: 5 bidirectional GRU layers, hidden 800, with the
+    # two directions SUMMED (not concatenated) -> layer input stays 800.
+    shapes: List[Tuple[str, int, int]] = []
+    h = 800
+    shapes += _gru_shapes("gru0", h, h, bidir=True)
+    for i in range(1, 5):
+        shapes += _gru_shapes(f"gru{i}", h, h, bidir=True)
+    shapes.append(("fc_out", h, 29))  # char CTC head
+    return PaperModel("DS2", "gru", "WER", tuple(shapes))
+
+
+def _gnmt() -> PaperModel:
+    shapes: List[Tuple[str, int, int]] = []
+    h = 1024
+    for i in range(8):
+        shapes += _lstm_shapes(f"enc{i}", 2 * h if i == 0 else h, h)
+    for i in range(8):
+        shapes += _lstm_shapes(f"dec{i}", 2 * h if i == 0 else h, h)
+    shapes.append(("attn/w", h, h))
+    return PaperModel("GNMT", "lstm", "BLEU", tuple(shapes))
+
+
+def _transformer() -> PaperModel:
+    d, ff = 704, 2816
+    shapes: List[Tuple[str, int, int]] = []
+    for i in range(6):
+        shapes += _transformer_layer(f"enc{i}", d, ff)
+    for i in range(6):
+        shapes += _transformer_layer(f"dec{i}", d, ff, dec=True)
+    return PaperModel("Transformer", "transformer", "BLEU", tuple(shapes))
+
+
+def _kaldi() -> PaperModel:
+    dims = [440, 1024, 1024, 1024, 1953]
+    shapes = tuple((f"affine{i}", dims[i], dims[i + 1]) for i in range(len(dims) - 1))
+    return PaperModel("Kaldi", "mlp", "WER", shapes)
+
+
+def _ptblm() -> PaperModel:
+    h = 1500
+    shapes: List[Tuple[str, int, int]] = []
+    for i in range(2):
+        shapes += _lstm_shapes(f"lstm{i}", h, h)
+    return PaperModel("PTBLM", "lstm", "Perplexity", tuple(shapes))
+
+
+PAPER_MODELS: Dict[str, PaperModel] = {
+    m.name: m for m in (_ds2(), _gnmt(), _transformer(), _kaldi(), _ptblm())
+}
+
+
+def fc_matrices(model: PaperModel, seed: int = 0,
+                kind: str = "trained") -> List[Tuple[str, np.ndarray]]:
+    """Materialize every FC matrix of a paper model (synthesized weights)."""
+    rng = np.random.default_rng(seed)
+    return [(name, synth_weights(rng, n, m, kind)) for name, n, m in model.fc_shapes]

@@ -1,0 +1,118 @@
+"""Runnable JAX versions of the paper's RNN/MLP workloads.
+
+`paper.py` carries the exact published FC dims for the offline CREW
+analysis; this module makes the same architectures *executable* so the
+paper's workloads run end-to-end through the framework's CREW-dispatching
+layers (every gate projection is a `layers.linear` leaf, so
+`serve.crewize_params` converts them like any other checkpoint):
+
+  * PTBLM  — embedding + N-layer LSTM + tied-dim softmax head (Zaremba).
+  * DS2    — bidirectional-GRU stack over precomputed audio features with
+             a CTC-style character head (conv frontend stubbed, like the
+             assignment's audio frontends).
+  * Kaldi  — plain MLP over acoustic features -> senone posteriors.
+
+Scaled-down by default (`width=` multiplier) so they train/serve on CPU;
+`width=1.0` gives the paper's dims.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..layers import embed, linear, recurrent
+
+__all__ = [
+    "ptblm_init", "ptblm_apply",
+    "ds2_init", "ds2_apply",
+    "kaldi_init", "kaldi_apply",
+]
+
+
+# --------------------------------------------------------------------------
+# PTBLM — word-level LSTM LM (Zaremba et al.)
+# --------------------------------------------------------------------------
+
+def ptblm_init(rng, *, vocab: int = 10_000, hidden: int = 1500,
+               n_layers: int = 2, width: float = 1.0, dtype=jnp.float32):
+    h = max(8, int(hidden * width))
+    ks = jax.random.split(rng, n_layers + 2)
+    return {
+        "embed": embed.init(ks[0], vocab, h, tie=True, dtype=dtype),
+        "lstm": [recurrent.lstm_init(ks[1 + i], h, h, dtype=dtype)
+                 for i in range(n_layers)],
+    }
+
+
+def ptblm_apply(params, tokens: jnp.ndarray, crew_strategy: str = "auto"):
+    """tokens [B, S] -> logits [B, S, vocab] (tied head)."""
+    x = embed.embed(params["embed"], tokens, dtype=jnp.float32)
+    for lp in params["lstm"]:
+        y, _ = recurrent.lstm_apply(lp, x)
+        x = x + y  # residual keeps deep variants trainable
+    return embed.logits(params["embed"], x)
+
+
+# --------------------------------------------------------------------------
+# DS2 — bidirectional GRU stack over audio features (CTC head)
+# --------------------------------------------------------------------------
+
+def _bigru_init(rng, d_in, h, dtype):
+    k1, k2 = jax.random.split(rng)
+    return {"fwd": recurrent.gru_init(k1, d_in, h, dtype=dtype),
+            "bwd": recurrent.gru_init(k2, d_in, h, dtype=dtype)}
+
+
+def _bigru_apply(params, x):
+    # deepspeech.pytorch sums the two directions (keeps layer width at h)
+    yf, _ = recurrent.gru_apply(params["fwd"], x)
+    yb, _ = recurrent.gru_apply(params["bwd"], x[:, ::-1])
+    return yf + yb[:, ::-1]
+
+
+def ds2_init(rng, *, n_features: int = 161, hidden: int = 800,
+             n_layers: int = 5, n_chars: int = 29, width: float = 1.0,
+             dtype=jnp.float32):
+    h = max(8, int(hidden * width))
+    ks = jax.random.split(rng, n_layers + 1)
+    layers = [_bigru_init(ks[0], n_features, h, dtype)]
+    layers += [_bigru_init(ks[i], h, h, dtype) for i in range(1, n_layers)]
+    return {
+        "gru": layers,
+        "head": linear.init(ks[-1], h, n_chars, bias=True, dtype=dtype),
+    }
+
+
+def ds2_apply(params, features: jnp.ndarray, crew_strategy: str = "auto"):
+    """features [B, T, F] (precomputed frames; conv frontend stubbed)
+    -> CTC logits [B, T, n_chars]."""
+    x = features
+    for lp in params["gru"]:
+        x = _bigru_apply(lp, x)
+    return linear.apply(params["head"], x, crew_strategy=crew_strategy)
+
+
+# --------------------------------------------------------------------------
+# Kaldi — acoustic-scoring MLP
+# --------------------------------------------------------------------------
+
+def kaldi_init(rng, *, dims=(440, 1024, 1024, 1024, 1953),
+               width: float = 1.0, dtype=jnp.float32):
+    dims = [max(8, int(d * width)) for d in dims]
+    ks = jax.random.split(rng, len(dims) - 1)
+    return {"affine": [
+        linear.init(ks[i], dims[i], dims[i + 1], bias=True, dtype=dtype)
+        for i in range(len(dims) - 1)
+    ]}
+
+
+def kaldi_apply(params, feats: jnp.ndarray, crew_strategy: str = "auto"):
+    """feats [B, F] -> senone logits."""
+    x = feats
+    for i, lp in enumerate(params["affine"]):
+        x = linear.apply(lp, x, crew_strategy=crew_strategy)
+        if i < len(params["affine"]) - 1:
+            x = jax.nn.relu(x)
+    return x

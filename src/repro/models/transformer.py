@@ -1,0 +1,291 @@
+"""Decoder / encoder transformer stacks (dense, MoE, VLM, encoder families).
+
+All layer params are stacked on a leading [L] axis and the stack runs as a
+``lax.scan`` — constant-depth HLO regardless of layer count, which keeps
+512-device dry-run compiles tractable and matches how production JAX LM
+frameworks (MaxText et al.) structure deep models.
+
+Families:
+  dense   — causal LM, SwiGLU FFN, (GQA/MQA) attention, RoPE.
+  moe     — causal LM with a top-k MoE FFN per layer (EP-shardable).
+  vlm     — dense causal LM consuming [patch embeddings ; token embeddings].
+  encoder — bidirectional, LayerNorm + GELU FFN, continuous frame inputs,
+            CTC-style head (no decode path).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from ..dist.ctx import constrain
+from ..layers import attention, embed, mlp, moe, norms
+
+__all__ = [
+    "init", "param_spec", "forward", "decode_step",
+    "init_cache", "cache_spec",
+]
+
+
+def _is_encoder(cfg: ModelConfig) -> bool:
+    return cfg.family == "encoder"
+
+
+def _shard_kv(cfg: ModelConfig) -> bool:
+    # MQA (kv=1) cannot split one KV head across the TP axis.
+    return cfg.n_kv > 1
+
+
+# --------------------------------------------------------------------------
+# Init / specs
+# --------------------------------------------------------------------------
+
+def init(rng, cfg: ModelConfig, *, dtype=jnp.float32) -> Dict[str, Any]:
+    l = cfg.n_layers
+    ks = jax.random.split(rng, 5)
+    blocks: Dict[str, Any] = {
+        "attn": attention.init(
+            ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim,
+            qkv_bias=cfg.qkv_bias, dtype=dtype, stack=(l,)),
+    }
+    if _is_encoder(cfg):
+        blocks["n1"] = norms.ln_init(cfg.d_model, dtype=dtype, stack=(l,))
+        blocks["n2"] = norms.ln_init(cfg.d_model, dtype=dtype, stack=(l,))
+        blocks["ffn"] = mlp.gelu_init(ks[1], cfg.d_model, cfg.d_ff,
+                                      dtype=dtype, stack=(l,))
+    else:
+        blocks["n1"] = norms.rms_init(cfg.d_model, dtype=dtype, stack=(l,))
+        blocks["n2"] = norms.rms_init(cfg.d_model, dtype=dtype, stack=(l,))
+        if cfg.moe is not None:
+            blocks["moe"] = moe.init(ks[1], cfg.d_model, cfg.d_ff,
+                                     cfg.moe.n_experts, dtype=dtype, stack=(l,))
+        elif cfg.mlp == "gelu":
+            blocks["ffn"] = mlp.gelu_init(ks[1], cfg.d_model, cfg.d_ff,
+                                          dtype=dtype, stack=(l,))
+        else:
+            blocks["ffn"] = mlp.swiglu_init(ks[1], cfg.d_model, cfg.d_ff,
+                                            dtype=dtype, stack=(l,))
+    params: Dict[str, Any] = {"blocks": blocks}
+    if _is_encoder(cfg):
+        # continuous frame inputs; output head is a CTC-style projection
+        params["head"] = {
+            "w": jax.random.normal(ks[2], (cfg.d_model, cfg.vocab)).astype(dtype)
+            * cfg.d_model ** -0.5
+        }
+        params["final_norm"] = norms.ln_init(cfg.d_model, dtype=dtype)
+    else:
+        params["embed"] = embed.init(ks[2], cfg.vocab, cfg.d_model,
+                                     tie=cfg.tie_embeddings, dtype=dtype)
+        params["final_norm"] = norms.rms_init(cfg.d_model, dtype=dtype)
+    return params
+
+
+def param_spec(cfg: ModelConfig) -> Dict[str, Any]:
+    sa = (None,)  # layer-stack axis is never sharded
+    blocks: Dict[str, Any] = {
+        "attn": attention.spec(qkv_bias=cfg.qkv_bias, stack_axes=sa,
+                               shard_kv=_shard_kv(cfg)),
+    }
+    if _is_encoder(cfg):
+        blocks["n1"] = norms.ln_spec(stack_axes=sa)
+        blocks["n2"] = norms.ln_spec(stack_axes=sa)
+        blocks["ffn"] = mlp.gelu_spec(stack_axes=sa)
+    else:
+        blocks["n1"] = norms.rms_spec(stack_axes=sa)
+        blocks["n2"] = norms.rms_spec(stack_axes=sa)
+        if cfg.moe is not None:
+            blocks["moe"] = moe.spec(stack_axes=sa)
+        elif cfg.mlp == "gelu":
+            blocks["ffn"] = mlp.gelu_spec(stack_axes=sa)
+        else:
+            blocks["ffn"] = mlp.swiglu_spec(stack_axes=sa)
+    spec: Dict[str, Any] = {"blocks": blocks}
+    if _is_encoder(cfg):
+        spec["head"] = {"w": P("embed", "vocab")}
+        spec["final_norm"] = norms.ln_spec()
+    else:
+        spec["embed"] = embed.spec(tie=cfg.tie_embeddings)
+        spec["final_norm"] = norms.rms_spec()
+    return spec
+
+
+# --------------------------------------------------------------------------
+# Forward (train / prefill)
+# --------------------------------------------------------------------------
+
+def _ffn_apply(cfg: ModelConfig, blk, h, crew_strategy):
+    """Returns (y, aux_loss)."""
+    if _is_encoder(cfg) or cfg.mlp == "gelu":
+        return mlp.gelu_apply(blk["ffn"], h, crew_strategy=crew_strategy), 0.0
+    if cfg.moe is not None:
+        y, stats = moe.apply(blk["moe"], h, top_k=cfg.moe.top_k,
+                             capacity_factor=cfg.moe.capacity_factor,
+                             group_size=cfg.moe.group_size,
+                             crew_strategy=crew_strategy)
+        return y, stats.aux_loss
+    return mlp.swiglu_apply(blk["ffn"], h, crew_strategy=crew_strategy), 0.0
+
+
+def _norm(cfg: ModelConfig, p, x):
+    return norms.ln_apply(p, x) if _is_encoder(cfg) else norms.rms_apply(p, x)
+
+
+def forward(
+    params,
+    cfg: ModelConfig,
+    batch: Dict[str, jnp.ndarray],
+    *,
+    dtype=jnp.bfloat16,
+    remat: bool = False,
+    q_chunk: int = 512,
+    kv_chunk: int = 512,
+    crew_strategy: str = "auto",
+    logits_mode: str = "all",
+    attn_impl: str = "chunked",
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Full-sequence forward -> (logits [B, S, vocab] f32, aux dict).
+
+    batch: {"tokens": [B, S]} (dense/moe), plus {"patches": [B, P, d]} (vlm),
+    or {"frames": [B, S, d]} (encoder).
+
+    logits_mode="last" slices the final hidden state to the last position
+    *before* the LM head matmul — the serving-prefill path, which avoids
+    materializing [B, S, vocab].
+    """
+    causal = not _is_encoder(cfg)
+    if _is_encoder(cfg):
+        x = batch["frames"].astype(dtype)
+    else:
+        x = embed.embed(params["embed"], batch["tokens"], dtype=dtype)
+        if cfg.family == "vlm":
+            patches = batch["patches"].astype(dtype)
+            x = jnp.concatenate([patches, x], axis=1)
+
+    def block(x, blk):
+        x = constrain(x, "batch", None, None)
+        h = _norm(cfg, blk["n1"], x)
+        y, _ = attention.attend(
+            blk["attn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+            d_head=cfg.head_dim, rope_theta=cfg.rope_theta, causal=causal,
+            q_chunk=q_chunk, kv_chunk=kv_chunk, crew_strategy=crew_strategy,
+            impl=attn_impl)
+        x = x + y
+        h = _norm(cfg, blk["n2"], x)
+        y, aux = _ffn_apply(cfg, blk, h, crew_strategy)
+        return constrain(x + y, "batch", None, None), aux
+
+    if remat:
+        block = jax.checkpoint(block)
+
+    def step(x, blk):
+        x, aux = block(x, blk)
+        return x, aux
+
+    x, auxs = jax.lax.scan(step, x, params["blocks"])
+    x = _norm(cfg, params["final_norm"], x)
+    if logits_mode == "last":
+        x = x[:, -1:]
+    if _is_encoder(cfg):
+        from ..layers import linear as _linear  # CREW-dispatching head
+        logits = _linear.apply(params["head"], x.astype(jnp.float32),
+                               crew_strategy=crew_strategy)
+        logits = constrain(logits, "batch", None, "vocab")
+    else:
+        logits = embed.logits(params["embed"], x)
+    aux = {"moe_aux": jnp.sum(auxs) if cfg.moe is not None else jnp.zeros(())}
+    return logits, aux
+
+
+def prefill(
+    params,
+    cfg: ModelConfig,
+    batch: Dict[str, jnp.ndarray],
+    cache_len: int,
+    *,
+    dtype=jnp.bfloat16,
+    q_chunk: int = 512,
+    kv_chunk: int = 512,
+    crew_strategy: str = "auto",
+) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """Full-sequence forward that also fills a decode cache of ``cache_len``.
+
+    Returns (logits [B, S, vocab] f32, cache).  The prompt occupies cache
+    positions [0, S); ``len`` is set to S so decode continues from there.
+    """
+    if _is_encoder(cfg):
+        raise ValueError("encoder family has no decode cache")
+    x = embed.embed(params["embed"], batch["tokens"], dtype=dtype)
+    if cfg.family == "vlm":
+        x = jnp.concatenate([batch["patches"].astype(dtype), x], axis=1)
+    b, s, _ = x.shape
+
+    def step(x, blk):
+        h = _norm(cfg, blk["n1"], x)
+        y, (k, v) = attention.attend(
+            blk["attn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+            d_head=cfg.head_dim, rope_theta=cfg.rope_theta, causal=True,
+            q_chunk=q_chunk, kv_chunk=kv_chunk, crew_strategy=crew_strategy)
+        x = x + y
+        h = _norm(cfg, blk["n2"], x)
+        y, _ = _ffn_apply(cfg, blk, h, crew_strategy)
+        pad = ((0, 0), (0, cache_len - s), (0, 0), (0, 0))
+        return x + y, (jnp.pad(k, pad).astype(dtype), jnp.pad(v, pad).astype(dtype))
+
+    x, (k_all, v_all) = jax.lax.scan(step, x, params["blocks"])
+    x = _norm(cfg, params["final_norm"], x)
+    logits = embed.logits(params["embed"], x)
+    cache = {"k": k_all, "v": v_all, "len": jnp.asarray(s, jnp.int32)}
+    return logits, cache
+
+
+# --------------------------------------------------------------------------
+# Decode (one token against a static KV cache)
+# --------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, *,
+               dtype=jnp.bfloat16) -> Dict[str, Any]:
+    kv = attention.init_kv_cache(batch, seq_len, cfg.n_kv, cfg.head_dim,
+                                 dtype=dtype, stack=(cfg.n_layers,))
+    return {"k": kv["k"], "v": kv["v"], "len": kv["len"]}
+
+
+def cache_spec(cfg: ModelConfig) -> Dict[str, Any]:
+    s = attention.cache_spec(stack_axes=(None,), shard_kv=_shard_kv(cfg))
+    return {"k": s["k"], "v": s["v"], "len": s["len"]}
+
+
+def decode_step(
+    params,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,
+    cache: Dict[str, Any],
+    *,
+    dtype=jnp.bfloat16,
+    crew_strategy: str = "auto",
+) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """tokens [B, 1] -> (logits [B, vocab] f32, new cache)."""
+    if _is_encoder(cfg):
+        raise ValueError("encoder family has no decode step")
+    x = embed.embed(params["embed"], tokens, dtype=dtype)
+    ln = cache["len"]
+
+    def step(x, inp):
+        blk, k_c, v_c = inp
+        h = _norm(cfg, blk["n1"], x)
+        y, new = attention.attend_decode(
+            blk["attn"], h, {"k": k_c, "v": v_c, "len": ln},
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv, d_head=cfg.head_dim,
+            rope_theta=cfg.rope_theta, crew_strategy=crew_strategy)
+        x = x + y
+        h = _norm(cfg, blk["n2"], x)
+        y, _ = _ffn_apply(cfg, blk, h, crew_strategy)
+        return x + y, (new["k"], new["v"])
+
+    x, (k_new, v_new) = jax.lax.scan(
+        step, x, (params["blocks"], cache["k"], cache["v"]))
+    x = _norm(cfg, params["final_norm"], x)
+    logits = embed.logits(params["embed"], x)[:, 0]
+    return logits, {"k": k_new, "v": v_new, "len": ln + 1}

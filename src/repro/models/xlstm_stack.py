@@ -1,0 +1,148 @@
+"""xLSTM LM stack: alternating (mLSTM, sLSTM) block pairs.
+
+n_layers must be even; the stack scans over n_layers/2 pairs with stacked
+params.  Both cells carry O(1)-size recurrent state, which is what
+qualifies xlstm-125m for the long_500k decode cell.
+
+Prefill is the recurrent sweep (lax.scan over time inside each cell) —
+honest but sequential; a chunked-parallel mLSTM is the recorded §Perf
+iteration candidate for this family.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..dist.ctx import constrain
+from ..layers import embed, norms, xlstm
+
+__all__ = [
+    "init", "param_spec", "forward", "decode_step",
+    "init_cache", "cache_spec",
+]
+
+
+def _pairs(cfg: ModelConfig) -> int:
+    if cfg.n_layers % 2 != 0:
+        raise ValueError("xLSTM stack needs an even layer count")
+    return cfg.n_layers // 2
+
+
+def init(rng, cfg: ModelConfig, *, dtype=jnp.float32) -> Dict[str, Any]:
+    p = _pairs(cfg)
+    ks = jax.random.split(rng, 4)
+    xc = cfg.xlstm
+    return {
+        "embed": embed.init(ks[0], cfg.vocab, cfg.d_model,
+                            tie=cfg.tie_embeddings, dtype=dtype),
+        "pairs": {
+            "mn": norms.rms_init(cfg.d_model, dtype=dtype, stack=(p,)),
+            "m": xlstm.mlstm_init(ks[1], cfg.d_model, cfg.n_heads,
+                                  pf=xc.mlstm_pf, dtype=dtype, stack=(p,)),
+            "sn": norms.rms_init(cfg.d_model, dtype=dtype, stack=(p,)),
+            "s": xlstm.slstm_init(ks[2], cfg.d_model, cfg.n_heads,
+                                  pf=xc.slstm_pf, dtype=dtype, stack=(p,)),
+        },
+        "final_norm": norms.rms_init(cfg.d_model, dtype=dtype),
+    }
+
+
+def param_spec(cfg: ModelConfig) -> Dict[str, Any]:
+    sa = (None,)
+    return {
+        "embed": embed.spec(tie=cfg.tie_embeddings),
+        "pairs": {
+            "mn": norms.rms_spec(stack_axes=sa),
+            "m": xlstm.mlstm_spec(stack_axes=sa),
+            "sn": norms.rms_spec(stack_axes=sa),
+            "s": xlstm.slstm_spec(stack_axes=sa),
+        },
+        "final_norm": norms.rms_spec(),
+    }
+
+
+def _pair_apply(cfg: ModelConfig, pp, x, m_state, s_state, crew_strategy):
+    xc = cfg.xlstm
+    x = constrain(x, "batch", None, None)
+    h = norms.rms_apply(pp["mn"], x)
+    y, m_new = xlstm.mlstm_apply(pp["m"], h, m_state, n_heads=cfg.n_heads,
+                                 pf=xc.mlstm_pf, crew_strategy=crew_strategy)
+    x = x + y
+    h = norms.rms_apply(pp["sn"], x)
+    y, s_new = xlstm.slstm_apply(pp["s"], h, s_state, n_heads=cfg.n_heads,
+                                 crew_strategy=crew_strategy)
+    return x + y, m_new, s_new
+
+
+def forward(
+    params,
+    cfg: ModelConfig,
+    batch: Dict[str, jnp.ndarray],
+    *,
+    dtype=jnp.bfloat16,
+    remat: bool = False,
+    crew_strategy: str = "auto",
+    logits_mode: str = "all",
+    **_unused,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    x = embed.embed(params["embed"], batch["tokens"], dtype=dtype)
+
+    def pair(x, pp):
+        x, _, _ = _pair_apply(cfg, pp, x, None, None, crew_strategy)
+        return x, None
+
+    if remat:
+        pair = jax.checkpoint(pair)
+    x, _ = jax.lax.scan(pair, x, params["pairs"])
+    x = norms.rms_apply(params["final_norm"], x)
+    if logits_mode == "last":
+        x = x[:, -1:]
+    logits = embed.logits(params["embed"], x)
+    return logits, {"moe_aux": jnp.zeros(())}
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, *,
+               dtype=jnp.bfloat16) -> Dict[str, Any]:
+    # seq_len is irrelevant: recurrent state is O(1) in sequence length.
+    p = _pairs(cfg)
+    return {
+        "m": xlstm.mlstm_state(batch, cfg.d_model, cfg.n_heads,
+                               pf=cfg.xlstm.mlstm_pf, stack=(p,)),
+        "s": xlstm.slstm_state(batch, cfg.d_model, stack=(p,)),
+        "len": jnp.zeros((), dtype=jnp.int32),
+    }
+
+
+def cache_spec(cfg: ModelConfig) -> Dict[str, Any]:
+    from jax.sharding import PartitionSpec as P
+    return {
+        "m": xlstm.mlstm_state_spec(stack_axes=(None,)),
+        "s": xlstm.slstm_state_spec(stack_axes=(None,)),
+        "len": P(),
+    }
+
+
+def decode_step(
+    params,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,
+    cache: Dict[str, Any],
+    *,
+    dtype=jnp.bfloat16,
+    crew_strategy: str = "auto",
+) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    x = embed.embed(params["embed"], tokens, dtype=dtype)  # [B, 1, d]
+
+    def pair(x, inp):
+        pp, m_st, s_st = inp
+        x, m_new, s_new = _pair_apply(cfg, pp, x, m_st, s_st, crew_strategy)
+        return x, (m_new, s_new)
+
+    x, (m_new, s_new) = jax.lax.scan(
+        pair, x, (params["pairs"], cache["m"], cache["s"]))
+    x = norms.rms_apply(params["final_norm"], x)
+    logits = embed.logits(params["embed"], x)[:, 0]
+    return logits, {"m": m_new, "s": s_new, "len": cache["len"] + 1}

@@ -1,0 +1,162 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Hardware model: TPU v5e-like — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI (constants below).  The three terms per §Roofline:
+
+    compute    = FLOPs_per_device / peak_FLOPs
+    memory     = bytes_per_device / HBM_bw
+    collective = collective_bytes_per_device / link_bw
+
+`cost_analysis()` on a GSPMD-partitioned module is **per-device** (verified
+empirically: a 4-way sharded matmul reports ~1/4 of the dense FLOPs), so no
+further division by chip count is needed.  Collective bytes are not in
+cost_analysis; ``collective_bytes`` parses the optimized HLO text and sums
+the result-shape bytes of every collective op (per-device shard sizes —
+the bytes that actually cross that device's links, matching the
+per-chip-link denominator).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+__all__ = [
+    "HW", "TPU_V5E", "collective_bytes", "RooflineTerms", "roofline_terms",
+    "model_flops",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    name: str
+    peak_flops: float        # per chip, bf16
+    hbm_bw: float            # bytes/s per chip
+    link_bw: float           # bytes/s per ICI link
+    hbm_bytes: float         # capacity per chip
+
+
+TPU_V5E = HW(name="tpu-v5e", peak_flops=197e12, hbm_bw=819e9,
+             link_bw=50e9, hbm_bytes=16e9)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# one result shape like  bf16[8,128,14336]{2,1,0}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum per-device result bytes of every collective op, by op kind.
+
+    Handles plain and variadic results:
+        %ar = f32[4,8]{1,0} all-reduce(...)
+        %ar = (f32[4]{0}, f32[8]{0}) all-reduce(...)
+    ``*-start`` variants (async collectives) are counted; their ``*-done``
+    twins are skipped to avoid double counting.
+    """
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "=" not in s:
+            continue
+        lhs, _, rhs = s.partition("=")
+        rhs = rhs.strip()
+        for kind in _COLLECTIVES:
+            # match "<shape> <kind>(" or "<shape> <kind>-start("
+            m = re.match(r"((?:\([^)]*\)|\S+))\s+" + kind + r"(-start)?\(", rhs)
+            if m:
+                out[kind] += _shape_bytes(m.group(1))
+                break
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float                 # per device
+    bytes_hbm: float             # per device
+    bytes_collective: float      # per device
+    hw: HW = TPU_V5E
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / self.hw.peak_flops
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_hbm / self.hw.hbm_bw
+
+    @property
+    def t_collective(self) -> float:
+        return self.bytes_collective / self.hw.link_bw
+
+    @property
+    def bound(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "flops_per_dev": self.flops,
+            "bytes_hbm_per_dev": self.bytes_hbm,
+            "bytes_coll_per_dev": self.bytes_collective,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bound": self.bound,
+        }
+
+
+def roofline_terms(cost: Dict[str, float], hlo_text: str,
+                   hw: HW = TPU_V5E) -> RooflineTerms:
+    """Trip-count-aware terms from the optimized per-device HLO.
+
+    ``cost_analysis`` visits while bodies once, so scanned models
+    under-report by the trip count; the hlo.account parser re-multiplies
+    (see roofline/hlo.py).  The raw cost dict is kept by the dry-run
+    record for cross-checking.
+    """
+    from .hlo import account
+    acc = account(hlo_text)
+    return RooflineTerms(
+        flops=acc.flops,
+        bytes_hbm=acc.bytes_hbm,
+        bytes_collective=acc.bytes_collective,
+        hw=hw,
+    )
+
+
+def model_flops(cfg, shape, *, backward: bool) -> float:
+    """MODEL_FLOPS = 6*N*D (train) or 2*N_active*D (inference) — the
+    'useful FLOPs' yardstick for the HLO-vs-model ratio (§Roofline)."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "decode":
+        tokens = shape.global_batch  # one token per sequence per step
+    else:
+        tokens = shape.global_batch * shape.seq_len
+    mult = 6.0 if backward else 2.0
+    return mult * n_active * tokens

@@ -1,0 +1,6 @@
+"""Serving: CREW checkpoint conversion + batched generate engine."""
+from .convert import crewize_params, abstract_crew_params, crewize_spec, CrewReport
+from .engine import generate
+
+__all__ = ["crewize_params", "abstract_crew_params", "crewize_spec",
+           "CrewReport", "generate"]

@@ -1,0 +1,241 @@
+"""Serving-time CREW conversion: dense checkpoint -> CREW param tree.
+
+Walks the param tree and replaces every linear weight leaf ``{"w": W}``
+(the framework-wide convention, including scan-stacked ``[L, N, M]`` and
+MoE ``[L, E, N, M]`` leaves) with a ``CrewMatrixUniform`` whose leaves
+carry the same leading stack axes — so ``lax.scan`` layer stacks and the
+TP shardings keep working unchanged.
+
+Stacked leaves share one index width (the max over the stack) so the
+packed words tensor is rectangular; per-layer variable width would break
+scan stacking.  The storage accounting for EXPERIMENTS.md still uses the
+paper-faithful straddled format via repro.core.stats.
+
+Embedding tables (gather, not matmul) and non-"w" leaves (norm scales,
+conv kernels, xLSTM block-diagonal recurrent weights) are left dense —
+CREW targets FC matmuls, exactly like the paper (§Arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.convert import CrewMatrixUniform
+from ..core.pack import elems_per_word, pack_rows_word_aligned
+from ..core.ppa import force_max_unique, ppa_layout
+from ..core.quant import QuantConfig, quantize_matrix
+from ..core.stats import CrewStats, aggregate_stats, layout_stats
+from ..core.unique import analyze_matrix, index_width
+
+__all__ = ["crewize_params", "abstract_crew_params", "crewize_spec",
+           "CrewReport"]
+
+
+@dataclasses.dataclass
+class CrewReport:
+    n_converted: int
+    n_skipped: int
+    stats: List[Tuple[str, CrewStats]]
+
+    def aggregate(self) -> CrewStats:
+        return aggregate_stats([s for _, s in self.stats])
+
+
+def _convert_matrix(w2d: np.ndarray, *, bits, width: int, max_unique,
+                    ppa_thr, dtype):
+    """One [N, M] matrix -> (words [N, W], uniq [N, 2^width], stats)."""
+    qm = quantize_matrix(w2d, QuantConfig(bits=bits))
+    layout = analyze_matrix(qm.q)
+    if ppa_thr is not None:
+        layout = ppa_layout(layout, ppa_thr).layout
+    if max_unique is not None and layout.max_unique() > max_unique:
+        layout = force_max_unique(layout, max_unique).layout
+    k = 1 << width
+    words = pack_rows_word_aligned(layout.idx, width)
+    uniq = layout.padded_unique_table(k).astype(np.float32) * float(qm.scale)
+    return words, uniq.astype(dtype), layout_stats(layout, bits)
+
+
+def _max_width(w: np.ndarray, *, bits, max_unique, ppa_thr) -> int:
+    """Max index width across all stacked [.., N, M] matrices."""
+    flat = w.reshape(-1, *w.shape[-2:])
+    width = 1
+    for i in range(flat.shape[0]):
+        qm = quantize_matrix(flat[i], QuantConfig(bits=bits))
+        layout = analyze_matrix(qm.q)
+        if ppa_thr is not None:
+            layout = ppa_layout(layout, ppa_thr).layout
+        mu = layout.max_unique()
+        if max_unique is not None:
+            mu = min(mu, max_unique)
+        width = max(width, index_width(mu))
+    return width
+
+
+def crewize_params(
+    params,
+    *,
+    bits: int = 8,
+    max_unique: Optional[int] = None,
+    ppa_thr: Optional[float] = None,
+    dtype=jnp.bfloat16,
+    min_cols: int = 128,
+    skip_names: Tuple[str, ...] = ("router",),
+    pad_words_to: int = 16,
+) -> Tuple[Any, CrewReport]:
+    """Convert every eligible linear weight in a param tree to CREW.
+
+    min_cols: matrices with fewer output columns are left dense (index
+    metadata would not amortize — e.g. MoE routers, tiny heads).
+    pad_words_to: the packed-word dim is zero-padded to this multiple so it
+    shards over the TP axis exactly like the dense [N, M] weight's M dim
+    (padded words decode to indices past n_out and are sliced off).
+    """
+    report = CrewReport(n_converted=0, n_skipped=0, stats=[])
+
+    def rec(path, node):
+        if isinstance(node, dict):
+            out = {}
+            for key, val in node.items():
+                if (
+                    key == "w"
+                    and hasattr(val, "ndim")
+                    and val.ndim >= 2
+                    and not any(s in path for s in skip_names)
+                    and val.shape[-1] >= min_cols
+                ):
+                    out[key] = _crewize_leaf(path, np.asarray(val))
+                else:
+                    out[key] = rec(f"{path}/{key}", val)
+            return out
+        if isinstance(node, (list, tuple)):
+            return type(node)(rec(f"{path}[{i}]", v)
+                              for i, v in enumerate(node))
+        return node
+
+    def _crewize_leaf(path, w):
+        stack = w.shape[:-2]
+        n, m = w.shape[-2:]
+        width = _max_width(w, bits=bits, max_unique=max_unique, ppa_thr=ppa_thr)
+        k = 1 << width
+        epw = elems_per_word(width)
+        n_words = (m + epw - 1) // epw
+        n_words = -(-n_words // pad_words_to) * pad_words_to
+        flat = w.reshape(-1, n, m)
+        words = np.empty((flat.shape[0], n, n_words), dtype=np.uint32)
+        uniq = np.empty((flat.shape[0], n, k), dtype=np.float32)
+        for i in range(flat.shape[0]):
+            wi, ui, st = _convert_matrix(
+                flat[i], bits=bits, width=width, max_unique=max_unique,
+                ppa_thr=ppa_thr, dtype=np.float32)
+            words[i, :, :wi.shape[1]] = wi
+            words[i, :, wi.shape[1]:] = 0
+            uniq[i] = ui
+            report.stats.append((f"{path}[{i}]", st))
+        report.n_converted += 1
+        return CrewMatrixUniform(
+            words=jnp.asarray(words.reshape(*stack, n, n_words)),
+            uniq=jnp.asarray(uniq.reshape(*stack, n, k), dtype=dtype),
+            width=width,
+            n_out=m,
+        )
+
+    def count_skips(node):
+        if isinstance(node, dict):
+            for key, val in node.items():
+                if key == "w" and hasattr(val, "ndim") and not isinstance(
+                        val, CrewMatrixUniform):
+                    report.n_skipped += 1
+                count_skips(val)
+        elif isinstance(node, (list, tuple)):
+            for val in node:
+                count_skips(val)
+
+    new = rec("", params)
+    count_skips(new)
+    return new, report
+
+
+def crewize_spec(spec_tree, crew_params):
+    """Mirror a logical PartitionSpec tree onto a CREW-converted param tree.
+
+    A converted weight's spec P(*stack, in, out) carries over directly:
+    packed words shard exactly like the dense [N, M] weight (the word dim
+    follows M — packing is per-row, word-aligned, and padded to a
+    TP-divisible word count); unique tables shard on N and replicate over
+    the TP axis (they are small, and every shard needs the full row table
+    to form its partial products).  Column-parallel layers therefore
+    compute step-1 partial products redundantly per shard — cheap — and
+    row-parallel layers end in the usual single all-reduce: CREW adds no
+    collectives over dense TP (DESIGN.md §3.7).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    def one(spec, val):
+        if isinstance(val, CrewMatrixUniform):
+            parts = tuple(spec)
+            in_axis = parts[-2] if len(parts) >= 2 else None
+            out_axis = parts[-1] if len(parts) >= 2 else None
+            stack = parts[:-2]
+            return CrewMatrixUniform(
+                words=P(*stack, in_axis, out_axis),
+                uniq=P(*stack, in_axis, None),
+                width=val.width,
+                n_out=val.n_out,
+            )
+        return spec
+
+    return jax.tree.map(
+        one, spec_tree, crew_params,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+
+
+def abstract_crew_params(abstract_params, *, width: int = 6,
+                         dtype=jnp.bfloat16, min_cols: int = 128,
+                         skip_names: Tuple[str, ...] = ("router",),
+                         pad_words_to: int = 16):
+    """ShapeDtypeStruct version of ``crewize_params`` for dry-runs.
+
+    Replaces each eligible ``{"w": SDS[..., N, M]}`` with a
+    CrewMatrixUniform of abstract words/uniq at an assumed index width
+    (the measured network-wide max is 6-7 for 8-bit quantization).
+    No data is touched — suitable for full-size 512-device lowering.
+    """
+    k = 1 << width
+    epw = elems_per_word(width)
+
+    def rec(path, node):
+        if isinstance(node, dict):
+            out = {}
+            for key, val in node.items():
+                if (
+                    key == "w"
+                    and hasattr(val, "ndim")
+                    and val.ndim >= 2
+                    and not any(s in path for s in skip_names)
+                    and val.shape[-1] >= min_cols
+                ):
+                    stack = val.shape[:-2]
+                    n, m = val.shape[-2:]
+                    n_words = (m + epw - 1) // epw
+                    n_words = -(-n_words // pad_words_to) * pad_words_to
+                    out[key] = CrewMatrixUniform(
+                        words=jax.ShapeDtypeStruct((*stack, n, n_words),
+                                                   jnp.uint32),
+                        uniq=jax.ShapeDtypeStruct((*stack, n, k), dtype),
+                        width=width,
+                        n_out=m,
+                    )
+                else:
+                    out[key] = rec(f"{path}/{key}", val)
+            return out
+        if isinstance(node, (list, tuple)):
+            return type(node)(rec(f"{path}[{i}]", v)
+                              for i, v in enumerate(node))
+        return node
+
+    return rec("", abstract_params)

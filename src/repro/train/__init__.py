@@ -1,0 +1,13 @@
+"""Training runtime: optimizers, schedules, the train-step builder."""
+from .optim import (
+    Optimizer, adamw, sgd, apply_updates, cosine_warmup, constant_lr,
+    global_norm, clip_by_global_norm,
+)
+from .step import TrainState, make_train_step, make_loss_fn, cross_entropy, init_state
+
+__all__ = [
+    "Optimizer", "adamw", "sgd", "apply_updates", "cosine_warmup",
+    "constant_lr", "global_norm", "clip_by_global_norm",
+    "TrainState", "make_train_step", "make_loss_fn", "cross_entropy",
+    "init_state",
+]

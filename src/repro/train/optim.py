@@ -1,0 +1,122 @@
+"""Optimizers and LR schedules (no optax in this environment).
+
+Minimal optax-shaped interface so the trainer is implementation-agnostic:
+
+    opt = adamw(lr_schedule, ...)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params, step)
+    params = apply_updates(params, updates)
+
+All states are plain pytrees (checkpointable, shardable like params).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Optimizer", "adamw", "sgd", "apply_updates",
+    "cosine_warmup", "constant_lr", "global_norm", "clip_by_global_norm",
+]
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[..., Any]  # (grads, state, params, step) -> (updates, state)
+
+
+def constant_lr(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, dtype=jnp.float32)
+
+
+def cosine_warmup(peak: float, warmup: int, total: int,
+                  floor: float = 0.0) -> Schedule:
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+    return sched
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda x: x * scale.astype(x.dtype), tree), norm
+
+
+def adamw(
+    lr: Schedule | float,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    grad_clip: Optional[float] = 1.0,
+) -> Optimizer:
+    sched = constant_lr(lr) if isinstance(lr, (int, float)) else lr
+
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return {"mu": jax.tree.map(zeros, params),
+                "nu": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if grad_clip is not None:
+            grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        else:
+            gnorm = global_norm(grads)
+        t = step.astype(jnp.float32) + 1.0
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["mu"], grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["nu"], grads)
+        mu_hat = jax.tree.map(lambda m: m / (1 - b1 ** t), mu)
+        nu_hat = jax.tree.map(lambda v: v / (1 - b2 ** t), nu)
+        lr_t = sched(step)
+
+        def upd(m, v, p):
+            u = m / (jnp.sqrt(v) + eps) + weight_decay * p.astype(jnp.float32)
+            return (-lr_t * u).astype(p.dtype)
+
+        updates = jax.tree.map(upd, mu_hat, nu_hat, params)
+        return updates, {"mu": mu, "nu": nu}, {"grad_norm": gnorm, "lr": lr_t}
+
+    return Optimizer(init=init, update=update)
+
+
+def sgd(lr: Schedule | float, *, momentum: float = 0.9,
+        grad_clip: Optional[float] = None) -> Optimizer:
+    sched = constant_lr(lr) if isinstance(lr, (int, float)) else lr
+
+    def init(params):
+        return {"m": jax.tree.map(
+            lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)}
+
+    def update(grads, state, params, step):
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if grad_clip is not None:
+            grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        else:
+            gnorm = global_norm(grads)
+        m = jax.tree.map(lambda mm, g: momentum * mm + g, state["m"], grads)
+        lr_t = sched(step)
+        updates = jax.tree.map(lambda mm, p: (-lr_t * mm).astype(p.dtype), m, params)
+        return updates, {"m": m}, {"grad_norm": gnorm, "lr": lr_t}
+
+    return Optimizer(init=init, update=update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)

@@ -1,0 +1,1 @@
+from .pytree import static_field, data_field, register_dataclass_pytree  # noqa: F401

@@ -1,0 +1,34 @@
+"""Small pytree helpers (no flax in this environment).
+
+``register_dataclass_pytree`` registers a dataclass whose fields are split
+into *data* (traced arrays / child pytrees) and *static* (hashable metadata
+baked into the treedef).  Fields default to data; mark static ones with
+``static_field()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+
+def static_field(**kwargs):
+    return dataclasses.field(metadata={"pytree_static": True}, **kwargs)
+
+
+def data_field(**kwargs):
+    return dataclasses.field(metadata={"pytree_static": False}, **kwargs)
+
+
+def register_dataclass_pytree(cls):
+    """Class decorator: dataclass -> pytree with static/data field split."""
+    cls = dataclasses.dataclass(cls)
+    data_fields = []
+    meta_fields = []
+    for f in dataclasses.fields(cls):
+        if f.metadata.get("pytree_static", False):
+            meta_fields.append(f.name)
+        else:
+            data_fields.append(f.name)
+    jax.tree_util.register_dataclass(cls, data_fields=data_fields, meta_fields=meta_fields)
+    return cls

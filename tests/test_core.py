@@ -1,0 +1,146 @@
+"""CREW core: quantization, unique analysis, stats, PPA — unit + property."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    CrewLayout, QuantConfig, analyze_matrix, dequantize_matrix, force_max_unique,
+    index_width, layout_stats, ppa_layout, quantize_matrix, reconstruct,
+)
+
+
+def heavy_tailed(rng, n, m):
+    return (rng.standard_t(4, size=(n, m)) * 0.05).astype(np.float32)
+
+
+class TestQuantization:
+    def test_roundtrip_error_bounded(self):
+        rng = np.random.default_rng(0)
+        w = heavy_tailed(rng, 64, 128)
+        qm = quantize_matrix(w)
+        err = np.abs(dequantize_matrix(qm) - w).max()
+        assert err <= float(qm.scale) / 2 + 1e-7
+
+    def test_levels_bounded(self):
+        rng = np.random.default_rng(1)
+        for bits in (4, 6, 8):
+            qm = quantize_matrix(heavy_tailed(rng, 32, 64), QuantConfig(bits=bits))
+            assert qm.q.max() <= qm.cfg.qmax and qm.q.min() >= -qm.cfg.qmax
+            assert np.unique(qm.q).size <= qm.cfg.levels
+
+    def test_per_channel(self):
+        rng = np.random.default_rng(2)
+        w = heavy_tailed(rng, 32, 8)
+        qm = quantize_matrix(w, QuantConfig(per_channel=True))
+        assert qm.scale.shape == (8,)
+        err = np.abs(dequantize_matrix(qm) - w)
+        assert (err <= qm.scale[None, :] / 2 + 1e-7).all()
+
+    def test_rejects_non_2d(self):
+        with pytest.raises(ValueError):
+            quantize_matrix(np.zeros((2, 3, 4)))
+
+
+class TestUniqueAnalysis:
+    def test_reconstruction_lossless(self):
+        rng = np.random.default_rng(3)
+        qm = quantize_matrix(heavy_tailed(rng, 100, 257))
+        layout = analyze_matrix(qm.q)
+        assert (reconstruct(layout) == qm.q).all()
+
+    def test_index_width(self):
+        assert index_width(1) == 1
+        assert index_width(2) == 1
+        assert index_width(3) == 2
+        assert index_width(44) == 6
+        assert index_width(256) == 8
+
+    def test_counts_sum_to_m(self):
+        rng = np.random.default_rng(4)
+        qm = quantize_matrix(heavy_tailed(rng, 16, 77))
+        layout = analyze_matrix(qm.q)
+        for r in layout.rows:
+            assert int(r.counts.sum()) == 77
+
+    def test_padded_table_uses_last_value(self):
+        q = np.array([[1, 1, 5, 5, 9]])
+        layout = analyze_matrix(q)
+        tab = layout.padded_unique_table(8)
+        assert tab.shape == (1, 8)
+        assert (tab[0, 3:] == 9).all()
+
+    @given(st.integers(0, 2 ** 32 - 1), st.integers(2, 24), st.integers(2, 48))
+    @settings(max_examples=25, deadline=None)
+    def test_property_lossless(self, seed, n, m):
+        rng = np.random.default_rng(seed)
+        q = rng.integers(-127, 128, size=(n, m)).astype(np.int32)
+        layout = analyze_matrix(q)
+        assert (reconstruct(layout) == q).all()
+        assert (layout.widths >= 1).all() and (layout.widths <= 8).all()
+
+
+class TestStats:
+    def test_paper_accounting(self):
+        """Hand-checkable example in the spirit of paper Fig. 2."""
+        q = np.array([[3, 3, 7, 7], [1, 1, 1, 1], [2, 5, 2, 5]], dtype=np.int32)
+        layout = analyze_matrix(q)
+        st_ = layout_stats(layout, bits=8)
+        # UW per input: 2, 1, 2 -> mean 5/3; MULs = 5 / 12
+        assert st_.uw_per_input_mean == pytest.approx(5 / 3)
+        assert st_.muls_fraction == pytest.approx(5 / 12)
+        # dense = 96 bits; idx = (1+1+1)*4 + 3*3 side channel = 21 bits
+        assert st_.dense_bits == 96
+        # metadata: 5 uniques * 8 + 3 rows * 9
+        assert st_.crew_bits_storage == 21 + 5 * 8 + 27
+
+    def test_storage_reduction_at_scale(self):
+        """Realistic dims + heavy-tailed weights reproduce a paper-like
+        storage reduction (Table II reports 16-34 %)."""
+        rng = np.random.default_rng(5)
+        qm = quantize_matrix(heavy_tailed(rng, 1024, 1024))
+        st_ = layout_stats(analyze_matrix(qm.q))
+        assert st_.storage_reduction > 0.10
+        assert st_.saved_muls > 0.90
+
+
+class TestPPA:
+    def test_reduces_widths_and_stays_reconstructable(self):
+        rng = np.random.default_rng(6)
+        qm = quantize_matrix(heavy_tailed(rng, 64, 512))
+        layout = analyze_matrix(qm.q)
+        res = ppa_layout(layout, thr=0.05)
+        assert res.rows_approximated > 0
+        # approximate model still reconstructs exactly from its own layout
+        q2 = reconstruct(res.layout)
+        assert q2.shape == qm.q.shape
+        # widths never grow
+        assert (res.layout.widths <= layout.widths).all()
+        # moved mass is bounded by the threshold per approximated row
+        assert res.weight_mass_moved < 0.05
+
+    def test_threshold_zero_is_noop(self):
+        rng = np.random.default_rng(7)
+        qm = quantize_matrix(heavy_tailed(rng, 16, 128))
+        layout = analyze_matrix(qm.q)
+        res = ppa_layout(layout, thr=0.0)
+        assert res.rows_approximated == 0
+        assert (reconstruct(res.layout) == qm.q).all()
+
+    def test_distortion_monotone_in_threshold(self):
+        rng = np.random.default_rng(8)
+        qm = quantize_matrix(heavy_tailed(rng, 48, 256))
+        layout = analyze_matrix(qm.q)
+        moved = [ppa_layout(layout, thr).weight_mass_moved
+                 for thr in (0.01, 0.05, 0.10, 0.20)]
+        assert all(a <= b + 1e-12 for a, b in zip(moved, moved[1:]))
+
+    def test_force_max_unique(self):
+        rng = np.random.default_rng(9)
+        qm = quantize_matrix(heavy_tailed(rng, 32, 512))
+        layout = analyze_matrix(qm.q)
+        res = force_max_unique(layout, 16)
+        assert res.layout.max_unique() <= 16
+        assert (res.layout.widths <= 4).all()
+        # cap >= max is a no-op
+        res2 = force_max_unique(layout, layout.max_unique())
+        assert res2.rows_approximated == 0

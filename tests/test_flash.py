@@ -1,0 +1,46 @@
+"""Flash-attention Pallas kernel vs the chunked-attention oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.layers.attention import chunked_attention
+
+
+@pytest.mark.parametrize("h,kv", [(4, 4), (4, 2), (4, 1), (8, 2)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_matches_chunked(h, kv, causal):
+    rng = np.random.default_rng(h * 7 + kv + causal)
+    B, S, D = 2, 41, 16
+    q = jnp.asarray(rng.standard_normal((B, S, h, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, kv, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, kv, D)), jnp.float32)
+    ref = chunked_attention(q, k, v, causal=causal, q_chunk=16, kv_chunk=8)
+    out = flash_attention(q, k, v, causal=causal, block_q=16, block_k=16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("sq,sk", [(7, 64), (64, 7), (128, 128), (65, 33)])
+def test_flash_shape_sweep(sq, sk):
+    rng = np.random.default_rng(sq * sk)
+    q = jnp.asarray(rng.standard_normal((1, sq, 2, 8)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, sk, 2, 8)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, sk, 2, 8)), jnp.float32)
+    ref = chunked_attention(q, k, v, causal=False, q_chunk=16, kv_chunk=8)
+    out = flash_attention(q, k, v, causal=False, block_q=32, block_k=16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_bf16():
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.standard_normal((2, 32, 4, 16)), jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((2, 32, 2, 16)), jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((2, 32, 2, 16)), jnp.bfloat16)
+    ref = chunked_attention(q, k, v, causal=True, q_chunk=8, kv_chunk=8)
+    out = flash_attention(q, k, v, causal=True, block_q=16, block_k=16)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=5e-2, atol=5e-2)

@@ -1,0 +1,127 @@
+"""Pallas kernel vs pure-jnp oracle: shape/dtype/width/strategy sweeps.
+
+The kernel runs in interpret mode on CPU (the BlockSpecs are the TPU
+tiling contract); every configuration must match ref.py to float32
+accumulation tolerance.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import crew_uniform_from_dense, crew_var_from_dense
+from repro.core.pack import pack_rows_word_aligned
+from repro.kernels.crew_matmul import crew_matmul_pallas
+from repro.kernels.ops import crew_matmul, pick_strategy
+from repro.kernels.ref import crew_matmul_ref, unpack_ref
+
+
+def make_case(rng, n, m, width, b, dtype=jnp.float32):
+    k = 1 << width
+    idx = rng.integers(0, k, size=(n, m)).astype(np.int32)
+    words = pack_rows_word_aligned(idx, width)
+    uniq = (rng.standard_normal((n, k)) * 0.1).astype(np.float32)
+    x = (rng.standard_normal((b, n))).astype(np.float32)
+    return (jnp.asarray(x, dtype), jnp.asarray(words),
+            jnp.asarray(uniq, dtype))
+
+
+@pytest.mark.parametrize("width", [1, 2, 3, 4, 5, 6, 7, 8])
+@pytest.mark.parametrize("strategy", ["gather", "onehot"])
+def test_kernel_width_sweep(width, strategy):
+    rng = np.random.default_rng(width)
+    x, words, uniq = make_case(rng, n=96, m=160, width=width, b=3)
+    ref = crew_matmul_ref(x, words, uniq, width=width, m=160)
+    out = crew_matmul_pallas(x, words, uniq, width=width, m_out=160,
+                             strategy=strategy, block_n=32, block_words=8)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n,m,b", [(7, 13, 1), (128, 256, 4), (200, 100, 2),
+                                   (33, 515, 5)])
+def test_kernel_shape_sweep(n, m, b):
+    rng = np.random.default_rng(n * m)
+    x, words, uniq = make_case(rng, n=n, m=m, width=5, b=b)
+    ref = crew_matmul_ref(x, words, uniq, width=5, m=m)
+    for strategy in ("gather", "onehot"):
+        out = crew_matmul_pallas(x, words, uniq, width=5, m_out=m,
+                                 strategy=strategy, block_n=64, block_words=16)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kernel_dtype_sweep(dtype):
+    rng = np.random.default_rng(42)
+    x, words, uniq = make_case(rng, n=64, m=96, width=4, b=2, dtype=dtype)
+    ref = crew_matmul_ref(x, words, uniq, width=4, m=96)
+    out = crew_matmul_pallas(x, words, uniq, width=4, m_out=96,
+                             strategy="gather")
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=tol, atol=tol)
+
+
+def test_unpack_ref_matches_numpy():
+    from repro.core.pack import unpack_rows_word_aligned
+    rng = np.random.default_rng(7)
+    idx = rng.integers(0, 64, size=(9, 47)).astype(np.int32)
+    words = pack_rows_word_aligned(idx, 6)
+    out = np.asarray(unpack_ref(jnp.asarray(words), 6, 47))
+    assert (out == unpack_rows_word_aligned(words, 6, 47)).all()
+
+
+class TestOpsDispatch:
+    def setup_method(self, _):
+        rng = np.random.default_rng(0)
+        self.w = (rng.standard_t(4, size=(96, 144)) * 0.05).astype(np.float32)
+        self.x = jnp.asarray(rng.standard_normal((4, 96)).astype(np.float32))
+
+    def test_uniform_strategies_agree(self):
+        cm, _, qm = crew_uniform_from_dense(self.w, dtype=jnp.float32)
+        ref = self.x @ jnp.asarray(qm.q * float(qm.scale), jnp.float32)
+        for strat in ("xla-dense", "xla-gather", "pallas-gather",
+                      "pallas-onehot", "auto"):
+            out = crew_matmul(self.x, cm, strategy=strat)
+            np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                       rtol=2e-4, atol=2e-4)
+
+    def test_var_strategies_agree(self):
+        cm, _, qm = crew_var_from_dense(self.w, dtype=jnp.float32)
+        ref = self.x @ jnp.asarray(qm.q * float(qm.scale), jnp.float32)
+        for strat in ("xla-dense", "xla-gather", "pallas-gather"):
+            out = crew_matmul(self.x, cm, strategy=strat)
+            np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                       rtol=2e-4, atol=2e-4)
+
+    def test_leading_dims(self):
+        cm, _, _ = crew_uniform_from_dense(self.w, dtype=jnp.float32)
+        x3 = jnp.reshape(jnp.tile(self.x, (2, 1)), (2, 4, 96))
+        out = crew_matmul(x3, cm, strategy="xla-dense")
+        assert out.shape == (2, 4, 144)
+
+    def test_pick_strategy(self):
+        assert pick_strategy(1, 6, compute_rich=False) == "pallas-onehot"
+        assert pick_strategy(128, 8, compute_rich=False) == "pallas-gather"
+        assert pick_strategy(4, 6, compute_rich=True) == "xla-dense"
+
+
+def test_ppa_end_to_end_compression_and_distortion():
+    """PPA shrinks index widths; output distortion is bounded and monotone
+    in the threshold (the paper bounds *frequency mass*, not weight
+    distance, so rare outliers may move far — Algorithm 1 semantics)."""
+    rng = np.random.default_rng(1)
+    w = (rng.standard_t(4, size=(128, 256)) * 0.05).astype(np.float32)
+    x = jnp.asarray(rng.standard_normal((2, 128)).astype(np.float32))
+    cm0, lay0, _ = crew_uniform_from_dense(w, dtype=jnp.float32)
+    ref = np.asarray(crew_matmul(x, cm0, strategy="xla-dense"))
+    rels = []
+    for thr in (0.01, 0.05):
+        cm1, lay1, _ = crew_uniform_from_dense(w, ppa_thr=thr,
+                                               dtype=jnp.float32)
+        out = np.asarray(crew_matmul(x, cm1, strategy="xla-dense"))
+        rels.append(np.linalg.norm(out - ref) / (np.linalg.norm(ref) + 1e-9))
+        assert lay1.widths.mean() < lay0.widths.mean()  # compression happened
+    assert rels[0] <= rels[1] + 1e-9  # distortion monotone in threshold
+    assert rels[1] < 0.5              # bounded (quantized-grid neighbours)

@@ -1,0 +1,154 @@
+"""Layer-level correctness: attention parity, SSM chunk/decode parity,
+xLSTM step parity, MoE semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.layers import attention, mamba2, moe, recurrent, xlstm
+
+
+def naive_attention(q, k, v, causal=True):
+    b, s, h, d = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, s, kv, g, d).astype(jnp.float32)
+    sc = jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(jnp.float32)) * d ** -0.5
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        sc = jnp.where(mask[None, None, None], sc, -1e30)
+    p = jax.nn.softmax(sc, -1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(b, s, h, d).astype(q.dtype)
+
+
+class TestAttention:
+    @pytest.mark.parametrize("h,kv", [(4, 4), (4, 2), (4, 1)])  # MHA/GQA/MQA
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_chunked_matches_naive(self, h, kv, causal):
+        rng = np.random.default_rng(h * 10 + kv)
+        B, S, D = 2, 45, 16
+        q = jnp.asarray(rng.standard_normal((B, S, h, D)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((B, S, kv, D)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((B, S, kv, D)), jnp.float32)
+        ref = naive_attention(q, k, v, causal)
+        out = attention.chunked_attention(q, k, v, causal=causal,
+                                          q_chunk=16, kv_chunk=8)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_prefill_decode_parity(self):
+        """Decoding token-by-token equals the full causal forward."""
+        rng = jax.random.PRNGKey(0)
+        B, S, d, h, kv, hd = 2, 12, 32, 4, 2, 8
+        params = attention.init(rng, d, h, kv, hd)
+        x = jax.random.normal(jax.random.PRNGKey(1), (B, S, d), jnp.float32)
+        full, _ = attention.attend(params, x, n_heads=h, n_kv=kv, d_head=hd,
+                                   q_chunk=4, kv_chunk=4)
+        cache = attention.init_kv_cache(B, S + 2, kv, hd, dtype=jnp.float32)
+        outs = []
+        for t in range(S):
+            y, cache = attention.attend_decode(params, x[:, t:t+1], cache,
+                                               n_heads=h, n_kv=kv, d_head=hd)
+            outs.append(y)
+        dec = jnp.concatenate(outs, axis=1)
+        np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                                   rtol=2e-4, atol=2e-4)
+
+
+class TestMamba2:
+    def test_chunked_decode_parity(self):
+        rng = jax.random.PRNGKey(0)
+        B, S, d = 2, 10, 16
+        kw = dict(expand=2, head_dim=8, state=4)
+        params = mamba2.init(rng, d, **kw, dtype=jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (B, S, d)) * 0.5
+        full, h_fin = mamba2.apply_chunked(params, x, head_dim=8, state=4,
+                                           chunk=5)
+        cache = mamba2.init_state(B, d, **kw)
+        outs = []
+        for t in range(S):
+            y, cache = mamba2.apply_decode(params, x[:, t:t+1], cache,
+                                           head_dim=8, state=4)
+            outs.append(y)
+        dec = jnp.concatenate(outs, axis=1)
+        np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                                   rtol=5e-4, atol=5e-4)
+        np.testing.assert_allclose(np.asarray(cache["h"]), np.asarray(h_fin),
+                                   rtol=5e-4, atol=5e-4)
+
+    def test_chunk_size_invariance(self):
+        rng = jax.random.PRNGKey(2)
+        params = mamba2.init(rng, 16, expand=2, head_dim=8, state=4,
+                             dtype=jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(3), (1, 16, 16)) * 0.5
+        outs = [mamba2.apply_chunked(params, x, head_dim=8, state=4, chunk=c)[0]
+                for c in (2, 4, 16)]
+        for o in outs[1:]:
+            np.testing.assert_allclose(np.asarray(o), np.asarray(outs[0]),
+                                       rtol=5e-4, atol=5e-4)
+
+
+class TestXLSTM:
+    def test_mlstm_statefulness(self):
+        """Splitting a sequence across two calls with carried state equals
+        one full call."""
+        rng = jax.random.PRNGKey(0)
+        d, h = 16, 2
+        params = xlstm.mlstm_init(rng, d, h, dtype=jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, d)) * 0.5
+        full, _ = xlstm.mlstm_apply(params, x, n_heads=h)
+        y1, st = xlstm.mlstm_apply(params, x[:, :4], n_heads=h)
+        y2, _ = xlstm.mlstm_apply(params, x[:, 4:], st, n_heads=h)
+        np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                                   np.asarray(full), rtol=2e-4, atol=2e-4)
+
+    def test_slstm_statefulness(self):
+        rng = jax.random.PRNGKey(2)
+        d, h = 16, 4
+        params = xlstm.slstm_init(rng, d, h, dtype=jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(3), (2, 6, d)) * 0.5
+        full, _ = xlstm.slstm_apply(params, x, n_heads=h)
+        y1, st = xlstm.slstm_apply(params, x[:, :3], n_heads=h)
+        y2, _ = xlstm.slstm_apply(params, x[:, 3:], st, n_heads=h)
+        np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                                   np.asarray(full), rtol=2e-4, atol=2e-4)
+
+
+class TestMoE:
+    def test_routing_and_shapes(self):
+        rng = jax.random.PRNGKey(0)
+        d, ff, e = 16, 32, 4
+        params = moe.init(rng, d, ff, e, dtype=jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, d))
+        y, stats = moe.apply(params, x, top_k=2, group_size=8)
+        assert y.shape == x.shape
+        assert not bool(jnp.isnan(y).any())
+        assert float(stats.aux_loss) > 0.0
+        assert 0.0 <= float(stats.dropped_fraction) <= 1.0
+
+    def test_capacity_drops(self):
+        """capacity_factor -> 0 forces drops; output shrinks toward zero."""
+        rng = jax.random.PRNGKey(2)
+        params = moe.init(rng, 8, 16, 4, dtype=jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(3), (1, 16, 8))
+        _, s_lo = moe.apply(params, x, top_k=2, capacity_factor=0.1,
+                            group_size=16)
+        _, s_hi = moe.apply(params, x, top_k=2, capacity_factor=4.0,
+                            group_size=16)
+        assert float(s_lo.dropped_fraction) > float(s_hi.dropped_fraction)
+        assert float(s_hi.dropped_fraction) == pytest.approx(0.0, abs=1e-6)
+
+
+class TestRecurrent:
+    def test_lstm_gru_shapes_and_state(self):
+        rng = jax.random.PRNGKey(0)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 5, 8))
+        lp = recurrent.lstm_init(rng, 8, 12, dtype=jnp.float32)
+        y, (h, c) = recurrent.lstm_apply(lp, x)
+        assert y.shape == (2, 5, 12) and h.shape == (2, 12)
+        gp = recurrent.gru_init(rng, 8, 12, dtype=jnp.float32)
+        y2, h2 = recurrent.gru_apply(gp, x)
+        assert y2.shape == (2, 5, 12) and h2.shape == (2, 12)
+        mats = recurrent.gate_matrices({"l": lp, "g": gp})
+        assert len(mats) == 4  # wx/wh for each cell

@@ -1,0 +1,141 @@
+"""Per-arch smoke tests: reduced config, one forward/train step on CPU,
+shape + NaN assertions (full configs are exercised only via the dry-run)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, runnable_shapes, SHAPES_BY_NAME
+from repro.data import batch_for
+from repro.models import build_model
+from repro.train import adamw, init_state, make_train_step
+
+ALL_ARCHS = sorted(ARCHS)
+
+
+def make_batch(cfg, b, s):
+    return batch_for(cfg, 0, b, s)
+
+
+@pytest.mark.parametrize("arch_id", ALL_ARCHS)
+def test_forward_smoke(arch_id):
+    cfg = ARCHS[arch_id].reduced()
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, 2, 32)
+    kw = {} if cfg.family == "ssm_xlstm" else dict(q_chunk=16, kv_chunk=16)
+    logits, aux = api.forward(params, batch, **kw)
+    s_out = 32 - (cfg.vision_patches if cfg.family == "vlm" else 0)
+    s_out += cfg.vision_patches if cfg.family == "vlm" else 0  # logits cover patches too
+    assert logits.shape[0] == 2 and logits.shape[-1] == cfg.vocab
+    assert not bool(jnp.isnan(logits).any()), arch_id
+    assert np.isfinite(float(aux["moe_aux"]))
+
+
+@pytest.mark.parametrize("arch_id", [a for a in ALL_ARCHS
+                                     if ARCHS[a].has_decode])
+def test_decode_smoke(arch_id):
+    cfg = ARCHS[arch_id].reduced()
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    cache = api.init_cache(2, 16, dtype=jnp.float32)
+    tok = jnp.zeros((2, 1), jnp.int32)
+    for _ in range(3):
+        logits, cache = api.decode_step(params, tok, cache)
+        assert logits.shape == (2, cfg.vocab)
+        assert not bool(jnp.isnan(logits).any()), arch_id
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    assert int(cache["len"]) == 3
+
+
+@pytest.mark.parametrize("arch_id", ["qwen2-0.5b", "olmoe-1b-7b",
+                                     "zamba2-7b", "xlstm-125m",
+                                     "hubert-xlarge", "phi-3-vision-4.2b"])
+def test_train_step_smoke(arch_id):
+    """One family member per forward path: a jitted train step runs, loss
+    is finite, params change."""
+    cfg = ARCHS[arch_id].reduced()
+    api = build_model(cfg)
+    opt = adamw(1e-3)
+    state = init_state(api, opt, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(api, opt, q_chunk=16, kv_chunk=16))
+    batch = make_batch(cfg, 4, 32)
+    new_state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(new_state.step) == 1
+    # at least one parameter leaf moved
+    moved = any(
+        bool(jnp.any(a != b))
+        for a, b in zip(jax.tree.leaves(state.params),
+                        jax.tree.leaves(new_state.params)))
+    assert moved
+
+
+def test_loss_decreases_qwen():
+    """A few steps of training on the synthetic stream reduce the loss."""
+    cfg = ARCHS["qwen2-0.5b"].reduced()
+    api = build_model(cfg)
+    opt = adamw(3e-3)
+    state = init_state(api, opt, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(api, opt, q_chunk=16, kv_chunk=16))
+    losses = []
+    for i in range(10):
+        state, m = step(state, batch_for(cfg, i % 2, 8, 32))
+        losses.append(float(m["loss"]))
+    assert min(losses[-3:]) < losses[0]
+
+
+def test_microbatch_equivalence():
+    """n_microbatches=4 gives the same update as n_microbatches=1."""
+    cfg = ARCHS["qwen2-0.5b"].reduced()
+    api = build_model(cfg)
+    opt = adamw(1e-3)
+    batch = make_batch(cfg, 8, 16)
+    outs = []
+    for n_micro in (1, 4):
+        state = init_state(api, opt, jax.random.PRNGKey(0))
+        step = jax.jit(make_train_step(api, opt, n_microbatches=n_micro,
+                                       dtype=jnp.float32, remat=False,
+                                       q_chunk=8, kv_chunk=8))
+        new_state, m = step(state, batch)
+        outs.append(new_state.params)
+    a, b = (jax.tree.leaves(o) for o in outs)
+    for x, y in zip(a, b):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=2e-3, atol=2e-5)
+
+
+def test_runnable_shapes_matrix():
+    """The mandated skip rules produce exactly the 31-cell matrix."""
+    cells = [(cfg.arch_id, s.name) for cfg in ARCHS.values()
+             for s in runnable_shapes(cfg)]
+    assert len(cells) == 31
+    # encoder: no decode cells
+    assert ("hubert-xlarge", "decode_32k") not in cells
+    assert ("hubert-xlarge", "long_500k") not in cells
+    # full-attention archs skip long_500k
+    for a in ("qwen2-0.5b", "mistral-nemo-12b", "granite-20b", "granite-34b",
+              "moonshot-v1-16b-a3b", "olmoe-1b-7b", "phi-3-vision-4.2b"):
+        assert (a, "long_500k") not in cells
+    # sub-quadratic archs run it
+    assert ("zamba2-7b", "long_500k") in cells
+    assert ("xlstm-125m", "long_500k") in cells
+
+
+def test_param_counts_match_published_class():
+    """Analytical param counts are in the right ballpark of the arch names."""
+    # moonshot: the assignment pins 48L x 64e x d_ff=1408, which totals
+    # ~28B (Moonlight's published 16B assumes 27 layers) — the assigned
+    # dims are authoritative; noted in DESIGN.md §4.
+    expect = {"qwen2-0.5b": (0.3e9, 0.8e9), "mistral-nemo-12b": (10e9, 14e9),
+              "granite-20b": (18e9, 23e9), "granite-34b": (32e9, 38e9),
+              "olmoe-1b-7b": (6e9, 8e9), "moonshot-v1-16b-a3b": (25e9, 30e9),
+              "zamba2-7b": (6e9, 9e9), "xlstm-125m": (0.1e9, 0.2e9),
+              "hubert-xlarge": (0.8e9, 1.2e9),
+              "phi-3-vision-4.2b": (3.5e9, 4.6e9)}
+    for arch_id, (lo, hi) in expect.items():
+        n = ARCHS[arch_id].param_count()
+        assert lo <= n <= hi, (arch_id, n)
+    # MoE active params well below total
+    moe = ARCHS["olmoe-1b-7b"]
+    assert moe.active_param_count() < 0.4 * moe.param_count()

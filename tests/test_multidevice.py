@@ -1,0 +1,167 @@
+"""Multi-device correctness via subprocesses (the parent test process must
+keep the default single-device platform; each case forces
+--xla_force_host_platform_device_count in a child)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_child(code: str, devices: int = 8, timeout: int = 480) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=timeout, env=env)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_sharded_train_step_matches_single_device():
+    """FSDP x TP sharded train step == single-device train step."""
+    run_child("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.configs import ARCHS
+from repro.models import build_model
+from repro.train import adamw, init_state, make_train_step, TrainState
+from repro.dist.sharding import TRAIN_RULES, named_sharding_tree
+from repro.dist.ctx import sharding_ctx
+from repro.data import batch_for
+from repro.launch.mesh import make_mesh
+
+cfg = ARCHS["qwen2-0.5b"].reduced()
+api = build_model(cfg)
+opt = adamw(1e-3)
+batch = batch_for(cfg, 0, 8, 32)
+step_fn = make_train_step(api, opt, dtype=jnp.float32, remat=False,
+                          q_chunk=8, kv_chunk=8)
+
+# reference: plain single-logical-device execution
+state0 = init_state(api, opt, jax.random.PRNGKey(0))
+ref_state, ref_metrics = jax.jit(step_fn)(state0, batch)
+
+# sharded: 2x4 mesh, FSDP+TP with activation constraints
+mesh = make_mesh((2, 4), ("data", "model"))
+p_spec = api.param_spec()
+state_spec = TrainState(step=P(), params=p_spec,
+                        opt={"mu": p_spec, "nu": p_spec})
+state1 = init_state(api, opt, jax.random.PRNGKey(0))
+shard = named_sharding_tree(state_spec, state1, mesh, TRAIN_RULES)
+state1 = jax.tree.map(jax.device_put, state1, shard)
+
+def wrapped(s, b):
+    with sharding_ctx(mesh, TRAIN_RULES):
+        return step_fn(s, b)
+
+with mesh:
+    out_state, out_metrics = jax.jit(wrapped, out_shardings=(shard, None))(state1, batch)
+
+assert abs(float(ref_metrics["loss"]) - float(out_metrics["loss"])) < 1e-4, (
+    float(ref_metrics["loss"]), float(out_metrics["loss"]))
+for a, b in zip(jax.tree.leaves(ref_state.params), jax.tree.leaves(out_state.params)):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-3, atol=2e-4)
+print("SHARDED-OK")
+""")
+
+
+def test_pipeline_parallel_matches_sequential():
+    run_child("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.dist.pipeline import pipeline_apply
+from repro.launch.mesh import make_mesh
+
+mesh = make_mesh((4,), ("pipe",))
+n_stages, n_micro, mb, d = 4, 6, 3, 8
+rng = np.random.default_rng(0)
+ws = jnp.asarray(rng.standard_normal((n_stages, d, d)) * 0.3, jnp.float32)
+xs = jnp.asarray(rng.standard_normal((n_micro, mb, d)), jnp.float32)
+
+def stage_fn(w, x):
+    return jnp.tanh(x @ w)
+
+ref = xs
+for s in range(n_stages):
+    ref = jax.vmap(lambda x: stage_fn(ws[s], x))(ref)
+
+out = pipeline_apply(stage_fn, ws, xs, mesh, axis="pipe")
+np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-5)
+print("PIPELINE-OK")
+""")
+
+
+def test_grad_compression_error_feedback():
+    """int8-compressed DP gradient mean with error feedback converges to the
+    exact mean over steps."""
+    run_child("""
+import jax, jax.numpy as jnp, numpy as np
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+from repro.dist.compress import compressed_mean, init_error
+from repro.launch.mesh import make_mesh
+
+mesh = make_mesh((8,), ("data",))
+rng = np.random.default_rng(0)
+g = jnp.asarray(rng.standard_normal((8, 64)), jnp.float32)  # per-device grads
+
+@jax.jit
+def step(g, err):
+    def f(g, err):
+        m, e = compressed_mean(g[0], err[0], "data")
+        return m[None], e[None]
+    return shard_map(f, mesh=mesh, in_specs=(P("data"), P("data")),
+                     out_specs=(P("data"), P("data")))(g, err)
+
+err = jnp.zeros_like(g)
+exact = g.mean(axis=0)
+acc_c = jnp.zeros(64); acc_e = jnp.zeros(64)
+for _ in range(30):
+    m, err = step(g, err)
+    acc_c = acc_c + m[0]
+    acc_e = acc_e + exact
+# error feedback keeps the ACCUMULATED update unbiased
+rel = float(jnp.linalg.norm(acc_c - acc_e) / jnp.linalg.norm(acc_e))
+assert rel < 0.01, rel
+print("COMPRESS-OK", rel)
+""")
+
+
+def test_elastic_checkpoint_reshard():
+    """Checkpoint saved from a 2x4 mesh restores onto a 8x1 mesh (elastic
+    restart onto a different topology)."""
+    run_child("""
+import jax, jax.numpy as jnp, numpy as np, tempfile
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro import ckpt as ckptlib
+from repro.launch.mesh import make_mesh
+
+tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
+mesh_a = make_mesh((2, 4), ("data", "model"))
+tree_a = jax.tree.map(
+    lambda x: jax.device_put(x, NamedSharding(mesh_a, P("data", "model"))), tree)
+
+with tempfile.TemporaryDirectory() as d:
+    ckptlib.save(d, 1, tree_a)
+    mesh_b = make_mesh((8,), ("data",))
+    shard_b = {"w": NamedSharding(mesh_b, P("data", None))}
+    out, _ = ckptlib.restore(d, 1, tree, shardings=shard_b)
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(tree["w"]))
+    assert out["w"].sharding.spec == P("data", None)
+print("ELASTIC-OK")
+""")
+
+
+def test_dryrun_single_cell_smoke():
+    """The dry-run driver itself works end-to-end on a tiny forced-device
+    child (512 devices, one real cell)."""
+    out = run_child("""
+import sys
+sys.argv = ["dryrun", "--arch", "xlstm-125m", "--shape", "decode_32k",
+            "--mesh", "single", "--out", ""]
+from repro.launch import dryrun
+dryrun.main()
+""", devices=512, timeout=560)
+    assert "OK" in out

@@ -1,0 +1,68 @@
+"""Bit-packing property tests (hypothesis): straddled + word-aligned."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    build_width_classes, elems_per_word, pack_bits_straddled,
+    pack_rows_word_aligned, straddled_size_bits, unpack_bits_straddled,
+    unpack_rows_word_aligned,
+)
+
+
+@given(st.integers(0, 2 ** 32 - 1), st.integers(1, 12), st.integers(1, 70))
+@settings(max_examples=40, deadline=None)
+def test_straddled_roundtrip(seed, n, m):
+    rng = np.random.default_rng(seed)
+    widths = rng.integers(1, 9, size=n)
+    idx = np.stack([rng.integers(0, 1 << w, size=m) for w in widths]).astype(np.int32)
+    stream = pack_bits_straddled(idx, widths)
+    assert stream.size == (straddled_size_bits(widths, m, include_side_channel=False) + 7) // 8
+    out = unpack_bits_straddled(stream, widths, m)
+    assert (out == idx).all()
+
+
+@given(st.integers(0, 2 ** 32 - 1), st.integers(1, 16), st.integers(1, 8),
+       st.integers(1, 90))
+@settings(max_examples=40, deadline=None)
+def test_word_aligned_roundtrip(seed, r, width, m):
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, 1 << width, size=(r, m)).astype(np.int32)
+    words = pack_rows_word_aligned(idx, width)
+    assert words.dtype == np.uint32
+    assert words.shape[1] == -(-m // elems_per_word(width))
+    assert (unpack_rows_word_aligned(words, width, m) == idx).all()
+
+
+def test_word_aligned_jnp_unpack_matches_numpy():
+    import jax.numpy as jnp
+    from repro.core.convert import unpack_words
+    rng = np.random.default_rng(0)
+    for width in range(1, 9):
+        idx = rng.integers(0, 1 << width, size=(5, 33)).astype(np.int32)
+        words = pack_rows_word_aligned(idx, width)
+        out = np.asarray(unpack_words(jnp.asarray(words), width, 33))
+        assert (out == idx).all(), width
+
+
+@given(st.integers(0, 2 ** 32 - 1), st.integers(2, 20), st.integers(2, 40))
+@settings(max_examples=25, deadline=None)
+def test_width_classes_partition(seed, n, m):
+    rng = np.random.default_rng(seed)
+    widths = rng.integers(1, 9, size=n)
+    idx = np.stack([rng.integers(0, 1 << w, size=m) for w in widths]).astype(np.int32)
+    classes = build_width_classes(idx, widths)
+    seen = np.concatenate([c.row_ids for c in classes])
+    assert sorted(seen.tolist()) == list(range(n))  # exact partition
+    for c in classes:
+        assert (widths[c.row_ids] == c.width).all()
+        out = unpack_rows_word_aligned(c.words, c.width, m)
+        assert (out == idx[c.row_ids]).all()
+
+
+def test_elems_per_word_bounds():
+    assert elems_per_word(1) == 32
+    assert elems_per_word(6) == 5
+    assert elems_per_word(8) == 4
+    import pytest
+    with pytest.raises(ValueError):
+        elems_per_word(0)

@@ -1,0 +1,77 @@
+"""The paper's own workloads run end-to-end with CREW weights."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import paper_runtime as rt
+from repro.models.paper import PAPER_MODELS
+from repro.serve import crewize_params
+
+
+class TestPaperDims:
+    def test_table_iv_sizes(self):
+        """FC parameter volumes land on the paper's Table IV model sizes."""
+        expect_mb = {"DS2": 144, "GNMT": 518, "Transformer": 336,
+                     "Kaldi": 18, "PTBLM": 137}
+        for name, m in PAPER_MODELS.items():
+            got = m.size_mb_fp32()
+            want = expect_mb[name]
+            assert abs(got - want) / want < 0.35, (name, got, want)
+
+
+class TestPTBLM:
+    def test_forward_and_crew_parity(self):
+        params = rt.ptblm_init(jax.random.PRNGKey(0), vocab=500, width=0.04)
+        toks = jnp.arange(24, dtype=jnp.int32).reshape(2, 12) % 500
+        logits = rt.ptblm_apply(params, toks)
+        assert logits.shape == (2, 12, 500)
+        assert not bool(jnp.isnan(logits).any())
+        crew, rep = crewize_params(params, min_cols=32)
+        assert rep.n_converted > 0
+        out = rt.ptblm_apply(crew, toks)
+        # same argmax for most positions (8-bit quantization level diffs)
+        agree = float((jnp.argmax(out, -1) == jnp.argmax(logits, -1)).mean())
+        assert agree > 0.8
+
+
+class TestDS2:
+    def test_forward_and_crew_parity(self):
+        params = rt.ds2_init(jax.random.PRNGKey(0), n_features=20,
+                             width=0.04, n_layers=2)
+        feats = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 20))
+        logits = rt.ds2_apply(params, feats)
+        assert logits.shape == (2, 16, 29)
+        assert not bool(jnp.isnan(logits).any())
+        crew, rep = crewize_params(params, min_cols=16)
+        assert rep.n_converted > 0
+        out = rt.ds2_apply(crew, feats)
+        rel = float(jnp.linalg.norm(out - logits) / jnp.linalg.norm(logits))
+        assert rel < 0.2
+
+    def test_bidirectionality(self):
+        """Flipping time flips the output (up to the head): not causal."""
+        params = rt.ds2_init(jax.random.PRNGKey(0), n_features=8,
+                             width=0.02, n_layers=1)
+        feats = jax.random.normal(jax.random.PRNGKey(1), (1, 10, 8))
+        a = rt.ds2_apply(params, feats)
+        b = rt.ds2_apply(params, feats[:, ::-1])
+        assert not np.allclose(np.asarray(a), np.asarray(b[:, ::-1]))
+
+
+class TestKaldi:
+    def test_forward_and_crew(self):
+        params = rt.kaldi_init(jax.random.PRNGKey(0), width=0.1)
+        feats = jax.random.normal(jax.random.PRNGKey(1), (4, 44))
+        logits = rt.kaldi_apply(params, feats)
+        assert logits.shape[0] == 4 and not bool(jnp.isnan(logits).any())
+        crew, rep = crewize_params(params, min_cols=32)
+        assert rep.n_converted > 0
+        out = rt.kaldi_apply(crew, feats)
+        rel = float(jnp.linalg.norm(out - logits) / jnp.linalg.norm(logits))
+        assert rel < 0.2
+
+    def test_paper_dims_default(self):
+        params = rt.kaldi_init(jax.random.PRNGKey(0))
+        n = sum(x.size for x in jax.tree.leaves(params))
+        assert 4.0e6 < n < 5.2e6  # ~18 MB fp32 (Table IV)

@@ -1,0 +1,125 @@
+"""Serving: CREW conversion fidelity, engine parity, abstract-param shapes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.models import build_model
+from repro.serve import abstract_crew_params, crewize_params, generate
+from repro.serve.convert import crewize_spec
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = ARCHS["qwen2-0.5b"].reduced()
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    return cfg, api, params
+
+
+class TestConvert:
+    def test_reconstruction_fidelity(self, qwen):
+        """CREW-converted weights reconstruct to the quantized dense values
+        (lossless vs the 8-bit grid; error bounded by quantization step)."""
+        _, _, params = qwen
+        from repro.core.convert import CrewMatrixUniform, crew_reconstruct_uniform
+        crew, _ = crewize_params(params, min_cols=1, dtype=jnp.float32)
+
+        def check2d(w2d, cm2d):
+            rec = np.asarray(crew_reconstruct_uniform(cm2d))[:, :w2d.shape[1]]
+            step = np.abs(w2d).max() / 127  # per-matrix quantization scale
+            assert np.abs(rec - w2d).max() <= step / 2 + 1e-6
+
+        def walk(dense, conv):
+            if isinstance(conv, CrewMatrixUniform):
+                w = np.asarray(dense)
+                flat_w = w.reshape(-1, *w.shape[-2:])
+                flat_words = conv.words.reshape(-1, *conv.words.shape[-2:])
+                flat_uniq = conv.uniq.reshape(-1, *conv.uniq.shape[-2:])
+                for i in range(flat_w.shape[0]):  # scan-stacked layers
+                    check2d(flat_w[i], CrewMatrixUniform(
+                        words=flat_words[i], uniq=flat_uniq[i],
+                        width=conv.width, n_out=conv.n_out))
+                return
+            if isinstance(conv, dict):
+                for k in conv:
+                    walk(dense[k], conv[k])
+
+        walk(params, crew)
+
+    def test_stacked_leaves_keep_stack_axes(self, qwen):
+        _, _, params = qwen
+        crew, report = crewize_params(params)
+        from repro.core.convert import CrewMatrixUniform
+        found_stacked = False
+        for leaf in jax.tree.leaves(
+                crew, is_leaf=lambda x: isinstance(x, CrewMatrixUniform)):
+            if isinstance(leaf, CrewMatrixUniform) and leaf.words.ndim == 3:
+                found_stacked = True
+                assert leaf.uniq.shape[:2] == leaf.words.shape[:2]
+        assert found_stacked  # scan-stacked layers were converted in place
+        assert report.n_converted > 0
+
+    def test_abstract_matches_real_shapes(self, qwen):
+        """abstract_crew_params (dry-run path) predicts the exact shapes
+        crewize_params produces at the same width."""
+        _, api, params = qwen
+        crew, _ = crewize_params(params, max_unique=64)  # forces width<=6
+        abs_params = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
+        abs_crew = abstract_crew_params(abs_params, width=6)
+
+        from repro.core.convert import CrewMatrixUniform
+
+        def pairs(a, b):
+            if isinstance(a, CrewMatrixUniform):
+                assert isinstance(b, CrewMatrixUniform)
+                if a.width == b.width:  # real width can be < forced cap
+                    assert a.words.shape == b.words.shape
+                assert a.uniq.shape[:-1] == b.uniq.shape[:-1]
+                return
+            if isinstance(a, dict):
+                for k in a:
+                    pairs(a[k], b[k])
+
+        pairs(crew, abs_crew)
+
+    def test_report_stats_sane(self, qwen):
+        _, _, params = qwen
+        _, report = crewize_params(params)
+        agg = report.aggregate()
+        assert 0 < agg.muls_fraction < 1
+        assert agg.uw_per_input_max <= 256
+
+
+class TestEngine:
+    def test_dense_crew_token_parity(self, qwen):
+        cfg, api, params = qwen
+        crew, _ = crewize_params(params)
+        prompts = jnp.arange(24, dtype=jnp.int32).reshape(2, 12) % cfg.vocab
+        a = generate(api, params, prompts, max_new=8)
+        b = generate(api, crew, prompts, max_new=8)
+        # greedy decoding on 8-bit-quantized weights: expect near-total match
+        match = float((a["tokens"] == b["tokens"]).mean())
+        assert match >= 0.75
+
+    def test_prefill_decode_consistency(self, qwen):
+        """generate() greedy continuation equals argmax of teacher-forced
+        forward logits for the first generated token."""
+        cfg, api, params = qwen
+        prompts = (jnp.arange(10, dtype=jnp.int32)[None] * 7) % cfg.vocab
+        out = generate(api, params, prompts, max_new=4)
+        logits, _ = api.forward(params, {"tokens": prompts},
+                                q_chunk=8, kv_chunk=8)
+        first = int(jnp.argmax(logits[0, -1]))
+        assert int(out["tokens"][0, 0]) == first
+
+    def test_sampling_temperature(self, qwen):
+        cfg, api, params = qwen
+        prompts = jnp.zeros((1, 6), jnp.int32)
+        a = generate(api, params, prompts, max_new=16, temperature=1.0,
+                     rng=jax.random.PRNGKey(0))
+        b = generate(api, params, prompts, max_new=16, temperature=1.0,
+                     rng=jax.random.PRNGKey(1))
+        assert not bool(jnp.all(a["tokens"] == b["tokens"]))

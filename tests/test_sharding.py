@@ -1,0 +1,75 @@
+"""Sharding resolution rules (AbstractMesh — no device-count coupling)."""
+import jax
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.dist.sharding import SERVE_RULES, TRAIN_RULES, resolve, resolve_tree
+
+MESH = AbstractMesh((16, 16), ("data", "model"))
+MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+class TestResolve:
+    def test_fsdp_tp_weight(self):
+        assert resolve(P("embed", "mlp"), (4096, 14336), MESH, TRAIN_RULES) \
+            == P("data", "model")
+
+    def test_batch_multi_pod(self):
+        assert resolve(P("batch", "seq"), (256, 4096), MESH3, TRAIN_RULES) \
+            == P(("pod", "data"))
+
+    def test_mqa_kv_replicates(self):
+        # kv=1 head cannot split 16 ways
+        got = resolve(P(None, "batch", "kv_seq", "kv_heads", None),
+                      (4, 128, 32768, 1, 128), MESH, SERVE_RULES)
+        assert got == P(None, "data", "model")  # seq takes model instead
+
+    def test_gqa_kv_heads_win_over_seq(self):
+        got = resolve(P(None, "batch", "kv_seq", "kv_heads", None),
+                      (4, 128, 32768, 16, 128), MESH, SERVE_RULES)
+        assert got == P(None, "data", None, "model")
+
+    def test_batch_one_falls_back_to_sp(self):
+        got = resolve(P(None, "batch", "kv_seq", "kv_heads", None),
+                      (9, 1, 524288, 32, 112), MESH, SERVE_RULES)
+        # batch=1 unshardable; kv_heads=32 takes model; seq takes data
+        assert got == P(None, None, "data", "model")
+
+    def test_expert_conflict_drops_mlp(self):
+        got = resolve(P(None, "expert", "embed", "mlp"),
+                      (16, 64, 2048, 1024), MESH, TRAIN_RULES)
+        assert got == P(None, "model", "data")
+
+    def test_indivisible_replicates(self):
+        assert resolve(P("embed", "heads"), (63, 128), MESH, TRAIN_RULES) \
+            == P(None, "model")
+
+    def test_partial_tuple_claim(self):
+        # batch=32 divides 32 (pod*data) in the 3d mesh
+        assert resolve(P("batch",), (32,), MESH3, TRAIN_RULES) \
+            == P(("pod", "data"))
+        # batch=2 only divides pod
+        assert resolve(P("batch",), (2,), MESH3, TRAIN_RULES) == P("pod")
+
+
+def test_resolve_tree_mixed():
+    tree = {"w": P("embed", "mlp"), "b": P("mlp")}
+    shapes = {"w": jax.ShapeDtypeStruct((64, 256), "float32"),
+              "b": jax.ShapeDtypeStruct((256,), "float32")}
+    out = resolve_tree(tree, shapes, MESH, TRAIN_RULES)
+    assert out["w"] == P("data", "model")
+    assert out["b"] == P("model")
+
+
+def test_crewize_spec_mirrors_dense():
+    import jax.numpy as jnp
+    from repro.serve.convert import abstract_crew_params, crewize_spec
+    spec = {"q": {"w": P(None, "embed", "heads")}}
+    params = {"q": {"w": jax.ShapeDtypeStruct((4, 896, 1792), jnp.bfloat16)}}
+    crew = abstract_crew_params(params, width=6)
+    cspec = crewize_spec(spec, crew)
+    cw = cspec["q"]["w"]
+    assert tuple(cw.words) == (None, "embed", "heads")
+    assert tuple(cw.uniq) == (None, "embed", None)
+    # words dim padded to a TP-divisible multiple
+    assert crew["q"]["w"].words.shape[-1] % 16 == 0
