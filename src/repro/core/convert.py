@@ -24,8 +24,7 @@ XLA apply strategies (the Pallas kernel lives in repro/kernels):
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import List, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

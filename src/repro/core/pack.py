@@ -21,7 +21,7 @@ Both formats round-trip exactly; the hypothesis tests sweep widths 1..8.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List
+from typing import List
 
 import numpy as np
 

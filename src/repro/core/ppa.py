@@ -20,7 +20,7 @@ Two entry points:
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import List
 
 import numpy as np
 

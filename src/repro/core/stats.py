@@ -18,7 +18,7 @@ All accounting matches the paper's definitions:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 import numpy as np
 

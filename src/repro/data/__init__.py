@@ -18,7 +18,6 @@ from typing import Dict
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 __all__ = ["synth_lm_batch", "synth_encoder_batch", "synth_vlm_batch",
            "batch_for"]

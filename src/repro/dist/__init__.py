@@ -1,0 +1,27 @@
+"""Distributed execution: logical->physical sharding, mesh context,
+pipeline parallelism, and compressed gradient collectives.
+
+Module map
+----------
+ctx       — ``sharding_ctx`` context manager + ``constrain`` activation
+            sharding constraints (resolved at trace time).
+sharding  — logical axis rule tables (TRAIN_RULES / TRAIN_RULES_DP /
+            SERVE_RULES) and shape-aware ``resolve`` / ``resolve_tree`` /
+            ``named_sharding_tree``.
+pipeline  — ``pipeline_apply`` GPipe-style microbatch pipelining over a
+            mesh axis via shard_map + ppermute.
+compress  — ``compressed_mean`` int8 data-parallel gradient mean with
+            error feedback.
+compat    — bridges jax API renames (shard_map location/kwargs,
+            AbstractMesh signature) across the versions we support.
+"""
+from . import compat, compress, ctx, pipeline, sharding  # noqa: F401
+from .ctx import constrain, current_ctx, sharding_ctx  # noqa: F401
+from .sharding import (  # noqa: F401
+    SERVE_RULES,
+    TRAIN_RULES,
+    TRAIN_RULES_DP,
+    named_sharding_tree,
+    resolve,
+    resolve_tree,
+)

@@ -1,0 +1,55 @@
+"""Version bridges for the jax APIs the dist layer sits on.
+
+The repo runs on jax 0.4.x (the container pin) but tracks the current
+API names:
+
+* ``shard_map``  — lives at ``jax.shard_map`` on new jax, at
+  ``jax.experimental.shard_map.shard_map`` on 0.4.x; the replication-check
+  kwarg was renamed ``check_rep`` -> ``check_vma``.
+* ``AbstractMesh`` — new jax takes ``(axis_sizes, axis_names)``; 0.4.x
+  takes a single tuple of ``(name, size)`` pairs.
+* ``Mesh`` axis types — ``jax.sharding.AxisType`` does not exist on
+  0.4.x; meshes there are implicitly Auto (GSPMD propagation).
+
+Everything else the dist layer uses (NamedSharding, PartitionSpec,
+with_sharding_constraint, make_mesh) is stable across both.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map", "abstract_mesh", "make_mesh"]
+
+_NEW_SHARD_MAP = hasattr(jax, "shard_map")
+if _NEW_SHARD_MAP:
+    _shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):
+    """``jax.shard_map`` with the replication check disabled-by-kwarg
+    spelled the same way on every jax version."""
+    kwargs = {}
+    if check_vma is not None:
+        kwargs["check_vma" if _NEW_SHARD_MAP else "check_rep"] = check_vma
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kwargs)
+
+
+def abstract_mesh(axis_sizes, axis_names):
+    """Device-free mesh for resolving shardings without a real topology."""
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(tuple(axis_sizes), tuple(axis_names))
+    except TypeError:  # jax 0.4.x: AbstractMesh(((name, size), ...))
+        return AbstractMesh(tuple(zip(axis_names, axis_sizes)))
+
+
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` with Auto axis types where the kwarg exists."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(tuple(shape), tuple(axes),
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(tuple(shape), tuple(axes))

@@ -1,0 +1,69 @@
+"""Ambient sharding context for activation constraints.
+
+Step functions are written once against *logical* axis names; the mesh
+and rule table travel as trace-time ambient state:
+
+    with sharding_ctx(mesh, TRAIN_RULES):
+        out = step_fn(state, batch)       # constrain() calls bind here
+
+``constrain(x, "batch", None, "heads", None)`` resolves the logical spec
+against ``x.shape`` and pins it with ``with_sharding_constraint``.
+Outside any context (unit tests, single-device smoke runs) it is a no-op,
+so layers never need a "distributed or not" switch.
+
+The stack is thread-local: jit tracing happens on the calling thread, and
+a serving thread pool must be able to trace cells for different meshes
+concurrently.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .sharding import Rules, resolve
+
+__all__ = ["sharding_ctx", "current_ctx", "constrain"]
+
+_local = threading.local()
+
+
+def _stack() -> list:
+    if not hasattr(_local, "stack"):
+        _local.stack = []
+    return _local.stack
+
+
+@contextlib.contextmanager
+def sharding_ctx(mesh, rules: Rules):
+    """Bind (mesh, rules) for every ``constrain`` call in the block."""
+    _stack().append((mesh, rules))
+    try:
+        yield (mesh, rules)
+    finally:
+        _stack().pop()
+
+
+def current_ctx() -> Optional[Tuple]:
+    """Innermost (mesh, rules) pair, or None outside any context."""
+    s = _stack()
+    return s[-1] if s else None
+
+
+def constrain(x: jax.Array, *logical) -> jax.Array:
+    """Pin ``x`` to the physical sharding its logical spec resolves to.
+
+    The resolved spec is applied exactly — axes that resolve to None are
+    pinned replicated, which is the point: GSPMD propagation through scan
+    bodies is unreliable, and these call sites exist to stop it from
+    silently replicating (or over-sharding) loop carries.
+    """
+    ctx = current_ctx()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = resolve(P(*logical), x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,71 @@
+"""Microbatch pipeline parallelism over one mesh axis.
+
+GPipe-style schedule under ``shard_map``: stage weights shard over the
+pipe axis (device *i* holds stage *i*), microbatches stay replicated, and
+activations rotate stage-to-stage with ``ppermute``.  The loop runs
+``n_micro + n_stages - 1`` ticks; devices compute garbage outside their
+fill/drain window and the last stage masks real outputs into an
+accumulator that a final ``psum`` replicates back out.
+
+For the dry-run scale this favors clarity over schedule tightness (no
+1F1B, no circular buffering); it exists to give the launch layer a
+correct pipeline primitive with the collective pattern the roofline
+accounts for (per-tick point-to-point permutes, one final reduction).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from .compat import shard_map
+
+__all__ = ["pipeline_apply"]
+
+
+def pipeline_apply(stage_fn: Callable, stage_params, microbatches, mesh,
+                   axis: str = "pipe"):
+    """Run ``n_stages`` sequential stages over ``n_micro`` microbatches.
+
+    stage_fn:      (params_one_stage, x [mb, ...]) -> y [mb, ...]
+                   (activation shape must be stage-invariant).
+    stage_params:  [n_stages, ...] pytree leaves stacked on dim 0.
+    microbatches:  [n_micro, mb, ...].
+    Returns        [n_micro, mb, ...] == stage_{n-1}(... stage_0(x)).
+    """
+    n_stages = int(mesh.shape[axis])
+    n_micro = microbatches.shape[0]
+    n_ticks = n_micro + n_stages - 1
+    ring = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+
+    def worker(w_blk, xs):
+        w = jax.tree.map(lambda l: l[0], w_blk)  # this device's stage
+        stage = lax.axis_index(axis)
+        carry = jnp.zeros(xs.shape[1:], xs.dtype)
+        outs = jnp.zeros_like(xs)
+
+        def tick(t, state):
+            carry, outs = state
+            # stage 0 feeds microbatch t during the fill window; every
+            # other stage consumes what rotated in last tick.
+            feed = xs[jnp.minimum(t, n_micro - 1)]
+            y = stage_fn(w, jnp.where(stage == 0, feed, carry))
+            # microbatch m leaves the last stage at tick m + n_stages - 1
+            m = t - (n_stages - 1)
+            mc = jnp.clip(m, 0, n_micro - 1)
+            live = (stage == n_stages - 1) & (m >= 0)
+            outs = jnp.where(
+                live,
+                lax.dynamic_update_index_in_dim(outs, y, mc, 0),
+                outs)
+            return lax.ppermute(y, axis, ring), outs
+
+        _, outs = lax.fori_loop(0, n_ticks, tick, (carry, outs))
+        return lax.psum(outs, axis)  # only the last stage wrote non-zeros
+
+    return shard_map(worker, mesh=mesh, in_specs=(P(axis), P()),
+                     out_specs=P(), check_vma=False)(
+                         stage_params, microbatches)

@@ -1,0 +1,150 @@
+"""Logical -> physical sharding resolution.
+
+Layers annotate params/activations with *logical* axis names ("embed",
+"mlp", "heads", "batch", ...).  A rule table maps each logical axis to an
+ordered list of physical *claims*; a claim is one mesh axis (``"model"``)
+or a tuple of mesh axes (``("pod", "data")``) taken together.  ``resolve``
+turns a logical PartitionSpec plus a concrete shape into a physical spec:
+
+* **priority** — logical axes are resolved in rule-table order, not in
+  tensor-dim order, so e.g. "kv_heads" wins the "model" axis over
+  "kv_seq" regardless of which dim comes first.
+* **divisibility** — a claim is only taken if the dim size divides by the
+  claimed axes' total; tuple claims fall back to their longest divisible
+  prefix (a 32-wide batch takes ("pod", "data"); a 2-wide batch takes
+  just "pod").  Axes missing from the mesh are skipped, so one table
+  serves the 2-d single-pod and 3-d multi-pod meshes.
+* **conflicts** — each physical axis is claimed at most once per tensor;
+  a loser falls through to its next candidate or replicates.
+
+Rule tables are plain ``{logical: (claim, ...)}`` dicts (insertion order
+is the priority order), so call sites can build variants by dict merge.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Mapping, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "TRAIN_RULES", "TRAIN_RULES_DP", "SERVE_RULES",
+    "resolve", "resolve_tree", "named_sharding_tree",
+]
+
+Claim = Union[str, Tuple[str, ...]]
+Rules = Mapping[str, Tuple[Claim, ...]]
+
+# Training: FSDP ("embed" over the fast intra-pod "data" axis) x TP
+# ("mlp"/"heads"/"vocab" over "model"); batch spans pods so the only
+# cross-pod collective is the gradient all-reduce.  "expert" outranks
+# "mlp" for the TP axis: an MoE ffn shards expert-parallel and keeps its
+# per-expert mlp dim local.
+TRAIN_RULES: Rules = {
+    "batch": (("pod", "data"),),
+    "expert": ("model",),
+    "embed": ("data",),
+    "mlp": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "vocab": ("model",),
+    "seq": (),
+    "kv_seq": (),
+}
+
+# DP-first variant (§Perf iteration B): batch claims every mesh axis,
+# weights replicate — right for models whose head/ff dims fight 16-way TP.
+TRAIN_RULES_DP: Rules = {
+    "batch": (("pod", "data", "model"),),
+    "expert": (),
+    "embed": (),
+    "mlp": (),
+    "heads": (),
+    "kv_heads": (),
+    "vocab": (),
+    "seq": (),
+    "kv_seq": (),
+}
+
+# Serving: weights are TP-only (replicated over "data", which belongs to
+# the request batch).  KV heads outrank the KV sequence for the TP axis
+# (head-sharded attention needs no collectives; sequence sharding does);
+# the sequence falls back to whatever axis the batch left free — MQA
+# (kv=1) hands "model" to the sequence, a batch of 1 hands it "data"
+# (sequence parallelism for long-context prefill).
+SERVE_RULES: Rules = {
+    "batch": (("pod", "data"),),
+    "kv_heads": ("model",),
+    "heads": ("model",),
+    "kv_seq": ("data", "model"),
+    "seq": ("data",),
+    "expert": ("model",),
+    "embed": (),
+    "mlp": ("model",),
+    "vocab": ("model",),
+}
+
+
+def _mesh_sizes(mesh) -> Dict[str, int]:
+    """Axis name -> size for Mesh and AbstractMesh alike."""
+    shape = mesh.shape  # Mapping on every supported jax version
+    return dict(shape)
+
+
+def resolve(spec: P, shape: Sequence[int], mesh, rules: Rules) -> P:
+    """Logical PartitionSpec + shape -> physical PartitionSpec.
+
+    Rank mismatches are tolerated: a short spec leaves trailing dims
+    replicated, extra spec entries are dropped.  The result is trimmed of
+    trailing Nones (``P("data", None)`` and ``P("data")`` compare unequal
+    on some jax versions, so one canonical form is emitted).
+    """
+    sizes = _mesh_sizes(mesh)
+    parts = tuple(spec)[: len(shape)]
+    parts = parts + (None,) * (len(shape) - len(parts))
+    priority = {name: i for i, name in enumerate(rules)}
+
+    out: list = [None] * len(shape)
+    used: set = set()
+    dims = sorted(
+        (i for i, p in enumerate(parts) if p is not None),
+        key=lambda i: (priority.get(parts[i], len(priority)), i),
+    )
+    for i in dims:
+        for claim in rules.get(parts[i], ()):
+            axes = (claim,) if isinstance(claim, str) else tuple(claim)
+            axes = tuple(a for a in axes if a in sizes and a not in used)
+            while axes and shape[i] % math.prod(sizes[a] for a in axes):
+                axes = axes[:-1]  # longest divisible prefix of the claim
+            if axes:
+                out[i] = axes[0] if len(axes) == 1 else axes
+                used.update(axes)
+                break
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def _is_spec(x: Any) -> bool:
+    return isinstance(x, P)
+
+
+def _shape_of(x: Any) -> Tuple[int, ...]:
+    return tuple(x.shape) if hasattr(x, "shape") else ()
+
+
+def resolve_tree(spec_tree, shapes, mesh, rules: Rules):
+    """Map ``resolve`` over a logical spec tree zipped with a tree of
+    like-structured arrays / ShapeDtypeStructs."""
+    return jax.tree.map(
+        lambda s, v: resolve(s, _shape_of(v), mesh, rules),
+        spec_tree, shapes, is_leaf=_is_spec)
+
+
+def named_sharding_tree(spec_tree, values, mesh, rules: Rules):
+    """``resolve_tree`` wrapped into NamedShardings on a concrete mesh."""
+    return jax.tree.map(
+        lambda s, v: NamedSharding(mesh, resolve(s, _shape_of(v), mesh,
+                                                 rules)),
+        spec_tree, values, is_leaf=_is_spec)

@@ -32,7 +32,6 @@ bn multiple of 8 sublanes for f32).
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

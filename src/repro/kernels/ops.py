@@ -12,9 +12,8 @@
 """
 from __future__ import annotations
 
-from typing import Optional, Union
+from typing import Union
 
-import jax
 import jax.numpy as jnp
 
 from ..core.convert import (

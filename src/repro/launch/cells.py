@@ -19,8 +19,7 @@ Modes:
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -111,7 +110,6 @@ def _train_cell(api: ModelApi, shape: ShapeConfig, mesh: Mesh,
     step_fn = make_train_step(api, opt, n_microbatches=n_micro,
                               dtype=jnp.bfloat16, remat=True)
 
-    rng = jax.random.PRNGKey(0)
     params_abs = api.abstract_params(dtype=jnp.float32)
     state_abs = TrainState(
         step=jax.ShapeDtypeStruct((), jnp.int32),

@@ -27,7 +27,6 @@ import json
 import time
 import traceback
 
-import jax
 
 
 def run_cell(arch_id: str, shape_name: str, mesh_kind: str, mode: str,
@@ -56,9 +55,9 @@ def run_cell(arch_id: str, shape_name: str, mesh_kind: str, mode: str,
             t_compile = time.time() - t0 - t_lower
 
         ma = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
         hlo = compiled.as_text()
-        from ..roofline.hlo import account
+        from ..roofline.hlo import account, cost_analysis_dict
+        cost = cost_analysis_dict(compiled)
         acc = account(hlo)
         terms = roofline_terms(cost, hlo)
 

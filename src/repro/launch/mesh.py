@@ -14,9 +14,8 @@ collective in training is the gradient all-reduce.
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple
+from typing import Tuple
 
-import jax
 
 __all__ = ["make_production_mesh", "make_mesh"]
 
@@ -29,5 +28,5 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
     """jax.make_mesh with Auto axis types (GSPMD propagation)."""
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    from ..dist.compat import make_mesh as _compat_make_mesh
+    return _compat_make_mesh(shape, axes)

@@ -46,7 +46,7 @@ def main() -> None:
 
     params = api.init(jax.random.PRNGKey(args.seed))
     if args.ckpt_dir:
-        from ..train import TrainState, adamw, init_state
+        from ..train import adamw, init_state
         state_like = init_state(api, adamw(1e-3), jax.random.PRNGKey(args.seed))
         restored, _ = ckptlib.resume_latest(args.ckpt_dir, state_like)
         if restored is not None:

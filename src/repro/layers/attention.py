@@ -15,8 +15,6 @@ out as group = H.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -245,8 +243,8 @@ def flash_sharded(q, k, v, *, causal=True, block_q=512, block_k=512):
     a plain single-device kernel call.
     """
     from functools import partial
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
+    from ..dist.compat import shard_map
     from ..dist.ctx import current_ctx
     from ..dist.sharding import resolve
     from ..kernels.flash_attention import flash_attention

@@ -15,7 +15,6 @@ Shapes: d_inner = expand * d_model, H = d_inner / head_dim, state N.
 """
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

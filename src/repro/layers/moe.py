@@ -21,7 +21,6 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 from ..dist.ctx import constrain
 from . import linear

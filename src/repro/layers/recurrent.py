@@ -11,7 +11,6 @@ from typing import Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 from . import linear
 

@@ -13,7 +13,6 @@ States: mLSTM (C [B, H, dk, dv], n [B, H, dk], m [B, H]);
 """
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, Dict
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

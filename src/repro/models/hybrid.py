@@ -22,7 +22,6 @@ from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 from ..configs.base import ModelConfig
 from ..dist.ctx import constrain

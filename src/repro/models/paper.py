@@ -20,7 +20,7 @@ sensitivity and cross-checks against a small actually-trained LM.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Tuple
+from typing import Dict, List, Tuple
 
 import numpy as np
 

@@ -17,7 +17,6 @@ Scaled-down by default (`width=` multiplier) so they train/serve on CPU;
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

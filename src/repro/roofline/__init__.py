@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, Optional
+from typing import Dict
 
 __all__ = [
     "HW", "TPU_V5E", "collective_bytes", "RooflineTerms", "roofline_terms",

@@ -33,7 +33,20 @@ import dataclasses
 import re
 from typing import Dict, List, Optional, Tuple
 
-__all__ = ["parse_hlo", "HloAccounting", "account"]
+__all__ = ["parse_hlo", "HloAccounting", "account", "cost_analysis_dict"]
+
+
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    """``compiled.cost_analysis()`` normalized to one flat dict.
+
+    New jax returns the properties dict directly; 0.4.x returns a
+    one-element list of dicts (one per partition, pre-merged by XLA), so
+    indexing the raw result by string key there is a TypeError.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        return dict(cost[0]) if cost else {}
+    return dict(cost)
 
 _DTYPE_BYTES = {
     "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
@@ -346,7 +359,6 @@ def account(text: str) -> HloAccounting:
         if m is None or comp.name in scalar_helpers:
             continue
         in_fusion = comp.name in fusion_bodies
-        c_flops = c_bytes = c_coll = 0.0
         f0, b0, cl0 = flops, bytes_hbm, sum(coll.values())
         for ins in comp.instrs.values():
             if ins.opcode == "dot":

@@ -18,7 +18,7 @@ CREW targets FC matmuls, exactly like the paper (§Arch-applicability).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

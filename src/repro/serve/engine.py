@@ -10,7 +10,7 @@ outputs token-by-token.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,7 @@ All states are plain pytrees (checkpointable, shardable like params).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp

@@ -15,8 +15,7 @@ resolved from TRAIN_RULES and donates ``state``.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict
 
 import jax
 import jax.numpy as jnp

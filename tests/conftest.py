@@ -1,0 +1,12 @@
+"""Suite-wide collection config.
+
+``hypothesis`` (requirements-dev.txt) drives the property tests in
+test_core.py / test_pack.py.  When it is absent — minimal containers that
+only carry the runtime deps — those modules are skipped at collection
+instead of erroring the whole run; CI installs it and runs everything.
+"""
+import importlib.util
+
+collect_ignore = []
+if importlib.util.find_spec("hypothesis") is None:
+    collect_ignore += ["test_core.py", "test_pack.py"]

@@ -3,10 +3,9 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core import (
-    CrewLayout, QuantConfig, analyze_matrix, dequantize_matrix, force_max_unique,
-    index_width, layout_stats, ppa_layout, quantize_matrix, reconstruct,
-)
+from repro.core import (QuantConfig, analyze_matrix, dequantize_matrix,
+                        force_max_unique, index_width, layout_stats,
+                        ppa_layout, quantize_matrix, reconstruct)
 
 
 def heavy_tailed(rng, n, m):

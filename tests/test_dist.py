@@ -1,0 +1,109 @@
+"""repro.dist unit coverage that needs no forced-device children:
+constrain outside any context, resolve on degenerate shapes, context
+stack discipline, and the compressed-mean quantization math on one
+device."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.compat import abstract_mesh
+from repro.dist.compress import init_error
+from repro.dist.ctx import constrain, current_ctx, sharding_ctx
+from repro.dist.sharding import (SERVE_RULES, TRAIN_RULES, TRAIN_RULES_DP,
+                                 named_sharding_tree, resolve)
+
+MESH = abstract_mesh((16, 16), ("data", "model"))
+MESH3 = abstract_mesh((2, 16, 16), ("pod", "data", "model"))
+
+
+class TestConstrainOutsideCtx:
+    def test_identity_no_ctx(self):
+        x = jnp.ones((4, 8))
+        assert current_ctx() is None
+        assert constrain(x, "batch", "embed") is x
+
+    def test_noop_under_jit(self):
+        @jax.jit
+        def f(x):
+            return constrain(x, "batch", None) * 2.0
+
+        np.testing.assert_array_equal(np.asarray(f(jnp.ones((4, 2)))),
+                                      2.0 * np.ones((4, 2)))
+
+    def test_ctx_stack_restored_on_exception(self):
+        with pytest.raises(RuntimeError):
+            with sharding_ctx(MESH, TRAIN_RULES):
+                assert current_ctx() == (MESH, TRAIN_RULES)
+                raise RuntimeError("boom")
+        assert current_ctx() is None
+
+    def test_ctx_nesting_innermost_wins(self):
+        with sharding_ctx(MESH, TRAIN_RULES):
+            with sharding_ctx(MESH3, SERVE_RULES):
+                assert current_ctx() == (MESH3, SERVE_RULES)
+            assert current_ctx() == (MESH, TRAIN_RULES)
+        assert current_ctx() is None
+
+
+class TestResolveDegenerate:
+    def test_size_one_dims_replicate(self):
+        # nothing >1 divides 1: every claim fails, fully replicated
+        assert resolve(P("batch", "embed"), (1, 1), MESH, TRAIN_RULES) == P()
+
+    def test_short_spec_pads_replicated(self):
+        assert resolve(P("embed"), (64, 128), MESH, TRAIN_RULES) == P("data")
+
+    def test_long_spec_extra_entries_dropped(self):
+        assert resolve(P("embed", "mlp", "heads"), (64, 128), MESH,
+                       TRAIN_RULES) == P("data", "model")
+
+    def test_scalar_shape(self):
+        assert resolve(P(), (), MESH, TRAIN_RULES) == P()
+
+    def test_unknown_logical_axis_replicates(self):
+        assert resolve(P("no_such_axis"), (64,), MESH, TRAIN_RULES) == P()
+
+    def test_missing_mesh_axis_skipped(self):
+        # "pod" is absent from the 2-d mesh: the tuple claim degrades to
+        # its ("data",) remainder instead of erroring
+        assert resolve(P("batch"), (64,), MESH, TRAIN_RULES) == P("data")
+
+    def test_dp_rules_claim_whole_mesh(self):
+        assert resolve(P("batch", "seq"), (512, 128), MESH, TRAIN_RULES_DP) \
+            == P(("data", "model"))
+        # batch too small for the full 256-way claim: prefix fallback
+        assert resolve(P("batch", "seq"), (64, 128), MESH, TRAIN_RULES_DP) \
+            == P("data")
+        assert resolve(P("embed", "mlp"), (64, 128), MESH, TRAIN_RULES_DP) \
+            == P()
+
+    def test_named_sharding_tree_single_device(self):
+        mesh = jax.make_mesh((1,), ("data",))
+        tree = {"w": P("embed", "mlp"), "step": P()}
+        vals = {"w": jnp.zeros((4, 4)), "step": jnp.zeros(())}
+        shard = named_sharding_tree(tree, vals, mesh, TRAIN_RULES)
+        assert shard["w"].mesh == mesh
+        assert shard["step"].spec == P()
+
+
+class TestConstrainInCtx:
+    def test_single_device_ctx_roundtrip(self):
+        mesh = jax.make_mesh((1,), ("data",))
+
+        @jax.jit
+        def f(x):
+            return constrain(x, "batch", None) + 1.0
+
+        with sharding_ctx(mesh, TRAIN_RULES):
+            out = f(jnp.zeros((4, 2)))
+        np.testing.assert_array_equal(np.asarray(out), np.ones((4, 2)))
+        assert current_ctx() is None
+
+
+def test_init_error_zero_tree():
+    g = {"a": jnp.ones((3,)), "b": {"c": jnp.ones((2, 2), jnp.bfloat16)}}
+    e = init_error(g)
+    assert e["b"]["c"].dtype == jnp.bfloat16
+    assert float(jnp.abs(e["a"]).sum()) == 0.0

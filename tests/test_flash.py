@@ -1,5 +1,4 @@
 """Flash-attention Pallas kernel vs the chunked-attention oracle."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

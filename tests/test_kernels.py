@@ -4,7 +4,6 @@ The kernel runs in interpret mode on CPU (the BlockSpecs are the TPU
 tiling contract); every configuration must match ref.py to float32
 accumulation tolerance.
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ARCHS, runnable_shapes, SHAPES_BY_NAME
+from repro.configs import ARCHS, runnable_shapes
 from repro.data import batch_for
 from repro.models import build_model
 from repro.train import adamw, init_state, make_train_step

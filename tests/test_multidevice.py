@@ -5,7 +5,6 @@ import os
 import subprocess
 import sys
 
-import pytest
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
@@ -98,8 +97,8 @@ def test_grad_compression_error_feedback():
     exact mean over steps."""
     run_child("""
 import jax, jax.numpy as jnp, numpy as np
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
+from repro.dist.compat import shard_map
 from repro.dist.compress import compressed_mean, init_error
 from repro.launch.mesh import make_mesh
 

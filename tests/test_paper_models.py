@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.models import paper_runtime as rt
 from repro.models.paper import PAPER_MODELS

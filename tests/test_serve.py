@@ -7,7 +7,6 @@ import pytest
 from repro.configs import ARCHS
 from repro.models import build_model
 from repro.serve import abstract_crew_params, crewize_params, generate
-from repro.serve.convert import crewize_spec
 
 
 @pytest.fixture(scope="module")

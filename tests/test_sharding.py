@@ -1,12 +1,12 @@
 """Sharding resolution rules (AbstractMesh — no device-count coupling)."""
 import jax
-import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
+from repro.dist.compat import abstract_mesh
 from repro.dist.sharding import SERVE_RULES, TRAIN_RULES, resolve, resolve_tree
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+MESH = abstract_mesh((16, 16), ("data", "model"))
+MESH3 = abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 class TestResolve:

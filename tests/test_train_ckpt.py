@@ -7,8 +7,7 @@ import numpy as np
 import pytest
 
 from repro import ckpt as ckptlib
-from repro.train import (adamw, apply_updates, cosine_warmup, cross_entropy,
-                         global_norm, sgd)
+from repro.train import adamw, apply_updates, cosine_warmup, cross_entropy, sgd
 
 
 class TestOptim:
