@@ -1,0 +1,53 @@
+"""Measured strategy dispatch: autotune winners vs the analytical prior.
+
+For decode- and prefill-shaped CREW applies, times every candidate strategy
+through ``repro.perf.measure_crew_matmul`` and reports the measured winner
+next to ``pick_strategy``'s roofline guess — the table that justifies (or
+indicts) the cold-start prior on this backend.  The winners land in the
+process autotune store, so a serve run in the same process dispatches on
+them; with $REPRO_AUTOTUNE_CACHE set they persist across processes.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+SHAPES_FAST = [
+    # (batch, n_in, n_out) — decode-shaped and prefill-shaped
+    (1, 256, 512),
+    (32, 256, 512),
+]
+SHAPES_FULL = SHAPES_FAST + [
+    (1, 896, 4864),   # qwen2-0.5b FFN up, single-token decode
+    (128, 896, 896),  # qwen2-0.5b attention proj, prefill-ish
+]
+
+
+def main(fast: bool = False):
+    import jax.numpy as jnp
+
+    from repro.core import crew_uniform_from_dense
+    from repro.kernels.ops import pick_strategy
+    from repro.perf import measure_crew_matmul
+
+    rows = []
+    rng = np.random.default_rng(0)
+    for b, n, m in SHAPES_FAST if fast else SHAPES_FULL:
+        w = (rng.standard_t(4, size=(n, m)) * 0.05).astype(np.float32)
+        cm, _, _ = crew_uniform_from_dense(w, dtype=jnp.float32)
+        x = jnp.asarray(rng.standard_normal((b, n)).astype(np.float32))
+        rec = measure_crew_matmul(x, cm, repeats=1 if fast else 3)
+        prior = pick_strategy(b, cm.width, compute_rich=b >= 64)
+        row = {
+            "bench": "dispatch", "B": b, "N": n, "M": m, "width": cm.width,
+            "winner": rec.strategy, "prior": prior,
+            "prior_ok": rec.strategy == prior,
+        }
+        for strat, t in sorted(rec.times_s.items()):
+            row[f"ms_{strat}"] = round(1e3 * t, 2) if t != float("inf") else "-"
+        rows.append(row)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(r)

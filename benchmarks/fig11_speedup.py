@@ -7,12 +7,18 @@ an explicit finding about where the paper's 2.61x comes from.
 """
 from __future__ import annotations
 
-from repro.models.paper import PAPER_MODELS, fc_matrices
+from repro.models.paper import PAPER_MODELS
 from repro.perfmodel import compare_schemes
+
+from ._paper_cache import analyzed_model, warm_matrices
 
 PAPER_FIG11 = {"DS2": 2.75, "GNMT": 2.96, "Transformer": 2.50,
                "Kaldi": 2.26, "PTBLM": 2.60}  # read off Fig 11 (avg 2.61)
 PAPER_FIG12 = 2.42  # average energy savings
+
+
+def prepare(fast: bool = False) -> None:
+    warm_matrices(["Kaldi"] if fast else list(PAPER_MODELS))
 
 
 def main(fast: bool = False):
@@ -20,9 +26,14 @@ def main(fast: bool = False):
     names = ["Kaldi"] if fast else list(PAPER_MODELS)
     geo = {"crew": 1.0, "ucnn": 1.0, "crew_e": 1.0}
     for name in names:
-        mats = fc_matrices(PAPER_MODELS[name])
-        serial = compare_schemes(name, mats, overlap_baseline=False)
-        fair = compare_schemes(name, mats, overlap_baseline=True)
+        layers = analyzed_model(name)
+        mats = [(lay.name, lay.w) for lay in layers]
+        layouts = {lay.name: lay.layout for lay in layers}
+        qs = {lay.name: lay.qm.q for lay in layers}
+        serial = compare_schemes(name, mats, overlap_baseline=False,
+                                 layouts=layouts, qs=qs)
+        fair = compare_schemes(name, mats, overlap_baseline=True,
+                               layouts=layouts, qs=qs)
         rows.append({
             "bench": "fig11", "model": name,
             "crew_speedup": round(serial["crew"]["speedup"], 2),

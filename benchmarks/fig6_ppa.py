@@ -9,19 +9,14 @@ Also reports the paper's aggressive 2-bit variant.
 """
 from __future__ import annotations
 
-import numpy as np
+from repro.core import aggregate_stats, layout_stats, ppa_layout
 
-from repro.core import (analyze_matrix, aggregate_stats, layout_stats, ppa_layout,
-                        quantize_matrix)
-from repro.models.paper import PAPER_MODELS, fc_matrices
+from ._paper_cache import analyzed_model, warm_matrices
 
 
 def sweep_model(name: str, thresholds=(0.0, 0.05, 0.10, 0.15, 0.20),
                 max_bits: int = 1):
-    layouts = []
-    for lname, w in fc_matrices(PAPER_MODELS[name]):
-        qm = quantize_matrix(w)
-        layouts.append(analyze_matrix(qm.q))
+    layouts = [lay.layout for lay in analyzed_model(name)]
     base = aggregate_stats([layout_stats(l) for l in layouts])
     rows = []
     for thr in thresholds:
@@ -44,6 +39,10 @@ def sweep_model(name: str, thresholds=(0.0, 0.05, 0.10, 0.15, 0.20),
             "weight_mass_moved%": round(100 * mass, 2) if thr else 0.0,
         })
     return rows
+
+
+def prepare(fast: bool = False) -> None:
+    warm_matrices(["Kaldi"] if fast else ["Kaldi", "PTBLM", "Transformer"])
 
 
 def main(fast: bool = False):

@@ -1,17 +1,25 @@
 """Benchmark aggregator — one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--full]
+    PYTHONPATH=src python -m benchmarks.run [--full] [--json [PATH]]
 
 Default is the fast subset (CI-friendly); --full runs every paper model.
 Each module returns rows of dicts; they are printed as aligned key=value
 lines plus a trailing ``name,seconds,rows`` CSV block.
+
+Modules may expose ``prepare(fast)`` for input materialization (dataset
+setup: synthesizing paper-model weight matrices); it runs *outside* the
+timed region so the per-module seconds measure the benchmark's actual
+work — for the conversion benchmarks, the CREW offline pipeline itself.
+``--json`` writes the per-module records (name/seconds/rows, plus setup
+seconds) to BENCH_crew.json so CI can archive the perf trajectory.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
-from . import fig6_ppa, fig11_speedup, perf_cells, roofline_table, \
+from . import dispatch, fig6_ppa, fig11_speedup, perf_cells, roofline_table, \
     tab1_unique_weights, tab2_compression, traffic
 
 MODULES = [
@@ -22,6 +30,7 @@ MODULES = [
     ("traffic", traffic),
     ("roofline_table", roofline_table),
     ("perf_cells", perf_cells),
+    ("dispatch", dispatch),
 ]
 
 
@@ -30,21 +39,41 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="run every paper model (slower)")
     ap.add_argument("--only", default="")
+    ap.add_argument("--json", nargs="?", const="BENCH_crew.json", default=None,
+                    metavar="PATH",
+                    help="write per-module name/seconds/rows records to PATH "
+                         "(default BENCH_crew.json)")
     args = ap.parse_args()
     fast = not args.full
 
     csv = ["name,seconds,rows"]
+    records = []
     for name, mod in MODULES:
         if args.only and args.only not in name:
             continue
         t0 = time.time()
+        prepare = getattr(mod, "prepare", None)
+        if prepare is not None:
+            prepare(fast=fast)
+        setup_s = time.time() - t0
+
+        t0 = time.time()
         rows = mod.main(fast=fast)
         dt = time.time() - t0
-        print(f"\n=== {name} ({dt:.1f}s) ===")
+        records.append({"name": name, "seconds": round(dt, 3),
+                        "setup_seconds": round(setup_s, 3),
+                        "rows": len(rows)})
+        print(f"\n=== {name} ({dt:.1f}s + {setup_s:.1f}s setup) ===")
         for r in rows:
             print("  " + "  ".join(f"{k}={v}" for k, v in r.items()))
         csv.append(f"{name},{dt:.2f},{len(rows)}")
     print("\n" + "\n".join(csv))
+
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump({"fast": fast, "modules": records}, fh, indent=2)
+            fh.write("\n")
+        print(f"wrote {args.json}")
 
 
 if __name__ == "__main__":

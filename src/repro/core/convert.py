@@ -172,12 +172,8 @@ def crew_var_from_dense(
     classes = []
     for c in packlib.build_width_classes(layout.idx, layout.widths):
         k = 1 << c.width
-        sub_rows = [layout.rows[i] for i in c.row_ids]
-        table = np.zeros((len(sub_rows), k), dtype=np.float32)
-        for r, row in enumerate(sub_rows):
-            table[r, : row.n_unique] = row.values
-            table[r, row.n_unique :] = row.values[-1]
-        table *= float(qm.scale)
+        table = layout.padded_unique_table(k, row_ids=c.row_ids)
+        table = table.astype(np.float32) * float(qm.scale)
         classes.append(
             CrewWidthClass(
                 row_ids=jnp.asarray(c.row_ids),

@@ -17,11 +17,18 @@ Two formats:
    (w=7 -> 4/word) and ~7 % typical; EXPERIMENTS.md reports both sizes.
 
 Both formats round-trip exactly; the hypothesis tests sweep widths 1..8.
+
+The straddled codec is whole-matrix vectorized: every field's bit position
+is computed up front (row offsets via one cumsum), the field value is
+shifted by its in-byte phase, and the result is scattered/gathered through
+at most ceil((w_max + 14)/8) byte slots — no per-row or per-bit Python
+loops.  The bitstream is bit-identical to the historical per-row/per-bit
+implementation (tests/test_convert_parity.py).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List
+from typing import List, Tuple
 
 import numpy as np
 
@@ -43,6 +50,21 @@ ROW_WIDTH_SIDE_CHANNEL_BITS = 3  # paper §V-B
 # Format 1: straddled bitstream (storage / model file)
 # --------------------------------------------------------------------------
 
+def _field_starts(widths: np.ndarray, m: int) -> Tuple[np.ndarray, int]:
+    """Bit position of every w_i-bit field: starts[i, j] = sum_{r<i} w_r*m
+    + w_i*j.  Returns (starts [N, M] int64, total_bits)."""
+    row_offsets = np.zeros(widths.size + 1, dtype=np.int64)
+    np.cumsum(widths * m, out=row_offsets[1:])
+    starts = (row_offsets[:-1, None]
+              + widths[:, None] * np.arange(m, dtype=np.int64)[None, :])
+    return starts, int(row_offsets[-1])
+
+
+def _byte_slots(max_width: int) -> int:
+    """Bytes a field can touch: in-byte phase (<= 7 bits) + the field."""
+    return (int(max_width) + 7 + 7) // 8
+
+
 def pack_bits_straddled(idx: np.ndarray, widths: np.ndarray) -> np.ndarray:
     """Pack idx[N, M] with per-row bit widths into a uint8 bitstream.
 
@@ -51,40 +73,48 @@ def pack_bits_straddled(idx: np.ndarray, widths: np.ndarray) -> np.ndarray:
     """
     n, m = idx.shape
     widths = np.asarray(widths, dtype=np.int64)
-    total_bits = int((widths * m).sum())
-    out = np.zeros(((total_bits + 7) // 8,), dtype=np.uint8)
-    bitpos = 0
-    for i in range(n):
-        w = int(widths[i])
-        row = idx[i].astype(np.uint64)
-        if np.any(row >= (1 << w)):
-            raise ValueError(f"row {i}: index exceeds {w} bits")
-        # Vectorized scatter of w-bit fields into the byte stream.
-        starts = bitpos + w * np.arange(m, dtype=np.int64)
-        for b in range(w):
-            pos = starts + b
-            bit = ((row >> np.uint64(b)) & np.uint64(1)).astype(np.int64)
-            np.bitwise_or.at(out, pos >> 3, (bit << (pos & 7)).astype(np.uint8))
-        bitpos += w * m
-    return out
+    bad = np.any(idx.astype(np.uint64) >= (np.uint64(1) << widths.astype(np.uint64))[:, None],
+                 axis=1) if n and m else np.zeros(n, dtype=bool)
+    if bad.any():
+        i = int(np.argmax(bad))
+        raise ValueError(f"row {i}: index exceeds {int(widths[i])} bits")
+    if n == 0 or m == 0:
+        total_bits = int((widths * m).sum())
+        return np.zeros(((total_bits + 7) // 8,), dtype=np.uint8)
+
+    starts, total_bits = _field_starts(widths, m)
+    slots = _byte_slots(widths.max())
+    out = np.zeros(((total_bits + 7) // 8 + slots,), dtype=np.uint8)
+
+    byte0 = (starts >> 3).ravel()
+    shifted = (idx.astype(np.uint64)
+               << (starts & 7).astype(np.uint64)).ravel()
+    for b in range(slots):
+        np.bitwise_or.at(out, byte0 + b,
+                         ((shifted >> np.uint64(8 * b))
+                          & np.uint64(0xFF)).astype(np.uint8))
+    return out[:(total_bits + 7) // 8]
 
 
 def unpack_bits_straddled(stream: np.ndarray, widths: np.ndarray, m: int) -> np.ndarray:
     """Inverse of pack_bits_straddled -> idx[N, M] int32."""
     widths = np.asarray(widths, dtype=np.int64)
     n = widths.size
-    idx = np.zeros((n, m), dtype=np.int64)
-    bitpos = 0
-    bits = np.unpackbits(stream, bitorder="little").astype(np.int64)
-    for i in range(n):
-        w = int(widths[i])
-        starts = bitpos + w * np.arange(m, dtype=np.int64)
-        acc = np.zeros((m,), dtype=np.int64)
-        for b in range(w):
-            acc |= bits[starts + b] << b
-        idx[i] = acc
-        bitpos += w * m
-    return idx.astype(np.int32)
+    if n == 0 or m == 0:
+        return np.zeros((n, m), dtype=np.int32)
+
+    starts, _ = _field_starts(widths, m)
+    slots = _byte_slots(widths.max())
+    buf = np.zeros(stream.size + slots, dtype=np.uint8)
+    buf[:stream.size] = stream
+
+    byte0 = starts >> 3
+    word = np.zeros(starts.shape, dtype=np.uint64)
+    for b in range(slots):
+        word |= buf[byte0 + b].astype(np.uint64) << np.uint64(8 * b)
+    mask = ((np.uint64(1) << widths.astype(np.uint64)) - np.uint64(1))[:, None]
+    fields = (word >> (starts & 7).astype(np.uint64)) & mask
+    return fields.astype(np.int32)
 
 
 def straddled_size_bits(widths: np.ndarray, m: int, include_side_channel: bool = True) -> int:
@@ -117,12 +147,11 @@ def pack_rows_word_aligned(idx: np.ndarray, width: int) -> np.ndarray:
     n_words = (m + epw - 1) // epw
     if np.any(idx < 0) or np.any(idx >= (1 << width)):
         raise ValueError(f"index exceeds {width} bits")
-    padded = np.zeros((r, n_words * epw), dtype=np.uint64)
-    padded[:, :m] = idx.astype(np.uint64)
+    padded = np.zeros((r, n_words * epw), dtype=np.uint32)
+    padded[:, :m] = idx.astype(np.uint32)
     padded = padded.reshape(r, n_words, epw)
-    shifts = (np.arange(epw, dtype=np.uint64) * np.uint64(width))[None, None, :]
-    words = (padded << shifts).sum(axis=2, dtype=np.uint64)
-    return words.astype(np.uint32)
+    shifts = (np.arange(epw, dtype=np.uint32) * np.uint32(width))[None, None, :]
+    return np.bitwise_or.reduce(padded << shifts, axis=2)
 
 
 def unpack_rows_word_aligned(words: np.ndarray, width: int, m: int) -> np.ndarray:
@@ -130,9 +159,9 @@ def unpack_rows_word_aligned(words: np.ndarray, width: int, m: int) -> np.ndarra
     the jnp/in-kernel versions live in kernels/ref.py and the Pallas body)."""
     r, n_words = words.shape
     epw = elems_per_word(width)
-    mask = np.uint64((1 << width) - 1)
-    shifts = (np.arange(epw, dtype=np.uint64) * np.uint64(width))[None, None, :]
-    fields = (words.astype(np.uint64)[:, :, None] >> shifts) & mask
+    mask = np.uint32((1 << width) - 1)
+    shifts = (np.arange(epw, dtype=np.uint32) * np.uint32(width))[None, None, :]
+    fields = (words[:, :, None] >> shifts) & mask
     return fields.reshape(r, n_words * epw)[:, :m].astype(np.int32)
 
 
@@ -164,7 +193,8 @@ def build_width_classes(idx: np.ndarray, widths: np.ndarray) -> List[WidthClass]
     """
     widths = np.asarray(widths)
     classes: List[WidthClass] = []
-    for w in sorted(set(int(x) for x in widths)):
+    for w in np.unique(widths):
+        w = int(w)
         rid = np.nonzero(widths == w)[0]
         classes.append(
             WidthClass(width=w, row_ids=rid.astype(np.int32),

@@ -85,11 +85,11 @@ class QuantizedMatrix:
 
 
 def _calibrate_range(w: np.ndarray, cfg: QuantConfig, axis=None) -> np.ndarray:
-    a = np.abs(w)
     if cfg.clip_percentile is not None:
-        r = np.percentile(a, cfg.clip_percentile, axis=axis)
+        r = np.percentile(np.abs(w), cfg.clip_percentile, axis=axis)
     else:
-        r = a.max(axis=axis)
+        # max |w| without materializing |w|
+        r = np.maximum(w.max(axis=axis), -w.min(axis=axis))
     return np.maximum(r, np.finfo(np.float32).tiny)
 
 
@@ -101,12 +101,14 @@ def quantize_matrix(w: np.ndarray, cfg: QuantConfig = QuantConfig()) -> Quantize
     if cfg.per_channel:
         rng = _calibrate_range(w, cfg, axis=0)  # [M]
         scale = (rng / cfg.qmax).astype(np.float32)
-        q = np.rint(w / scale[None, :])
+        qf = w / scale[None, :]
     else:
         rng = _calibrate_range(w, cfg)
         scale = np.float32(rng / cfg.qmax)
-        q = np.rint(w / scale)
-    q = np.clip(q, -cfg.qmax, cfg.qmax).astype(np.int32)
+        qf = w / scale
+    np.rint(qf, out=qf)
+    np.clip(qf, -cfg.qmax, cfg.qmax, out=qf)
+    q = qf.astype(np.int32)
     return QuantizedMatrix(q=q, scale=np.asarray(scale, dtype=np.float32), cfg=cfg)
 
 

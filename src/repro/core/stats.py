@@ -78,10 +78,17 @@ def layout_stats(layout: CrewLayout, bits: int = 8) -> CrewStats:
     meta_bits = total_unique * bits + n * UW_COUNT_BITS
     crew_storage = idx_bits + meta_bits
 
-    classes = packlib.build_width_classes(layout.idx, layout.widths)
-    runtime_idx_bits = packlib.word_aligned_size_bits(classes)
-    # runtime tables are padded to 2^w per row, stored at `bits` per entry
-    runtime_table_bits = sum(c.n_rows * (1 << c.width) * bits for c in classes)
+    # Word-aligned runtime sizes follow from the width histogram alone —
+    # rows of width w pack into ceil(M/epw(w)) uint32 words and carry a
+    # 2^w-entry table — so no actual packing is needed for the accounting.
+    class_widths, class_rows = np.unique(layout.widths, return_counts=True)
+    words_per_row = np.array(
+        [-(-m // packlib.elems_per_word(int(w))) for w in class_widths],
+        dtype=np.int64)
+    runtime_idx_bits = int((class_rows * words_per_row).sum()) * 32
+    runtime_table_bits = int(
+        (class_rows * (np.int64(1) << class_widths.astype(np.int64))).sum()
+    ) * bits
     crew_runtime = runtime_idx_bits + runtime_table_bits + n * 32  # row perm ids
 
     return CrewStats(
@@ -127,9 +134,10 @@ def unique_histogram(layout: CrewLayout, max_uw: int = 256) -> np.ndarray:
 
 def frequency_histogram(layout: CrewLayout, bins: int = 50) -> np.ndarray:
     """Histogram of per-unique usage frequency (paper Fig. 5)."""
-    freqs: List[float] = []
     m = layout.n_out
-    for r in layout.rows:
-        freqs.extend((r.counts / m).tolist())
-    hist, _ = np.histogram(np.array(freqs), bins=bins, range=(0.0, 1.0))
+    if layout.rows:
+        counts = np.concatenate([r.counts for r in layout.rows])
+    else:
+        counts = np.zeros(0, dtype=np.int64)
+    hist, _ = np.histogram(counts / m, bins=bins, range=(0.0, 1.0))
     return hist

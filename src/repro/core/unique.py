@@ -13,11 +13,19 @@ computes, offline:
 
 The decomposition is *exact*: reconstructing q from (u, idx) is lossless,
 which is the basis of the hypothesis property tests.
+
+The analysis is whole-matrix vectorized: one stable argsort over axis 1,
+diff-based run boundaries on the sorted rows, and a rank scatter for the
+inverse indices — no per-row ``np.unique`` calls.  ``analyze_matrix`` also
+caches a flat (values, offsets) view on the returned layout so the padded
+table build and ``reconstruct`` are single gathers; layouts built row-wise
+(e.g. by PPA) reconstruct that view on demand.  The output is bit-identical
+to the historical per-row ``np.unique`` loop (tests/test_convert_parity.py).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -29,6 +37,17 @@ def index_width(n_unique: int) -> int:
     if n_unique <= 1:
         return 1
     return int(np.ceil(np.log2(n_unique)))
+
+
+def _index_widths(uw: np.ndarray) -> np.ndarray:
+    """Vectorized ``index_width`` over a count vector (exact integer math:
+    ceil(log2 n) == bit_length(n - 1) for n >= 2, via frexp exponents)."""
+    uw = np.asarray(uw, dtype=np.int64)
+    widths = np.ones(uw.shape, dtype=np.int32)
+    big = uw > 1
+    if big.any():
+        widths[big] = np.frexp((uw[big] - 1).astype(np.float64))[1].astype(np.int32)
+    return widths
 
 
 @dataclasses.dataclass
@@ -54,11 +73,19 @@ class CrewLayout:
     rows:   per-input-row unique tables (ragged).
     idx:    [N, M] int32 indices into each row's table.
     widths: [N] int32 per-row index bit-widths.
+
+    The two trailing fields cache the flat concatenation of the row tables
+    (values and [N+1] row offsets); they are populated by ``analyze_matrix``
+    and rebuilt lazily for layouts constructed row-by-row.
     """
 
     rows: List[RowUnique]
     idx: np.ndarray
     widths: np.ndarray
+    _flat_values: Optional[np.ndarray] = dataclasses.field(
+        default=None, repr=False, compare=False)
+    _row_offsets: Optional[np.ndarray] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     @property
     def n_in(self) -> int:
@@ -68,31 +95,95 @@ class CrewLayout:
     def n_out(self) -> int:
         return self.idx.shape[1]
 
+    def _flat(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(flat_values [sum UW_i] int32, row_offsets [N+1] int64)."""
+        if self._flat_values is None:
+            uw = np.fromiter((r.n_unique for r in self.rows), dtype=np.int64,
+                             count=len(self.rows))
+            offsets = np.zeros(uw.size + 1, dtype=np.int64)
+            np.cumsum(uw, out=offsets[1:])
+            if self.rows:
+                values = np.concatenate(
+                    [r.values for r in self.rows]).astype(np.int32)
+            else:
+                values = np.zeros(0, dtype=np.int32)
+            self._flat_values = values
+            self._row_offsets = offsets
+        return self._flat_values, self._row_offsets
+
     @property
     def total_unique(self) -> int:
-        return int(sum(r.n_unique for r in self.rows))
+        return int(self.unique_per_input.sum())
 
     @property
     def unique_per_input(self) -> np.ndarray:
-        return np.array([r.n_unique for r in self.rows], dtype=np.int64)
+        _, offsets = self._flat()
+        return np.diff(offsets)
 
     def max_unique(self) -> int:
-        return int(max(r.n_unique for r in self.rows))
+        return int(self.unique_per_input.max())
 
-    def padded_unique_table(self, k: int | None = None) -> np.ndarray:
+    def padded_unique_table(self, k: int | None = None,
+                            row_ids: Optional[np.ndarray] = None) -> np.ndarray:
         """[N, K] int32 table, rows padded with their own last value (so any
         out-of-range index still reads a *valid* level — keeps padded lanes
-        NaN-free in kernels)."""
+        NaN-free in kernels).  ``row_ids`` restricts the table to a subset of
+        rows (used by the width-class converter)."""
+        values, offsets = self._flat()
+        uw = np.diff(offsets)
+        starts = offsets[:-1]
+        if row_ids is not None:
+            sel = np.asarray(row_ids, dtype=np.int64)
+            starts, uw = starts[sel], uw[sel]
         if k is None:
-            k = self.max_unique()
-        n = len(self.rows)
-        out = np.zeros((n, k), dtype=np.int32)
-        for i, r in enumerate(self.rows):
-            if r.n_unique > k:
-                raise ValueError(f"row {i} has {r.n_unique} uniques > K={k}")
-            out[i, : r.n_unique] = r.values
-            out[i, r.n_unique :] = r.values[-1]
-        return out
+            k = int(uw.max()) if uw.size else 1
+        over = uw > k
+        if over.any():
+            bad = int(np.argmax(over))
+            orig = int(row_ids[bad]) if row_ids is not None else bad
+            raise ValueError(f"row {orig} has {int(uw[bad])} uniques > K={k}")
+        cols = np.minimum(np.arange(k, dtype=np.int64)[None, :],
+                          (uw - 1)[:, None])
+        return values[starts[:, None] + cols].astype(np.int32)
+
+
+# Widest value range for which the per-row histogram path beats sorting.
+# Quantized matrices span <= 2^bits levels, so the histogram costs
+# O(N*M + N*levels) versus the sort's O(N*M log M).
+_HIST_MAX_LEVELS = 4096
+
+
+def _analyze_hist(q: np.ndarray, lo: int, levels: int) -> CrewLayout:
+    """Histogram-based decomposition for small value ranges (the quantized
+    case): per-row value counts via one flat bincount, inverse indices via a
+    rank-table gather.  Output is identical to the sort path."""
+    n, m = q.shape
+    # Flat bin id of every element (intp up front: bincount and take then
+    # skip their internal index casts); reused for both the histogram and
+    # the rank gather.
+    flat = q + (np.arange(n, dtype=np.intp) * levels - lo)[:, None]
+    flat = flat.ravel()
+    hist = np.bincount(flat, minlength=n * levels).reshape(n, levels)
+    present = hist > 0
+
+    uw = present.sum(axis=1, dtype=np.int64)
+    offsets = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(uw, out=offsets[1:])
+
+    level_rows, level_cols = np.nonzero(present)
+    flat_values = (level_cols + lo).astype(np.int32)
+    flat_counts = hist[level_rows, level_cols].astype(np.int64)
+
+    ranks = np.cumsum(present, axis=1, dtype=np.int32) - np.int32(1)
+    idx = ranks.reshape(-1).take(flat).reshape(n, m)
+
+    rows = [
+        RowUnique(values=flat_values[offsets[i]:offsets[i + 1]],
+                  counts=flat_counts[offsets[i]:offsets[i + 1]])
+        for i in range(n)
+    ]
+    return CrewLayout(rows=rows, idx=idx, widths=_index_widths(uw),
+                      _flat_values=flat_values, _row_offsets=offsets)
 
 
 def analyze_matrix(q: np.ndarray) -> CrewLayout:
@@ -100,21 +191,56 @@ def analyze_matrix(q: np.ndarray) -> CrewLayout:
     if q.ndim != 2:
         raise ValueError(f"expected [N, M], got {q.shape}")
     n, m = q.shape
+    q = np.ascontiguousarray(q)
+
+    if n and m and np.issubdtype(q.dtype, np.integer):
+        lo, hi = int(q.min()), int(q.max())
+        levels = hi - lo + 1
+        # Histogram must stay comparable to the input in size and the flat
+        # bin ids must fit int32.
+        if (levels <= _HIST_MAX_LEVELS and levels <= 8 * m
+                and n * levels <= max(1 << 25, n * m) and n * levels < 2 ** 31):
+            return _analyze_hist(q.astype(np.int32, copy=False), lo, levels)
+
+    # Sort each row once; run boundaries in the sorted rows mark the uniques.
+    # (No stability needed: equal elements land on the same rank either way.)
+    order = np.argsort(q, axis=1)
+    s = np.take_along_axis(q, order, axis=1)
+    boundary = np.empty((n, m), dtype=bool)
+    boundary[:, :1] = True
+    np.not_equal(s[:, 1:], s[:, :-1], out=boundary[:, 1:])
+
+    uw = boundary.sum(axis=1, dtype=np.int64)
+    offsets = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(uw, out=offsets[1:])
+    flat_values = s[boundary].astype(np.int32)
+
+    # Run lengths: distance between consecutive boundary positions in the
+    # row-major flat view (each row starts with a boundary, so the run of
+    # row i's last unique ends exactly at the next row start).
+    flat_pos = np.flatnonzero(boundary.ravel())
+    ends = np.empty_like(flat_pos)
+    ends[:-1] = flat_pos[1:]
+    if flat_pos.size:
+        ends[-1] = n * m
+    flat_counts = (ends - flat_pos).astype(np.int64)
+
+    # Inverse indices: rank of each element's unique within its row,
+    # scattered back through the sort permutation.
+    ranks = np.cumsum(boundary, axis=1, dtype=np.int64) - 1
     idx = np.empty((n, m), dtype=np.int32)
-    rows: List[RowUnique] = []
-    widths = np.empty((n,), dtype=np.int32)
-    for i in range(n):
-        vals, inv, counts = np.unique(q[i], return_inverse=True, return_counts=True)
-        rows.append(RowUnique(values=vals.astype(np.int32), counts=counts))
-        idx[i] = inv.astype(np.int32)
-        widths[i] = index_width(vals.size)
-    return CrewLayout(rows=rows, idx=idx, widths=widths)
+    np.put_along_axis(idx, order, ranks.astype(np.int32), axis=1)
+
+    rows = [
+        RowUnique(values=flat_values[offsets[i]:offsets[i + 1]],
+                  counts=flat_counts[offsets[i]:offsets[i + 1]])
+        for i in range(n)
+    ]
+    return CrewLayout(rows=rows, idx=idx, widths=_index_widths(uw),
+                      _flat_values=flat_values, _row_offsets=offsets)
 
 
 def reconstruct(layout: CrewLayout) -> np.ndarray:
     """Losslessly rebuild q[N, M] from the decomposition."""
-    n, m = layout.idx.shape
-    q = np.empty((n, m), dtype=np.int32)
-    for i in range(n):
-        q[i] = layout.rows[i].values[layout.idx[i]]
-    return q
+    values, offsets = layout._flat()
+    return values[offsets[:-1, None] + layout.idx].astype(np.int32)

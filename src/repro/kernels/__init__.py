@@ -7,7 +7,8 @@ ops.py         — jit'd dispatch wrapper used by layers.
 ref.py         — pure-jnp oracles for the allclose sweeps.
 """
 from .crew_matmul import crew_matmul_pallas
-from .ops import crew_matmul, pick_strategy
+from .ops import crew_matmul, pick_strategy, resolve_auto_strategy
 from . import ref
 
-__all__ = ["crew_matmul_pallas", "crew_matmul", "pick_strategy", "ref"]
+__all__ = ["crew_matmul_pallas", "crew_matmul", "pick_strategy",
+           "resolve_auto_strategy", "ref"]

@@ -44,9 +44,10 @@ DEFAULT_BLOCK_N = 128      # input rows per block (sublane-aligned)
 DEFAULT_BLOCK_WORDS = 32   # packed words per block -> bm = 32 * epw
 
 
-def _kernel(x_ref, words_ref, uniq_ref, out_ref, *, width: int, strategy: str,
-            n_blocks_n: int):
-    """One (m-block, n-block) grid step."""
+def _kernel(x_ref, words_ref, uniq_ref, out_ref, *, width: int, strategy: str):
+    """One (m-block, n-block) grid step: decode the index block, form the
+    partial products, and accumulate into the VMEM-resident output block
+    (initialized on the first n-block; the n grid axis is innermost)."""
     nn = pl.program_id(1)
 
     @pl.when(nn == 0)
@@ -136,9 +137,7 @@ def crew_matmul_pallas(
     grid = (w_pad // block_words, n_pad // block_n)
 
     out = pl.pallas_call(
-        functools.partial(
-            _kernel, width=width, strategy=strategy, n_blocks_n=grid[1]
-        ),
+        functools.partial(_kernel, width=width, strategy=strategy),
         grid=grid,
         in_specs=[
             pl.BlockSpec((b, block_n), lambda im, inn: (0, inn)),

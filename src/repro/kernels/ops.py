@@ -7,13 +7,19 @@
   * ``xla-dense`` / ``xla-gather``        — the pure-XLA paths from
     repro.core.convert (used by the big-model serve graphs and the
     512-device dry-runs, where a CPU-interpreted kernel is not meaningful),
-  * ``auto`` — decode-shaped calls (small B) take the CREW dataflow,
-    compute-rich calls decompress-and-matmul (DESIGN.md §3 napkin math).
+  * ``auto`` — measured dispatch: the repro.perf autotune store is probed
+    for this (B, N, M, K, width, backend) shape (a Python dict lookup on
+    static shapes, free at trace time); on a cold cache the analytical
+    ``pick_strategy`` prior decides — decode-shaped calls (small B) take
+    the CREW dataflow, compute-rich calls decompress-and-matmul
+    (DESIGN.md §3 napkin math).  ``serve.convert.autotune_crew_params`` /
+    ``repro.perf.measure_crew_matmul`` warm the store eagerly.
 """
 from __future__ import annotations
 
 from typing import Union
 
+import jax
 import jax.numpy as jnp
 
 from ..core.convert import (
@@ -22,9 +28,10 @@ from ..core.convert import (
     crew_matmul_uniform,
     crew_matmul_var,
 )
+from ..perf import autotune
 from .crew_matmul import crew_matmul_pallas
 
-__all__ = ["crew_matmul", "pick_strategy"]
+__all__ = ["crew_matmul", "pick_strategy", "resolve_auto_strategy"]
 
 # B*K*width budget below which the one-hot MXU path stays memory bound on a
 # v5e-like chip (197 TFLOP/s vs 819 GB/s * 8/width idx/s) — DESIGN.md §3.
@@ -32,12 +39,25 @@ _ONEHOT_BUDGET = 960 * 8
 
 
 def pick_strategy(batch: int, width: int, compute_rich: bool) -> str:
+    """Analytical strategy prior (the autotune cold-start fallback)."""
     if compute_rich:
         return "xla-dense"
     k = 1 << width
     if batch * k * width <= _ONEHOT_BUDGET:
         return "pallas-onehot"
     return "pallas-gather"
+
+
+def resolve_auto_strategy(batch: int, cm: CrewMatrixUniform) -> str:
+    """Measured winner for this apply shape if the autotune store has one,
+    else the analytical prior.  Pure Python on static shapes — safe (and
+    constant-folded) inside jit traces."""
+    key = autotune.make_key(batch, cm.n_in, cm.n_out, cm.k, cm.width,
+                            jax.default_backend())
+    measured = autotune.lookup(key)
+    if measured is not None:
+        return measured
+    return pick_strategy(batch, cm.width, compute_rich=batch >= 64)
 
 
 def crew_matmul(
@@ -74,7 +94,7 @@ def crew_matmul(
 
     # uniform matrix
     if strategy == "auto":
-        strategy = pick_strategy(b, cm.width, compute_rich=b >= 64)
+        strategy = resolve_auto_strategy(b, cm)
     if strategy == "xla-dense":
         out = crew_matmul_uniform(xb, cm, strategy="dense")
     elif strategy == "xla-gather":

@@ -1,0 +1,26 @@
+"""repro.perf — measured performance infrastructure.
+
+``autotune`` holds the measured strategy dispatch for the CREW apply hot
+path: a JSON-backed cache of per-shape strategy timings that
+``kernels.ops.crew_matmul(strategy="auto")`` consults, with the analytical
+``pick_strategy`` prior as cold-start fallback.
+"""
+from .autotune import (
+    AutotuneStore,
+    Measurement,
+    get_store,
+    lookup,
+    make_key,
+    measure_crew_matmul,
+    set_store,
+)
+
+__all__ = [
+    "AutotuneStore",
+    "Measurement",
+    "get_store",
+    "lookup",
+    "make_key",
+    "measure_crew_matmul",
+    "set_store",
+]

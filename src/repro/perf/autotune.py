@@ -1,0 +1,234 @@
+"""Measured strategy dispatch for the CREW apply hot path.
+
+``crew_matmul(strategy="auto")`` chooses between the XLA paths
+(decompress-and-matmul / blocked gather) and the fused Pallas kernels
+(gather / one-hot MXU).  The analytical prior (``kernels.ops.pick_strategy``,
+DESIGN.md §3 napkin math) extrapolates a v5e roofline from B, K and the
+index width — a fixed guess that shifts with the actual backend, batch and
+matrix shape.  This module replaces the guess with a measurement:
+
+  * a dispatch key ``(B, N, M, K, width, backend)`` identifies an apply
+    shape;
+  * ``measure_crew_matmul`` times every candidate strategy for that shape
+    once, eagerly (jit + block_until_ready, best-of-``repeats``), outside
+    any trace, and records the winner;
+  * the winner lives in an :class:`AutotuneStore` — an in-memory dict with
+    optional JSON persistence (``REPRO_AUTOTUNE_CACHE`` or an explicit
+    path), so offline conversion tooling can ship a warmed cache next to
+    the converted checkpoint;
+  * ``crew_matmul(strategy="auto")`` calls :func:`lookup` on every auto
+    dispatch — a Python dict probe on static shapes, free at trace time —
+    and falls back to the analytical prior on a cold cache.
+
+Measurement can never run *inside* a jit trace (there is no wall clock in
+an abstract evaluation), which is why the design splits into an eager
+warmup pass (``serve.convert.autotune_crew_params`` walks a converted
+param tree and measures each distinct leaf shape) and a pure lookup on the
+hot path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import json
+import os
+import tempfile
+import time
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+__all__ = [
+    "DEFAULT_CANDIDATES",
+    "Measurement",
+    "AutotuneStore",
+    "get_store",
+    "set_store",
+    "lookup",
+    "make_key",
+    "measure_crew_matmul",
+]
+
+DEFAULT_CANDIDATES: Tuple[str, ...] = (
+    "xla-dense", "xla-gather", "pallas-gather", "pallas-onehot")
+
+_ENV_PATH = "REPRO_AUTOTUNE_CACHE"
+
+
+def make_key(b: int, n: int, m: int, k: int, width: int, backend: str) -> str:
+    """Dispatch key for one apply shape (all entries static at trace time)."""
+    return f"b{b}-n{n}-m{m}-k{k}-w{width}-{backend}"
+
+
+@dataclasses.dataclass
+class Measurement:
+    """Timed candidates for one dispatch key; ``strategy`` is the winner."""
+
+    strategy: str
+    times_s: Dict[str, float]
+
+    def to_json(self) -> Dict:
+        return {"strategy": self.strategy,
+                "times_s": {k: self.times_s[k] for k in sorted(self.times_s)}}
+
+    @classmethod
+    def from_json(cls, obj: Dict) -> "Measurement":
+        return cls(strategy=str(obj["strategy"]),
+                   times_s={str(k): float(v)
+                            for k, v in obj.get("times_s", {}).items()})
+
+
+class AutotuneStore:
+    """Keyed Measurement cache with optional JSON persistence.
+
+    The JSON layout is ``{"version": 1, "records": {key: measurement}}``
+    with sorted keys, written atomically (tmp file + rename) so concurrent
+    benchmark runs can share one cache file.
+    """
+
+    VERSION = 1
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self._records: Dict[str, Measurement] = {}
+
+    @classmethod
+    def open(cls, path: str) -> "AutotuneStore":
+        store = cls(path)
+        store.load(missing_ok=True)
+        return store
+
+    def __len__(self) -> int:
+        return len(self._records)
+
+    def keys(self):
+        return self._records.keys()
+
+    def get(self, key: str) -> Optional[Measurement]:
+        return self._records.get(key)
+
+    def put(self, key: str, rec: Measurement, save: bool = True) -> None:
+        self._records[key] = rec
+        if save and self.path:
+            self.save()
+
+    def load(self, missing_ok: bool = True) -> None:
+        if not self.path:
+            return
+        try:
+            with open(self.path) as fh:
+                obj = json.load(fh)
+        except FileNotFoundError:
+            if missing_ok:
+                return
+            raise
+        self._records = {
+            str(k): Measurement.from_json(v)
+            for k, v in obj.get("records", {}).items()
+        }
+
+    def save(self) -> None:
+        if not self.path:
+            return
+        payload = {
+            "version": self.VERSION,
+            "records": {k: self._records[k].to_json()
+                        for k in sorted(self._records)},
+        }
+        d = os.path.dirname(os.path.abspath(self.path))
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as fh:
+                json.dump(payload, fh, indent=2)
+                fh.write("\n")
+            os.replace(tmp, self.path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+
+_store: Optional[AutotuneStore] = None
+
+
+def get_store() -> AutotuneStore:
+    """Process-wide store; persistent iff $REPRO_AUTOTUNE_CACHE is set."""
+    global _store
+    if _store is None:
+        path = os.environ.get(_ENV_PATH)
+        _store = AutotuneStore.open(path) if path else AutotuneStore()
+    return _store
+
+
+def set_store(store: Optional[AutotuneStore]) -> None:
+    """Install (or with None, reset) the process-wide store."""
+    global _store
+    _store = store
+
+
+def lookup(key: str) -> Optional[str]:
+    """Measured winner for a dispatch key, or None on a cold cache."""
+    rec = get_store().get(key)
+    return rec.strategy if rec is not None else None
+
+
+def _default_timer(fn: Callable[[], None], repeats: int) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def measure_crew_matmul(
+    x,
+    cm,
+    *,
+    candidates: Sequence[str] = DEFAULT_CANDIDATES,
+    repeats: int = 3,
+    interpret: bool = True,
+    block_m: int = 1024,
+    store: Optional[AutotuneStore] = None,
+    remeasure: bool = False,
+    timer: Callable[[Callable[[], None], int], float] = _default_timer,
+) -> Measurement:
+    """Time each candidate strategy for (x, cm) and cache the winner.
+
+    Runs eagerly: each candidate is jitted once (compile excluded from the
+    timing via a warmup call) and timed best-of-``repeats`` with
+    ``block_until_ready``.  A candidate that fails to lower/execute (e.g. a
+    Pallas width the interpreter rejects) scores ``inf`` instead of
+    aborting the sweep.  Returns the (possibly cached) Measurement.
+    """
+    import jax
+
+    from ..kernels.ops import crew_matmul
+
+    store = store or get_store()
+    b = 1
+    for d in x.shape[:-1]:
+        b *= int(d)
+    key = make_key(b, cm.n_in, cm.n_out, cm.k, cm.width, jax.default_backend())
+    cached = store.get(key)
+    if cached is not None and not remeasure:
+        return cached
+
+    times: Dict[str, float] = {}
+    for strat in candidates:
+        fn = jax.jit(functools.partial(
+            crew_matmul, strategy=strat, interpret=interpret, block_m=block_m))
+        try:
+            fn(x, cm).block_until_ready()  # compile + warmup
+            times[strat] = timer(
+                lambda: fn(x, cm).block_until_ready(), repeats)
+        except Exception:
+            times[strat] = float("inf")
+    finite = {s: t for s, t in times.items() if t != float("inf")}
+    if not finite:
+        raise RuntimeError(f"no candidate strategy ran for key {key}")
+    winner = min(finite, key=lambda s: (finite[s], candidates.index(s)))
+    rec = Measurement(strategy=winner, times_s=times)
+    store.put(key, rec)
+    return rec

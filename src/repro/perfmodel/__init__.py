@@ -102,7 +102,12 @@ class LayerCost:
 
 
 def _col_unique_counts(q: np.ndarray) -> np.ndarray:
-    return np.array([np.unique(q[:, j]).size for j in range(q.shape[1])])
+    """Unique-value count per column, vectorized: one sort along axis 0,
+    then run-boundary counting (== [np.unique(q[:, j]).size ...])."""
+    if q.shape[0] == 0:
+        return np.zeros(q.shape[1], dtype=np.int64)
+    s = np.sort(q, axis=0)
+    return 1 + np.count_nonzero(s[1:] != s[:-1], axis=0)
 
 
 def fc_cost(scheme: str, layout: CrewLayout, *, hw: AccelConfig,
@@ -187,11 +192,27 @@ class ModelCost:
         return self.dyn_energy_pj * 1e-12 + static
 
 
+def _prep(matrices, bits: int,
+          layouts: Optional[Dict[str, CrewLayout]] = None,
+          qs: Optional[Dict[str, np.ndarray]] = None):
+    """Quantize + analyze every layer not already supplied by the caller
+    (compare_schemes computes these once and shares them across schemes)."""
+    qs = dict(qs or {})
+    lts = dict(layouts or {})
+    for lname, w in matrices:
+        if lname not in qs:
+            qs[lname] = quantize_matrix(w, QuantConfig(bits=bits)).q
+        if lname not in lts or lts[lname] is None:
+            lts[lname] = analyze_matrix(qs[lname])
+    return qs, lts
+
+
 def model_cost(name: str, matrices: List[Tuple[str, np.ndarray]], scheme: str,
                *, hw: AccelConfig = AccelConfig(), bits: int = 8,
                timesteps: int = 1, batch: int = 1,
                resident_ok: bool = False,
-               layouts: Optional[Dict[str, CrewLayout]] = None) -> ModelCost:
+               layouts: Optional[Dict[str, CrewLayout]] = None,
+               qs: Optional[Dict[str, np.ndarray]] = None) -> ModelCost:
     """Whole-model per-inference cost: `timesteps` sequential passes over
     all FC layers (RNN semantics; MLPs use timesteps=1).
 
@@ -203,12 +224,8 @@ def model_cost(name: str, matrices: List[Tuple[str, np.ndarray]], scheme: str,
     """
     total_serial = total_overlap = energy = dram = mults = 0.0
     model_bytes = 0.0
-    qs: Dict[str, np.ndarray] = {}
-    lts: Dict[str, CrewLayout] = {}
+    qs, lts = _prep(matrices, bits, layouts, qs)
     for lname, w in matrices:
-        qm = quantize_matrix(w, QuantConfig(bits=bits))
-        qs[lname] = qm.q
-        lts[lname] = (layouts or {}).get(lname) or analyze_matrix(qm.q)
         if scheme == "crew":
             model_bytes += (lts[lname].unique_per_input.sum()
                             + straddled_size_bits(lts[lname].widths, w.shape[1]) / 8)
@@ -231,16 +248,23 @@ def model_cost(name: str, matrices: List[Tuple[str, np.ndarray]], scheme: str,
 
 def compare_schemes(name: str, matrices, *, hw: AccelConfig = AccelConfig(),
                     timesteps: int = 1, batch: int = 1,
-                    overlap_baseline: bool = False) -> Dict[str, Dict]:
+                    overlap_baseline: bool = False,
+                    layouts: Optional[Dict[str, CrewLayout]] = None,
+                    qs: Optional[Dict[str, np.ndarray]] = None) -> Dict[str, Dict]:
     """Per-DNN speedup/energy table vs the TPU-like baseline.
 
     overlap_baseline=False reproduces the paper's ScaleSim-v1 semantics
     (baseline serializes tile-load -> compute while CREW's dataflow
     explicitly overlaps); True gives every scheme the overlap benefit.
+    Precomputed ``layouts``/``qs`` (e.g. from the benchmark cache) are used
+    as-is; whatever is missing is quantized/analyzed once and shared across
+    the three schemes.
     """
     out: Dict[str, Dict] = {}
+    qs, layouts = _prep(matrices, 8, layouts, qs)
     costs = {s: model_cost(name, matrices, s, hw=hw, timesteps=timesteps,
-                           batch=batch) for s in SCHEMES}
+                           batch=batch, layouts=layouts, qs=qs)
+             for s in SCHEMES}
     base = costs["baseline"]
     t_base = base.time_s(hw, overlap=overlap_baseline)
     e_base = base.energy_j(hw, overlap=overlap_baseline)

@@ -1,6 +1,7 @@
 """Serving: CREW checkpoint conversion + batched generate engine."""
-from .convert import crewize_params, abstract_crew_params, crewize_spec, CrewReport
+from .convert import (crewize_params, abstract_crew_params,
+                      autotune_crew_params, crewize_spec, CrewReport)
 from .engine import generate
 
-__all__ = ["crewize_params", "abstract_crew_params", "crewize_spec",
-           "CrewReport", "generate"]
+__all__ = ["crewize_params", "abstract_crew_params", "autotune_crew_params",
+           "crewize_spec", "CrewReport", "generate"]

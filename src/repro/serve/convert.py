@@ -32,7 +32,7 @@ from ..core.stats import CrewStats, aggregate_stats, layout_stats
 from ..core.unique import analyze_matrix, index_width
 
 __all__ = ["crewize_params", "abstract_crew_params", "crewize_spec",
-           "CrewReport"]
+           "autotune_crew_params", "CrewReport"]
 
 
 @dataclasses.dataclass
@@ -158,6 +158,65 @@ def crewize_params(
     new = rec("", params)
     count_skips(new)
     return new, report
+
+
+def autotune_crew_params(
+    params,
+    *,
+    batch_sizes: Tuple[int, ...] = (1, 8),
+    dtype=jnp.float32,
+    interpret: bool = True,
+    repeats: int = 2,
+    store=None,
+    seed: int = 0,
+):
+    """Warm the measured-dispatch cache for every CREW leaf in a param tree.
+
+    Walks the converted tree, and for each *distinct* apply shape
+    (B, N, M, K, width) — stacked ``[L, N, W]`` leaves contribute one 2-D
+    slice, since ``lax.scan`` applies the same shape per layer — times the
+    candidate strategies via ``repro.perf.measure_crew_matmul`` on a random
+    activation of each requested batch size.  Subsequent
+    ``crew_matmul(strategy="auto")`` calls (the serve engine's default) then
+    dispatch on measurement instead of the analytical prior.  Returns
+    {dispatch key: winning strategy}.
+
+    ``batch_sizes`` are *flattened token* batches: ``crew_matmul`` collapses
+    every leading dim into the dispatch key's B, so decode steps key on the
+    request batch but prefill keys on ``batch * prompt_len``.  To cover
+    prefill, include those products (e.g. ``(1, 8, 8 * 512)``) — shapes not
+    warmed here simply fall back to the analytical prior.
+    """
+    from ..perf import autotune
+
+    leaves = [
+        leaf for leaf in jax.tree.leaves(
+            params, is_leaf=lambda x: isinstance(x, CrewMatrixUniform))
+        if isinstance(leaf, CrewMatrixUniform)
+    ]
+    rng = np.random.default_rng(seed)
+    winners = {}
+    for leaf in leaves:
+        words = np.asarray(leaf.words).reshape(-1, *leaf.words.shape[-2:])[0]
+        uniq = np.asarray(leaf.uniq).reshape(-1, *leaf.uniq.shape[-2:])[0]
+        cm = CrewMatrixUniform(
+            words=jnp.asarray(words),
+            uniq=jnp.asarray(uniq.astype(np.float32), dtype=dtype),
+            width=leaf.width,
+            n_out=leaf.n_out,
+        )
+        for b in batch_sizes:
+            key = autotune.make_key(b, cm.n_in, cm.n_out, cm.k, cm.width,
+                                    jax.default_backend())
+            if key in winners:
+                continue
+            x = jnp.asarray(
+                rng.standard_normal((b, cm.n_in)).astype(np.float32),
+                dtype=dtype)
+            rec = autotune.measure_crew_matmul(
+                x, cm, repeats=repeats, interpret=interpret, store=store)
+            winners[key] = rec.strategy
+    return winners
 
 
 def crewize_spec(spec_tree, crew_params):

@@ -6,6 +6,11 @@ positions so the whole generation is a single XLA program.  Works with
 dense or CREW-converted params interchangeably (linear.apply dispatches on
 the weight leaf type) — the quickstart example serves both and diffs the
 outputs token-by-token.
+
+The default ``crew_strategy="auto"`` resolves per apply shape at trace
+time via the repro.perf autotune store (measured winners, analytical prior
+on a cold cache); run ``serve.convert.autotune_crew_params`` on the
+converted tree before the first ``generate`` to warm it.
 """
 from __future__ import annotations
 
@@ -46,10 +51,14 @@ def generate(
     b, s = prompts.shape
     cache_len = cache_len or (s + max_new)
     rng = rng if rng is not None else jax.random.PRNGKey(0)
+    # One split up front: key 0 samples the first token, keys 1..max_new-1
+    # drive the scan.  (Never reuse `rng` itself after splitting — the old
+    # code consumed it in _sample and then re-split it for the scan keys.)
+    keys = jax.random.split(rng, max_new)
 
     logits, cache = api.prefill(params, {"tokens": prompts}, cache_len,
                                 crew_strategy=crew_strategy)
-    first = _sample(rng, logits[:, -1], temperature)
+    first = _sample(keys[0], logits[:, -1], temperature)
 
     def step(carry, key):
         tok, cache = carry
@@ -60,7 +69,6 @@ def generate(
         lp_tok = jnp.take_along_axis(lp, nxt[:, None], axis=-1)[:, 0]
         return (nxt, cache), (nxt, lp_tok)
 
-    keys = jax.random.split(rng, max_new - 1)
-    (_, _), (toks, lps) = jax.lax.scan(step, (first, cache), keys)
+    (_, _), (toks, lps) = jax.lax.scan(step, (first, cache), keys[1:])
     tokens = jnp.concatenate([first[None], toks], axis=0).T  # [B, max_new]
     return {"tokens": tokens, "logprobs": lps.T}

@@ -9,4 +9,5 @@ import importlib.util
 
 collect_ignore = []
 if importlib.util.find_spec("hypothesis") is None:
-    collect_ignore += ["test_core.py", "test_pack.py"]
+    collect_ignore += ["test_core.py", "test_pack.py",
+                       "test_convert_parity_prop.py"]

@@ -1,0 +1,174 @@
+"""Converter parity: the vectorized offline pipeline must be bit-identical
+to the seed (per-row loop) implementations.
+
+The seed algorithms are kept here as oracles: per-row ``np.unique`` for the
+analysis, the per-bit scatter loop for the straddled bitstream, the per-row
+assignment loop for the padded unique table, and per-column ``np.unique``
+for the UCNN comparison.  Fixed adversarial matrices (constant rows,
+all-unique rows, width-1 rows, negative ranges, single row/column) plus a
+seeded random sweep cover both the histogram and the sort analysis paths;
+the hypothesis sweep lives in test_convert_parity_prop.py.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (analyze_matrix, index_width, pack_bits_straddled,
+                        quantize_matrix, reconstruct, unpack_bits_straddled)
+from repro.core.unique import _HIST_MAX_LEVELS
+from repro.perfmodel import _col_unique_counts
+
+
+# -------------------------------------------------------------------------
+# Seed oracles (the pre-vectorization implementations, verbatim semantics)
+# -------------------------------------------------------------------------
+
+def seed_analyze(q):
+    n, m = q.shape
+    idx = np.empty((n, m), dtype=np.int32)
+    widths = np.empty((n,), dtype=np.int32)
+    rows = []
+    for i in range(n):
+        vals, inv, counts = np.unique(q[i], return_inverse=True,
+                                      return_counts=True)
+        rows.append((vals.astype(np.int32), counts))
+        idx[i] = inv.astype(np.int32)
+        widths[i] = index_width(vals.size)
+    return rows, idx, widths
+
+
+def seed_pack_bits_straddled(idx, widths):
+    n, m = idx.shape
+    widths = np.asarray(widths, dtype=np.int64)
+    total_bits = int((widths * m).sum())
+    out = np.zeros(((total_bits + 7) // 8,), dtype=np.uint8)
+    bitpos = 0
+    for i in range(n):
+        w = int(widths[i])
+        row = idx[i].astype(np.uint64)
+        starts = bitpos + w * np.arange(m, dtype=np.int64)
+        for b in range(w):
+            pos = starts + b
+            bit = ((row >> np.uint64(b)) & np.uint64(1)).astype(np.int64)
+            np.bitwise_or.at(out, pos >> 3, (bit << (pos & 7)).astype(np.uint8))
+        bitpos += w * m
+    return out
+
+
+def seed_padded_table(rows, k):
+    out = np.zeros((len(rows), k), dtype=np.int32)
+    for i, (vals, _) in enumerate(rows):
+        out[i, :vals.size] = vals
+        out[i, vals.size:] = vals[-1]
+    return out
+
+
+def seed_col_unique_counts(q):
+    return np.array([np.unique(q[:, j]).size for j in range(q.shape[1])])
+
+
+def assert_analysis_matches(q):
+    rows_ref, idx_ref, widths_ref = seed_analyze(q)
+    layout = analyze_matrix(q)
+    assert layout.idx.dtype == idx_ref.dtype
+    assert (layout.idx == idx_ref).all()
+    assert layout.widths.dtype == widths_ref.dtype
+    assert (layout.widths == widths_ref).all()
+    for (vals, counts), row in zip(rows_ref, layout.rows):
+        assert row.values.dtype == np.int32
+        assert (row.values == vals).all()
+        assert (row.counts == counts).all()
+    assert (reconstruct(layout) == q).all()
+    k = layout.max_unique()
+    assert (layout.padded_unique_table(k)
+            == seed_padded_table(rows_ref, k)).all()
+    return layout
+
+
+# -------------------------------------------------------------------------
+# Fixed adversarial matrices
+# -------------------------------------------------------------------------
+
+ADVERSARIAL = {
+    "constant_rows": np.full((5, 37), -3, dtype=np.int32),
+    "constant_matrix_zero": np.zeros((4, 9), dtype=np.int32),
+    "all_unique_rows": np.argsort(
+        np.random.default_rng(0).random((6, 64)), axis=1).astype(np.int32) - 17,
+    "width1_rows": np.tile(np.array([[7, -2]], dtype=np.int32), (3, 16)),
+    "single_row": np.array([[5, 5, 1, -9, 1, 5]], dtype=np.int32),
+    "single_col": np.array([[3], [3], [-1], [0]], dtype=np.int32),
+    "mixed_widths": np.array(
+        [[0] * 8, [0, 1] * 4, list(range(8)), [-4, -4, -4, -4, 100, 100, 7, 7]],
+        dtype=np.int32),
+    "extreme_range": np.array([[-(2 ** 20), 2 ** 20, 0, 0]], dtype=np.int32),
+}
+
+
+@pytest.mark.parametrize("name", sorted(ADVERSARIAL))
+def test_adversarial_analysis_parity(name):
+    assert_analysis_matches(ADVERSARIAL[name])
+
+
+@pytest.mark.parametrize("name", sorted(ADVERSARIAL))
+def test_adversarial_straddled_parity(name):
+    layout = analyze_matrix(ADVERSARIAL[name])
+    idx, widths = layout.idx, layout.widths
+    ref = seed_pack_bits_straddled(idx, widths)
+    out = pack_bits_straddled(idx, widths)
+    assert out.dtype == ref.dtype and out.shape == ref.shape
+    assert (out == ref).all()
+    assert (unpack_bits_straddled(out, widths, idx.shape[1]) == idx).all()
+
+
+def test_random_sweep_both_paths():
+    """Seeded sweep across shapes/ranges; wide ranges force the sort path
+    (range > _HIST_MAX_LEVELS), narrow ones the histogram path."""
+    rng = np.random.default_rng(123)
+    for _ in range(25):
+        n = int(rng.integers(1, 30))
+        m = int(rng.integers(1, 70))
+        span = int(rng.choice([3, 128, 255, _HIST_MAX_LEVELS + 50, 10 ** 6]))
+        q = rng.integers(-span, span + 1, size=(n, m)).astype(np.int32)
+        layout = assert_analysis_matches(q)
+        stream = pack_bits_straddled(layout.idx, layout.widths)
+        assert (stream == seed_pack_bits_straddled(layout.idx,
+                                                   layout.widths)).all()
+        assert (unpack_bits_straddled(stream, layout.widths, m)
+                == layout.idx).all()
+
+
+def test_quantized_end_to_end_parity():
+    rng = np.random.default_rng(7)
+    w = (rng.standard_t(4, size=(96, 257)) * 0.05).astype(np.float32)
+    q = quantize_matrix(w).q
+    assert_analysis_matches(q)
+
+
+def test_col_unique_counts_parity():
+    rng = np.random.default_rng(11)
+    for shape in [(1, 1), (7, 13), (64, 32), (128, 5)]:
+        q = rng.integers(-20, 21, size=shape).astype(np.int32)
+        assert (_col_unique_counts(q) == seed_col_unique_counts(q)).all()
+    const = np.full((9, 4), 3, dtype=np.int32)
+    assert (_col_unique_counts(const) == 1).all()
+
+
+def test_padded_table_row_ids_subset():
+    q = np.random.default_rng(5).integers(-8, 9, size=(12, 40)).astype(np.int32)
+    layout = analyze_matrix(q)
+    k = layout.max_unique()
+    full = layout.padded_unique_table(k)
+    sel = np.array([7, 0, 11, 3])
+    assert (layout.padded_unique_table(k, row_ids=sel) == full[sel]).all()
+
+
+def test_padded_table_overflow_raises():
+    q = np.arange(24, dtype=np.int32).reshape(2, 12)  # 12 uniques per row
+    layout = analyze_matrix(q)
+    with pytest.raises(ValueError, match="row 0 has 12 uniques"):
+        layout.padded_unique_table(8)
+
+
+def test_straddled_out_of_range_raises():
+    idx = np.array([[0, 1], [2, 5]], dtype=np.int32)
+    with pytest.raises(ValueError, match="row 1: index exceeds 2 bits"):
+        pack_bits_straddled(idx, np.array([1, 2]))

@@ -1,0 +1,44 @@
+"""Hypothesis sweep for converter parity (vectorized == seed bit-exact).
+
+Skipped wholesale when hypothesis is absent (tests/conftest.py) — the fixed
+adversarial/seeded coverage lives in test_convert_parity.py.
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import analyze_matrix, pack_bits_straddled, unpack_bits_straddled
+
+from test_convert_parity import (assert_analysis_matches,
+                                 seed_pack_bits_straddled)
+
+
+@given(st.integers(0, 2 ** 32 - 1), st.integers(1, 24), st.integers(1, 48),
+       st.sampled_from([2, 17, 255, 5000, 2 ** 20]))
+@settings(max_examples=40, deadline=None)
+def test_property_analysis_parity(seed, n, m, span):
+    rng = np.random.default_rng(seed)
+    q = rng.integers(-span, span + 1, size=(n, m)).astype(np.int32)
+    assert_analysis_matches(q)
+
+
+@given(st.integers(0, 2 ** 32 - 1), st.integers(1, 14), st.integers(1, 60))
+@settings(max_examples=40, deadline=None)
+def test_property_straddled_parity(seed, n, m):
+    rng = np.random.default_rng(seed)
+    widths = rng.integers(1, 9, size=n)
+    idx = np.stack([rng.integers(0, 1 << w, size=m) for w in widths]) \
+        .astype(np.int32)
+    stream = pack_bits_straddled(idx, widths)
+    assert (stream == seed_pack_bits_straddled(idx, widths)).all()
+    assert (unpack_bits_straddled(stream, widths, m) == idx).all()
+
+
+@given(st.integers(0, 2 ** 32 - 1), st.integers(1, 20), st.integers(1, 40))
+@settings(max_examples=25, deadline=None)
+def test_property_reconstruct_roundtrip(seed, n, m):
+    rng = np.random.default_rng(seed)
+    q = rng.integers(-127, 128, size=(n, m)).astype(np.int32)
+    layout = analyze_matrix(q)
+    from repro.core import reconstruct
+    assert (reconstruct(layout) == q).all()
+    assert (layout.widths >= 1).all() and (layout.widths <= 8).all()
