@@ -1,13 +1,22 @@
-"""TPU-side CREW value proposition: HBM weight traffic per decode step.
+"""TPU-side CREW value proposition: HBM weight traffic + serve throughput.
 
-For each assigned architecture, compare bytes-from-HBM per token for the
-weight stream under: dense bf16, dense int8, CREW (packed words + unique
-tables, the Pallas-kernel traffic), and the XLA-level CREW fallback
-(reconstruct-then-matmul: words + uniq + materialized W — what the dry-run
-measures without the fused kernel).  This is the table the §Perf
-hillclimbs of the decode cells are judged against.
+Two measurements feed BENCH_crew.json:
+
+* **weight traffic** — for each assigned architecture, bytes-from-HBM per
+  decode token for the weight stream under: dense bf16, dense int8, CREW
+  (packed words + unique tables, the Pallas-kernel traffic), and the
+  XLA-level CREW fallback (reconstruct-then-matmul).  This is the table
+  the §Perf hillclimbs of the decode cells are judged against.
+* **serve throughput** — a mixed prompt-length / output-length workload
+  served through the continuous-batching ``serve.Scheduler`` versus
+  static-batched ``serve.generate`` waves (DESIGN.md §5), with dense and
+  CREW weights.  ``prepare(fast)`` builds the models and runs a full
+  warmup pass of both modes so the timed region measures steady-state
+  tokens/sec, not compiles.
 """
 from __future__ import annotations
+
+import time
 
 import numpy as np
 
@@ -56,6 +65,119 @@ def weight_bytes(cfg, width: int = ASSUMED_WIDTH):
     return dense, dense_active, crew, crew_xla
 
 
+# --------------------------------------------------------------------------
+# Serve throughput: continuous vs static batching, dense vs CREW
+# --------------------------------------------------------------------------
+
+MAX_BATCH = 4
+CACHE_LEN = 64
+BUCKETS = (16,)
+# Strongly mixed outputs: static batching pads every wave to its longest
+# request (32 steps), continuous batching retires the short ones and
+# backfills — the workload the scheduler exists for.
+PROMPT_LENS = (4, 10, 16, 6, 12, 8, 16, 5)
+MAX_NEWS = (32, 2, 2, 2, 32, 2, 2, 2)
+FULL_REPEAT = 4  # --full replays the mixed pattern 4x (longer steady state)
+
+_SERVE = {}  # prepare() state: api, weight variants, workload, schedulers
+
+
+def _workload(vocab, fast, seed=0):
+    rng = np.random.default_rng(seed)
+    reps = 1 if fast else FULL_REPEAT
+    return [(rng.integers(0, vocab, n).astype(np.int32), m)
+            for _ in range(reps)
+            for n, m in zip(PROMPT_LENS, MAX_NEWS)]
+
+
+def _run_continuous(sched, workload):
+    """(useful tokens, decode steps, seconds) for one closed-loop drain."""
+    t0 = time.perf_counter()
+    steps0 = sched.metrics["decode_steps"]
+    for prompt, max_new in workload:
+        sched.submit(prompt, max_new=max_new)
+    results = sched.run()
+    dt = time.perf_counter() - t0
+    return (sum(c.tokens.size for c in results.values()),
+            sched.metrics["decode_steps"] - steps0, dt)
+
+
+def _run_static(sched, workload):
+    """Static-batching policy through the *same* engine: waves of
+    MAX_BATCH, every request in a wave padded to the wave's longest
+    ``max_new``, each wave drained before the next is admitted (no early
+    retirement, no backfill).  Only the tokens a request actually asked
+    for count as useful — the padding steps are the cost this policy
+    pays on mixed traffic.  (A fused one-program variant of this
+    baseline lives in ``repro.launch.serve --compare-static``.)"""
+    t0 = time.perf_counter()
+    steps0 = sched.metrics["decode_steps"]
+    useful = 0
+    for i in range(0, len(workload), MAX_BATCH):
+        wave = workload[i:i + MAX_BATCH]
+        n_max = max(m for _, m in wave)
+        for prompt, _ in wave:
+            sched.submit(prompt, max_new=n_max)
+        sched.run()
+        useful += sum(m for _, m in wave)
+    return (useful, sched.metrics["decode_steps"] - steps0,
+            time.perf_counter() - t0)
+
+
+def prepare(fast: bool = True):
+    """Build the reduced model, its CREW twin, and the schedulers, then run
+    one full warmup pass per (mode, weights) so ``main`` times steady
+    state.  Schedulers are reused across passes — their per-instance jit
+    caches hold the fixed program set.  ``fast`` sizes the workload
+    (``--full`` replays the mixed pattern ``FULL_REPEAT``x)."""
+    if _SERVE.get("fast") == fast:
+        return _SERVE
+    _SERVE.clear()
+    import jax
+    from repro.serve import Scheduler, crewize_params
+
+    cfg = ARCHS["qwen2-0.5b"].reduced()
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    crew, _ = crewize_params(params)
+    workload = _workload(cfg.vocab, fast)
+    _SERVE["fast"] = fast
+    _SERVE["api"] = api
+    _SERVE["workload"] = workload
+    _SERVE["variants"] = {"dense": params, "crew": crew}
+    _SERVE["scheds"] = {
+        name: Scheduler(api, p, max_batch=MAX_BATCH, cache_len=CACHE_LEN,
+                        buckets=BUCKETS)
+        for name, p in _SERVE["variants"].items()
+    }
+    for name in _SERVE["variants"]:
+        _run_continuous(_SERVE["scheds"][name], workload)
+        _run_static(_SERVE["scheds"][name], workload)
+    return _SERVE
+
+
+def serve_throughput(fast: bool = True):
+    """Measured continuous-vs-static rows (call ``prepare`` first)."""
+    state = prepare(fast)
+    workload = state["workload"]
+    rows = []
+    for name in state["variants"]:
+        sched = state["scheds"][name]
+        c_tok, c_steps, c_dt = _run_continuous(sched, workload)
+        s_tok, s_steps, s_dt = _run_static(sched, workload)
+        for mode, tok, steps, dt in (("continuous", c_tok, c_steps, c_dt),
+                                     ("static", s_tok, s_steps, s_dt)):
+            rows.append({
+                "bench": "traffic-serve", "mode": mode, "weights": name,
+                "tokens": tok, "decode_steps": steps,
+                "seconds": round(dt, 3),
+                "tokens_per_s": round(tok / max(dt, 1e-9), 1),
+            })
+        rows[-2]["speedup_vs_static"] = round(
+            (c_tok / max(c_dt, 1e-9)) / max(s_tok / max(s_dt, 1e-9), 1e-9), 2)
+    return rows
+
+
 def main(fast: bool = False):
     rows = []
     archs = ["qwen2-0.5b", "granite-34b"] if fast else sorted(ARCHS)
@@ -71,9 +193,11 @@ def main(fast: bool = False):
             "crew_vs_bf16": round(dense / max(crew, 1), 2),
             "crew_vs_int8": round(int8 / max(crew, 1), 2),
         })
+    rows.extend(serve_throughput(fast))
     return rows
 
 
 if __name__ == "__main__":
-    for r in main():
+    prepare(fast=True)
+    for r in main(fast=True):
         print(r)

@@ -1,12 +1,22 @@
-"""Serving launcher CLI: load/initialize a model, optionally CREW-convert,
-and serve batched generation requests.
+"""Serving launcher CLI: a mixed-traffic driver over the continuous-batching
+scheduler (DESIGN.md §5, docs/serving.md).
 
-    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
-        --crew --requests 4 --prompt-len 16 --max-new 32
+Generates a Poisson request stream with mixed prompt/output lengths, feeds
+it through ``serve.Scheduler``, and reports per-request latency percentiles
+plus sustained tokens/sec.  ``--crew`` serves CREW-converted weights
+(optionally autotune-warmed); ``--compare-static`` replays the same
+workload through static-batched ``serve.generate`` waves for a
+continuous-vs-static throughput comparison.
 
-Prints per-phase latencies and — with ``--crew`` — the CREW compression
-report (UW/I, MULs%, storage reduction) plus a token-level parity check
-against the dense weights.
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \\
+        --requests 16 --rate 50 --prompt-len 4:24 --max-new 4:32
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \\
+        --crew --autotune --requests 16 --max-batch 4 --compare-static
+
+Range flags (``--prompt-len``, ``--max-new``) take either a single int or
+an inclusive ``LO:HI`` range sampled uniformly per request; ``--rate 0``
+makes every request arrive at t=0 (closed-loop batch).
 """
 from __future__ import annotations
 
@@ -14,8 +24,94 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
+
+
+def _parse_range(spec: str):
+    if ":" in spec:
+        lo, hi = spec.split(":", 1)
+        lo, hi = int(lo), int(hi)
+    else:
+        lo = hi = int(spec)
+    if not 1 <= lo <= hi:
+        raise argparse.ArgumentTypeError(f"bad range {spec!r}")
+    return lo, hi
+
+
+def make_workload(rng, n, prompt_rng, new_rng, vocab, rate):
+    """[(arrival_s, prompt, max_new)] with exponential inter-arrivals."""
+    t = 0.0
+    out = []
+    for _ in range(n):
+        if rate > 0:
+            t += rng.exponential(1.0 / rate)
+        p_len = int(rng.integers(prompt_rng[0], prompt_rng[1] + 1))
+        m_new = int(rng.integers(new_rng[0], new_rng[1] + 1))
+        out.append((t, rng.integers(0, vocab, p_len).astype(np.int32), m_new))
+    return out
+
+
+def serve_continuous(sched, workload):
+    """Drive the scheduler against timed arrivals; returns (results, report).
+
+    Requests become visible to the queue only once their arrival time has
+    passed; the loop idles (sleeps to the next arrival) when the engine
+    drains before the stream does.
+    """
+    t0 = time.perf_counter()
+    pending = list(workload)
+    finished_at = {}
+    submitted_at = {}
+    results = {}
+    while pending or sched.pending:
+        now = time.perf_counter() - t0
+        while pending and pending[0][0] <= now:
+            arr, prompt, max_new = pending.pop(0)
+            rid = sched.submit(prompt, max_new=max_new)
+            submitted_at[rid] = arr
+        busy = sched.step()
+        for rid, comp in sched.pop_results().items():
+            results[rid] = comp
+            finished_at[rid] = time.perf_counter() - t0
+        if not busy and pending:
+            time.sleep(max(0.0, pending[0][0] - (time.perf_counter() - t0)))
+    wall = time.perf_counter() - t0
+    lat = np.asarray([finished_at[r] - submitted_at[r] for r in results])
+    toks = sum(c.tokens.size for c in results.values())
+    report = {
+        "wall_s": wall,
+        "tokens": toks,
+        "tokens_per_s": toks / max(wall, 1e-9),
+        "lat_p50_s": float(np.percentile(lat, 50)) if lat.size else 0.0,
+        "lat_p95_s": float(np.percentile(lat, 95)) if lat.size else 0.0,
+        "lat_max_s": float(lat.max()) if lat.size else 0.0,
+    }
+    return results, report
+
+
+def serve_static(api, params, workload, max_batch, temperature=0.0):
+    """Static-batching baseline: waves of ``max_batch`` requests, each wave
+    padded to its longest prompt and longest max_new (the cost the
+    scheduler exists to avoid).  Returns the same report keys."""
+    from ..serve import generate
+    import jax.numpy as jnp
+
+    t0 = time.perf_counter()
+    useful = 0
+    for i in range(0, len(workload), max_batch):
+        wave = workload[i:i + max_batch]
+        p_max = max(p.size for _, p, _ in wave)
+        n_max = max(m for _, _, m in wave)
+        batch = np.zeros((len(wave), p_max), np.int32)
+        for j, (_, p, _) in enumerate(wave):
+            batch[j, :p.size] = p
+        out = generate(api, params, jnp.asarray(batch), max_new=n_max,
+                       temperature=temperature)
+        out["tokens"].block_until_ready()
+        useful += sum(m for _, _, m in wave)
+    wall = time.perf_counter() - t0
+    return {"wall_s": wall, "tokens": useful,
+            "tokens_per_s": useful / max(wall, 1e-9)}
 
 
 def main() -> None:
@@ -23,11 +119,22 @@ def main() -> None:
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--crew", action="store_true")
+    ap.add_argument("--autotune", action="store_true",
+                    help="warm the CREW strategy cache before serving")
     ap.add_argument("--ppa-thr", type=float, default=None)
-    ap.add_argument("--requests", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="Poisson arrival rate, requests/sec (0 = all at t=0)")
+    ap.add_argument("--prompt-len", type=_parse_range, default=(4, 24),
+                    metavar="LO:HI")
+    ap.add_argument("--max-new", type=_parse_range, default=(4, 32),
+                    metavar="LO:HI")
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--cache-len", type=int, default=256)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--compare-static", action="store_true",
+                    help="replay the workload through static-batched "
+                         "generate waves and report both throughputs")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -35,7 +142,7 @@ def main() -> None:
     from .. import ckpt as ckptlib
     from ..configs import get_config
     from ..models import build_model
-    from ..serve import crewize_params, generate
+    from ..serve import Scheduler, autotune_crew_params, crewize_params
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -53,38 +160,49 @@ def main() -> None:
             params = restored.params
             print("[serve] loaded checkpoint params")
 
-    rng = np.random.default_rng(args.seed)
-    prompts = jnp.asarray(
-        rng.integers(0, cfg.vocab, (args.requests, args.prompt_len)),
-        jnp.int32)
-
-    t0 = time.time()
-    out_dense = generate(api, params, prompts, max_new=args.max_new,
-                         temperature=args.temperature)
-    out_dense["tokens"].block_until_ready()
-    t_dense = time.time() - t0
-    print(f"[serve] dense: {args.requests} reqs x {args.max_new} new tokens "
-          f"in {t_dense:.2f}s (incl. compile)")
-
     if args.crew:
-        t0 = time.time()
-        crew, report = crewize_params(params, ppa_thr=args.ppa_thr)
+        t0 = time.perf_counter()
+        params, report = crewize_params(params, ppa_thr=args.ppa_thr)
         agg = report.aggregate()
-        print(f"[serve] CREW conversion ({time.time()-t0:.1f}s): "
+        print(f"[serve] CREW conversion ({time.perf_counter()-t0:.1f}s): "
               f"{report.n_converted} matrices converted, "
               f"{report.n_skipped} left dense")
         print(f"[serve] CREW stats: {agg.row()}")
-        t0 = time.time()
-        out_crew = generate(api, crew, prompts, max_new=args.max_new,
+        if args.autotune:
+            t0 = time.perf_counter()
+            winners = autotune_crew_params(params)
+            print(f"[serve] autotune warmup ({time.perf_counter()-t0:.1f}s): "
+                  f"{len(winners)} apply shapes measured")
+
+    rng = np.random.default_rng(args.seed)
+    workload = make_workload(rng, args.requests, args.prompt_len,
+                             args.max_new, cfg.vocab, args.rate)
+    sched = Scheduler(api, params, max_batch=args.max_batch,
+                      cache_len=args.cache_len,
+                      temperature=args.temperature,
+                      rng=jax.random.PRNGKey(args.seed))
+    results, rep = serve_continuous(sched, workload)
+    print(f"[serve] continuous: {len(results)} reqs, "
+          f"{rep['tokens']} tokens in {rep['wall_s']:.2f}s "
+          f"-> {rep['tokens_per_s']:.1f} tok/s (incl. compile)")
+    print(f"[serve] latency p50 {rep['lat_p50_s']:.3f}s  "
+          f"p95 {rep['lat_p95_s']:.3f}s  max {rep['lat_max_s']:.3f}s")
+    print(f"[serve] programs {sched.program_counts()}  "
+          f"metrics {sched.metrics}")
+
+    if args.compare_static:
+        srep = serve_static(api, params, workload, args.max_batch,
                             temperature=args.temperature)
-        out_crew["tokens"].block_until_ready()
-        print(f"[serve] crew:  same batch in {time.time()-t0:.2f}s "
+        print(f"[serve] static: {srep['tokens']} useful tokens in "
+              f"{srep['wall_s']:.2f}s -> {srep['tokens_per_s']:.1f} tok/s "
               f"(incl. compile)")
-        match = float((out_dense["tokens"] == out_crew["tokens"]).mean())
-        print(f"[serve] dense-vs-crew token match: {100*match:.1f}%"
-              + (" (greedy, quantization-level differences only)"
-                 if match < 1.0 else ""))
-    print("[serve] sample tokens:", np.asarray(out_dense["tokens"][0][:16]))
+        print(f"[serve] continuous/static speedup: "
+              f"{rep['tokens_per_s'] / max(srep['tokens_per_s'], 1e-9):.2f}x")
+
+    if results:
+        some = min(results)
+        print(f"[serve] sample tokens (rid {some}):",
+              results[some].tokens[:16])
 
 
 if __name__ == "__main__":

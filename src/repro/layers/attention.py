@@ -327,6 +327,12 @@ def attend_decode(params, x, cache, *, n_heads, n_kv, d_head,
                   rope_theta=10000.0, crew_strategy="auto"):
     """Decode path. x [B, 1, d]; cache {"k","v","len"} -> (out, new_cache).
 
+    ``cache["len"]`` is either a scalar (every sequence at the same
+    position — the one-shot ``serve.generate`` path) or a vector ``[B]``
+    of per-sequence positions (the continuous-batching scheduler,
+    DESIGN.md §5): each lane RoPEs its query/key at its own offset and
+    scatters its new KV entry at its own cache position.
+
     An int8 cache (``init_kv_cache(dtype=jnp.int8)``) is quantized on
     write and dequantized on read at a fixed scale.
     """
@@ -337,15 +343,24 @@ def attend_decode(params, x, cache, *, n_heads, n_kv, d_head,
     q = q.reshape(b, 1, n_heads, d_head)
     k = k.reshape(b, 1, n_kv, d_head)
     v = v.reshape(b, 1, n_kv, d_head)
-    pos = jnp.broadcast_to(cache["len"].reshape(1, 1), (b, 1))
+    ln = cache["len"]
+    per_slot = ln.ndim == 1  # static at trace time
+    pos = ln[:, None] if per_slot else jnp.broadcast_to(ln.reshape(1, 1), (b, 1))
     inv = rope_freqs(d_head, rope_theta)
     q = apply_rope(q, pos, inv)
     k = apply_rope(k, pos, inv)
-    k_cache = jax.lax.dynamic_update_slice_in_dim(
-        cache["k"], _maybe_quant_kv(k, cache["k"]), cache["len"], axis=1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(
-        cache["v"], _maybe_quant_kv(v, cache["v"]), cache["len"], axis=1)
-    out = decode_attention(q, k_cache, v_cache, cache["len"] + 1)
+    if per_slot:
+        lane = jnp.arange(b)
+        k_cache = cache["k"].at[lane, ln].set(
+            _maybe_quant_kv(k, cache["k"])[:, 0])
+        v_cache = cache["v"].at[lane, ln].set(
+            _maybe_quant_kv(v, cache["v"])[:, 0])
+    else:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], _maybe_quant_kv(k, cache["k"]), ln, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], _maybe_quant_kv(v, cache["v"]), ln, axis=1)
+    out = decode_attention(q, k_cache, v_cache, ln + 1)
     out = out.reshape(b, 1, n_heads * d_head)
     y = linear.apply(params["o"], out, crew_strategy=crew_strategy)
     return y, {"k": k_cache, "v": v_cache, "len": cache["len"] + 1}

@@ -1,7 +1,10 @@
-"""Serving: CREW checkpoint conversion + batched generate engine."""
+"""Serving: CREW checkpoint conversion, one-shot generate engine, and the
+continuous-batching scheduler (docs/serving.md walks the full path)."""
 from .convert import (crewize_params, abstract_crew_params,
                       autotune_crew_params, crewize_spec, CrewReport)
 from .engine import generate
+from .scheduler import Scheduler, Request, Completion
 
 __all__ = ["crewize_params", "abstract_crew_params", "autotune_crew_params",
-           "crewize_spec", "CrewReport", "generate"]
+           "crewize_spec", "CrewReport", "generate",
+           "Scheduler", "Request", "Completion"]

@@ -11,6 +11,12 @@ The default ``crew_strategy="auto"`` resolves per apply shape at trace
 time via the repro.perf autotune store (measured winners, analytical prior
 on a cold cache); run ``serve.convert.autotune_crew_params`` on the
 converted tree before the first ``generate`` to warm it.
+
+This is the *one-shot* path: every request in the batch shares one prompt
+length and one ``max_new``.  Mixed traffic belongs on
+``serve.scheduler.Scheduler`` (continuous batching, DESIGN.md §5), which
+reuses the same prefill/decode model surface and yields token-identical
+greedy outputs; docs/serving.md compares the two.
 """
 from __future__ import annotations
 

@@ -1,0 +1,407 @@
+"""Continuous-batching serve scheduler — DESIGN.md §5.
+
+``serve.generate`` is one static jit'd batch: every request shares one
+prompt length and one ``max_new``, so mixed traffic either pads to the
+worst case or serializes.  :class:`Scheduler` instead owns a request
+queue and a slot-based KV cache and interleaves prefill with decode:
+
+* **admission** — each step, queued prompts are admitted into free slots.
+  A prompt is padded to the smallest configured *prefill bucket* that
+  holds it, runs the ordinary ``api.prefill`` at batch 1, and its KV is
+  written into the slot's stripe of the shared cache.  The sampled first
+  token and the true (unpadded) length become the slot's state.
+* **decode** — one fused ``api.decode_step`` across all active slots per
+  step.  The active slots are gathered out of the slot cache, decoded
+  with a *per-slot* length vector (each lane RoPEs and scatters at its
+  own position — see ``layers.attention.attend_decode``), and scattered
+  back.  The lane count is rounded up to the next *batch bucket* and
+  padded with a scratch slot so the program set stays fixed.
+* **retire + backfill** — slots whose request hit EOS or its per-request
+  ``max_new`` are freed and refilled from the queue on the next step, so
+  short and long requests coexist without padding the whole batch to the
+  longest.
+
+The hot loop is therefore a fixed set of XLA programs: one prefill
+program per prefill bucket and one decode program per batch bucket —
+no per-request retracing (``program_counts()`` exposes the live compile
+counts; tests pin them).  Slot state (last tokens, lengths, done mask,
+per-request RNG keys, generated counts) is carried as arrays; CREW
+params flow through the same ``crew_strategy="auto"`` autotuned dispatch
+as the one-shot engine; under an active mesh the programs trace inside
+``sharding_ctx(mesh, SERVE_RULES)`` so ``constrain`` calls bind.
+
+Requires the transformer-family cache contract ``{"k","v","len"}`` with
+``[L, B, S, KV, D]`` KV tensors (dense / MoE configs; families without a
+prefill-with-cache path are rejected at construction).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..dist.ctx import sharding_ctx
+from ..dist.sharding import SERVE_RULES
+from ..models import ModelApi
+
+__all__ = ["Scheduler", "Request", "Completion", "DEFAULT_BUCKETS"]
+
+DEFAULT_BUCKETS: Tuple[int, ...] = (16, 32, 64, 128)
+
+
+@dataclasses.dataclass
+class Request:
+    """One queued generation request (host-side)."""
+    rid: int
+    prompt: np.ndarray          # [S] int32, unpadded
+    max_new: int
+    eos_id: Optional[int]
+
+
+@dataclasses.dataclass
+class Completion:
+    """A finished request: generated tokens (EOS included if hit)."""
+    rid: int
+    prompt_len: int
+    tokens: np.ndarray          # [n_generated] int32
+    logprobs: np.ndarray        # [n_generated] float32
+    n_steps: int                # engine steps from admission to retirement
+
+
+class Scheduler:
+    """Continuous-batching engine over bucketed prefill/decode programs.
+
+    Args:
+      api / params: as for ``serve.generate`` (dense or CREW-converted).
+      max_batch: number of concurrent decode slots (one extra scratch
+        slot is allocated internally for batch-bucket padding).
+      cache_len: per-slot KV capacity; every admitted request must fit
+        ``prompt_len + max_new <= cache_len``.
+      buckets: prefill pad lengths, ascending; a prompt compiles against
+        the smallest bucket that holds it.  None derives the default set
+        clipped to ``cache_len``.
+      temperature / crew_strategy: static sampling and CREW dispatch
+        knobs, shared by all programs (as in ``serve.generate``).
+      rng: base PRNG key; each request derives its own key stream via
+        ``fold_in(fold_in(rng, rid), n_generated)``.
+      mesh: optional device mesh; programs then trace under
+        ``sharding_ctx(mesh, SERVE_RULES)``.
+    """
+
+    def __init__(
+        self,
+        api: ModelApi,
+        params,
+        *,
+        max_batch: int = 8,
+        cache_len: int = 256,
+        buckets: Optional[Sequence[int]] = None,
+        temperature: float = 0.0,
+        crew_strategy: str = "auto",
+        rng: Optional[jnp.ndarray] = None,
+        mesh=None,
+        cache_dtype=jnp.bfloat16,
+    ):
+        if not api.cfg.has_decode:
+            raise ValueError(f"{api.cfg.arch_id} is encoder-only: no decode")
+        if not hasattr(api._mod, "prefill"):
+            raise NotImplementedError(
+                f"{api.cfg.family} has no prefill-with-cache path")
+        self._api = api
+        self._params = params
+        self._max_batch = int(max_batch)
+        self._cache_len = int(cache_len)
+        if buckets is None:
+            buckets = ([b for b in DEFAULT_BUCKETS if b <= self._cache_len]
+                       or [self._cache_len])
+        self._buckets = tuple(sorted(int(b) for b in buckets))
+        if not self._buckets:
+            raise ValueError("need at least one prefill bucket")
+        if self._buckets[-1] > self._cache_len:
+            raise ValueError(
+                f"largest bucket {self._buckets[-1]} exceeds cache_len "
+                f"{self._cache_len}")
+        self._temperature = float(temperature)
+        self._crew_strategy = crew_strategy
+        self._base_key = rng if rng is not None else jax.random.PRNGKey(0)
+        self._mesh = mesh
+
+        # batch buckets: powers of two up to max_batch (max_batch included
+        # even when not a power of two).
+        bb = []
+        p = 1
+        while p < self._max_batch:
+            bb.append(p)
+            p *= 2
+        bb.append(self._max_batch)
+        self._batch_buckets = tuple(bb)
+
+        # slot cache: max_batch real slots + 1 scratch slot for padding
+        # lanes (duplicate scatter indices must never hit a live slot).
+        abs_cache = api.abstract_cache(self._max_batch + 1, self._cache_len,
+                                       dtype=cache_dtype)
+        if not (isinstance(abs_cache, dict)
+                and set(abs_cache) == {"k", "v", "len"}):
+            raise NotImplementedError(
+                f"{api.cfg.family} cache is not the {{k,v,len}} KV contract "
+                "the slot scheduler manages")
+        self._k = jnp.zeros(abs_cache["k"].shape, abs_cache["k"].dtype)
+        self._v = jnp.zeros(abs_cache["v"].shape, abs_cache["v"].dtype)
+
+        # host-side slot state ("slot state carried as arrays")
+        nb = self._max_batch
+        self._slot_rid = np.full(nb, -1, np.int64)      # -1 == free
+        self._slot_len = np.zeros(nb, np.int32)         # cache position
+        self._slot_tok = np.zeros(nb, np.int32)         # last sampled token
+        self._slot_ngen = np.zeros(nb, np.int32)        # tokens generated
+        self._slot_done = np.ones(nb, bool)             # free/done mask
+        self._slot_key = np.zeros((nb, 2), np.uint32)   # per-request key
+
+        self._queue: List[Request] = []
+        self._live: Dict[int, Request] = {}             # rid -> request
+        self._out_toks: Dict[int, List[int]] = {}
+        self._out_lps: Dict[int, List[float]] = {}
+        self._admit_step: Dict[int, int] = {}
+        self._results: Dict[int, Completion] = {}
+        self._next_rid = 0
+
+        self.metrics = {"steps": 0, "prefills": 0, "decode_steps": 0,
+                        "decode_lanes": 0, "padded_lanes": 0}
+
+        # donation frees the previous cache buffer per step on
+        # accelerators; the CPU backend would just warn.
+        donate = (0, 1) if jax.default_backend() != "cpu" else ()
+        self._prefill_fn = jax.jit(self._prefill_impl, donate_argnums=donate)
+        self._decode_fn = jax.jit(self._decode_impl, donate_argnums=donate)
+
+    # ------------------------------------------------------------------
+    # Programs (one compile per prefill bucket / batch bucket)
+    # ------------------------------------------------------------------
+
+    def _ctx(self):
+        if self._mesh is None:
+            return contextlib.nullcontext()
+        return sharding_ctx(self._mesh, SERVE_RULES)
+
+    def _sample(self, key, logits):
+        if self._temperature == 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / self._temperature, axis=-1).astype(jnp.int32)
+
+    def _prefill_impl(self, k_all, v_all, params, prompt, true_len, slot,
+                      req_key):
+        """prompt [1, bucket] -> (first token, logprob, updated slot cache).
+
+        The prompt is right-padded to its bucket; causality makes the
+        logits at ``true_len - 1`` independent of the padding, and the
+        padded cache positions are dead (masked by the slot length, then
+        overwritten as decode advances) — DESIGN.md §5.
+        """
+        from ..layers.attention import _maybe_quant_kv
+
+        logits, cache = self._api.prefill(
+            params, {"tokens": prompt}, self._cache_len,
+            crew_strategy=self._crew_strategy)
+        last = jax.lax.dynamic_index_in_dim(
+            logits, true_len - 1, axis=1, keepdims=False)[0]     # [vocab]
+        tok = self._sample(jax.random.fold_in(req_key, 0), last)
+        lp = jax.nn.log_softmax(last)[tok]
+        # quantize on insert when the slot cache is int8 (prefill emits
+        # bf16 KV; decode-time writes go through the same helper)
+        k_all = k_all.at[:, slot].set(_maybe_quant_kv(cache["k"][:, 0], k_all))
+        v_all = v_all.at[:, slot].set(_maybe_quant_kv(cache["v"][:, 0], v_all))
+        return tok, lp, k_all, v_all
+
+    def _decode_impl(self, k_all, v_all, params, slot_ids, toks, lens,
+                     req_keys, steps):
+        """One fused decode step over the gathered active lanes.
+
+        slot_ids/toks/lens/req_keys/steps are [nb] lane vectors (nb = the
+        batch bucket); padding lanes point at the scratch slot.
+        """
+        k_sel = k_all[:, slot_ids]
+        v_sel = v_all[:, slot_ids]
+        logits, new = self._api.decode_step(
+            params, toks[:, None], {"k": k_sel, "v": v_sel, "len": lens},
+            crew_strategy=self._crew_strategy)
+        keys = jax.vmap(jax.random.fold_in)(req_keys, steps)
+        if self._temperature == 0.0:
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            nxt = jax.vmap(
+                lambda k, l: jax.random.categorical(
+                    k, l / self._temperature).astype(jnp.int32)
+            )(keys, logits)
+        lps = jnp.take_along_axis(
+            jax.nn.log_softmax(logits, axis=-1), nxt[:, None], axis=-1)[:, 0]
+        k_all = k_all.at[:, slot_ids].set(new["k"])
+        v_all = v_all.at[:, slot_ids].set(new["v"])
+        return nxt, lps, k_all, v_all
+
+    def program_counts(self) -> Dict[str, int]:
+        """Live XLA program counts — {bucket set} sized, not request sized.
+
+        ``_cache_size`` is a private jax API (present on the pinned
+        jax==0.4.37); -1 means this jax build no longer exposes it."""
+        def size(fn):
+            return getattr(fn, "_cache_size", lambda: -1)()
+        return {"prefill": size(self._prefill_fn),
+                "decode": size(self._decode_fn)}
+
+    # ------------------------------------------------------------------
+    # Queue API
+    # ------------------------------------------------------------------
+
+    def submit(self, prompt, *, max_new: int = 32,
+               eos_id: Optional[int] = None) -> int:
+        """Queue one request; returns its request id."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size == 0:
+            raise ValueError("empty prompt")
+        if prompt.size > self._buckets[-1]:
+            raise ValueError(
+                f"prompt length {prompt.size} exceeds largest bucket "
+                f"{self._buckets[-1]}")
+        if max_new < 1:
+            raise ValueError("max_new must be >= 1")
+        if prompt.size + max_new > self._cache_len:
+            raise ValueError(
+                f"prompt {prompt.size} + max_new {max_new} exceeds "
+                f"cache_len {self._cache_len}")
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append(Request(rid, prompt, int(max_new), eos_id))
+        return rid
+
+    @property
+    def pending(self) -> int:
+        """Queued + in-flight request count."""
+        return len(self._queue) + len(self._live)
+
+    def _bucket_for(self, n: int) -> int:
+        for b in self._buckets:
+            if n <= b:
+                return b
+        raise ValueError(f"no bucket holds prompt length {n}")
+
+    def _batch_bucket(self, n: int) -> int:
+        for b in self._batch_buckets:
+            if n <= b:
+                return b
+        return self._max_batch
+
+    # ------------------------------------------------------------------
+    # Engine loop
+    # ------------------------------------------------------------------
+
+    def _retire(self, slot: int) -> None:
+        rid = int(self._slot_rid[slot])
+        req = self._live.pop(rid)
+        self._results[rid] = Completion(
+            rid=rid,
+            prompt_len=req.prompt.size,
+            tokens=np.asarray(self._out_toks.pop(rid), np.int32),
+            logprobs=np.asarray(self._out_lps.pop(rid), np.float32),
+            n_steps=self.metrics["steps"] - self._admit_step.pop(rid) + 1,
+        )
+        self._slot_rid[slot] = -1
+        self._slot_done[slot] = True
+        self._slot_len[slot] = 0
+        self._slot_ngen[slot] = 0
+
+    def _record(self, slot: int, tok: int, lp: float) -> bool:
+        """Append one generated token; returns True if the slot retired."""
+        rid = int(self._slot_rid[slot])
+        req = self._live[rid]
+        self._out_toks[rid].append(tok)
+        self._out_lps[rid].append(lp)
+        self._slot_tok[slot] = tok
+        self._slot_ngen[slot] += 1
+        if ((req.eos_id is not None and tok == req.eos_id)
+                or int(self._slot_ngen[slot]) >= req.max_new):
+            self._retire(slot)
+            return True
+        return False
+
+    def _admit(self) -> None:
+        free = [s for s in range(self._max_batch) if self._slot_rid[s] < 0]
+        while free and self._queue:
+            slot = free.pop(0)
+            req = self._queue.pop(0)
+            bucket = self._bucket_for(req.prompt.size)
+            padded = np.zeros((1, bucket), np.int32)
+            padded[0, :req.prompt.size] = req.prompt
+            req_key = np.asarray(jax.random.fold_in(self._base_key, req.rid))
+            with self._ctx():
+                tok, lp, self._k, self._v = self._prefill_fn(
+                    self._k, self._v, self._params, jnp.asarray(padded),
+                    jnp.int32(req.prompt.size), jnp.int32(slot),
+                    jnp.asarray(req_key))
+            self.metrics["prefills"] += 1
+            self._live[req.rid] = req
+            self._out_toks[req.rid] = []
+            self._out_lps[req.rid] = []
+            self._admit_step[req.rid] = self.metrics["steps"]
+            self._slot_rid[slot] = req.rid
+            self._slot_done[slot] = False
+            self._slot_len[slot] = req.prompt.size
+            self._slot_ngen[slot] = 0
+            self._slot_key[slot] = req_key
+            self._record(slot, int(tok), float(lp))
+
+    def step(self) -> bool:
+        """Admit, run one fused decode step, retire; True while busy.
+
+        An empty queue with no active slots is an idle drain: returns
+        False without launching any program.
+        """
+        self.metrics["steps"] += 1
+        self._admit()
+        active = [s for s in range(self._max_batch) if not self._slot_done[s]]
+        if not active:
+            busy = bool(self._queue)
+            if not busy:
+                self.metrics["steps"] -= 1  # nothing ran
+            return busy
+        nb = self._batch_bucket(len(active))
+        scratch = self._max_batch
+        lanes = active + [scratch] * (nb - len(active))
+        slot_ids = np.asarray(lanes, np.int32)
+        toks = np.zeros(nb, np.int32)
+        lens = np.zeros(nb, np.int32)
+        keys = np.zeros((nb, 2), np.uint32)
+        steps = np.zeros(nb, np.int32)
+        for i, s in enumerate(active):
+            toks[i] = self._slot_tok[s]
+            lens[i] = self._slot_len[s]
+            keys[i] = self._slot_key[s]
+            steps[i] = self._slot_ngen[s]
+        with self._ctx():
+            nxt, lps, self._k, self._v = self._decode_fn(
+                self._k, self._v, self._params, jnp.asarray(slot_ids),
+                jnp.asarray(toks), jnp.asarray(lens), jnp.asarray(keys),
+                jnp.asarray(steps))
+        nxt = np.asarray(nxt)
+        lps = np.asarray(lps)
+        self.metrics["decode_steps"] += 1
+        self.metrics["decode_lanes"] += len(active)
+        self.metrics["padded_lanes"] += nb - len(active)
+        for i, s in enumerate(active):
+            self._slot_len[s] += 1  # this step wrote the previous token's KV
+            self._record(s, int(nxt[i]), float(lps[i]))
+        return bool(self._queue or self._live)
+
+    def run(self) -> Dict[int, Completion]:
+        """Drain the queue to completion; returns {rid: Completion}."""
+        while self.step():
+            pass
+        return self.pop_results()
+
+    def pop_results(self) -> Dict[int, Completion]:
+        out, self._results = self._results, {}
+        return out

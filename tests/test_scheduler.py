@@ -1,0 +1,215 @@
+"""Continuous-batching scheduler (DESIGN.md §5): token parity vs the
+one-shot engine, fixed program set, admission/backfill/drain edge cases,
+and continuous-vs-static throughput on the mixed traffic workload."""
+import os
+import pathlib
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.models import build_model
+from repro.serve import Scheduler, generate
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = ARCHS["qwen2-0.5b"].reduced()
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    return cfg, api, params
+
+
+def _ref_tokens(api, params, prompt, max_new):
+    out = generate(api, params, jnp.asarray(prompt)[None], max_new=max_new)
+    return np.asarray(out["tokens"][0])
+
+
+class TestParity:
+    def test_mixed_lengths_greedy_parity_fixed_programs(self, qwen):
+        """Five requests with five different (prompt_len, max_new) pairs
+        through two slots: the queue outruns the slots, admission
+        staggers, slots backfill — and every request's greedy tokens
+        equal its per-request ``serve.generate`` run, while only the
+        fixed bucket set compiles (no per-request retrace)."""
+        cfg, api, params = qwen
+        rng = np.random.default_rng(0)
+        prompts = [rng.integers(0, cfg.vocab, n).astype(np.int32)
+                   for n in (5, 12, 20, 7, 16)]
+        max_news = [4, 8, 6, 10, 3]
+
+        sched = Scheduler(api, params, max_batch=2, cache_len=64,
+                          buckets=(8, 16, 24))
+        rids = [sched.submit(p, max_new=m)
+                for p, m in zip(prompts, max_news)]
+        res = sched.run()
+
+        assert sorted(res) == sorted(rids)
+        for rid, p, m in zip(rids, prompts, max_news):
+            got = res[rid].tokens
+            assert got.shape == (m,)
+            np.testing.assert_array_equal(got, _ref_tokens(api, params, p, m))
+            assert res[rid].logprobs.shape == (m,)
+            assert np.all(res[rid].logprobs <= 0)
+
+        # queue outran the slots: every request prefillled exactly once,
+        # and the program set is bucket-sized, not request-sized.
+        assert sched.metrics["prefills"] == len(prompts)
+        counts = sched.program_counts()
+        assert counts["prefill"] == 3   # buckets 8, 16, 24 all used
+        assert counts["decode"] <= 2    # batch buckets {1, 2}
+
+        # replaying more traffic compiles nothing new
+        sched.submit(prompts[0], max_new=3)
+        sched.run()
+        assert sched.program_counts() == counts
+
+
+class TestEdgeCases:
+    def test_backfill_after_early_eos(self, qwen):
+        """A request that hits EOS mid-stream frees its slot; the queued
+        request behind it is admitted and completes with full parity."""
+        cfg, api, params = qwen
+        rng = np.random.default_rng(1)
+        a = rng.integers(0, cfg.vocab, 6).astype(np.int32)
+        b = rng.integers(0, cfg.vocab, 9).astype(np.int32)
+        ref_a = _ref_tokens(api, params, a, 8)
+        eos = int(ref_a[2])  # greedy token #3 becomes the stop token
+
+        sched = Scheduler(api, params, max_batch=1, cache_len=32,
+                          buckets=(16,))
+        rid_a = sched.submit(a, max_new=8, eos_id=eos)
+        rid_b = sched.submit(b, max_new=5)
+        res = sched.run()
+
+        np.testing.assert_array_equal(res[rid_a].tokens, ref_a[:3])
+        assert res[rid_a].tokens[-1] == eos
+        np.testing.assert_array_equal(res[rid_b].tokens,
+                                      _ref_tokens(api, params, b, 5))
+
+    def test_eos_on_first_token_retires_at_admission(self, qwen):
+        """EOS sampled from the prefill logits retires the request before
+        it ever reaches a decode step."""
+        cfg, api, params = qwen
+        rng = np.random.default_rng(2)
+        p = rng.integers(0, cfg.vocab, 5).astype(np.int32)
+        eos = int(_ref_tokens(api, params, p, 1)[0])
+
+        sched = Scheduler(api, params, max_batch=1, cache_len=32,
+                          buckets=(8,))
+        rid = sched.submit(p, max_new=8, eos_id=eos)
+        res = sched.run()
+        np.testing.assert_array_equal(res[rid].tokens, [eos])
+        assert sched.metrics["decode_steps"] == 0
+
+    def test_empty_queue_drain(self, qwen):
+        _, api, params = qwen
+        sched = Scheduler(api, params, max_batch=2, cache_len=32,
+                          buckets=(8,))
+        assert sched.run() == {}
+        assert sched.step() is False
+        assert sched.pending == 0
+
+    def test_submit_validation(self, qwen):
+        _, api, params = qwen
+        sched = Scheduler(api, params, max_batch=2, cache_len=32,
+                          buckets=(8, 16))
+        with pytest.raises(ValueError, match="largest bucket"):
+            sched.submit(np.zeros(17, np.int32))
+        with pytest.raises(ValueError, match="cache_len"):
+            sched.submit(np.zeros(8, np.int32), max_new=32)
+        with pytest.raises(ValueError, match="empty"):
+            sched.submit(np.zeros(0, np.int32))
+        with pytest.raises(ValueError, match="max_new"):
+            sched.submit(np.zeros(4, np.int32), max_new=0)
+
+    def test_sampled_streams_differ_per_request(self, qwen):
+        """temperature > 0: two identical prompts in flight draw from
+        independent per-request key streams."""
+        cfg, api, params = qwen
+        rng = np.random.default_rng(3)
+        p = rng.integers(0, cfg.vocab, 6).astype(np.int32)
+        sched = Scheduler(api, params, max_batch=2, cache_len=64,
+                          buckets=(8,), temperature=1.0,
+                          rng=jax.random.PRNGKey(7))
+        ra = sched.submit(p, max_new=12)
+        rb = sched.submit(p, max_new=12)
+        res = sched.run()
+        assert not np.array_equal(res[ra].tokens, res[rb].tokens)
+
+
+class TestThroughput:
+    def test_continuous_beats_static_on_mixed_workload(self):
+        """The traffic benchmark's mixed workload: continuous batching
+        sustains at least the static-batching tokens/sec (it runs ~half
+        the decode steps; the measured margin is ~1.4-2.6x)."""
+        sys.path.insert(0, str(ROOT))
+        try:
+            from benchmarks import traffic
+        finally:
+            sys.path.pop(0)
+        traffic.prepare(fast=True)
+        # wall-clock comparisons can flake on loaded CI runners; the step
+        # counts are deterministic, so assert those on every attempt and
+        # give the timing a couple of tries (measured margin ~1.4-2.6x).
+        for attempt in range(3):
+            rows = {(r["mode"], r["weights"]): r
+                    for r in traffic.serve_throughput(fast=True)}
+            for weights in ("dense", "crew"):
+                cont = rows[("continuous", weights)]
+                stat = rows[("static", weights)]
+                assert cont["tokens"] == stat["tokens"]  # same useful work
+                assert cont["decode_steps"] < stat["decode_steps"]
+            if all(rows[("continuous", w)]["tokens_per_s"]
+                   >= rows[("static", w)]["tokens_per_s"]
+                   for w in ("dense", "crew")):
+                break
+        else:
+            raise AssertionError(
+                f"continuous slower than static on 3 attempts: {rows}")
+
+
+def test_scheduler_under_serve_mesh_matches_single_device():
+    """dist integration: the same requests through a Scheduler tracing
+    under ``sharding_ctx(mesh, SERVE_RULES)`` yield the single-device
+    greedy tokens (child process forces an 8-device host platform)."""
+    code = """
+import jax, numpy as np
+from repro.configs import ARCHS
+from repro.models import build_model
+from repro.serve import Scheduler
+from repro.launch.mesh import make_mesh
+
+cfg = ARCHS["qwen2-0.5b"].reduced()
+api = build_model(cfg)
+params = api.init(jax.random.PRNGKey(0))
+rng = np.random.default_rng(0)
+prompts = [rng.integers(0, cfg.vocab, n).astype(np.int32) for n in (5, 12)]
+
+def serve(mesh):
+    s = Scheduler(api, params, max_batch=2, cache_len=32, buckets=(16,),
+                  mesh=mesh)
+    rids = [s.submit(p, max_new=4) for p in prompts]
+    res = s.run()
+    return [res[r].tokens for r in rids]
+
+single = serve(None)
+mesh = make_mesh((2, 4), ("data", "model"))
+sharded = serve(mesh)
+for a, b in zip(single, sharded):
+    np.testing.assert_array_equal(a, b)
+print("MESH-PARITY-OK")
+"""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = str(ROOT / "src")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=480, env=env)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "MESH-PARITY-OK" in out.stdout

@@ -1,0 +1,96 @@
+"""Docs-integrity gate: no dangling DESIGN.md / docs/ references.
+
+Checks, over ``src/``, ``benchmarks/``, ``tests/``, ``README.md`` and the
+docs themselves:
+
+* every ``DESIGN.md §N[.M]`` citation points at a section anchor that
+  actually exists in DESIGN.md (headings of the form ``## §N · ...``);
+* every ``docs/<page>.md`` reference points at an existing file;
+* every relative markdown link in README.md / DESIGN.md / docs/*.md
+  resolves to an existing file.
+
+Run as ``python tools/check_docs.py`` (CI runs it next to the ruff
+gate); exits non-zero listing each dangling reference.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+SECTION_REF = re.compile(r"DESIGN\.md\s+§(\d+(?:\.\d+)?)")
+DOCS_REF = re.compile(r"\bdocs/[\w\-./]+?\.md\b")
+MD_LINK = re.compile(r"\]\(([^)\s]+)\)")
+HEADING_ANCHOR = re.compile(r"^#{1,6}\s.*?§(\d+(?:\.\d+)?)", re.M)
+
+SCAN_TREES = ("src", "benchmarks", "tests")
+SCAN_SUFFIXES = {".py", ".md"}
+MD_FILES = ("README.md", "DESIGN.md")
+
+
+def _scan_files(root):
+    files = [root / name for name in MD_FILES if (root / name).exists()]
+    files += sorted((root / "docs").glob("**/*.md"))
+    for tree in SCAN_TREES:
+        files += sorted(p for p in (root / tree).rglob("*")
+                        if p.suffix in SCAN_SUFFIXES
+                        and "__pycache__" not in p.parts)
+    return files
+
+
+def design_anchors(root=ROOT) -> set:
+    """Section numbers DESIGN.md actually defines headings for."""
+    design = root / "DESIGN.md"
+    if not design.exists():
+        return set()
+    return set(HEADING_ANCHOR.findall(design.read_text()))
+
+
+def check(root=ROOT) -> list:
+    """Returns a list of "file:line: problem" strings (empty == clean)."""
+    problems = []
+    anchors = design_anchors(root)
+    if not anchors:
+        problems.append("DESIGN.md: missing or defines no § anchors")
+
+    for path in _scan_files(root):
+        rel = path.relative_to(root)
+        text = path.read_text(errors="replace")
+        for i, line in enumerate(text.splitlines(), 1):
+            for sec in SECTION_REF.findall(line):
+                if sec not in anchors:
+                    problems.append(
+                        f"{rel}:{i}: cites DESIGN.md §{sec} but DESIGN.md "
+                        f"has no §{sec} heading")
+            for ref in DOCS_REF.findall(line):
+                if not (root / ref).exists():
+                    problems.append(
+                        f"{rel}:{i}: references {ref} which does not exist")
+            if path.suffix == ".md":
+                for target in MD_LINK.findall(line):
+                    if target.startswith(("http://", "https://", "#",
+                                          "mailto:")):
+                        continue
+                    dest = (path.parent / target.split("#", 1)[0]).resolve()
+                    if not dest.exists():
+                        problems.append(
+                            f"{rel}:{i}: broken link -> {target}")
+    return problems
+
+
+def main() -> int:
+    problems = check()
+    for p in problems:
+        print(p, file=sys.stderr)
+    if problems:
+        print(f"docs integrity: {len(problems)} dangling reference(s)",
+              file=sys.stderr)
+        return 1
+    print(f"docs integrity: OK ({len(design_anchors())} DESIGN.md anchors)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
