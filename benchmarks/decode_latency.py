@@ -1,0 +1,138 @@
+"""Decode latency: horizon stepping vs token-synchronous dispatch.
+
+The CREW payoff regime is small-batch autoregressive decode (PAPER.md §1),
+where per-token *engine* overhead — a host round-trip and a fresh dispatch
+per generated token — can dominate the actual FC math.  This module
+measures that overhead directly: the same mixed-prompt workload through
+``serve.Scheduler`` at ``horizon=1`` (the token-synchronous baseline: one
+program dispatch + one host sync per token) and ``horizon=8`` (one fused
+H-step program per dispatch, host syncs once per horizon, KV buffers
+donated), for dense and CREW weights.
+
+Rows report sustained tokens/sec and the p50 per-token wall time; the
+``speedup_vs_token_sync`` field on the horizon rows is the headline
+number BENCH_crew.json tracks (DESIGN.md §5 "horizon stepping").
+
+``prepare(fast)`` builds the models and drains one full warmup pass per
+(weights, horizon) scheduler so the timed region measures steady state,
+not compiles.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.models import build_model
+
+MAX_BATCH = 4
+CACHE_LEN = 64
+BUCKETS = (16,)
+PROMPT_LENS = (4, 10, 16, 6, 12, 8, 16, 5)
+# 1 prefill-sampled token + 16 decode steps = exactly two full H=8
+# horizons, so the horizon configuration wastes no trailing lane steps
+# and the comparison isolates dispatch overhead, not retirement slack.
+MAX_NEW = 17
+HORIZONS = (1, 8)
+FULL_REPEAT = 4  # --full replays the workload 4x (longer steady state)
+
+_STATE = {}  # prepare() state: workload + warmed schedulers
+
+
+def _workload(vocab, fast, seed=0):
+    rng = np.random.default_rng(seed)
+    reps = 1 if fast else FULL_REPEAT
+    return [rng.integers(0, vocab, n).astype(np.int32)
+            for _ in range(reps) for n in PROMPT_LENS]
+
+
+def _drain_timed(sched, workload):
+    """(useful tokens, wall seconds, per-token p50 seconds) for one drain.
+
+    Each ``step()`` is timed on the host; its wall time is attributed
+    evenly to the decode tokens it emitted (admission-only steps carry no
+    decode tokens and are excluded from the per-token distribution, as in
+    a steady-state server they overlap in-flight horizons).
+    """
+    for prompt in workload:
+        sched.submit(prompt, max_new=MAX_NEW)
+    per_token = []
+    t0 = time.perf_counter()
+    busy = True
+    while busy:
+        lanes0 = sched.metrics["decode_lanes"]
+        s0 = time.perf_counter()
+        busy = sched.step()
+        dt = time.perf_counter() - s0
+        emitted = sched.metrics["decode_lanes"] - lanes0
+        if emitted:
+            per_token.extend([dt / emitted] * emitted)
+    wall = time.perf_counter() - t0
+    results = sched.pop_results()
+    tokens = sum(c.tokens.size for c in results.values())
+    return tokens, wall, float(np.percentile(per_token, 50))
+
+
+def prepare(fast: bool = True):
+    """Build the reduced model + CREW twin and one scheduler per
+    (weights, horizon) cell, then drain one full warmup pass each so
+    ``main`` times steady state (programs compiled, autotune resolved)."""
+    if _STATE.get("fast") == fast:
+        return _STATE
+    _STATE.clear()
+    import jax
+    from repro.serve import Scheduler, autotune_crew_params, crewize_params
+
+    cfg = ARCHS["qwen2-0.5b"].reduced()
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    crew, _ = crewize_params(params)
+    # Warm the measured dispatch for every decode batch bucket (and the
+    # SwiGLU gate's fused-silu epilogue variant) the way a production
+    # server would (launch/serve --autotune): on this backend the
+    # measured winners replace the analytical pallas prior, so the timed
+    # region compares engine overhead, not a cold-cache strategy guess.
+    autotune_crew_params(crew, batch_sizes=(1, 2, 4),
+                         activations=(None, "silu"), repeats=1)
+    workload = _workload(cfg.vocab, fast)
+    _STATE["fast"] = fast
+    _STATE["workload"] = workload
+    _STATE["scheds"] = {
+        (name, h): Scheduler(api, p, max_batch=MAX_BATCH,
+                             cache_len=CACHE_LEN, buckets=BUCKETS, horizon=h)
+        for name, p in (("dense", params), ("crew", crew))
+        for h in HORIZONS
+    }
+    for sched in _STATE["scheds"].values():
+        _drain_timed(sched, workload)
+    return _STATE
+
+
+def main(fast: bool = False):
+    state = prepare(fast)
+    workload = state["workload"]
+    rows = []
+    base_tps = {}
+    for (name, h), sched in state["scheds"].items():
+        tokens, wall, p50 = _drain_timed(sched, workload)
+        row = {
+            "bench": "decode-latency", "weights": name, "horizon": h,
+            "tokens": tokens, "seconds": round(wall, 3),
+            "tokens_per_s": round(tokens / max(wall, 1e-9), 1),
+            "per_token_p50_ms": round(p50 * 1e3, 3),
+            "wasted_lane_steps": sched.metrics["wasted_lane_steps"],
+        }
+        if h == 1:
+            base_tps[name] = row["tokens_per_s"]
+        elif name in base_tps:
+            row["speedup_vs_token_sync"] = round(
+                row["tokens_per_s"] / max(base_tps[name], 1e-9), 2)
+        rows.append(row)
+    return rows
+
+
+if __name__ == "__main__":
+    prepare(fast=True)
+    for r in main(fast=True):
+        print(r)

@@ -10,8 +10,11 @@ Modules may expose ``prepare(fast)`` for input materialization (dataset
 setup: synthesizing paper-model weight matrices); it runs *outside* the
 timed region so the per-module seconds measure the benchmark's actual
 work — for the conversion benchmarks, the CREW offline pipeline itself.
-``--json`` writes the per-module records (name/seconds/rows, plus setup
-seconds) to BENCH_crew.json so CI can archive the perf trajectory.
+``--json`` writes the per-module records — name/seconds/setup seconds
+plus the module's actual result rows (``data``), so the archived
+BENCH_crew.json carries the measured numbers themselves (e.g. the
+decode-latency horizon-vs-token-sync tokens/sec trajectory), not just
+wall times — so CI can archive the perf trajectory per commit.
 """
 from __future__ import annotations
 
@@ -19,8 +22,8 @@ import argparse
 import json
 import time
 
-from . import dispatch, fig6_ppa, fig11_speedup, perf_cells, roofline_table, \
-    tab1_unique_weights, tab2_compression, traffic
+from . import decode_latency, dispatch, fig6_ppa, fig11_speedup, perf_cells, \
+    roofline_table, tab1_unique_weights, tab2_compression, traffic
 
 MODULES = [
     ("tab1_unique_weights", tab1_unique_weights),
@@ -28,6 +31,7 @@ MODULES = [
     ("fig6_ppa", fig6_ppa),
     ("fig11_speedup", fig11_speedup),
     ("traffic", traffic),
+    ("decode_latency", decode_latency),
     ("roofline_table", roofline_table),
     ("perf_cells", perf_cells),
     ("dispatch", dispatch),
@@ -62,7 +66,7 @@ def main() -> None:
         dt = time.time() - t0
         records.append({"name": name, "seconds": round(dt, 3),
                         "setup_seconds": round(setup_s, 3),
-                        "rows": len(rows)})
+                        "rows": len(rows), "data": rows})
         print(f"\n=== {name} ({dt:.1f}s + {setup_s:.1f}s setup) ===")
         for r in rows:
             print("  " + "  ".join(f"{k}={v}" for k, v in r.items()))
@@ -70,8 +74,11 @@ def main() -> None:
     print("\n" + "\n".join(csv))
 
     if args.json:
+        def scalar(o):  # np ints/floats inside benchmark rows
+            return o.item() if hasattr(o, "item") else str(o)
         with open(args.json, "w") as fh:
-            json.dump({"fast": fast, "modules": records}, fh, indent=2)
+            json.dump({"fast": fast, "modules": records}, fh, indent=2,
+                      default=scalar)
             fh.write("\n")
         print(f"wrote {args.json}")
 

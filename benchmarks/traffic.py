@@ -12,7 +12,11 @@ Two measurements feed BENCH_crew.json:
   static-batched ``serve.generate`` waves (DESIGN.md §5), with dense and
   CREW weights.  ``prepare(fast)`` builds the models and runs a full
   warmup pass of both modes so the timed region measures steady-state
-  tokens/sec, not compiles.
+  tokens/sec, not compiles.  Both policies run under the default decode
+  horizon (H=8): ``decode_steps`` counts *device* steps (H per fused
+  program), so the continuous-vs-static step comparison is
+  policy-honest; the horizon-vs-token-sync axis itself is measured in
+  ``benchmarks/decode_latency.py``.
 """
 from __future__ import annotations
 

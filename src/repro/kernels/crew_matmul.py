@@ -22,6 +22,11 @@ resident in VMEM while the reduction over row blocks streams through —
 Pallas's automatic double-buffering of the index/unique blocks plays the
 role of the paper's double-buffered local buffers.
 
+An optional **fused epilogue** (`bias`, `activation`) is applied to the
+VMEM-resident output block on the *last* n-block (`pl.when`), so an FC
+layer's bias-add and activation never round-trip the [B, M] output
+through HBM as separate XLA ops — DESIGN.md §3 "epilogue fusion".
+
 HBM traffic per output tile: packed words (width/8 bytes per weight) +
 unique tables (amortized over M) — this is the entire point of CREW on TPU.
 
@@ -38,16 +43,30 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-__all__ = ["crew_matmul_pallas", "DEFAULT_BLOCK_N", "DEFAULT_BLOCK_WORDS"]
+__all__ = ["crew_matmul_pallas", "EPILOGUE_ACTIVATIONS",
+           "DEFAULT_BLOCK_N", "DEFAULT_BLOCK_WORDS"]
 
 DEFAULT_BLOCK_N = 128      # input rows per block (sublane-aligned)
 DEFAULT_BLOCK_WORDS = 32   # packed words per block -> bm = 32 * epw
 
+# Epilogue activations the kernel can fuse (all map 0 -> 0, so the padded
+# M region stays zero and the m_out slice is unaffected).
+EPILOGUE_ACTIVATIONS = {
+    "relu": jax.nn.relu,
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+}
 
-def _kernel(x_ref, words_ref, uniq_ref, out_ref, *, width: int, strategy: str):
+
+def _kernel(x_ref, words_ref, uniq_ref, *rest, width: int, strategy: str,
+            grid_n: int, activation):
     """One (m-block, n-block) grid step: decode the index block, form the
     partial products, and accumulate into the VMEM-resident output block
-    (initialized on the first n-block; the n grid axis is innermost)."""
+    (initialized on the first n-block; the n grid axis is innermost).
+    On the last n-block the optional bias/activation epilogue transforms
+    the finished accumulator in place, still in VMEM."""
+    bias_ref = rest[0] if len(rest) == 2 else None
+    out_ref = rest[-1]
     nn = pl.program_id(1)
 
     @pl.when(nn == 0)
@@ -92,11 +111,21 @@ def _kernel(x_ref, words_ref, uniq_ref, out_ref, *, width: int, strategy: str):
 
     out_ref[...] += contrib
 
+    if bias_ref is not None or activation is not None:
+        @pl.when(nn == grid_n - 1)
+        def _epilogue():
+            acc = out_ref[...]
+            if bias_ref is not None:
+                acc = acc + bias_ref[...].astype(jnp.float32)  # [1, bm]
+            if activation is not None:
+                acc = EPILOGUE_ACTIVATIONS[activation](acc)
+            out_ref[...] = acc
+
 
 @functools.partial(
     jax.jit,
-    static_argnames=("width", "m_out", "strategy", "block_n", "block_words",
-                     "interpret"),
+    static_argnames=("width", "m_out", "strategy", "activation", "block_n",
+                     "block_words", "interpret"),
 )
 def crew_matmul_pallas(
     x: jnp.ndarray,
@@ -106,6 +135,8 @@ def crew_matmul_pallas(
     width: int,
     m_out: int,
     strategy: str = "gather",
+    bias=None,
+    activation=None,
     block_n: int = DEFAULT_BLOCK_N,
     block_words: int = DEFAULT_BLOCK_WORDS,
     interpret: bool = True,
@@ -115,7 +146,13 @@ def crew_matmul_pallas(
     words: [N, W] uint32, uniq: [N, K].  Pads N and W to block multiples
     (zero rows contribute zero: x pad is 0 so P rows are 0; padded words
     decode to index 0 which reads a zero P row).  Slices the M padding off.
+
+    bias ([M] or None) and activation (a key of EPILOGUE_ACTIVATIONS or
+    None) form the fused epilogue: applied in f32 to the VMEM-resident
+    output block on the last n-block, before the result ever reaches HBM.
     """
+    if activation is not None and activation not in EPILOGUE_ACTIVATIONS:
+        raise ValueError(f"unknown epilogue activation {activation!r}")
     b, n = x.shape
     n_words = words.shape[1]
     k = uniq.shape[1]
@@ -136,16 +173,25 @@ def crew_matmul_pallas(
     bm = block_words * epw
     grid = (w_pad // block_words, n_pad // block_n)
 
+    in_specs = [
+        pl.BlockSpec((b, block_n), lambda im, inn: (0, inn)),
+        pl.BlockSpec((block_n, block_words), lambda im, inn: (inn, im)),
+        pl.BlockSpec((block_n, k), lambda im, inn: (inn, 0)),
+    ]
+    args = [x, words, uniq]
+    if bias is not None:
+        bias_p = jnp.pad(bias.astype(jnp.float32).reshape(-1),
+                         (0, grid[0] * bm - m_out)).reshape(1, -1)
+        in_specs.append(pl.BlockSpec((1, bm), lambda im, inn: (0, im)))
+        args.append(bias_p)
+
     out = pl.pallas_call(
-        functools.partial(_kernel, width=width, strategy=strategy),
+        functools.partial(_kernel, width=width, strategy=strategy,
+                          grid_n=grid[1], activation=activation),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((b, block_n), lambda im, inn: (0, inn)),
-            pl.BlockSpec((block_n, block_words), lambda im, inn: (inn, im)),
-            pl.BlockSpec((block_n, k), lambda im, inn: (inn, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((b, bm), lambda im, inn: (0, im)),
         out_shape=jax.ShapeDtypeStruct((b, grid[0] * bm), jnp.float32),
         interpret=interpret,
-    )(x, words, uniq)
+    )(*args)
     return out[:, :m_out]

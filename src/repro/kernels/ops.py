@@ -8,16 +8,25 @@
     repro.core.convert (used by the big-model serve graphs and the
     512-device dry-runs, where a CPU-interpreted kernel is not meaningful),
   * ``auto`` — measured dispatch: the repro.perf autotune store is probed
-    for this (B, N, M, K, width, backend) shape (a Python dict lookup on
-    static shapes, free at trace time); on a cold cache the analytical
-    ``pick_strategy`` prior decides — decode-shaped calls (small B) take
-    the CREW dataflow, compute-rich calls decompress-and-matmul
-    (DESIGN.md §3 napkin math).  ``serve.convert.autotune_crew_params`` /
+    for this (B, N, M, K, width, backend, epilogue) shape (a Python dict
+    lookup on static shapes, free at trace time); on a cold cache the
+    analytical ``pick_strategy`` prior decides — decode-shaped calls
+    (small B) take the CREW dataflow, compute-rich calls
+    decompress-and-matmul (DESIGN.md §3 napkin math).
+    ``serve.convert.autotune_crew_params`` /
     ``repro.perf.measure_crew_matmul`` warm the store eagerly.
+    Variable-width matrices resolve per *width class* — each class is a
+    uniform sub-matrix with its own apply shape and measured winner.
+
+``bias`` / ``activation`` form the fused epilogue (DESIGN.md §3): the
+Pallas paths apply them to the VMEM-resident output block on the last
+n-block; the XLA paths apply them as trailing elementwise ops that XLA
+fuses into the same computation.  Either way each FC layer stays one
+kernel instead of kernel + bias-add + activation.
 """
 from __future__ import annotations
 
-from typing import Union
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -29,7 +38,7 @@ from ..core.convert import (
     crew_matmul_var,
 )
 from ..perf import autotune
-from .crew_matmul import crew_matmul_pallas
+from .crew_matmul import EPILOGUE_ACTIVATIONS, crew_matmul_pallas
 
 __all__ = ["crew_matmul", "pick_strategy", "resolve_auto_strategy"]
 
@@ -48,16 +57,53 @@ def pick_strategy(batch: int, width: int, compute_rich: bool) -> str:
     return "pallas-gather"
 
 
-def resolve_auto_strategy(batch: int, cm: CrewMatrixUniform) -> str:
-    """Measured winner for this apply shape if the autotune store has one,
-    else the analytical prior.  Pure Python on static shapes — safe (and
-    constant-folded) inside jit traces."""
-    key = autotune.make_key(batch, cm.n_in, cm.n_out, cm.k, cm.width,
-                            jax.default_backend())
+def _resolve_measured(batch: int, n_in: int, n_out: int, k: int, width: int,
+                      epilogue: str) -> str:
+    """Store probe + analytical fallback for one uniform apply shape."""
+    key = autotune.make_key(batch, n_in, n_out, k, width,
+                            jax.default_backend(), epilogue=epilogue)
     measured = autotune.lookup(key)
     if measured is not None:
         return measured
-    return pick_strategy(batch, cm.width, compute_rich=batch >= 64)
+    return pick_strategy(batch, width, compute_rich=batch >= 64)
+
+
+def resolve_auto_strategy(batch: int, cm: CrewMatrixUniform, *,
+                          epilogue: str = "none") -> str:
+    """Measured winner for this apply shape if the autotune store has one,
+    else the analytical prior.  Pure Python on static shapes — safe (and
+    constant-folded) inside jit traces."""
+    return _resolve_measured(batch, cm.n_in, cm.n_out, cm.k, cm.width,
+                             epilogue)
+
+
+def _apply_epilogue(out: jnp.ndarray, bias, activation) -> jnp.ndarray:
+    """XLA-path epilogue (the Pallas paths fuse it in-kernel instead)."""
+    if bias is not None:
+        out = out + bias.astype(out.dtype)
+    if activation is not None:
+        out = EPILOGUE_ACTIVATIONS[activation](out)
+    return out
+
+
+def _apply_class(xb, c, n_in: int, n_out: int, strategy: str,
+                 interpret: bool, block_m: int) -> jnp.ndarray:
+    """One width class of a variable-width matrix -> f32 [B, n_out].
+
+    The XLA paths delegate to ``core.convert.crew_matmul_var`` on a
+    single-class view (one decode/gather implementation, no drift); the
+    Pallas paths call the kernel directly.
+    """
+    if strategy in ("pallas-gather", "pallas-onehot"):
+        return crew_matmul_pallas(
+            xb[:, c.row_ids], c.words, c.uniq, width=c.width, m_out=n_out,
+            strategy=strategy.split("-")[1], interpret=interpret)
+    if strategy not in ("xla-dense", "xla-gather"):
+        raise ValueError(f"unknown strategy {strategy!r}")
+    sub = CrewMatrixVar(classes=(c,), n_in=n_in, n_out=n_out)
+    out = crew_matmul_var(xb, sub, strategy=strategy.split("-")[1],
+                          block_m=block_m)
+    return out.astype(jnp.float32)
 
 
 def crew_matmul(
@@ -65,44 +111,50 @@ def crew_matmul(
     cm: Union[CrewMatrixUniform, CrewMatrixVar],
     *,
     strategy: str = "auto",
+    bias=None,
+    activation: Optional[str] = None,
     interpret: bool = True,
     block_m: int = 1024,
 ) -> jnp.ndarray:
-    """x[..., N] @ crew(W[N, M]) -> [..., M] in x.dtype."""
+    """x[..., N] @ crew(W[N, M]) (+ bias, activation) -> [..., M] in x.dtype."""
+    if activation is not None and activation not in EPILOGUE_ACTIVATIONS:
+        raise ValueError(f"unknown epilogue activation {activation!r}")
     lead = x.shape[:-1]
     xb = x.reshape(-1, x.shape[-1])
     b = xb.shape[0]
+    epilogue = autotune.epilogue_tag(bias is not None, activation)
 
     if isinstance(cm, CrewMatrixVar):
-        if strategy in ("auto", "xla-dense"):
-            out = crew_matmul_var(xb, cm, strategy="dense")
-        elif strategy == "xla-gather":
-            out = crew_matmul_var(xb, cm, strategy="gather", block_m=block_m)
-        elif strategy in ("pallas-gather", "pallas-onehot"):
-            ks = strategy.split("-")[1]
-            out = jnp.zeros((b, cm.n_out), dtype=jnp.float32)
-            for c in cm.classes:
-                xc = xb[:, c.row_ids]
-                out = out + crew_matmul_pallas(
-                    xc, c.words, c.uniq, width=c.width, m_out=cm.n_out,
-                    strategy=ks, interpret=interpret,
-                )
-            out = out.astype(x.dtype)
-        else:
-            raise ValueError(f"unknown strategy {strategy!r}")
+        # Each width class is a uniform sub-matrix with its own apply shape:
+        # resolve the measured winner per class (the "auto" store probe the
+        # uniform path does), accumulate class contributions in f32, and
+        # apply the epilogue once on the summed output.  Class lookups use
+        # the *plain* key tag — the epilogue is applied after the class
+        # sum, so per-class strategy cost is epilogue-independent.
+        out = jnp.zeros((b, cm.n_out), dtype=jnp.float32)
+        for c in cm.classes:
+            strat = strategy
+            if strat == "auto":
+                strat = _resolve_measured(
+                    b, int(c.uniq.shape[0]), cm.n_out, int(c.uniq.shape[1]),
+                    c.width, "none")
+            out = out + _apply_class(xb, c, cm.n_in, cm.n_out, strat,
+                                     interpret, block_m)
+        out = _apply_epilogue(out, bias, activation)
         return out.reshape(*lead, cm.n_out).astype(x.dtype)
 
     # uniform matrix
     if strategy == "auto":
-        strategy = resolve_auto_strategy(b, cm)
-    if strategy == "xla-dense":
-        out = crew_matmul_uniform(xb, cm, strategy="dense")
-    elif strategy == "xla-gather":
-        out = crew_matmul_uniform(xb, cm, strategy="gather", block_m=block_m)
+        strategy = resolve_auto_strategy(b, cm, epilogue=epilogue)
+    if strategy in ("xla-dense", "xla-gather"):
+        out = crew_matmul_uniform(xb, cm, strategy=strategy.split("-")[1],
+                                  block_m=block_m)
+        out = _apply_epilogue(out, bias, activation)
     elif strategy in ("pallas-gather", "pallas-onehot"):
         out = crew_matmul_pallas(
             xb, cm.words, cm.uniq, width=cm.width, m_out=cm.n_out,
-            strategy=strategy.split("-")[1], interpret=interpret,
+            strategy=strategy.split("-")[1], bias=bias, activation=activation,
+            interpret=interpret,
         )
     else:
         raise ValueError(f"unknown strategy {strategy!r}")

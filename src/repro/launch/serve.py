@@ -131,6 +131,9 @@ def main() -> None:
                     metavar="LO:HI")
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--cache-len", type=int, default=256)
+    ap.add_argument("--horizon", type=int, default=8,
+                    help="decode steps per fused device program (1 = "
+                         "token-synchronous host loop)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--compare-static", action="store_true",
                     help="replay the workload through static-batched "
@@ -178,7 +181,7 @@ def main() -> None:
     workload = make_workload(rng, args.requests, args.prompt_len,
                              args.max_new, cfg.vocab, args.rate)
     sched = Scheduler(api, params, max_batch=args.max_batch,
-                      cache_len=args.cache_len,
+                      cache_len=args.cache_len, horizon=args.horizon,
                       temperature=args.temperature,
                       rng=jax.random.PRNGKey(args.seed))
     results, rep = serve_continuous(sched, workload)

@@ -4,6 +4,11 @@ The weight leaf is either a jnp array [N, M] (training / dense serving) or
 a ``CrewMatrixUniform`` (serving after ``repro.serve.convert`` CREW-izes the
 checkpoint).  ``apply`` dispatches on the leaf type so every model in the
 framework gets CREW support for free.
+
+``apply(..., activation=...)`` fuses the layer's bias and activation into
+the matmul (DESIGN.md §3 "epilogue fusion"): on the CREW Pallas paths the
+epilogue runs on the VMEM-resident output block, so an FC layer is one
+kernel instead of kernel + bias-add + activation.
 """
 from __future__ import annotations
 
@@ -14,6 +19,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from ..core.convert import CrewMatrixUniform, CrewMatrixVar
+from ..kernels.crew_matmul import EPILOGUE_ACTIVATIONS
 from ..kernels.ops import crew_matmul
 
 __all__ = ["init", "spec", "apply"]
@@ -63,12 +69,15 @@ def crew_spec(in_axis: Optional[str], out_axis: Optional[str], *, bias: bool = F
     return s
 
 
-def apply(params, x: jnp.ndarray, *, crew_strategy: str = "auto") -> jnp.ndarray:
+def apply(params, x: jnp.ndarray, *, crew_strategy: str = "auto",
+          activation: Optional[str] = None) -> jnp.ndarray:
     w = params["w"]
     if isinstance(w, (CrewMatrixUniform, CrewMatrixVar)):
-        y = crew_matmul(x, w, strategy=crew_strategy)
-    else:
-        y = x @ w.astype(x.dtype)
+        return crew_matmul(x, w, strategy=crew_strategy,
+                           bias=params.get("b"), activation=activation)
+    y = x @ w.astype(x.dtype)
     if "b" in params:
         y = y + params["b"].astype(y.dtype)
+    if activation is not None:
+        y = EPILOGUE_ACTIVATIONS[activation](y)
     return y

@@ -1,4 +1,10 @@
-"""Feed-forward blocks: SwiGLU (llama family) and GELU (encoder family)."""
+"""Feed-forward blocks: SwiGLU (llama family) and GELU (encoder family).
+
+Activations ride the linear layers' fused epilogue (DESIGN.md §3): the
+gate/up projection emits its activation from the same kernel that does
+the matmul, so a CREW-served FFN never round-trips the [.., d_ff] hidden
+state through HBM between matmul and nonlinearity.
+"""
 from __future__ import annotations
 
 import jax
@@ -29,10 +35,10 @@ def swiglu_spec(stack_axes=()):
 
 
 def swiglu_apply(params, x, *, crew_strategy="auto"):
-    g = linear.apply(params["gate"], x, crew_strategy=crew_strategy)
+    g = linear.apply(params["gate"], x, crew_strategy=crew_strategy,
+                     activation="silu")
     u = linear.apply(params["up"], x, crew_strategy=crew_strategy)
-    return linear.apply(params["down"], jax.nn.silu(g) * u,
-                        crew_strategy=crew_strategy)
+    return linear.apply(params["down"], g * u, crew_strategy=crew_strategy)
 
 
 def gelu_init(rng, d_model: int, d_ff: int, *, dtype=jnp.float32, stack=()):
@@ -52,5 +58,6 @@ def gelu_spec(stack_axes=()):
 
 
 def gelu_apply(params, x, *, crew_strategy="auto"):
-    h = jax.nn.gelu(linear.apply(params["up"], x, crew_strategy=crew_strategy))
+    h = linear.apply(params["up"], x, crew_strategy=crew_strategy,
+                     activation="gelu")
     return linear.apply(params["down"], h, crew_strategy=crew_strategy)

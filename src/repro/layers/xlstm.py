@@ -205,5 +205,6 @@ def slstm_apply(params, x, state=None, *, n_heads: int,
     step = lambda st, wx_t: _slstm_step(params["r"], params["b"], n_heads, st, wx_t)
     state, hs = jax.lax.scan(step, state, jnp.moveaxis(wx, 1, 0))
     y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)              # [B, S, d]
-    h = jax.nn.gelu(linear.apply(params["up"], y, crew_strategy=crew_strategy))
+    h = linear.apply(params["up"], y, crew_strategy=crew_strategy,
+                     activation="gelu")
     return linear.apply(params["down"], h, crew_strategy=crew_strategy), state

@@ -44,6 +44,7 @@ __all__ = [
     "set_store",
     "lookup",
     "make_key",
+    "epilogue_tag",
     "measure_crew_matmul",
 ]
 
@@ -53,9 +54,29 @@ DEFAULT_CANDIDATES: Tuple[str, ...] = (
 _ENV_PATH = "REPRO_AUTOTUNE_CACHE"
 
 
-def make_key(b: int, n: int, m: int, k: int, width: int, backend: str) -> str:
-    """Dispatch key for one apply shape (all entries static at trace time)."""
-    return f"b{b}-n{n}-m{m}-k{k}-w{width}-{backend}"
+def epilogue_tag(has_bias: bool, activation: Optional[str]) -> str:
+    """Canonical epilogue component of a dispatch key.
+
+    The fused bias/activation epilogue (DESIGN.md §3) changes the relative
+    cost of the candidate strategies — the Pallas paths absorb it into the
+    last n-block while the XLA paths pay separate elementwise ops — so an
+    epilogue'd apply shape must never reuse a plain shape's measurement.
+    """
+    parts = (["bias"] if has_bias else []) + ([activation] if activation else [])
+    return "+".join(parts) or "none"
+
+
+def make_key(b: int, n: int, m: int, k: int, width: int, backend: str,
+             epilogue: str = "none") -> str:
+    """Dispatch key for one apply shape (all entries static at trace time).
+
+    ``epilogue`` is an :func:`epilogue_tag`; "none" keeps the historical
+    key format so pre-epilogue persisted caches stay valid.
+    """
+    key = f"b{b}-n{n}-m{m}-k{k}-w{width}-{backend}"
+    if epilogue != "none":
+        key += f"-e{epilogue}"
+    return key
 
 
 @dataclasses.dataclass
@@ -190,6 +211,8 @@ def measure_crew_matmul(
     repeats: int = 3,
     interpret: bool = True,
     block_m: int = 1024,
+    bias=None,
+    activation: Optional[str] = None,
     store: Optional[AutotuneStore] = None,
     remeasure: bool = False,
     timer: Callable[[Callable[[], None], int], float] = _default_timer,
@@ -200,7 +223,9 @@ def measure_crew_matmul(
     timing via a warmup call) and timed best-of-``repeats`` with
     ``block_until_ready``.  A candidate that fails to lower/execute (e.g. a
     Pallas width the interpreter rejects) scores ``inf`` instead of
-    aborting the sweep.  Returns the (possibly cached) Measurement.
+    aborting the sweep.  ``bias``/``activation`` measure the fused-epilogue
+    variant of the apply and record under the epilogue-tagged key.
+    Returns the (possibly cached) Measurement.
     """
     import jax
 
@@ -210,7 +235,9 @@ def measure_crew_matmul(
     b = 1
     for d in x.shape[:-1]:
         b *= int(d)
-    key = make_key(b, cm.n_in, cm.n_out, cm.k, cm.width, jax.default_backend())
+    epi = epilogue_tag(bias is not None, activation)
+    key = make_key(b, cm.n_in, cm.n_out, cm.k, cm.width, jax.default_backend(),
+                   epilogue=epi)
     cached = store.get(key)
     if cached is not None and not remeasure:
         return cached
@@ -218,7 +245,8 @@ def measure_crew_matmul(
     times: Dict[str, float] = {}
     for strat in candidates:
         fn = jax.jit(functools.partial(
-            crew_matmul, strategy=strat, interpret=interpret, block_m=block_m))
+            crew_matmul, strategy=strat, interpret=interpret, block_m=block_m,
+            bias=bias, activation=activation))
         try:
             fn(x, cm).block_until_ready()  # compile + warmup
             times[strat] = timer(

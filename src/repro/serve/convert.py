@@ -164,6 +164,7 @@ def autotune_crew_params(
     params,
     *,
     batch_sizes: Tuple[int, ...] = (1, 8),
+    activations: Tuple[Optional[str], ...] = (None,),
     dtype=jnp.float32,
     interpret: bool = True,
     repeats: int = 2,
@@ -173,13 +174,21 @@ def autotune_crew_params(
     """Warm the measured-dispatch cache for every CREW leaf in a param tree.
 
     Walks the converted tree, and for each *distinct* apply shape
-    (B, N, M, K, width) — stacked ``[L, N, W]`` leaves contribute one 2-D
-    slice, since ``lax.scan`` applies the same shape per layer — times the
-    candidate strategies via ``repro.perf.measure_crew_matmul`` on a random
-    activation of each requested batch size.  Subsequent
+    (B, N, M, K, width, epilogue) — stacked ``[L, N, W]`` leaves contribute
+    one 2-D slice, since ``lax.scan`` applies the same shape per layer —
+    times the candidate strategies via ``repro.perf.measure_crew_matmul``
+    on a random activation of each requested batch size.  Subsequent
     ``crew_matmul(strategy="auto")`` calls (the serve engine's default) then
     dispatch on measurement instead of the analytical prior.  Returns
     {dispatch key: winning strategy}.
+
+    Leaves whose parent carries a bias (``{"w", "b"}``) are measured with
+    the fused bias epilogue, so the warmed key matches what
+    ``layers.linear.apply`` dispatches at serve time; ``activations``
+    optionally sweeps fused-activation variants (e.g. ``("silu",)`` for
+    SwiGLU gate projections, ``(None, "gelu")`` for GELU FFNs).  Epilogue
+    combinations not warmed here fall back to the analytical prior —
+    never to a differently-epilogued measurement (repro.perf key tags).
 
     ``batch_sizes`` are *flattened token* batches: ``crew_matmul`` collapses
     every leading dim into the dispatch key's B, so decode steps key on the
@@ -189,14 +198,24 @@ def autotune_crew_params(
     """
     from ..perf import autotune
 
-    leaves = [
-        leaf for leaf in jax.tree.leaves(
-            params, is_leaf=lambda x: isinstance(x, CrewMatrixUniform))
-        if isinstance(leaf, CrewMatrixUniform)
-    ]
+    leaves: List[Tuple[CrewMatrixUniform, bool]] = []
+
+    def walk(node):
+        if isinstance(node, dict):
+            w = node.get("w")
+            if isinstance(w, CrewMatrixUniform):
+                leaves.append((w, "b" in node))
+            for key, val in node.items():
+                if key != "w":
+                    walk(val)
+        elif isinstance(node, (list, tuple)):
+            for val in node:
+                walk(val)
+
+    walk(params)
     rng = np.random.default_rng(seed)
     winners = {}
-    for leaf in leaves:
+    for leaf, has_bias in leaves:
         words = np.asarray(leaf.words).reshape(-1, *leaf.words.shape[-2:])[0]
         uniq = np.asarray(leaf.uniq).reshape(-1, *leaf.uniq.shape[-2:])[0]
         cm = CrewMatrixUniform(
@@ -205,17 +224,22 @@ def autotune_crew_params(
             width=leaf.width,
             n_out=leaf.n_out,
         )
+        bias = jnp.zeros((cm.n_out,), dtype=dtype) if has_bias else None
         for b in batch_sizes:
-            key = autotune.make_key(b, cm.n_in, cm.n_out, cm.k, cm.width,
-                                    jax.default_backend())
-            if key in winners:
-                continue
-            x = jnp.asarray(
-                rng.standard_normal((b, cm.n_in)).astype(np.float32),
-                dtype=dtype)
-            rec = autotune.measure_crew_matmul(
-                x, cm, repeats=repeats, interpret=interpret, store=store)
-            winners[key] = rec.strategy
+            for act in activations:
+                key = autotune.make_key(
+                    b, cm.n_in, cm.n_out, cm.k, cm.width,
+                    jax.default_backend(),
+                    epilogue=autotune.epilogue_tag(has_bias, act))
+                if key in winners:
+                    continue
+                x = jnp.asarray(
+                    rng.standard_normal((b, cm.n_in)).astype(np.float32),
+                    dtype=dtype)
+                rec = autotune.measure_crew_matmul(
+                    x, cm, repeats=repeats, interpret=interpret, store=store,
+                    bias=bias, activation=act)
+                winners[key] = rec.strategy
     return winners
 
 

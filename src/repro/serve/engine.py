@@ -1,11 +1,25 @@
 """Batched serving engine: prefill + decode loop with sampling.
 
-One jit'd prefill and one jit'd decode step per (batch, prompt_len,
-cache_len) bucket; the decode loop runs as ``lax.scan`` over generated
-positions so the whole generation is a single XLA program.  Works with
-dense or CREW-converted params interchangeably (linear.apply dispatches on
-the weight leaf type) — the quickstart example serves both and diffs the
-outputs token-by-token.
+Two jit'd programs per bucket, with the KV cache *donated* between them:
+
+* ``_prefill_program`` — full-sequence forward that fills the cache and
+  samples the first token.  Keyed on ``(batch, prompt_len, cache_len)``
+  only, so sweeping ``max_new`` (e.g. static-wave baselines with
+  per-wave lengths) re-uses one compiled prefill.
+* ``_decode_program`` — ``lax.scan`` over the generated positions, so
+  the whole decode loop is a single XLA program with no host round-trip
+  per token.  The cache argument is donated (``donate_argnums``): the
+  prefill's output buffers are reused in place instead of being copied
+  when the scan's first cache update would otherwise force a fresh
+  allocation while the caller still holds the reference.
+
+Per-token logprobs gather the sampled logit and subtract a logsumexp —
+never materializing a full-vocab ``log_softmax`` per step just to read
+one column.
+
+Works with dense or CREW-converted params interchangeably (linear.apply
+dispatches on the weight leaf type) — the quickstart example serves both
+and diffs the outputs token-by-token.
 
 The default ``crew_strategy="auto"`` resolves per apply shape at trace
 time via the repro.perf autotune store (measured winners, analytical prior
@@ -37,11 +51,48 @@ def _sample(key, logits, temperature: float):
     return jax.random.categorical(key, logits / temperature, axis=-1).astype(jnp.int32)
 
 
+def _sampled_logprob(logits: jnp.ndarray, tok: jnp.ndarray) -> jnp.ndarray:
+    """log p(tok) from [B, vocab] logits without a full-vocab log_softmax:
+    one gather + one logsumexp reduction (log_softmax materializes — and
+    XLA keeps live — a [B, vocab] f32 tensor per step just to read one
+    column per lane)."""
+    picked = jnp.take_along_axis(logits, tok[:, None], axis=-1)[:, 0]
+    return picked - jax.scipy.special.logsumexp(logits, axis=-1)
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("api", "max_new", "cache_len", "temperature",
-                     "crew_strategy"),
+    static_argnames=("api", "cache_len", "temperature", "crew_strategy"),
 )
+def _prefill_program(api: ModelApi, params, prompts, key, cache_len: int,
+                     temperature: float, crew_strategy: str):
+    logits, cache = api.prefill(params, {"tokens": prompts}, cache_len,
+                                crew_strategy=crew_strategy)
+    first = _sample(key, logits[:, -1], temperature)
+    return first, cache
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("api", "temperature", "crew_strategy"),
+    donate_argnums=(2,),  # the prefill-filled KV cache
+)
+def _decode_program(api: ModelApi, params, cache, first, keys,
+                    temperature: float, crew_strategy: str):
+    def step(carry, key):
+        tok, cache = carry
+        logits, cache = api.decode_step(params, tok[:, None], cache,
+                                        crew_strategy=crew_strategy)
+        nxt = _sample(key, logits, temperature)
+        return (nxt, cache), (nxt, _sampled_logprob(logits, nxt))
+
+    (_, cache), (toks, lps) = jax.lax.scan(step, (first, cache), keys)
+    # the final cache is returned (and discarded by generate) so the
+    # donated input cache has an output to alias — without it XLA has
+    # nothing to wire the donation to and the buffers copy.
+    return toks, lps, cache
+
+
 def generate(
     api: ModelApi,
     params,
@@ -54,7 +105,7 @@ def generate(
     crew_strategy: str = "auto",
 ) -> Dict[str, jnp.ndarray]:
     """prompts [B, S] int32 -> {"tokens": [B, max_new], "logprobs": ...}."""
-    b, s = prompts.shape
+    _, s = prompts.shape
     cache_len = cache_len or (s + max_new)
     rng = rng if rng is not None else jax.random.PRNGKey(0)
     # One split up front: key 0 samples the first token, keys 1..max_new-1
@@ -62,19 +113,9 @@ def generate(
     # code consumed it in _sample and then re-split it for the scan keys.)
     keys = jax.random.split(rng, max_new)
 
-    logits, cache = api.prefill(params, {"tokens": prompts}, cache_len,
-                                crew_strategy=crew_strategy)
-    first = _sample(keys[0], logits[:, -1], temperature)
-
-    def step(carry, key):
-        tok, cache = carry
-        logits, cache = api.decode_step(params, tok[:, None], cache,
-                                        crew_strategy=crew_strategy)
-        nxt = _sample(key, logits, temperature)
-        lp = jax.nn.log_softmax(logits, axis=-1)
-        lp_tok = jnp.take_along_axis(lp, nxt[:, None], axis=-1)[:, 0]
-        return (nxt, cache), (nxt, lp_tok)
-
-    (_, _), (toks, lps) = jax.lax.scan(step, (first, cache), keys[1:])
+    first, cache = _prefill_program(api, params, prompts, keys[0], cache_len,
+                                    temperature, crew_strategy)
+    toks, lps, _ = _decode_program(api, params, cache, first, keys[1:],
+                                   temperature, crew_strategy)
     tokens = jnp.concatenate([first[None], toks], axis=0).T  # [B, max_new]
     return {"tokens": tokens, "logprobs": lps.T}

@@ -5,29 +5,42 @@ prompt length and one ``max_new``, so mixed traffic either pads to the
 worst case or serializes.  :class:`Scheduler` instead owns a request
 queue and a slot-based KV cache and interleaves prefill with decode:
 
-* **admission** — each step, queued prompts are admitted into free slots.
-  A prompt is padded to the smallest configured *prefill bucket* that
-  holds it, runs the ordinary ``api.prefill`` at batch 1, and its KV is
-  written into the slot's stripe of the shared cache.  The sampled first
-  token and the true (unpadded) length become the slot's state.
-* **decode** — one fused ``api.decode_step`` across all active slots per
-  step.  The active slots are gathered out of the slot cache, decoded
-  with a *per-slot* length vector (each lane RoPEs and scatters at its
-  own position — see ``layers.attention.attend_decode``), and scattered
-  back.  The lane count is rounded up to the next *batch bucket* and
-  padded with a scratch slot so the program set stays fixed.
-* **retire + backfill** — slots whose request hit EOS or its per-request
-  ``max_new`` are freed and refilled from the queue on the next step, so
-  short and long requests coexist without padding the whole batch to the
-  longest.
+* **admission** — at each horizon boundary, queued prompts are admitted
+  into free slots.  A prompt is padded to the smallest configured
+  *prefill bucket* that holds it, runs the ordinary ``api.prefill`` at
+  batch 1, and its KV is written into the slot's stripe of the shared
+  cache.  The sampled first token and the true (unpadded) length become
+  the slot's state.  Prefill dispatches are queued back-to-back and
+  synced once, so the host's admit bookkeeping overlaps the device work.
+* **horizon decode** — one fused program runs ``horizon`` decode steps
+  (``lax.scan``, default H=8) across all active slots.  Each scan
+  iteration gathers the live lanes out of the slot cache, decodes one
+  token per lane with a *per-slot* length vector (each lane RoPEs and
+  scatters at its own position — see ``layers.attention.attend_decode``),
+  and scatters back.  EOS / per-request ``max_new`` exhaustion is masked
+  *on device*: a retired lane keeps stepping — fixed-shape program — but
+  its reads and KV writes are redirected to the scratch slot at a pinned
+  position, so it can neither corrupt a live slot nor overrun its own
+  cache.  The host syncs **once per horizon**, not once per token.
+* **retire + backfill** — at the horizon boundary the host replays the
+  emitted-token mask, retires requests that hit EOS or ``max_new``, and
+  backfills freed slots from the queue on the next admit, so short and
+  long requests coexist without padding the whole batch to the longest.
 
 The hot loop is therefore a fixed set of XLA programs: one prefill
-program per prefill bucket and one decode program per batch bucket —
+program per prefill bucket and one horizon program per batch bucket —
 no per-request retracing (``program_counts()`` exposes the live compile
-counts; tests pin them).  Slot state (last tokens, lengths, done mask,
-per-request RNG keys, generated counts) is carried as arrays; CREW
-params flow through the same ``crew_strategy="auto"`` autotuned dispatch
-as the one-shot engine; under an active mesh the programs trace inside
+counts; tests pin them).  The slot KV cache — the only multi-megabyte
+state threaded between programs — is **donated** through every prefill
+and horizon call, so it is updated in place instead of being copied per
+dispatch (the [nb]-sized lane vectors are cheap and passed by value).
+While a horizon is in flight the host pre-buckets the queue head (async
+overlap); the request queue and the free-slot pool are O(1) deques.
+
+Slot state (last tokens, lengths, done mask, per-request RNG keys,
+generated counts) is carried as arrays; CREW params flow through the
+same ``crew_strategy="auto"`` autotuned dispatch as the one-shot engine;
+under an active mesh the programs trace inside
 ``sharding_ctx(mesh, SERVE_RULES)`` so ``constrain`` calls bind.
 
 Requires the transformer-family cache contract ``{"k","v","len"}`` with
@@ -36,9 +49,11 @@ prefill-with-cache path are rejected at construction).
 """
 from __future__ import annotations
 
+import collections
 import contextlib
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+import itertools
+from typing import Deque, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -48,9 +63,11 @@ from ..dist.ctx import sharding_ctx
 from ..dist.sharding import SERVE_RULES
 from ..models import ModelApi
 
-__all__ = ["Scheduler", "Request", "Completion", "DEFAULT_BUCKETS"]
+__all__ = ["Scheduler", "Request", "Completion", "DEFAULT_BUCKETS",
+           "DEFAULT_HORIZON"]
 
 DEFAULT_BUCKETS: Tuple[int, ...] = (16, 32, 64, 128)
+DEFAULT_HORIZON = 8
 
 
 @dataclasses.dataclass
@@ -60,6 +77,7 @@ class Request:
     prompt: np.ndarray          # [S] int32, unpadded
     max_new: int
     eos_id: Optional[int]
+    padded: Optional[np.ndarray] = None  # [1, bucket] admit-ready form
 
 
 @dataclasses.dataclass
@@ -73,17 +91,23 @@ class Completion:
 
 
 class Scheduler:
-    """Continuous-batching engine over bucketed prefill/decode programs.
+    """Continuous-batching engine over bucketed prefill/horizon programs.
 
     Args:
       api / params: as for ``serve.generate`` (dense or CREW-converted).
       max_batch: number of concurrent decode slots (one extra scratch
-        slot is allocated internally for batch-bucket padding).
+        slot is allocated internally for batch-bucket padding and for
+        mid-horizon-retired lanes).
       cache_len: per-slot KV capacity; every admitted request must fit
         ``prompt_len + max_new <= cache_len``.
       buckets: prefill pad lengths, ascending; a prompt compiles against
         the smallest bucket that holds it.  None derives the default set
         clipped to ``cache_len``.
+      horizon: decode steps per fused program dispatch (H).  The host
+        syncs once per horizon; ``horizon=1`` is the token-synchronous
+        baseline.  Retirement happens at horizon boundaries, so a lane
+        whose request dies mid-horizon idles (masked, scratch-directed)
+        until the boundary — ``metrics["wasted_lane_steps"]`` counts it.
       temperature / crew_strategy: static sampling and CREW dispatch
         knobs, shared by all programs (as in ``serve.generate``).
       rng: base PRNG key; each request derives its own key stream via
@@ -100,6 +124,7 @@ class Scheduler:
         max_batch: int = 8,
         cache_len: int = 256,
         buckets: Optional[Sequence[int]] = None,
+        horizon: int = DEFAULT_HORIZON,
         temperature: float = 0.0,
         crew_strategy: str = "auto",
         rng: Optional[jnp.ndarray] = None,
@@ -111,10 +136,13 @@ class Scheduler:
         if not hasattr(api._mod, "prefill"):
             raise NotImplementedError(
                 f"{api.cfg.family} has no prefill-with-cache path")
+        if horizon < 1:
+            raise ValueError("horizon must be >= 1")
         self._api = api
         self._params = params
         self._max_batch = int(max_batch)
         self._cache_len = int(cache_len)
+        self._horizon = int(horizon)
         if buckets is None:
             buckets = ([b for b in DEFAULT_BUCKETS if b <= self._cache_len]
                        or [self._cache_len])
@@ -141,7 +169,8 @@ class Scheduler:
         self._batch_buckets = tuple(bb)
 
         # slot cache: max_batch real slots + 1 scratch slot for padding
-        # lanes (duplicate scatter indices must never hit a live slot).
+        # lanes and mid-horizon-retired lanes (duplicate scatter indices
+        # must never hit a live slot).
         abs_cache = api.abstract_cache(self._max_batch + 1, self._cache_len,
                                        dtype=cache_dtype)
         if not (isinstance(abs_cache, dict)
@@ -161,22 +190,24 @@ class Scheduler:
         self._slot_done = np.ones(nb, bool)             # free/done mask
         self._slot_key = np.zeros((nb, 2), np.uint32)   # per-request key
 
-        self._queue: List[Request] = []
+        self._queue: Deque[Request] = collections.deque()
+        self._free: Deque[int] = collections.deque(range(nb))
         self._live: Dict[int, Request] = {}             # rid -> request
-        self._out_toks: Dict[int, List[int]] = {}
-        self._out_lps: Dict[int, List[float]] = {}
+        self._out_toks: Dict[int, list] = {}
+        self._out_lps: Dict[int, list] = {}
         self._admit_step: Dict[int, int] = {}
         self._results: Dict[int, Completion] = {}
         self._next_rid = 0
 
-        self.metrics = {"steps": 0, "prefills": 0, "decode_steps": 0,
-                        "decode_lanes": 0, "padded_lanes": 0}
+        self.metrics = {"steps": 0, "prefills": 0, "horizons": 0,
+                        "decode_steps": 0, "decode_lanes": 0,
+                        "padded_lanes": 0, "wasted_lane_steps": 0}
 
-        # donation frees the previous cache buffer per step on
-        # accelerators; the CPU backend would just warn.
-        donate = (0, 1) if jax.default_backend() != "cpu" else ()
-        self._prefill_fn = jax.jit(self._prefill_impl, donate_argnums=donate)
-        self._decode_fn = jax.jit(self._decode_impl, donate_argnums=donate)
+        # Donation updates the slot KV cache in place per dispatch instead
+        # of copying it (the CPU jaxlib this repo pins aliases the buffers
+        # too); tests/test_decode_horizon.py pins the declared aliasing.
+        self._prefill_fn = jax.jit(self._prefill_impl, donate_argnums=(0, 1))
+        self._horizon_fn = jax.jit(self._horizon_impl, donate_argnums=(0, 1))
 
     # ------------------------------------------------------------------
     # Programs (one compile per prefill bucket / batch bucket)
@@ -186,12 +217,6 @@ class Scheduler:
         if self._mesh is None:
             return contextlib.nullcontext()
         return sharding_ctx(self._mesh, SERVE_RULES)
-
-    def _sample(self, key, logits):
-        if self._temperature == 0.0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return jax.random.categorical(
-            key, logits / self._temperature, axis=-1).astype(jnp.int32)
 
     def _prefill_impl(self, k_all, v_all, params, prompt, true_len, slot,
                       req_key):
@@ -209,39 +234,71 @@ class Scheduler:
             crew_strategy=self._crew_strategy)
         last = jax.lax.dynamic_index_in_dim(
             logits, true_len - 1, axis=1, keepdims=False)[0]     # [vocab]
-        tok = self._sample(jax.random.fold_in(req_key, 0), last)
-        lp = jax.nn.log_softmax(last)[tok]
+        if self._temperature == 0.0:
+            tok = jnp.argmax(last).astype(jnp.int32)
+        else:
+            tok = jax.random.categorical(
+                jax.random.fold_in(req_key, 0),
+                last / self._temperature).astype(jnp.int32)
+        # gather + logsumexp, not a full-vocab log_softmax read at [tok]
+        lp = last[tok] - jax.scipy.special.logsumexp(last)
         # quantize on insert when the slot cache is int8 (prefill emits
         # bf16 KV; decode-time writes go through the same helper)
         k_all = k_all.at[:, slot].set(_maybe_quant_kv(cache["k"][:, 0], k_all))
         v_all = v_all.at[:, slot].set(_maybe_quant_kv(cache["v"][:, 0], v_all))
         return tok, lp, k_all, v_all
 
-    def _decode_impl(self, k_all, v_all, params, slot_ids, toks, lens,
-                     req_keys, steps):
-        """One fused decode step over the gathered active lanes.
+    def _horizon_impl(self, k_all, v_all, params, slot_ids, toks, lens,
+                      req_keys, steps, rem, eos, alive):
+        """H fused decode steps over the gathered lanes — one host sync.
 
-        slot_ids/toks/lens/req_keys/steps are [nb] lane vectors (nb = the
-        batch bucket); padding lanes point at the scratch slot.
+        slot_ids/toks/lens/req_keys/steps/rem/eos/alive are [nb] lane
+        vectors (nb = the batch bucket); padding lanes point at the
+        scratch slot with ``alive=False``.  Per scan iteration each live
+        lane decodes one token at its own cache position; a lane that
+        samples EOS or exhausts ``rem`` (its remaining ``max_new`` budget)
+        flips dead and keeps stepping against the scratch slot at a
+        pinned position — the program is fixed-shape for every iteration.
+        Returns per-lane [nb, H] token/logprob/emitted-mask panels plus
+        the updated (donated) cache.
         """
-        k_sel = k_all[:, slot_ids]
-        v_sel = v_all[:, slot_ids]
-        logits, new = self._api.decode_step(
-            params, toks[:, None], {"k": k_sel, "v": v_sel, "len": lens},
-            crew_strategy=self._crew_strategy)
-        keys = jax.vmap(jax.random.fold_in)(req_keys, steps)
-        if self._temperature == 0.0:
-            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        else:
-            nxt = jax.vmap(
-                lambda k, l: jax.random.categorical(
-                    k, l / self._temperature).astype(jnp.int32)
-            )(keys, logits)
-        lps = jnp.take_along_axis(
-            jax.nn.log_softmax(logits, axis=-1), nxt[:, None], axis=-1)[:, 0]
-        k_all = k_all.at[:, slot_ids].set(new["k"])
-        v_all = v_all.at[:, slot_ids].set(new["v"])
-        return nxt, lps, k_all, v_all
+        scratch = self._max_batch
+
+        def body(carry, _):
+            k_all, v_all, tok, lens, steps, rem, alive = carry
+            sid = jnp.where(alive, slot_ids, scratch)
+            ln = jnp.where(alive, lens, 0)
+            k_sel = k_all[:, sid]
+            v_sel = v_all[:, sid]
+            logits, new = self._api.decode_step(
+                params, tok[:, None], {"k": k_sel, "v": v_sel, "len": ln},
+                crew_strategy=self._crew_strategy)
+            if self._temperature == 0.0:
+                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            else:
+                keys = jax.vmap(jax.random.fold_in)(req_keys, steps)
+                nxt = jax.vmap(
+                    lambda k, l: jax.random.categorical(
+                        k, l / self._temperature).astype(jnp.int32)
+                )(keys, logits)
+            lp = (jnp.take_along_axis(logits, nxt[:, None], axis=-1)[:, 0]
+                  - jax.scipy.special.logsumexp(logits, axis=-1))
+            k_all = k_all.at[:, sid].set(new["k"])
+            v_all = v_all.at[:, sid].set(new["v"])
+            emitted = alive
+            step1 = emitted.astype(jnp.int32)
+            rem = rem - step1
+            alive = alive & (rem > 0) & jnp.where(eos >= 0, nxt != eos, True)
+            tok = jnp.where(emitted, nxt, tok)
+            lens = lens + step1
+            steps = steps + step1
+            return (k_all, v_all, tok, lens, steps, rem, alive), \
+                (nxt, lp, emitted)
+
+        carry = (k_all, v_all, toks, lens, steps, rem, alive)
+        (k_all, v_all, *_), (toks_h, lps_h, emit_h) = jax.lax.scan(
+            body, carry, None, length=self._horizon)
+        return toks_h.T, lps_h.T, emit_h.T, k_all, v_all   # [nb, H] panels
 
     def program_counts(self) -> Dict[str, int]:
         """Live XLA program counts — {bucket set} sized, not request sized.
@@ -251,7 +308,7 @@ class Scheduler:
         def size(fn):
             return getattr(fn, "_cache_size", lambda: -1)()
         return {"prefill": size(self._prefill_fn),
-                "decode": size(self._decode_fn)}
+                "decode": size(self._horizon_fn)}
 
     # ------------------------------------------------------------------
     # Queue API
@@ -295,6 +352,24 @@ class Scheduler:
                 return b
         return self._max_batch
 
+    def _pad_prompt(self, req: Request) -> np.ndarray:
+        if req.padded is None:
+            bucket = self._bucket_for(req.prompt.size)
+            padded = np.zeros((1, bucket), np.int32)
+            padded[0, :req.prompt.size] = req.prompt
+            req.padded = padded
+        return req.padded
+
+    def _prepare_queue_head(self) -> None:
+        """Bucket/pad the prompts the next admit can possibly touch.
+
+        Called right after a horizon dispatch: this host work runs while
+        the device is still executing the in-flight program (async
+        overlap), so the next boundary's admissions start from ready
+        arrays."""
+        for req in itertools.islice(self._queue, self._max_batch):
+            self._pad_prompt(req)
+
     # ------------------------------------------------------------------
     # Engine loop
     # ------------------------------------------------------------------
@@ -313,6 +388,7 @@ class Scheduler:
         self._slot_done[slot] = True
         self._slot_len[slot] = 0
         self._slot_ngen[slot] = 0
+        self._free.append(slot)
 
     def _record(self, slot: int, tok: int, lp: float) -> bool:
         """Append one generated token; returns True if the slot retired."""
@@ -329,13 +405,20 @@ class Scheduler:
         return False
 
     def _admit(self) -> None:
-        free = [s for s in range(self._max_batch) if self._slot_rid[s] < 0]
-        while free and self._queue:
-            slot = free.pop(0)
-            req = self._queue.pop(0)
-            bucket = self._bucket_for(req.prompt.size)
-            padded = np.zeros((1, bucket), np.int32)
-            padded[0, :req.prompt.size] = req.prompt
+        """Fill free slots from the queue; one sync for all prefills.
+
+        The prefill dispatches are queued back-to-back without reading
+        their results, so the host's slot bookkeeping for request *i+1*
+        overlaps the device running request *i*'s prefill; the sampled
+        first tokens are read once at the end (a retirement there —
+        prefill-sampled EOS — frees the slot for the *next* boundary,
+        matching the pre-horizon semantics)."""
+        admitted = []
+        n_admit = min(len(self._free), len(self._queue))
+        for _ in range(n_admit):
+            slot = self._free.popleft()
+            req = self._queue.popleft()
+            padded = self._pad_prompt(req)
             req_key = np.asarray(jax.random.fold_in(self._base_key, req.rid))
             with self._ctx():
                 tok, lp, self._k, self._v = self._prefill_fn(
@@ -352,10 +435,12 @@ class Scheduler:
             self._slot_len[slot] = req.prompt.size
             self._slot_ngen[slot] = 0
             self._slot_key[slot] = req_key
+            admitted.append((slot, tok, lp))
+        for slot, tok, lp in admitted:
             self._record(slot, int(tok), float(lp))
 
     def step(self) -> bool:
-        """Admit, run one fused decode step, retire; True while busy.
+        """Admit, run one fused H-step horizon, retire; True while busy.
 
         An empty queue with no active slots is an idle drain: returns
         False without launching any program.
@@ -376,24 +461,44 @@ class Scheduler:
         lens = np.zeros(nb, np.int32)
         keys = np.zeros((nb, 2), np.uint32)
         steps = np.zeros(nb, np.int32)
+        rem = np.zeros(nb, np.int32)
+        eos = np.full(nb, -1, np.int32)
+        alive = np.zeros(nb, bool)
         for i, s in enumerate(active):
+            req = self._live[int(self._slot_rid[s])]
             toks[i] = self._slot_tok[s]
             lens[i] = self._slot_len[s]
             keys[i] = self._slot_key[s]
             steps[i] = self._slot_ngen[s]
+            rem[i] = req.max_new - int(self._slot_ngen[s])
+            eos[i] = -1 if req.eos_id is None else int(req.eos_id)
+            alive[i] = True
         with self._ctx():
-            nxt, lps, self._k, self._v = self._decode_fn(
+            toks_h, lps_h, emit_h, self._k, self._v = self._horizon_fn(
                 self._k, self._v, self._params, jnp.asarray(slot_ids),
                 jnp.asarray(toks), jnp.asarray(lens), jnp.asarray(keys),
-                jnp.asarray(steps))
-        nxt = np.asarray(nxt)
-        lps = np.asarray(lps)
-        self.metrics["decode_steps"] += 1
-        self.metrics["decode_lanes"] += len(active)
-        self.metrics["padded_lanes"] += nb - len(active)
+                jnp.asarray(steps), jnp.asarray(rem), jnp.asarray(eos),
+                jnp.asarray(alive))
+        # async overlap: pre-bucket the queue head while the horizon
+        # program is still executing on device, then sync once.
+        self._prepare_queue_head()
+        toks_h = np.asarray(toks_h)
+        lps_h = np.asarray(lps_h)
+        emit_h = np.asarray(emit_h)
+        h = self._horizon
+        emitted_total = int(emit_h[:len(active)].sum())
+        self.metrics["horizons"] += 1
+        self.metrics["decode_steps"] += h
+        self.metrics["decode_lanes"] += emitted_total
+        self.metrics["padded_lanes"] += (nb - len(active)) * h
+        self.metrics["wasted_lane_steps"] += nb * h - emitted_total
         for i, s in enumerate(active):
-            self._slot_len[s] += 1  # this step wrote the previous token's KV
-            self._record(s, int(nxt[i]), float(lps[i]))
+            for t in range(h):
+                if not emit_h[i, t]:
+                    break
+                self._slot_len[s] += 1  # step t wrote the prior token's KV
+                if self._record(s, int(toks_h[i, t]), float(lps_h[i, t])):
+                    break
         return bool(self._queue or self._live)
 
     def run(self) -> Dict[int, Completion]:

@@ -113,6 +113,59 @@ class TestAutoDispatch:
         np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)
 
 
+class TestEpilogueKeys:
+    def test_epilogue_tag_and_key_format(self):
+        from repro.perf.autotune import epilogue_tag
+        assert epilogue_tag(False, None) == "none"
+        assert epilogue_tag(True, None) == "bias"
+        assert epilogue_tag(False, "silu") == "silu"
+        assert epilogue_tag(True, "gelu") == "bias+gelu"
+        # "none" keeps the historical format (persisted caches stay valid)
+        assert make_key(1, 2, 3, 4, 5, "cpu") == "b1-n2-m3-k4-w5-cpu"
+        assert make_key(1, 2, 3, 4, 5, "cpu", epilogue="bias+gelu") \
+            == "b1-n2-m3-k4-w5-cpu-ebias+gelu"
+
+    def test_epilogue_measurement_keys_are_distinct(self, case):
+        """An epilogue'd apply shape records under its own key and never
+        shadows (or reads) the plain shape's measurement."""
+        import jax
+        from repro.kernels.ops import resolve_auto_strategy
+        from repro.perf.autotune import epilogue_tag
+        x, cm, _ = case
+        b = x.shape[0]
+        bias = jnp.zeros((cm.n_out,), jnp.float32)
+        rec = autotune.measure_crew_matmul(
+            x, cm, candidates=("xla-gather",), repeats=1,
+            bias=bias, activation="gelu")
+        tag = epilogue_tag(True, "gelu")
+        key_epi = make_key(b, cm.n_in, cm.n_out, cm.k, cm.width,
+                           jax.default_backend(), epilogue=tag)
+        key_plain = make_key(b, cm.n_in, cm.n_out, cm.k, cm.width,
+                             jax.default_backend())
+        assert autotune.lookup(key_epi) == rec.strategy == "xla-gather"
+        assert autotune.lookup(key_plain) is None
+        # auto dispatch: the epilogue'd call uses the measurement, the
+        # plain call still falls back to the analytical prior
+        assert resolve_auto_strategy(b, cm, epilogue=tag) == "xla-gather"
+        assert resolve_auto_strategy(b, cm) == pick_strategy(
+            b, cm.width, compute_rich=b >= 64)
+
+    def test_epilogue_measurement_is_correct(self, case):
+        """The epilogue'd measured path computes bias+activation output."""
+        import jax
+        x, cm, qm = case
+        bias = jnp.asarray(np.linspace(-1, 1, cm.n_out).astype(np.float32))
+        rec = autotune.measure_crew_matmul(
+            x, cm, repeats=1, bias=bias, activation="silu")
+        ref = jax.nn.silu(
+            np.asarray(x @ jnp.asarray(qm.q * float(qm.scale), jnp.float32))
+            + np.asarray(bias)[None])
+        out = np.asarray(crew_matmul(x, cm, strategy=rec.strategy,
+                                     bias=bias, activation="silu"))
+        np.testing.assert_allclose(out, np.asarray(ref), rtol=2e-4,
+                                   atol=2e-4)
+
+
 def test_serve_autotune_warms_cache(case):
     """autotune_crew_params walks a (stacked) CREW tree and records one
     winner per distinct (B, shape) key."""

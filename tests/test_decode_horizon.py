@@ -1,0 +1,153 @@
+"""Horizon decode + buffer donation (DESIGN.md §5): greedy token parity
+with per-request ``serve.generate`` for every horizon H in {1, 4, 8},
+donated-KV aliasing declared by the lowered prefill/decode/horizon
+programs, and program sets that stay bucket-bounded under horizon
+stepping."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.models import build_model
+from repro.serve import Scheduler, generate
+from repro.serve.engine import _decode_program, _prefill_program
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = ARCHS["qwen2-0.5b"].reduced()
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    return cfg, api, params
+
+
+def _ref_tokens(api, params, prompt, max_new):
+    out = generate(api, params, jnp.asarray(prompt)[None], max_new=max_new)
+    return np.asarray(out["tokens"][0])
+
+
+class TestHorizonParity:
+    @pytest.mark.parametrize("horizon", [1, 4, 8])
+    def test_greedy_parity_vs_generate(self, qwen, horizon):
+        """Mixed (prompt_len, max_new) requests through 2 slots: every
+        request's greedy tokens equal its one-shot ``serve.generate``
+        run regardless of H — retirement is delayed to the horizon
+        boundary, but a request's stream depends only on its own
+        prompt, so boundary slack never changes outputs."""
+        cfg, api, params = qwen
+        rng = np.random.default_rng(0)
+        prompts = [rng.integers(0, cfg.vocab, n).astype(np.int32)
+                   for n in (5, 12, 7, 16)]
+        # deliberately not multiples of H: lanes die mid-horizon
+        max_news = [3, 9, 6, 11]
+
+        sched = Scheduler(api, params, max_batch=2, cache_len=64,
+                          buckets=(8, 16), horizon=horizon)
+        rids = [sched.submit(p, max_new=m)
+                for p, m in zip(prompts, max_news)]
+        res = sched.run()
+
+        assert sorted(res) == sorted(rids)
+        for rid, p, m in zip(rids, prompts, max_news):
+            np.testing.assert_array_equal(
+                res[rid].tokens, _ref_tokens(api, params, p, m))
+            assert res[rid].logprobs.shape == (m,)
+            assert np.all(res[rid].logprobs <= 0)
+        # device steps come in whole horizons; the program set stays
+        # bucket-bounded (batch buckets {1, 2})
+        assert sched.metrics["decode_steps"] % horizon == 0
+        assert sched.metrics["decode_steps"] == \
+            sched.metrics["horizons"] * horizon
+        assert sched.program_counts()["decode"] <= 2
+
+    def test_eos_mid_horizon_retires_at_boundary(self, qwen):
+        """An EOS sampled at a non-boundary step stops the stream exactly
+        there (parity with generate's prefix), and the freed slot
+        backfills the queued request behind it."""
+        cfg, api, params = qwen
+        rng = np.random.default_rng(1)
+        a = rng.integers(0, cfg.vocab, 6).astype(np.int32)
+        b = rng.integers(0, cfg.vocab, 9).astype(np.int32)
+        ref_a = _ref_tokens(api, params, a, 8)
+        eos = int(ref_a[2])  # dies at token 3 of an H=4 horizon
+
+        sched = Scheduler(api, params, max_batch=1, cache_len=32,
+                          buckets=(16,), horizon=4)
+        rid_a = sched.submit(a, max_new=8, eos_id=eos)
+        rid_b = sched.submit(b, max_new=5)
+        res = sched.run()
+
+        np.testing.assert_array_equal(res[rid_a].tokens, ref_a[:3])
+        assert res[rid_a].tokens[-1] == eos
+        np.testing.assert_array_equal(res[rid_b].tokens,
+                                      _ref_tokens(api, params, b, 5))
+        # lane A idled from its mid-horizon death to the boundary
+        assert sched.metrics["wasted_lane_steps"] > 0
+
+    def test_sampled_parity_across_horizons(self, qwen):
+        """temperature > 0: the per-request fold_in(rid, n_generated) key
+        stream makes sampled outputs horizon-invariant too."""
+        cfg, api, params = qwen
+        rng = np.random.default_rng(2)
+        p = rng.integers(0, cfg.vocab, 6).astype(np.int32)
+        outs = []
+        for h in (1, 4, 8):
+            sched = Scheduler(api, params, max_batch=2, cache_len=64,
+                              buckets=(8,), horizon=h, temperature=1.0,
+                              rng=jax.random.PRNGKey(7))
+            rid = sched.submit(p, max_new=10)
+            outs.append(sched.run()[rid].tokens)
+        np.testing.assert_array_equal(outs[0], outs[1])
+        np.testing.assert_array_equal(outs[0], outs[2])
+
+
+class TestDonation:
+    """The jit programs must *declare* KV-buffer donation: the lowered
+    module carries ``tf.aliasing_output`` on the donated cache arguments
+    (jax marks donated inputs with the alias attribute at lowering; the
+    pinned CPU jaxlib honors it at runtime)."""
+
+    def test_scheduler_programs_declare_donated_kv(self, qwen):
+        _, api, params = qwen
+        sched = Scheduler(api, params, max_batch=2, cache_len=32,
+                          buckets=(8,), horizon=4)
+        nb = 1
+        lowered = sched._horizon_fn.lower(
+            sched._k, sched._v, params,
+            jnp.zeros(nb, jnp.int32), jnp.zeros(nb, jnp.int32),
+            jnp.zeros(nb, jnp.int32), jnp.zeros((nb, 2), jnp.uint32),
+            jnp.zeros(nb, jnp.int32), jnp.zeros(nb, jnp.int32),
+            jnp.full(nb, -1, jnp.int32), jnp.zeros(nb, bool))
+        assert lowered.as_text().count("tf.aliasing_output") >= 2  # k, v
+
+        lowered = sched._prefill_fn.lower(
+            sched._k, sched._v, params, jnp.zeros((1, 8), jnp.int32),
+            jnp.int32(4), jnp.int32(0),
+            jnp.asarray(jax.random.PRNGKey(0)))
+        assert lowered.as_text().count("tf.aliasing_output") >= 2
+
+    def test_engine_decode_program_declares_donated_cache(self, qwen):
+        cfg, api, params = qwen
+        prompts = jnp.arange(8, dtype=jnp.int32)[None] % cfg.vocab
+        keys = jax.random.split(jax.random.PRNGKey(0), 4)
+        first, cache = _prefill_program(api, params, prompts, keys[0], 12,
+                                        0.0, "auto")
+        lowered = _decode_program.lower(api, params, cache, first, keys[1:],
+                                        0.0, "auto")
+        # k, v (len is a scalar; aliasing it is backend-discretionary)
+        assert lowered.as_text().count("tf.aliasing_output") >= 2
+
+    def test_horizon_decode_matches_token_sync_after_donation(self, qwen):
+        """End-to-end donation safety: repeated drains through the same
+        (donated, in-place-updated) slot cache keep producing the
+        token-identical streams — no stale-buffer reuse."""
+        cfg, api, params = qwen
+        rng = np.random.default_rng(3)
+        p = rng.integers(0, cfg.vocab, 7).astype(np.int32)
+        ref = _ref_tokens(api, params, p, 6)
+        sched = Scheduler(api, params, max_batch=2, cache_len=32,
+                          buckets=(8,), horizon=8)
+        for _ in range(3):
+            rid = sched.submit(p, max_new=6)
+            np.testing.assert_array_equal(sched.run()[rid].tokens, ref)

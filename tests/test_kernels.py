@@ -106,6 +106,149 @@ class TestOpsDispatch:
         assert pick_strategy(4, 6, compute_rich=True) == "xla-dense"
 
 
+class TestEpilogueFusion:
+    """Fused bias/activation epilogue (DESIGN.md §3): the in-kernel
+    epilogue on the last n-block must match applying the same ops to the
+    oracle output, across strategies and the ops-level dispatch."""
+
+    def setup_method(self, _):
+        rng = np.random.default_rng(11)
+        self.x, self.words, self.uniq = make_case(rng, n=96, m=160, width=4,
+                                                  b=3)
+        self.bias = jnp.asarray(
+            (rng.standard_normal(160) * 0.5).astype(np.float32))
+        self.ref = crew_matmul_ref(self.x, self.words, self.uniq, width=4,
+                                   m=160)
+
+    @pytest.mark.parametrize("strategy", ["gather", "onehot"])
+    @pytest.mark.parametrize("activation", [None, "relu", "silu", "gelu"])
+    def test_kernel_epilogue(self, strategy, activation):
+        import jax
+        ref = self.ref + self.bias[None]
+        if activation is not None:
+            ref = getattr(jax.nn, activation)(ref)
+        out = crew_matmul_pallas(
+            self.x, self.words, self.uniq, width=4, m_out=160,
+            strategy=strategy, bias=self.bias, activation=activation,
+            block_n=32, block_words=8)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_kernel_activation_without_bias(self):
+        import jax
+        out = crew_matmul_pallas(self.x, self.words, self.uniq, width=4,
+                                 m_out=160, strategy="gather",
+                                 activation="gelu", block_n=32, block_words=8)
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(jax.nn.gelu(self.ref)),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_unknown_activation_rejected(self):
+        with pytest.raises(ValueError, match="activation"):
+            crew_matmul_pallas(self.x, self.words, self.uniq, width=4,
+                               m_out=160, activation="tanh")
+        rng = np.random.default_rng(0)
+        w = (rng.standard_normal((96, 144)) * 0.05).astype(np.float32)
+        cm, _, _ = crew_uniform_from_dense(w, dtype=jnp.float32)
+        with pytest.raises(ValueError, match="activation"):
+            crew_matmul(self.x, cm, activation="tanh")
+
+    def test_ops_epilogue_all_strategies_agree(self):
+        """Every dispatch strategy — fused in-kernel or XLA trailing ops —
+        produces the same epilogue'd output."""
+        import jax
+        rng = np.random.default_rng(12)
+        w = (rng.standard_t(4, size=(96, 144)) * 0.05).astype(np.float32)
+        x = jnp.asarray(rng.standard_normal((4, 96)).astype(np.float32))
+        bias = jnp.asarray((rng.standard_normal(144) * 0.5)
+                           .astype(np.float32))
+        cm, _, qm = crew_uniform_from_dense(w, dtype=jnp.float32)
+        ref = jax.nn.silu(
+            x @ jnp.asarray(qm.q * float(qm.scale), jnp.float32) + bias)
+        for strat in ("xla-dense", "xla-gather", "pallas-gather",
+                      "pallas-onehot", "auto"):
+            out = crew_matmul(x, cm, strategy=strat, bias=bias,
+                              activation="silu")
+            np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                       rtol=2e-4, atol=2e-4)
+
+    def test_linear_apply_fused_matches_unfused_dense(self):
+        """Dense path: activation= is the same ops in the same order —
+        bitwise equal to applying the activation outside."""
+        import jax
+        from repro.layers import linear
+        rng = np.random.default_rng(13)
+        params = {"w": jnp.asarray(rng.standard_normal((32, 48))
+                                   .astype(np.float32)),
+                  "b": jnp.asarray(rng.standard_normal(48)
+                                   .astype(np.float32))}
+        x = jnp.asarray(rng.standard_normal((5, 32)).astype(np.float32))
+        fused = linear.apply(params, x, activation="gelu")
+        unfused = jax.nn.gelu(linear.apply(params, x))
+        np.testing.assert_array_equal(np.asarray(fused), np.asarray(unfused))
+
+
+class TestVarAutoDispatch:
+    """CrewMatrixVar strategy="auto" must consult the autotune store per
+    width class (the satellite fix: it used to hardcode dense)."""
+
+    def _class_keys(self, cm, b):
+        import jax
+        from repro.perf.autotune import make_key
+        return [make_key(b, int(c.uniq.shape[0]), cm.n_out,
+                         int(c.uniq.shape[1]), c.width,
+                         jax.default_backend())
+                for c in cm.classes]
+
+    def test_var_auto_uses_measured_winner(self):
+        from repro.perf import autotune
+        from repro.perf.autotune import AutotuneStore, Measurement
+        rng = np.random.default_rng(0)
+        w = (rng.standard_t(4, size=(96, 144)) * 0.05).astype(np.float32)
+        x = jnp.asarray(rng.standard_normal((4, 96)).astype(np.float32))
+        cm, _, qm = crew_var_from_dense(w, dtype=jnp.float32)
+        ref = np.asarray(x @ jnp.asarray(qm.q * float(qm.scale), jnp.float32))
+        autotune.set_store(AutotuneStore())
+        try:
+            # measured winners drive every class, and the result is right
+            for key in self._class_keys(cm, 4):
+                autotune.get_store().put(
+                    key, Measurement(strategy="xla-gather", times_s={}))
+            out = np.asarray(crew_matmul(x, cm, strategy="auto"))
+            np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)
+            # a poisoned store entry proves the lookup actually happened
+            for key in self._class_keys(cm, 4):
+                autotune.get_store().put(
+                    key, Measurement(strategy="no-such", times_s={}))
+            with pytest.raises(ValueError, match="unknown strategy"):
+                crew_matmul(x, cm, strategy="auto")
+            # epilogue'd var calls consult the same *plain* class keys —
+            # the epilogue is applied after the class sum, so per-class
+            # strategy cost (and its measurement) is epilogue-independent
+            with pytest.raises(ValueError, match="unknown strategy"):
+                crew_matmul(x, cm, strategy="auto",
+                            bias=jnp.zeros(cm.n_out), activation="silu")
+        finally:
+            autotune.set_store(None)
+
+    def test_var_auto_cold_cache_matches_prior(self):
+        """Cold cache: every class falls back to the analytical prior —
+        same numbers as the explicit whole-matrix strategies."""
+        from repro.perf import autotune
+        from repro.perf.autotune import AutotuneStore
+        rng = np.random.default_rng(1)
+        w = (rng.standard_t(4, size=(64, 160)) * 0.05).astype(np.float32)
+        x = jnp.asarray(rng.standard_normal((2, 64)).astype(np.float32))
+        cm, _, qm = crew_var_from_dense(w, dtype=jnp.float32)
+        ref = np.asarray(x @ jnp.asarray(qm.q * float(qm.scale), jnp.float32))
+        autotune.set_store(AutotuneStore())
+        try:
+            out = np.asarray(crew_matmul(x, cm, strategy="auto"))
+        finally:
+            autotune.set_store(None)
+        np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)
+
+
 def test_ppa_end_to_end_compression_and_distortion():
     """PPA shrinks index widths; output distortion is bounded and monotone
     in the threshold (the paper bounds *frequency mass*, not weight

@@ -65,8 +65,16 @@ class TestParity:
         assert counts["prefill"] == 3   # buckets 8, 16, 24 all used
         assert counts["decode"] <= 2    # batch buckets {1, 2}
 
-        # replaying more traffic compiles nothing new
+        # replaying more traffic compiles nothing outside the bucket set:
+        # a solo request may touch the not-yet-used batch bucket 1 (under
+        # horizon stepping the mixed drain can finish without ever
+        # decoding a lone lane), and a second replay compiles nothing.
         sched.submit(prompts[0], max_new=3)
+        sched.run()
+        counts = sched.program_counts()
+        assert counts["prefill"] == 3
+        assert counts["decode"] <= 2    # batch buckets {1, 2}
+        sched.submit(prompts[1], max_new=3)
         sched.run()
         assert sched.program_counts() == counts
 
