@@ -14,7 +14,11 @@ work — for the conversion benchmarks, the CREW offline pipeline itself.
 plus the module's actual result rows (``data``), so the archived
 BENCH_crew.json carries the measured numbers themselves (e.g. the
 decode-latency horizon-vs-token-sync tokens/sec trajectory), not just
-wall times — so CI can archive the perf trajectory per commit.
+wall times — so CI can archive the perf trajectory per commit.  Each
+record is stamped with the jax version, backend/device kind, and git
+sha (``environment_stamp``) so trajectory rows are attributable across
+commits; ``tools/bench_compare.py`` diffs consecutive records and CI
+fails on a >25% per-module regression.
 """
 from __future__ import annotations
 
@@ -23,7 +27,8 @@ import json
 import time
 
 from . import decode_latency, dispatch, fig6_ppa, fig11_speedup, perf_cells, \
-    roofline_table, tab1_unique_weights, tab2_compression, traffic
+    prefix_reuse, roofline_table, tab1_unique_weights, tab2_compression, \
+    traffic
 
 MODULES = [
     ("tab1_unique_weights", tab1_unique_weights),
@@ -32,10 +37,35 @@ MODULES = [
     ("fig11_speedup", fig11_speedup),
     ("traffic", traffic),
     ("decode_latency", decode_latency),
+    ("prefix_reuse", prefix_reuse),
     ("roofline_table", roofline_table),
     ("perf_cells", perf_cells),
     ("dispatch", dispatch),
 ]
+
+
+def environment_stamp() -> dict:
+    """Provenance for a BENCH_crew.json record: without the jax version,
+    backend, and commit, trajectory rows are not attributable across
+    commits (two runs with different wall times could be a regression or
+    a toolchain change)."""
+    import subprocess
+
+    import jax
+
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10).stdout.strip() or None
+    except (OSError, subprocess.SubprocessError):
+        sha = None
+    dev = jax.devices()[0]
+    return {
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_kind": getattr(dev, "device_kind", str(dev)),
+        "git_sha": sha,
+    }
 
 
 def main() -> None:
@@ -77,8 +107,8 @@ def main() -> None:
         def scalar(o):  # np ints/floats inside benchmark rows
             return o.item() if hasattr(o, "item") else str(o)
         with open(args.json, "w") as fh:
-            json.dump({"fast": fast, "modules": records}, fh, indent=2,
-                      default=scalar)
+            json.dump({"fast": fast, **environment_stamp(),
+                       "modules": records}, fh, indent=2, default=scalar)
             fh.write("\n")
         print(f"wrote {args.json}")
 

@@ -17,6 +17,15 @@ continuous-vs-static throughput comparison.
 Range flags (``--prompt-len``, ``--max-new``) take either a single int or
 an inclusive ``LO:HI`` range sampled uniformly per request; ``--rate 0``
 makes every request arrive at t=0 (closed-loop batch).
+
+``--shared-prefix FRAC`` makes each prompt draw its first FRAC tokens
+from one of ``--prefix-pool`` fixed prefixes (system prompts / few-shot
+templates), the traffic shape the scheduler's radix-tree prefix cache
+exists for — the report then shows ``prefill_tokens_saved`` and the TTFT
+percentiles the reuse buys (``benchmarks/prefix_reuse.py`` measures the
+same axis steady-state).  The whole trace — arrivals, lengths, prefix
+assignment — is a pure function of ``--seed``, so latency percentiles
+are reproducible run-to-run.
 """
 from __future__ import annotations
 
@@ -38,8 +47,19 @@ def _parse_range(spec: str):
     return lo, hi
 
 
-def make_workload(rng, n, prompt_rng, new_rng, vocab, rate):
-    """[(arrival_s, prompt, max_new)] with exponential inter-arrivals."""
+def make_workload(n, prompt_rng, new_rng, vocab, rate, *, seed=0,
+                  shared_prefix=0.0, prefix_pool=4):
+    """[(arrival_s, prompt, max_new)] with exponential inter-arrivals.
+
+    Owns its generator: the trace (Poisson arrivals, lengths, prefix
+    assignment) is a pure function of ``seed`` — reproducible
+    percentiles run-to-run regardless of other RNG consumers.  With
+    ``shared_prefix > 0`` each prompt's first ``shared_prefix`` fraction
+    of tokens comes from one of ``prefix_pool`` fixed token arrays.
+    """
+    rng = np.random.default_rng(seed)
+    prefixes = [rng.integers(0, vocab, prompt_rng[1]).astype(np.int32)
+                for _ in range(prefix_pool)] if shared_prefix > 0 else []
     t = 0.0
     out = []
     for _ in range(n):
@@ -47,7 +67,14 @@ def make_workload(rng, n, prompt_rng, new_rng, vocab, rate):
             t += rng.exponential(1.0 / rate)
         p_len = int(rng.integers(prompt_rng[0], prompt_rng[1] + 1))
         m_new = int(rng.integers(new_rng[0], new_rng[1] + 1))
-        out.append((t, rng.integers(0, vocab, p_len).astype(np.int32), m_new))
+        if prefixes:
+            k = min(int(round(shared_prefix * p_len)), p_len - 1)
+            pre = prefixes[int(rng.integers(len(prefixes)))][:k]
+            prompt = np.concatenate(
+                [pre, rng.integers(0, vocab, p_len - k).astype(np.int32)])
+        else:
+            prompt = rng.integers(0, vocab, p_len).astype(np.int32)
+        out.append((t, prompt, m_new))
     return out
 
 
@@ -77,6 +104,7 @@ def serve_continuous(sched, workload):
             time.sleep(max(0.0, pending[0][0] - (time.perf_counter() - t0)))
     wall = time.perf_counter() - t0
     lat = np.asarray([finished_at[r] - submitted_at[r] for r in results])
+    ttft = np.asarray([c.ttft_s for c in results.values()])
     toks = sum(c.tokens.size for c in results.values())
     report = {
         "wall_s": wall,
@@ -85,6 +113,8 @@ def serve_continuous(sched, workload):
         "lat_p50_s": float(np.percentile(lat, 50)) if lat.size else 0.0,
         "lat_p95_s": float(np.percentile(lat, 95)) if lat.size else 0.0,
         "lat_max_s": float(lat.max()) if lat.size else 0.0,
+        "ttft_p50_s": float(np.percentile(ttft, 50)) if ttft.size else 0.0,
+        "ttft_p95_s": float(np.percentile(ttft, 95)) if ttft.size else 0.0,
     }
     return results, report
 
@@ -134,6 +164,20 @@ def main() -> None:
     ap.add_argument("--horizon", type=int, default=8,
                     help="decode steps per fused device program (1 = "
                          "token-synchronous host loop)")
+    ap.add_argument("--shared-prefix", type=float, default=0.0,
+                    metavar="FRAC",
+                    help="fraction of each prompt drawn from a fixed "
+                         "shared prefix (0 = fully independent prompts)")
+    ap.add_argument("--prefix-pool", type=int, default=4,
+                    help="number of distinct shared prefixes in the mix")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable the radix-tree prefix cache (cold "
+                         "prefill for every admit)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="prefix-cache block granularity (tokens)")
+    ap.add_argument("--pool-blocks", type=int, default=None,
+                    help="KV pool capacity in blocks (default: two full "
+                         "batches' worth)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--compare-static", action="store_true",
                     help="replay the workload through static-batched "
@@ -177,11 +221,15 @@ def main() -> None:
             print(f"[serve] autotune warmup ({time.perf_counter()-t0:.1f}s): "
                   f"{len(winners)} apply shapes measured")
 
-    rng = np.random.default_rng(args.seed)
-    workload = make_workload(rng, args.requests, args.prompt_len,
-                             args.max_new, cfg.vocab, args.rate)
+    workload = make_workload(args.requests, args.prompt_len, args.max_new,
+                             cfg.vocab, args.rate, seed=args.seed,
+                             shared_prefix=args.shared_prefix,
+                             prefix_pool=args.prefix_pool)
     sched = Scheduler(api, params, max_batch=args.max_batch,
                       cache_len=args.cache_len, horizon=args.horizon,
+                      prefix_cache=not args.no_prefix_cache,
+                      block_size=args.block_size,
+                      pool_blocks=args.pool_blocks,
                       temperature=args.temperature,
                       rng=jax.random.PRNGKey(args.seed))
     results, rep = serve_continuous(sched, workload)
@@ -189,9 +237,14 @@ def main() -> None:
           f"{rep['tokens']} tokens in {rep['wall_s']:.2f}s "
           f"-> {rep['tokens_per_s']:.1f} tok/s (incl. compile)")
     print(f"[serve] latency p50 {rep['lat_p50_s']:.3f}s  "
-          f"p95 {rep['lat_p95_s']:.3f}s  max {rep['lat_max_s']:.3f}s")
+          f"p95 {rep['lat_p95_s']:.3f}s  max {rep['lat_max_s']:.3f}s  "
+          f"ttft p50 {rep['ttft_p50_s']:.3f}s p95 {rep['ttft_p95_s']:.3f}s")
+    m = sched.metrics
+    print(f"[serve] prefix reuse: {m.prefill_tokens_saved} prefill tokens "
+          f"saved ({m.prefix_hit_tokens} matched), {m.chunks} chunks, "
+          f"{m.pool_evictions} evictions")
     print(f"[serve] programs {sched.program_counts()}  "
-          f"metrics {sched.metrics}")
+          f"metrics {m.to_dict()}")
 
     if args.compare_static:
         srep = serve_static(api, params, workload, args.max_batch,

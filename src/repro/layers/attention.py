@@ -26,8 +26,9 @@ from .rope import apply_rope, rope_freqs
 
 __all__ = [
     "init", "spec", "crew_names",
-    "chunked_attention", "decode_attention",
-    "attend", "attend_decode", "init_kv_cache", "cache_spec",
+    "chunked_attention", "decode_attention", "cached_chunk_attention",
+    "attend", "attend_decode", "attend_prefill_cached",
+    "init_kv_cache", "cache_spec",
 ]
 
 NEG_INF = -1e30
@@ -228,6 +229,40 @@ def decode_attention(
     return out.reshape(b, 1, h, d).astype(q.dtype)
 
 
+def cached_chunk_attention(
+    q: jnp.ndarray,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    pos: jnp.ndarray,
+) -> jnp.ndarray:
+    """Chunk-of-queries attention against a partially filled cache.
+
+    q [B, C, H, D] at absolute positions ``pos`` [B, C]; k/v cache
+    [B, S, KV, D] whose positions [0, pos) hold valid entries (a reused
+    prefix plus this chunk's freshly written rows).  Position j attends
+    iff ``j <= q_pos`` — everything later (unwritten cache, chunk
+    padding) is masked to an exact zero, and the single-pass
+    max/exp/sum/divide matches ``chunked_attention``'s one-KV-chunk
+    online-softmax bit for bit, which is what makes chunked prefill
+    token-identical to the monolithic prefill (DESIGN.md §5).
+    """
+    b, c, h, d = q.shape
+    s, kv = k_cache.shape[1], k_cache.shape[2]
+    g = h // kv
+    scale = d ** -0.5
+    scores = _group_scores(q, k_cache) * scale          # [B, KV, G, C, S]
+    k_pos = jnp.arange(s)
+    bias = jnp.where(pos[:, :, None] >= k_pos[None, None, :], 0.0, NEG_INF)
+    scores = scores + bias[:, None, None]               # [B,1,1,C,S] bcast
+    m = scores.max(axis=-1)
+    p = jnp.exp(scores - m[..., None])
+    l = p.sum(axis=-1)
+    pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(v_cache.dtype), v_cache,
+                    preferred_element_type=jnp.float32)
+    out = pv / jnp.maximum(l, 1e-30)[..., None]         # [B, KV, G, C, D]
+    return jnp.moveaxis(out, 3, 1).reshape(b, c, h, d).astype(q.dtype)
+
+
 # --------------------------------------------------------------------------
 # Full attention block (projections + rope + softmax + out-proj)
 # --------------------------------------------------------------------------
@@ -364,6 +399,55 @@ def attend_decode(params, x, cache, *, n_heads, n_kv, d_head,
     out = out.reshape(b, 1, n_heads * d_head)
     y = linear.apply(params["o"], out, crew_strategy=crew_strategy)
     return y, {"k": k_cache, "v": v_cache, "len": cache["len"] + 1}
+
+
+def attend_prefill_cached(params, x, cache, *, n_heads, n_kv, d_head,
+                          rope_theta=10000.0, crew_strategy="auto"):
+    """Chunked-prefill path: a chunk of prompt tokens against prior cache.
+
+    x [B, C, d] holds C consecutive prompt tokens whose first token sits
+    at cache position ``cache["len"]`` — either a scalar (all lanes at
+    the same offset) or a vector ``[B]`` of per-slot offsets (the
+    scheduler's chunked prefill, DESIGN.md §5): each lane RoPEs its
+    chunk at its own offset and scatters its K/V rows at its own cache
+    positions.  Positions [0, offset) may hold *reused* KV state (a
+    prefix-cache hit or an earlier chunk) — the chunk attends to them
+    without recomputing, which is the whole point: prefill work becomes
+    O(suffix), not O(prompt).
+
+    Returns (out [B, C, d], new cache) with ``len`` advanced by C; a
+    padded tail chunk advances past its padding, so the caller resets
+    ``len`` to the true length (the padded rows' K/V are dead — masked
+    until decode overwrites them, exactly like bucketed-prefill padding).
+
+    K/V rows scatter by *index*, never ``dynamic_update_slice``: a
+    padded tail whose window crosses the cache end must drop its dead
+    rows (scatter's out-of-bounds semantics), not clamp the window start
+    back over valid earlier rows (dus semantics — which would silently
+    corrupt the cache for any prompt whose bucket padding crosses
+    ``cache_len``).
+    """
+    b, c, _ = x.shape
+    q = linear.apply(params["q"], x, crew_strategy=crew_strategy)
+    k = linear.apply(params["k"], x, crew_strategy=crew_strategy)
+    v = linear.apply(params["v"], x, crew_strategy=crew_strategy)
+    q = q.reshape(b, c, n_heads, d_head)
+    k = k.reshape(b, c, n_kv, d_head)
+    v = v.reshape(b, c, n_kv, d_head)
+    off = cache["len"]
+    off_b = off if off.ndim == 1 else jnp.broadcast_to(off.reshape(1), (b,))
+    pos = off_b[:, None] + jnp.arange(c)[None]          # [B, C]
+    inv = rope_freqs(d_head, rope_theta)
+    q = apply_rope(q, pos, inv)
+    k = apply_rope(k, pos, inv)
+    lane = jnp.arange(b)[:, None]
+    k_cache = cache["k"].at[lane, pos].set(_maybe_quant_kv(k, cache["k"]))
+    v_cache = cache["v"].at[lane, pos].set(_maybe_quant_kv(v, cache["v"]))
+    out = cached_chunk_attention(q, _maybe_dequant_kv(k_cache, q.dtype),
+                                 _maybe_dequant_kv(v_cache, q.dtype), pos)
+    out = out.reshape(b, c, n_heads * d_head)
+    y = linear.apply(params["o"], out, crew_strategy=crew_strategy)
+    return y, {"k": k_cache, "v": v_cache, "len": cache["len"] + c}
 
 
 def init_kv_cache(batch: int, seq_len: int, n_kv: int, d_head: int,

@@ -58,6 +58,13 @@ class ModelApi:
                 f"{self.cfg.family} has no prefill-with-cache path")
         return self._mod.prefill(params, self.cfg, batch, cache_len, **kw)
 
+    def prefill_chunk(self, params, tokens, cache, **kw):
+        """One prompt chunk against a partially filled cache (DESIGN.md §5)."""
+        if not hasattr(self._mod, "prefill_chunk"):
+            raise NotImplementedError(
+                f"{self.cfg.family} has no chunked-prefill path")
+        return self._mod.prefill_chunk(params, self.cfg, tokens, cache, **kw)
+
     # ---- decode state ----
     def init_cache(self, batch: int, seq_len: int, dtype=jnp.bfloat16):
         return self._mod.init_cache(self.cfg, batch, seq_len, dtype=dtype)

@@ -25,8 +25,8 @@ from ..dist.ctx import constrain
 from ..layers import attention, embed, mlp, moe, norms
 
 __all__ = [
-    "init", "param_spec", "forward", "decode_step",
-    "init_cache", "cache_spec",
+    "init", "param_spec", "forward", "prefill", "prefill_chunk",
+    "decode_step", "init_cache", "cache_spec",
 ]
 
 
@@ -239,6 +239,51 @@ def prefill(
     logits = embed.logits(params["embed"], x)
     cache = {"k": k_all, "v": v_all, "len": jnp.asarray(s, jnp.int32)}
     return logits, cache
+
+
+def prefill_chunk(
+    params,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,
+    cache: Dict[str, Any],
+    *,
+    dtype=jnp.bfloat16,
+    crew_strategy: str = "auto",
+) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """One prefill chunk against a partially filled cache (DESIGN.md §5).
+
+    tokens [B, C] are C consecutive prompt tokens starting at cache
+    position ``cache["len"]`` (scalar or per-lane [B]); positions before
+    the offset hold reused KV state — a prefix-cache hit or earlier
+    chunks — that is attended, never recomputed.  Returns
+    (logits [B, C, vocab] f32, cache with ``len`` advanced by C).
+    Chunk-by-chunk prefill is token- and cache-bitwise-identical to the
+    monolithic :func:`prefill` (pinned by tests/test_prefix_cache.py).
+    """
+    if _is_encoder(cfg):
+        raise ValueError("encoder family has no decode cache")
+    if cfg.family == "vlm":
+        raise NotImplementedError("vlm prefill is not chunkable (patches)")
+    x = embed.embed(params["embed"], tokens, dtype=dtype)
+    off = cache["len"]
+
+    def step(x, inp):
+        blk, k_c, v_c = inp
+        h = _norm(cfg, blk["n1"], x)
+        y, new = attention.attend_prefill_cached(
+            blk["attn"], h, {"k": k_c, "v": v_c, "len": off},
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv, d_head=cfg.head_dim,
+            rope_theta=cfg.rope_theta, crew_strategy=crew_strategy)
+        x = x + y
+        h = _norm(cfg, blk["n2"], x)
+        y, _ = _ffn_apply(cfg, blk, h, crew_strategy)
+        return x + y, (new["k"], new["v"])
+
+    x, (k_new, v_new) = jax.lax.scan(
+        step, x, (params["blocks"], cache["k"], cache["v"]))
+    x = _norm(cfg, params["final_norm"], x)
+    logits = embed.logits(params["embed"], x)
+    return logits, {"k": k_new, "v": v_new, "len": off + tokens.shape[1]}
 
 
 # --------------------------------------------------------------------------

@@ -3,8 +3,9 @@ continuous-batching scheduler (docs/serving.md walks the full path)."""
 from .convert import (crewize_params, abstract_crew_params,
                       autotune_crew_params, crewize_spec, CrewReport)
 from .engine import generate
-from .scheduler import Scheduler, Request, Completion
+from .prefix import PrefixTrie
+from .scheduler import Scheduler, SchedulerMetrics, Request, Completion
 
 __all__ = ["crewize_params", "abstract_crew_params", "autotune_crew_params",
-           "crewize_spec", "CrewReport", "generate",
-           "Scheduler", "Request", "Completion"]
+           "crewize_spec", "CrewReport", "generate", "PrefixTrie",
+           "Scheduler", "SchedulerMetrics", "Request", "Completion"]

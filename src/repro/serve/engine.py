@@ -1,11 +1,17 @@
 """Batched serving engine: prefill + decode loop with sampling.
 
-Two jit'd programs per bucket, with the KV cache *donated* between them:
+Jit'd programs with the KV cache *donated* between them:
 
 * ``_prefill_program`` — full-sequence forward that fills the cache and
   samples the first token.  Keyed on ``(batch, prompt_len, cache_len)``
   only, so sweeping ``max_new`` (e.g. static-wave baselines with
   per-wave lengths) re-uses one compiled prefill.
+* ``_chunk_prefill_program`` — the prefill-from-cache split
+  (``generate(chunk=...)``): the prompt fills the cache in chunk-sized
+  pieces against the already-written positions, keyed on the *chunk*
+  shape, so sweeping prompt lengths re-uses one program per chunk size.
+  Bitwise-identical outputs to the monolithic path (DESIGN.md §5
+  "chunked prefill").
 * ``_decode_program`` — ``lax.scan`` over the generated positions, so
   the whole decode loop is a single XLA program with no host round-trip
   per token.  The cache argument is donated (``donate_argnums``): the
@@ -75,6 +81,49 @@ def _prefill_program(api: ModelApi, params, prompts, key, cache_len: int,
 @functools.partial(
     jax.jit,
     static_argnames=("api", "temperature", "crew_strategy"),
+    donate_argnums=(2,),  # the partially filled KV cache
+)
+def _chunk_prefill_program(api: ModelApi, params, cache, tokens, key,
+                           true_c, temperature: float, crew_strategy: str):
+    """One prefill chunk against prior cache — the prefill-from-cache
+    split of ``_prefill_program``: keyed on the *chunk* shape only, so
+    sweeping prompt lengths reuses one compiled program per chunk size
+    instead of one monolithic prefill per prompt length.  ``true_c`` is
+    the chunk's unpadded length (traced; padded tail rows are dead).
+    Returns the token sampled at the chunk's last true position — read
+    by the caller only for the final chunk."""
+    logits, cache = api.prefill_chunk(params, tokens, cache,
+                                      crew_strategy=crew_strategy)
+    last = jax.lax.dynamic_index_in_dim(logits, true_c - 1, axis=1,
+                                        keepdims=False)
+    first = _sample(key, last, temperature)
+    return first, cache
+
+
+def _chunked_prefill(api, params, prompts, key, cache_len: int, chunk: int,
+                     temperature: float, crew_strategy: str):
+    """Fill a fresh cache chunk-by-chunk; bitwise-identical to the
+    monolithic prefill (tests/test_serve.py pins the token parity)."""
+    b, s = prompts.shape
+    cache = api.init_cache(b, cache_len)
+    s_pad = -(-s // chunk) * chunk
+    padded = jnp.pad(prompts, ((0, 0), (0, s_pad - s)))
+    first = None
+    for pos in range(0, s, chunk):
+        true_c = min(chunk, s - pos)
+        first, cache = _chunk_prefill_program(
+            api, params, cache, jax.lax.dynamic_slice_in_dim(
+                padded, pos, chunk, axis=1),
+            key, jnp.asarray(true_c, jnp.int32), temperature, crew_strategy)
+    # padded tail rows advanced ``len`` past the prompt; decode must
+    # continue from the true length (the overshoot rows are dead)
+    cache = {**cache, "len": jnp.asarray(s, jnp.int32)}
+    return first, cache
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("api", "temperature", "crew_strategy"),
     donate_argnums=(2,),  # the prefill-filled KV cache
 )
 def _decode_program(api: ModelApi, params, cache, first, keys,
@@ -103,8 +152,19 @@ def generate(
     temperature: float = 0.0,
     rng: Optional[jnp.ndarray] = None,
     crew_strategy: str = "auto",
+    chunk: Optional[int] = None,
 ) -> Dict[str, jnp.ndarray]:
-    """prompts [B, S] int32 -> {"tokens": [B, max_new], "logprobs": ...}."""
+    """prompts [B, S] int32 -> {"tokens": [B, max_new], "logprobs": ...}.
+
+    ``chunk`` switches the prefill to the prefill-from-cache split: the
+    prompt fills the cache in ``chunk``-sized pieces through one program
+    keyed on the chunk shape (not the prompt length), with the cache
+    donated between pieces.  Outputs are bitwise-identical to the
+    monolithic default — use it when sweeping many prompt lengths, where
+    the monolithic path compiles one prefill per length.
+    """
+    if chunk is not None and chunk < 1:
+        raise ValueError("chunk must be >= 1")
     _, s = prompts.shape
     cache_len = cache_len or (s + max_new)
     rng = rng if rng is not None else jax.random.PRNGKey(0)
@@ -113,8 +173,13 @@ def generate(
     # code consumed it in _sample and then re-split it for the scan keys.)
     keys = jax.random.split(rng, max_new)
 
-    first, cache = _prefill_program(api, params, prompts, keys[0], cache_len,
-                                    temperature, crew_strategy)
+    if chunk is None:
+        first, cache = _prefill_program(api, params, prompts, keys[0],
+                                        cache_len, temperature, crew_strategy)
+    else:
+        first, cache = _chunked_prefill(api, params, prompts, keys[0],
+                                        cache_len, int(chunk), temperature,
+                                        crew_strategy)
     toks, lps, _ = _decode_program(api, params, cache, first, keys[1:],
                                    temperature, crew_strategy)
     tokens = jnp.concatenate([first[None], toks], axis=0).T  # [B, max_new]

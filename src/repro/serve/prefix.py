@@ -1,0 +1,164 @@
+"""Radix-tree prefix index over a block-granular KV pool (DESIGN.md §5).
+
+CREW's thesis one level up: admitted prompts recompute the same prefill
+products over and over whenever they share a prefix (system prompts,
+few-shot templates, retries).  Caching the unique prefixes' KV blocks and
+*indexing* into them beats recomputation exactly the way the paper's
+unique-weight tables beat redundant multiplies.
+
+This module is the pure host-side bookkeeping half: a token trie whose
+edges are fixed-size token blocks, mapping every cached prefix to the
+pool block ids that hold its KV state.  The device half — the pool
+tensors themselves and the gather/scatter programs that move blocks
+between the pool and a request's slot stripe — lives in
+``serve.scheduler``; nothing here touches jax, so the eviction and
+ref-count logic is unit-testable in microseconds
+(tests/test_prefix_cache.py).
+
+Semantics:
+
+* **match** — walk the prompt block-by-block down the trie; returns the
+  pool block ids of the longest cached prefix.  Matching bumps each
+  node's LRU tick.
+* **insert** — walk the same way, allocating a pool block for every
+  block-aligned prompt prefix not yet cached.  Because a trie walk
+  misses monotonically, the new blocks are always a contiguous tail; the
+  caller copies those KV rows from the request's slot into the returned
+  block ids.
+* **eviction** — allocation under pool pressure evicts the
+  least-recently-used *leaf* (a node with no children; interior nodes
+  are pinned by their descendants' refcount).  Requests never pin
+  blocks: a match is immediately *copied* into the request's own slot
+  stripe, so an evicted block can never be read by a live request.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["PrefixTrie", "TrieNode"]
+
+
+@dataclasses.dataclass
+class TrieNode:
+    """One cached token block: trie edge key + its pool block id."""
+    block: int                       # pool block id holding this KV block
+    key: bytes                       # the block's tokens (trie edge label)
+    parent: Optional["TrieNode"]
+    children: Dict[bytes, "TrieNode"] = dataclasses.field(default_factory=dict)
+    last_use: int = 0                # LRU tick (monotonic)
+
+    @property
+    def refcount(self) -> int:
+        """Pins against eviction: one per child subtree."""
+        return len(self.children)
+
+
+class PrefixTrie:
+    """Token trie over ``n_blocks`` pool blocks of ``block_size`` tokens."""
+
+    def __init__(self, n_blocks: int, block_size: int):
+        if n_blocks < 1:
+            raise ValueError("need at least one pool block")
+        if block_size < 1:
+            raise ValueError("block_size must be >= 1")
+        self.block_size = int(block_size)
+        self.root = TrieNode(block=-1, key=b"", parent=None)
+        self._free: List[int] = list(range(n_blocks))
+        self._nodes: Dict[int, TrieNode] = {}   # block id -> node
+        self._tick = itertools.count(1)
+        self.evictions = 0
+
+    # ------------------------------------------------------------------
+
+    def __len__(self) -> int:
+        return len(self._nodes)
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    def _keys(self, tokens: np.ndarray):
+        bs = self.block_size
+        for h in range(0, (tokens.size // bs) * bs, bs):
+            yield np.ascontiguousarray(tokens[h:h + bs]).tobytes()
+
+    # ------------------------------------------------------------------
+
+    def match(self, tokens: np.ndarray) -> Tuple[List[int], int]:
+        """Longest cached prefix of ``tokens`` -> (pool block ids, length).
+
+        The returned length is block-aligned.  Matched nodes get their
+        LRU tick bumped (root to leaf, so a prefix chain ages together).
+        """
+        node = self.root
+        ids: List[int] = []
+        tick = next(self._tick)
+        for key in self._keys(tokens):
+            child = node.children.get(key)
+            if child is None:
+                break
+            child.last_use = tick
+            ids.append(child.block)
+            node = child
+        return ids, len(ids) * self.block_size
+
+    def insert(self, tokens: np.ndarray) -> Tuple[List[int], int]:
+        """Cache every block-aligned prefix of ``tokens`` not yet present.
+
+        Returns (new pool block ids, start token offset of the first new
+        block) — a contiguous tail of the prompt's block sequence; the
+        caller owns copying those KV rows into the pool.  Allocation
+        evicts LRU leaves under pressure (never a node on the path being
+        inserted); when the pool is exhausted by the path itself the
+        insert stops early — the cache simply holds a shorter prefix.
+        """
+        node = self.root
+        tick = next(self._tick)
+        new_ids: List[int] = []
+        start = -1
+        h = 0
+        path = set()
+        for key in self._keys(tokens):
+            path.add(id(node))
+            child = node.children.get(key)
+            if child is None:
+                bid = self._alloc(path)
+                if bid is None:
+                    break
+                child = TrieNode(block=bid, key=key, parent=node)
+                node.children[key] = child
+                self._nodes[bid] = child
+                new_ids.append(bid)
+                if start < 0:
+                    start = h
+            child.last_use = tick
+            node = child
+            h += self.block_size
+        return new_ids, start
+
+    # ------------------------------------------------------------------
+
+    def _alloc(self, protected: set) -> Optional[int]:
+        if self._free:
+            return self._free.pop()
+        victim = None
+        for node in self._nodes.values():
+            if node.children or id(node) in protected:
+                continue
+            if victim is None or node.last_use < victim.last_use:
+                victim = node
+        if victim is None:
+            return None
+        self._evict(victim)
+        return self._free.pop()
+
+    def _evict(self, node: TrieNode) -> None:
+        assert not node.children, "only leaves are evictable"
+        del node.parent.children[node.key]
+        del self._nodes[node.block]
+        self._free.append(node.block)
+        self.evictions += 1

@@ -3,56 +3,71 @@
 ``serve.generate`` is one static jit'd batch: every request shares one
 prompt length and one ``max_new``, so mixed traffic either pads to the
 worst case or serializes.  :class:`Scheduler` instead owns a request
-queue and a slot-based KV cache and interleaves prefill with decode:
+queue, a slot-based KV cache, and a cross-request **prefix cache**, and
+interleaves chunked prefill with decode:
 
-* **admission** — at each horizon boundary, queued prompts are admitted
-  into free slots.  A prompt is padded to the smallest configured
-  *prefill bucket* that holds it, runs the ordinary ``api.prefill`` at
-  batch 1, and its KV is written into the slot's stripe of the shared
-  cache.  The sampled first token and the true (unpadded) length become
-  the slot's state.  Prefill dispatches are queued back-to-back and
-  synced once, so the host's admit bookkeeping overlaps the device work.
+* **admission + prefix reuse** — at each horizon boundary, queued
+  prompts are admitted into free slots.  The prompt first matches its
+  longest cached prefix in a radix tree over block-granular pool KV
+  (``serve.prefix.PrefixTrie``); the matched blocks are *copied* into
+  the slot's stripe (one gather on the block axis, donated like the rest
+  of the cache state) and only the **suffix** is prefilled — prefill
+  work is O(new tokens), not O(prompt), when traffic shares system
+  prompts / few-shot templates / retried requests (CREW's
+  cache-unique-products-and-index insight one level up, PAPER.md).
+* **chunked prefill** — the suffix runs through ``api.prefill_chunk`` in
+  bucket-sized chunks against the already-populated slot cache
+  (``layers.attention.attend_prefill_cached``: per-slot length offsets,
+  chunk rows scattered at their own cache positions).  One program per
+  chunk bucket — prompts longer than the largest bucket are now
+  admissible, and a prefilling prompt advances one chunk per engine
+  step while other slots keep decoding, so a long prefill no longer
+  stalls token emission.  Chunk-by-chunk prefill is token- and
+  cache-bitwise identical to the monolithic prefill (the single-pass
+  softmax in ``cached_chunk_attention`` reproduces ``chunked_attention``
+  exactly), so greedy outputs stay token-identical to cold-cache
+  ``serve.generate`` with or without prefix hits.
 * **horizon decode** — one fused program runs ``horizon`` decode steps
-  (``lax.scan``, default H=8) across all active slots.  Each scan
+  (``lax.scan``, default H=8) across all decode-active slots.  Each scan
   iteration gathers the live lanes out of the slot cache, decodes one
-  token per lane with a *per-slot* length vector (each lane RoPEs and
-  scatters at its own position — see ``layers.attention.attend_decode``),
-  and scatters back.  EOS / per-request ``max_new`` exhaustion is masked
-  *on device*: a retired lane keeps stepping — fixed-shape program — but
-  its reads and KV writes are redirected to the scratch slot at a pinned
-  position, so it can neither corrupt a live slot nor overrun its own
-  cache.  The host syncs **once per horizon**, not once per token.
-* **retire + backfill** — at the horizon boundary the host replays the
-  emitted-token mask, retires requests that hit EOS or ``max_new``, and
-  backfills freed slots from the queue on the next admit, so short and
-  long requests coexist without padding the whole batch to the longest.
+  token per lane with a *per-slot* length vector, and scatters back.
+  EOS / per-request ``max_new`` exhaustion is masked *on device* (dead
+  lanes step against the scratch slot at a pinned position); the host
+  syncs **once per horizon**, not once per token.
+* **retire + backfill + pool insert** — at the horizon boundary the host
+  replays the emitted-token mask, retires requests that hit EOS or
+  ``max_new``, and backfills freed slots from the queue.  When a
+  prompt's prefill completes, its block-aligned KV prefix is inserted
+  into the pool (one scatter on the block axis) so the *next* request
+  sharing it prefills only its own suffix; pool pressure evicts
+  least-recently-used trie leaves — never state a live slot depends on,
+  because matches are copied, not aliased.
 
-The hot loop is therefore a fixed set of XLA programs: one prefill
-program per prefill bucket and one horizon program per batch bucket —
-no per-request retracing (``program_counts()`` exposes the live compile
-counts; tests pin them).  The slot KV cache — the only multi-megabyte
-state threaded between programs — is **donated** through every prefill
-and horizon call, so it is updated in place instead of being copied per
-dispatch (the [nb]-sized lane vectors are cheap and passed by value).
-While a horizon is in flight the host pre-buckets the queue head (async
-overlap); the request queue and the free-slot pool are O(1) deques.
+The hot loop is a fixed set of XLA programs: one chunk-prefill program
+per chunk bucket, one horizon program per batch bucket, and one
+copy/insert program per block-count bucket — no per-request retracing
+(``program_counts()`` exposes the live compile counts; tests pin them).
+The slot KV cache and the block pool — the only multi-megabyte state
+threaded between programs — are **donated** through every dispatch, so
+they update in place instead of being copied (the [nb]-sized lane
+vectors are cheap and passed by value).
 
-Slot state (last tokens, lengths, done mask, per-request RNG keys,
-generated counts) is carried as arrays; CREW params flow through the
-same ``crew_strategy="auto"`` autotuned dispatch as the one-shot engine;
-under an active mesh the programs trace inside
+Slot state (last tokens, lengths, prefill cursors, done mask,
+per-request RNG keys, generated counts) is carried as arrays; CREW
+params flow through the same ``crew_strategy="auto"`` autotuned dispatch
+as the one-shot engine; under an active mesh the programs trace inside
 ``sharding_ctx(mesh, SERVE_RULES)`` so ``constrain`` calls bind.
 
 Requires the transformer-family cache contract ``{"k","v","len"}`` with
 ``[L, B, S, KV, D]`` KV tensors (dense / MoE configs; families without a
-prefill-with-cache path are rejected at construction).
+chunked-prefill path are rejected at construction).
 """
 from __future__ import annotations
 
 import collections
 import contextlib
 import dataclasses
-import itertools
+import time
 from typing import Deque, Dict, Optional, Sequence, Tuple
 
 import jax
@@ -62,12 +77,33 @@ import numpy as np
 from ..dist.ctx import sharding_ctx
 from ..dist.sharding import SERVE_RULES
 from ..models import ModelApi
+from .prefix import PrefixTrie
 
-__all__ = ["Scheduler", "Request", "Completion", "DEFAULT_BUCKETS",
-           "DEFAULT_HORIZON"]
+__all__ = ["Scheduler", "SchedulerMetrics", "Request", "Completion",
+           "DEFAULT_BUCKETS", "DEFAULT_HORIZON", "DEFAULT_BLOCK_SIZE"]
 
 DEFAULT_BUCKETS: Tuple[int, ...] = (16, 32, 64, 128)
 DEFAULT_HORIZON = 8
+DEFAULT_BLOCK_SIZE = 16
+
+
+def _pow2_ladder(top: int) -> Tuple[int, ...]:
+    """Powers of two up to ``top`` (``top`` included even when not one)."""
+    out = []
+    p = 1
+    while p < top:
+        out.append(p)
+        p *= 2
+    out.append(top)
+    return tuple(out)
+
+
+def _bucket_for(ladder: Tuple[int, ...], n: int) -> int:
+    """Smallest ladder entry >= n (the ladder's top for anything larger)."""
+    for b in ladder:
+        if n <= b:
+            return b
+    return ladder[-1]
 
 
 @dataclasses.dataclass
@@ -77,7 +113,7 @@ class Request:
     prompt: np.ndarray          # [S] int32, unpadded
     max_new: int
     eos_id: Optional[int]
-    padded: Optional[np.ndarray] = None  # [1, bucket] admit-ready form
+    submitted_s: float = 0.0    # perf_counter at submit (TTFT accounting)
 
 
 @dataclasses.dataclass
@@ -88,10 +124,41 @@ class Completion:
     tokens: np.ndarray          # [n_generated] int32
     logprobs: np.ndarray        # [n_generated] float32
     n_steps: int                # engine steps from admission to retirement
+    ttft_s: float = 0.0         # submit -> first token wall time
+
+
+@dataclasses.dataclass
+class SchedulerMetrics:
+    """Engine counters; dict-style reads (``m["steps"]``) keep callers
+    written against the historical ad-hoc dict working unchanged."""
+    steps: int = 0              # engine steps (admit + chunk + horizon)
+    prefills: int = 0           # prompts admitted
+    chunks: int = 0             # chunk-prefill programs dispatched
+    prefill_chunk_tokens: int = 0   # chunk tokens computed (incl. padding)
+    prefix_hit_tokens: int = 0  # trie-matched tokens (pre-cap)
+    prefill_tokens_saved: int = 0   # prompt tokens served from the pool
+    pool_inserts: int = 0       # blocks written into the pool
+    pool_evictions: int = 0     # LRU leaf evictions under pool pressure
+    horizons: int = 0           # fused H-step programs dispatched
+    decode_steps: int = 0       # device decode steps (H per horizon)
+    decode_lanes: int = 0       # useful (emitted) lane-steps
+    padded_lanes: int = 0       # batch-bucket padding lane-steps
+    wasted_lane_steps: int = 0  # dead-or-padding lane-steps per horizon
+
+    def __getitem__(self, key: str) -> int:
+        return getattr(self, key)
+
+    def __setitem__(self, key: str, value: int) -> None:
+        if not hasattr(self, key):
+            raise KeyError(key)
+        setattr(self, key, value)
+
+    def to_dict(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
 
 
 class Scheduler:
-    """Continuous-batching engine over bucketed prefill/horizon programs.
+    """Continuous-batching engine over chunked-prefill/horizon programs.
 
     Args:
       api / params: as for ``serve.generate`` (dense or CREW-converted).
@@ -100,14 +167,30 @@ class Scheduler:
         mid-horizon-retired lanes).
       cache_len: per-slot KV capacity; every admitted request must fit
         ``prompt_len + max_new <= cache_len``.
-      buckets: prefill pad lengths, ascending; a prompt compiles against
-        the smallest bucket that holds it.  None derives the default set
+      buckets: chunk sizes, ascending.  A prefilling prompt advances by
+        the largest bucket per chunk; its tail compiles against the
+        smallest bucket that holds it.  Prompts of any length up to
+        ``cache_len - max_new`` are admissible (the monolithic-prefill
+        cap on prompt length is gone).  None derives the default ladder
         clipped to ``cache_len``.
       horizon: decode steps per fused program dispatch (H).  The host
         syncs once per horizon; ``horizon=1`` is the token-synchronous
         baseline.  Retirement happens at horizon boundaries, so a lane
         whose request dies mid-horizon idles (masked, scratch-directed)
         until the boundary — ``metrics["wasted_lane_steps"]`` counts it.
+      prefix_cache: enable the radix-tree prefix cache (default).  Off,
+        every prompt prefills cold — the PR-4-equivalent baseline that
+        ``benchmarks/prefix_reuse.py`` measures against.
+      block_size: prefix-cache granularity in tokens; only block-aligned
+        prefixes are shared, and a hit is capped one block short of the
+        prompt so at least one suffix token prefills (first-token logits
+        must come from a live forward).
+      pool_blocks: KV pool capacity in blocks (+1 scratch block is
+        allocated internally).  None sizes it to one full batch's worth
+        of cache (``max_batch * cache_len // block_size``) — i.e. the
+        prefix cache roughly doubles the scheduler's KV memory by
+        default; pass an explicit budget when memory is tight or the
+        hot prefix set is large.
       temperature / crew_strategy: static sampling and CREW dispatch
         knobs, shared by all programs (as in ``serve.generate``).
       rng: base PRNG key; each request derives its own key stream via
@@ -125,6 +208,9 @@ class Scheduler:
         cache_len: int = 256,
         buckets: Optional[Sequence[int]] = None,
         horizon: int = DEFAULT_HORIZON,
+        prefix_cache: bool = True,
+        block_size: int = DEFAULT_BLOCK_SIZE,
+        pool_blocks: Optional[int] = None,
         temperature: float = 0.0,
         crew_strategy: str = "auto",
         rng: Optional[jnp.ndarray] = None,
@@ -133,9 +219,9 @@ class Scheduler:
     ):
         if not api.cfg.has_decode:
             raise ValueError(f"{api.cfg.arch_id} is encoder-only: no decode")
-        if not hasattr(api._mod, "prefill"):
+        if not hasattr(api._mod, "prefill_chunk"):
             raise NotImplementedError(
-                f"{api.cfg.family} has no prefill-with-cache path")
+                f"{api.cfg.family} has no chunked-prefill path")
         if horizon < 1:
             raise ValueError("horizon must be >= 1")
         self._api = api
@@ -148,7 +234,7 @@ class Scheduler:
                        or [self._cache_len])
         self._buckets = tuple(sorted(int(b) for b in buckets))
         if not self._buckets:
-            raise ValueError("need at least one prefill bucket")
+            raise ValueError("need at least one chunk bucket")
         if self._buckets[-1] > self._cache_len:
             raise ValueError(
                 f"largest bucket {self._buckets[-1]} exceeds cache_len "
@@ -160,13 +246,7 @@ class Scheduler:
 
         # batch buckets: powers of two up to max_batch (max_batch included
         # even when not a power of two).
-        bb = []
-        p = 1
-        while p < self._max_batch:
-            bb.append(p)
-            p *= 2
-        bb.append(self._max_batch)
-        self._batch_buckets = tuple(bb)
+        self._batch_buckets = _pow2_ladder(self._max_batch)
 
         # slot cache: max_batch real slots + 1 scratch slot for padding
         # lanes and mid-horizon-retired lanes (duplicate scatter indices
@@ -181,6 +261,34 @@ class Scheduler:
         self._k = jnp.zeros(abs_cache["k"].shape, abs_cache["k"].dtype)
         self._v = jnp.zeros(abs_cache["v"].shape, abs_cache["v"].dtype)
 
+        # prefix-cache block pool: pool_blocks real blocks + scratch block
+        # 0 (padding lanes of the bucketed copy/insert programs read and
+        # write it, never a real block).
+        self._block_size = int(block_size)
+        if self._block_size < 1:
+            raise ValueError("block_size must be >= 1")
+        # default pool = one full batch's worth of stripes, so enabling
+        # the prefix cache costs at most ~2x the slot-cache KV memory
+        # (stated in the arg docs; size it to the hot prefix set +
+        # headroom in production — docs/serving.md "Sizing")
+        if pool_blocks is None:
+            pool_blocks = max(
+                self._max_batch * (self._cache_len // self._block_size), 8)
+        self._pool_blocks = int(pool_blocks)
+        self._trie: Optional[PrefixTrie] = None
+        self._pk = self._pv = None
+        if prefix_cache:
+            # block ids are offset by 1 on device (0 is scratch)
+            self._trie = PrefixTrie(self._pool_blocks, self._block_size)
+            l, _, _, kv, d = abs_cache["k"].shape
+            shape = (l, self._pool_blocks + 1, self._block_size, kv, d)
+            self._pk = jnp.zeros(shape, abs_cache["k"].dtype)
+            self._pv = jnp.zeros(shape, abs_cache["v"].dtype)
+        # block-count buckets for the copy/insert programs (powers of two
+        # up to a full stripe's worth of blocks)
+        self._nblk_buckets = _pow2_ladder(
+            max(self._cache_len // self._block_size, 1))
+
         # host-side slot state ("slot state carried as arrays")
         nb = self._max_batch
         self._slot_rid = np.full(nb, -1, np.int64)      # -1 == free
@@ -189,6 +297,8 @@ class Scheduler:
         self._slot_ngen = np.zeros(nb, np.int32)        # tokens generated
         self._slot_done = np.ones(nb, bool)             # free/done mask
         self._slot_key = np.zeros((nb, 2), np.uint32)   # per-request key
+        self._slot_pref_pos = np.zeros(nb, np.int32)    # next chunk offset
+        self._slot_pref_end = np.zeros(nb, np.int32)    # prompt length
 
         self._queue: Deque[Request] = collections.deque()
         self._free: Deque[int] = collections.deque(range(nb))
@@ -196,21 +306,25 @@ class Scheduler:
         self._out_toks: Dict[int, list] = {}
         self._out_lps: Dict[int, list] = {}
         self._admit_step: Dict[int, int] = {}
+        self._ttft: Dict[int, float] = {}
         self._results: Dict[int, Completion] = {}
         self._next_rid = 0
 
-        self.metrics = {"steps": 0, "prefills": 0, "horizons": 0,
-                        "decode_steps": 0, "decode_lanes": 0,
-                        "padded_lanes": 0, "wasted_lane_steps": 0}
+        self.metrics = SchedulerMetrics()
 
-        # Donation updates the slot KV cache in place per dispatch instead
-        # of copying it (the CPU jaxlib this repo pins aliases the buffers
-        # too); tests/test_decode_horizon.py pins the declared aliasing.
-        self._prefill_fn = jax.jit(self._prefill_impl, donate_argnums=(0, 1))
+        # Donation updates the slot KV cache / block pool in place per
+        # dispatch instead of copying them (the CPU jaxlib this repo pins
+        # aliases the buffers too); tests/test_decode_horizon.py pins the
+        # declared aliasing.
+        self._win_buckets = _pow2_ladder(self._cache_len)
+        self._chunk_fn = jax.jit(self._chunk_impl, donate_argnums=(0, 1),
+                                 static_argnums=(8,))
         self._horizon_fn = jax.jit(self._horizon_impl, donate_argnums=(0, 1))
+        self._copy_fn = jax.jit(self._copy_impl, donate_argnums=(0, 1))
+        self._insert_fn = jax.jit(self._insert_impl, donate_argnums=(0, 1))
 
     # ------------------------------------------------------------------
-    # Programs (one compile per prefill bucket / batch bucket)
+    # Programs (one compile per chunk / batch / block-count bucket)
     # ------------------------------------------------------------------
 
     def _ctx(self):
@@ -218,22 +332,32 @@ class Scheduler:
             return contextlib.nullcontext()
         return sharding_ctx(self._mesh, SERVE_RULES)
 
-    def _prefill_impl(self, k_all, v_all, params, prompt, true_len, slot,
-                      req_key):
-        """prompt [1, bucket] -> (first token, logprob, updated slot cache).
+    def _chunk_impl(self, k_all, v_all, params, tokens, offset, true_c, slot,
+                    req_key, win):
+        """One prefill chunk for one slot -> (token, logprob, cache).
 
-        The prompt is right-padded to its bucket; causality makes the
-        logits at ``true_len - 1`` independent of the padding, and the
-        padded cache positions are dead (masked by the slot length, then
-        overwritten as decode advances) — DESIGN.md §5.
+        tokens [1, C] sit at slot cache positions [offset, offset + C);
+        the chunk attends to the slot's prior cache [0, offset) — a
+        prefix-cache hit and/or earlier chunks — via
+        ``api.prefill_chunk``, never recomputing it.  ``win`` (static)
+        is the KV *window* the chunk sees: the smallest window bucket
+        covering ``offset + C``, so attention work scales with the
+        chunk's position, not with ``cache_len`` — a 32-token prompt in
+        a 4096-slot cache scores 32x32, not 32x4096 (rows past the
+        window are all masked dead anyway; the truncation is exact).
+        The tail chunk is right-padded to its bucket: causality makes
+        the logits at ``true_c - 1`` independent of the padding, and
+        padded cache rows are dead (masked by the slot length, then
+        overwritten as decode advances) — DESIGN.md §5.  The sampled
+        token/logprob are read by the host only for the chunk that
+        completes a prompt.
         """
-        from ..layers.attention import _maybe_quant_kv
-
-        logits, cache = self._api.prefill(
-            params, {"tokens": prompt}, self._cache_len,
-            crew_strategy=self._crew_strategy)
+        cache = {"k": k_all[:, slot, :win][:, None],
+                 "v": v_all[:, slot, :win][:, None], "len": offset}
+        logits, cache = self._api.prefill_chunk(
+            params, tokens, cache, crew_strategy=self._crew_strategy)
         last = jax.lax.dynamic_index_in_dim(
-            logits, true_len - 1, axis=1, keepdims=False)[0]     # [vocab]
+            logits, true_c - 1, axis=1, keepdims=False)[0]       # [vocab]
         if self._temperature == 0.0:
             tok = jnp.argmax(last).astype(jnp.int32)
         else:
@@ -242,11 +366,46 @@ class Scheduler:
                 last / self._temperature).astype(jnp.int32)
         # gather + logsumexp, not a full-vocab log_softmax read at [tok]
         lp = last[tok] - jax.scipy.special.logsumexp(last)
-        # quantize on insert when the slot cache is int8 (prefill emits
-        # bf16 KV; decode-time writes go through the same helper)
-        k_all = k_all.at[:, slot].set(_maybe_quant_kv(cache["k"][:, 0], k_all))
-        v_all = v_all.at[:, slot].set(_maybe_quant_kv(cache["v"][:, 0], v_all))
+        k_all = k_all.at[:, slot, :win].set(cache["k"][:, 0])
+        v_all = v_all.at[:, slot, :win].set(cache["v"][:, 0])
         return tok, lp, k_all, v_all
+
+    def _copy_impl(self, k_all, v_all, pk, pv, ids, slot):
+        """Prefix-cache hit: pool blocks ``ids`` -> slot positions [0, n·bs).
+
+        One gather on the block axis; ``ids`` is padded to its
+        block-count bucket with the scratch block 0, whose rows land
+        beyond the hit length and are dead (overwritten by the first
+        suffix chunk or masked).
+        """
+        bs = self._block_size
+        n = ids.shape[0]
+        blk_k = pk[:, ids]                  # [L, n, bs, KV, D]
+        blk_v = pv[:, ids]
+        l, _, _, kv, d = blk_k.shape
+        k_all = k_all.at[:, slot, :n * bs].set(blk_k.reshape(l, n * bs, kv, d))
+        v_all = v_all.at[:, slot, :n * bs].set(blk_v.reshape(l, n * bs, kv, d))
+        return k_all, v_all
+
+    def _insert_impl(self, pk, pv, k_all, v_all, ids, slot, start):
+        """Pool insert: slot positions [start, start + n·bs) -> blocks ``ids``.
+
+        One scatter on the block axis.  The rows are read by *index*,
+        never ``dynamic_slice``: when the bucket-padded window crosses
+        ``cache_len`` the padding rows must clamp individually (their
+        garbage lands in the scratch block 0, never read as real data) —
+        a dus start-clamp would instead shift the whole window back over
+        earlier rows and poison the *real* blocks for every later hit.
+        """
+        bs = self._block_size
+        n = ids.shape[0]
+        pos = start + jnp.arange(n * bs)                # [n·bs], clamped get
+        seg_k = k_all[:, slot, pos]
+        seg_v = v_all[:, slot, pos]
+        l, _, kv, d = seg_k.shape
+        pk = pk.at[:, ids].set(seg_k.reshape(l, n, bs, kv, d))
+        pv = pv.at[:, ids].set(seg_v.reshape(l, n, bs, kv, d))
+        return pk, pv
 
     def _horizon_impl(self, k_all, v_all, params, slot_ids, toks, lens,
                       req_keys, steps, rem, eos, alive):
@@ -303,12 +462,19 @@ class Scheduler:
     def program_counts(self) -> Dict[str, int]:
         """Live XLA program counts — {bucket set} sized, not request sized.
 
-        ``_cache_size`` is a private jax API (present on the pinned
-        jax==0.4.37); -1 means this jax build no longer exposes it."""
+        ``prefill`` counts chunk programs (one per used chunk-bucket x
+        KV-window-bucket pair — the window ladder is log-sized in
+        ``cache_len``), ``decode`` horizon programs (one per used batch
+        bucket), and ``copy`` / ``insert`` the prefix-cache block movers
+        (one per used block-count bucket).  ``_cache_size`` is a private jax API
+        (present on the pinned jax==0.4.37); -1 means this jax build no
+        longer exposes it."""
         def size(fn):
             return getattr(fn, "_cache_size", lambda: -1)()
-        return {"prefill": size(self._prefill_fn),
-                "decode": size(self._horizon_fn)}
+        return {"prefill": size(self._chunk_fn),
+                "decode": size(self._horizon_fn),
+                "copy": size(self._copy_fn),
+                "insert": size(self._insert_fn)}
 
     # ------------------------------------------------------------------
     # Queue API
@@ -320,10 +486,6 @@ class Scheduler:
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size == 0:
             raise ValueError("empty prompt")
-        if prompt.size > self._buckets[-1]:
-            raise ValueError(
-                f"prompt length {prompt.size} exceeds largest bucket "
-                f"{self._buckets[-1]}")
         if max_new < 1:
             raise ValueError("max_new must be >= 1")
         if prompt.size + max_new > self._cache_len:
@@ -332,7 +494,8 @@ class Scheduler:
                 f"cache_len {self._cache_len}")
         rid = self._next_rid
         self._next_rid += 1
-        self._queue.append(Request(rid, prompt, int(max_new), eos_id))
+        self._queue.append(Request(rid, prompt, int(max_new), eos_id,
+                                   submitted_s=time.perf_counter()))
         return rid
 
     @property
@@ -340,35 +503,24 @@ class Scheduler:
         """Queued + in-flight request count."""
         return len(self._queue) + len(self._live)
 
-    def _bucket_for(self, n: int) -> int:
-        for b in self._buckets:
-            if n <= b:
-                return b
-        raise ValueError(f"no bucket holds prompt length {n}")
-
     def _batch_bucket(self, n: int) -> int:
-        for b in self._batch_buckets:
-            if n <= b:
-                return b
-        return self._max_batch
+        return _bucket_for(self._batch_buckets, n)
 
-    def _pad_prompt(self, req: Request) -> np.ndarray:
-        if req.padded is None:
-            bucket = self._bucket_for(req.prompt.size)
-            padded = np.zeros((1, bucket), np.int32)
-            padded[0, :req.prompt.size] = req.prompt
-            req.padded = padded
-        return req.padded
+    def _chunk_sizes(self, remaining: int) -> Tuple[int, int]:
+        """(bucket, true) chunk sizes for a suffix of ``remaining`` tokens:
+        full chunks advance by the largest bucket; the tail compiles
+        against the smallest bucket that holds it."""
+        if remaining >= self._buckets[-1]:
+            return self._buckets[-1], self._buckets[-1]
+        return _bucket_for(self._buckets, remaining), remaining
 
-    def _prepare_queue_head(self) -> None:
-        """Bucket/pad the prompts the next admit can possibly touch.
-
-        Called right after a horizon dispatch: this host work runs while
-        the device is still executing the in-flight program (async
-        overlap), so the next boundary's admissions start from ready
-        arrays."""
-        for req in itertools.islice(self._queue, self._max_batch):
-            self._pad_prompt(req)
+    def _padded_block_ids(self, ids) -> jnp.ndarray:
+        """Block-mover ids padded to their block-count bucket with the
+        pool's scratch block 0 (host ids are 0-based; device block 0 is
+        the scratch)."""
+        padded = np.zeros(_bucket_for(self._nblk_buckets, len(ids)), np.int32)
+        padded[:len(ids)] = np.asarray(ids, np.int32) + 1
+        return jnp.asarray(padded)
 
     # ------------------------------------------------------------------
     # Engine loop
@@ -382,18 +534,23 @@ class Scheduler:
             prompt_len=req.prompt.size,
             tokens=np.asarray(self._out_toks.pop(rid), np.int32),
             logprobs=np.asarray(self._out_lps.pop(rid), np.float32),
-            n_steps=self.metrics["steps"] - self._admit_step.pop(rid) + 1,
+            n_steps=self.metrics.steps - self._admit_step.pop(rid) + 1,
+            ttft_s=self._ttft.pop(rid, 0.0),
         )
         self._slot_rid[slot] = -1
         self._slot_done[slot] = True
         self._slot_len[slot] = 0
         self._slot_ngen[slot] = 0
+        self._slot_pref_pos[slot] = 0
+        self._slot_pref_end[slot] = 0
         self._free.append(slot)
 
     def _record(self, slot: int, tok: int, lp: float) -> bool:
         """Append one generated token; returns True if the slot retired."""
         rid = int(self._slot_rid[slot])
         req = self._live[rid]
+        if not self._out_toks[rid]:
+            self._ttft[rid] = time.perf_counter() - req.submitted_s
         self._out_toks[rid].append(tok)
         self._out_lps[rid].append(lp)
         self._slot_tok[slot] = tok
@@ -405,53 +562,121 @@ class Scheduler:
         return False
 
     def _admit(self) -> None:
-        """Fill free slots from the queue; one sync for all prefills.
+        """Fill free slots from the queue: prefix match + block copy.
 
-        The prefill dispatches are queued back-to-back without reading
-        their results, so the host's slot bookkeeping for request *i+1*
-        overlaps the device running request *i*'s prefill; the sampled
-        first tokens are read once at the end (a retirement there —
-        prefill-sampled EOS — frees the slot for the *next* boundary,
-        matching the pre-horizon semantics)."""
-        admitted = []
-        n_admit = min(len(self._free), len(self._queue))
-        for _ in range(n_admit):
+        Admission does *not* prefill: it resolves the prompt's longest
+        cached prefix, copies those pool blocks into the slot stripe
+        (one bucketed gather program, dead-padded with the scratch
+        block), and parks the slot in the prefill phase with its chunk
+        cursor at the hit length.  The chunk phase advances it."""
+        while self._free and self._queue:
             slot = self._free.popleft()
             req = self._queue.popleft()
-            padded = self._pad_prompt(req)
-            req_key = np.asarray(jax.random.fold_in(self._base_key, req.rid))
-            with self._ctx():
-                tok, lp, self._k, self._v = self._prefill_fn(
-                    self._k, self._v, self._params, jnp.asarray(padded),
-                    jnp.int32(req.prompt.size), jnp.int32(slot),
-                    jnp.asarray(req_key))
-            self.metrics["prefills"] += 1
+            hit = 0
+            if self._trie is not None:
+                ids, raw = self._trie.match(req.prompt)
+                self.metrics.prefix_hit_tokens += raw
+                # keep >= 1 suffix token: first-token logits must come
+                # from a live forward over the prompt's true tail
+                bs = self._block_size
+                hit = min(raw, ((req.prompt.size - 1) // bs) * bs)
+                ids = ids[:hit // bs]
+                if ids:
+                    with self._ctx():
+                        self._k, self._v = self._copy_fn(
+                            self._k, self._v, self._pk, self._pv,
+                            self._padded_block_ids(ids), jnp.int32(slot))
+                    self.metrics.prefill_tokens_saved += hit
+            self.metrics.prefills += 1
             self._live[req.rid] = req
             self._out_toks[req.rid] = []
             self._out_lps[req.rid] = []
-            self._admit_step[req.rid] = self.metrics["steps"]
+            self._admit_step[req.rid] = self.metrics.steps
             self._slot_rid[slot] = req.rid
             self._slot_done[slot] = False
-            self._slot_len[slot] = req.prompt.size
+            self._slot_len[slot] = hit
             self._slot_ngen[slot] = 0
-            self._slot_key[slot] = req_key
-            admitted.append((slot, tok, lp))
-        for slot, tok, lp in admitted:
-            self._record(slot, int(tok), float(lp))
+            self._slot_key[slot] = np.asarray(
+                jax.random.fold_in(self._base_key, req.rid))
+            self._slot_pref_pos[slot] = hit
+            self._slot_pref_end[slot] = req.prompt.size
+
+    def _pool_insert(self, slot: int, req: Request) -> None:
+        """Cache the completed prompt's block-aligned KV prefix."""
+        if self._trie is None:
+            return
+        new_ids, start = self._trie.insert(req.prompt)
+        if new_ids:
+            with self._ctx():
+                self._pk, self._pv = self._insert_fn(
+                    self._pk, self._pv, self._k, self._v,
+                    self._padded_block_ids(new_ids), jnp.int32(slot),
+                    jnp.int32(start))
+            self.metrics.pool_inserts += len(new_ids)
+        self.metrics.pool_evictions = self._trie.evictions
+
+    def _prefilling(self):
+        return [s for s in range(self._max_batch)
+                if not self._slot_done[s]
+                and self._slot_pref_pos[s] < self._slot_pref_end[s]]
+
+    def _decoding(self):
+        return [s for s in range(self._max_batch)
+                if not self._slot_done[s]
+                and self._slot_pref_pos[s] >= self._slot_pref_end[s]]
+
+    def _prefill_chunks(self) -> None:
+        """Advance every prefilling slot by one chunk (co-scheduled with
+        the decode horizon: a long prompt spreads its prefill over
+        steps instead of stalling token emission).  With no decode-active
+        lanes there is nothing to co-schedule against, so chunking rounds
+        continue until a prompt completes and decode can start.  Chunk
+        dispatches queue back-to-back; sampled first tokens are read once
+        at the end, only for the chunks that completed a prompt."""
+        while True:
+            prefilling = self._prefilling()
+            if not prefilling:
+                return
+            completed = []
+            for slot in prefilling:
+                req = self._live[int(self._slot_rid[slot])]
+                pos = int(self._slot_pref_pos[slot])
+                c_bkt, c_true = self._chunk_sizes(req.prompt.size - pos)
+                win = _bucket_for(self._win_buckets, pos + c_bkt)
+                tokens = np.zeros((1, c_bkt), np.int32)
+                tokens[0, :c_true] = req.prompt[pos:pos + c_true]
+                with self._ctx():
+                    tok, lp, self._k, self._v = self._chunk_fn(
+                        self._k, self._v, self._params, jnp.asarray(tokens),
+                        jnp.int32(pos), jnp.int32(c_true), jnp.int32(slot),
+                        jnp.asarray(self._slot_key[slot]), win)
+                self.metrics.chunks += 1
+                self.metrics.prefill_chunk_tokens += c_bkt
+                self._slot_pref_pos[slot] = pos + c_true
+                self._slot_len[slot] = pos + c_true
+                if pos + c_true >= req.prompt.size:
+                    completed.append((slot, req, tok, lp))
+            for slot, req, tok, lp in completed:
+                self._pool_insert(slot, req)
+                self._record(slot, int(tok), float(lp))
+            if self._decoding():
+                return
 
     def step(self) -> bool:
-        """Admit, run one fused H-step horizon, retire; True while busy.
+        """Admit, advance prefill chunks, run one fused H-step horizon,
+        retire; True while busy.
 
         An empty queue with no active slots is an idle drain: returns
         False without launching any program.
         """
-        self.metrics["steps"] += 1
+        self.metrics.steps += 1
         self._admit()
-        active = [s for s in range(self._max_batch) if not self._slot_done[s]]
+        self._prefill_chunks()
+        active = self._decoding()
         if not active:
-            busy = bool(self._queue)
+            busy = bool(self._queue or self._live)
             if not busy:
-                self.metrics["steps"] -= 1  # nothing ran
+                self.metrics.steps -= 1  # nothing ran
             return busy
         nb = self._batch_bucket(len(active))
         scratch = self._max_batch
@@ -479,19 +704,16 @@ class Scheduler:
                 jnp.asarray(toks), jnp.asarray(lens), jnp.asarray(keys),
                 jnp.asarray(steps), jnp.asarray(rem), jnp.asarray(eos),
                 jnp.asarray(alive))
-        # async overlap: pre-bucket the queue head while the horizon
-        # program is still executing on device, then sync once.
-        self._prepare_queue_head()
         toks_h = np.asarray(toks_h)
         lps_h = np.asarray(lps_h)
         emit_h = np.asarray(emit_h)
         h = self._horizon
         emitted_total = int(emit_h[:len(active)].sum())
-        self.metrics["horizons"] += 1
-        self.metrics["decode_steps"] += h
-        self.metrics["decode_lanes"] += emitted_total
-        self.metrics["padded_lanes"] += (nb - len(active)) * h
-        self.metrics["wasted_lane_steps"] += nb * h - emitted_total
+        self.metrics.horizons += 1
+        self.metrics.decode_steps += h
+        self.metrics.decode_lanes += emitted_total
+        self.metrics.padded_lanes += (nb - len(active)) * h
+        self.metrics.wasted_lane_steps += nb * h - emitted_total
         for i, s in enumerate(active):
             for t in range(h):
                 if not emit_h[i, t]:

@@ -1,5 +1,8 @@
 """Measured strategy dispatch: store round-trip, measurement determinism,
-and the crew_matmul auto wiring."""
+cross-process REPRO_AUTOTUNE_CACHE persistence, and the crew_matmul auto
+wiring."""
+import pathlib
+
 import numpy as np
 import jax.numpy as jnp
 import pytest
@@ -8,6 +11,9 @@ from repro.core import crew_uniform_from_dense
 from repro.kernels.ops import crew_matmul, pick_strategy, resolve_auto_strategy
 from repro.perf import autotune
 from repro.perf.autotune import AutotuneStore, Measurement, make_key
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+_ENV = "REPRO_AUTOTUNE_CACHE"
 
 
 @pytest.fixture()
@@ -164,6 +170,71 @@ class TestEpilogueKeys:
                                      bias=bias, activation="silu"))
         np.testing.assert_allclose(out, np.asarray(ref), rtol=2e-4,
                                    atol=2e-4)
+
+
+class TestPersistenceAcrossProcesses:
+    """REPRO_AUTOTUNE_CACHE is the ship-a-warmed-cache-with-the-checkpoint
+    mechanism (docs/serving.md §2): a store written by an offline
+    conversion *process* must be a lookup hit in the serving process."""
+
+    def test_subprocess_write_parent_lookup_hit(self, tmp_path):
+        import os
+        import subprocess
+        import sys
+        path = str(tmp_path / "autotune.json")
+        code = """
+import os
+from repro.perf import autotune
+from repro.perf.autotune import Measurement, make_key
+store = autotune.get_store()
+assert store.path == os.environ["REPRO_AUTOTUNE_CACHE"]
+store.put(make_key(2, 64, 96, 31, 5, "cpu"),
+          Measurement(strategy="xla-gather", times_s={"xla-gather": 0.5}))
+store.put(make_key(2, 64, 96, 31, 5, "cpu", epilogue="bias+silu"),
+          Measurement(strategy="pallas-onehot", times_s={}))
+print("CHILD-WROTE")
+"""
+        env = dict(os.environ)
+        env["REPRO_AUTOTUNE_CACHE"] = path
+        env["PYTHONPATH"] = str(ROOT / "src")
+        out = subprocess.run([sys.executable, "-c", code],
+                             capture_output=True, text=True, timeout=120,
+                             env=env)
+        assert out.returncode == 0, out.stderr[-2000:]
+        assert "CHILD-WROTE" in out.stdout
+
+        # parent: a fresh env-pointed store resolves the child's winners
+        os.environ[_ENV] = path
+        try:
+            autotune.set_store(None)
+            plain = make_key(2, 64, 96, 31, 5, "cpu")
+            tagged = make_key(2, 64, 96, 31, 5, "cpu", epilogue="bias+silu")
+            assert autotune.lookup(plain) == "xla-gather"
+            assert autotune.lookup(tagged) == "pallas-onehot"
+        finally:
+            del os.environ[_ENV]
+            autotune.set_store(None)
+
+    def test_epilogue_tagged_keys_never_collide_in_persisted_store(
+            self, tmp_path):
+        """Every (epilogue, plain) key pair is distinct on disk: a cache
+        warmed pre-epilogue (plain keys only) can never be shadowed by —
+        or shadow — an epilogue'd measurement."""
+        from itertools import product
+        from repro.perf.autotune import AutotuneStore, epilogue_tag
+        path = str(tmp_path / "store.json")
+        store = AutotuneStore(path)
+        tags = [epilogue_tag(b, a) for b, a in
+                product((False, True), (None, "silu", "gelu"))]
+        assert len(set(tags)) == len(tags)
+        for i, tag in enumerate(tags):
+            store.put(make_key(1, 8, 8, 4, 3, "cpu", epilogue=tag),
+                      Measurement(strategy=f"s{i}", times_s={}))
+        loaded = AutotuneStore.open(path)
+        assert len(loaded) == len(tags)     # no key collided / overwrote
+        for i, tag in enumerate(tags):
+            key = make_key(1, 8, 8, 4, 3, "cpu", epilogue=tag)
+            assert loaded.get(key).strategy == f"s{i}"
 
 
 def test_serve_autotune_warms_cache(case):

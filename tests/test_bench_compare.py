@@ -1,0 +1,67 @@
+"""Perf-regression gate (tools/bench_compare.py): threshold math, noise
+floor, incomparable records, and missing-baseline tolerance."""
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "tools"))
+import bench_compare  # noqa: E402
+
+
+def _record(path, seconds, fast=True, backend="cpu", sha="abc"):
+    obj = {"fast": fast, "backend": backend, "git_sha": sha,
+           "modules": [{"name": n, "seconds": s, "rows": 1}
+                       for n, s in seconds.items()]}
+    path.write_text(json.dumps(obj))
+    return path
+
+
+def test_pass_within_threshold(tmp_path, capsys):
+    a = _record(tmp_path / "a.json", {"tab1": 2.0, "traffic": 1.0})
+    b = _record(tmp_path / "b.json", {"tab1": 2.4, "traffic": 0.9})
+    assert bench_compare.main([str(a), str(b)]) == 0
+    assert "REGRESSION" not in capsys.readouterr().out
+
+
+def test_fail_beyond_threshold(tmp_path, capsys):
+    a = _record(tmp_path / "a.json", {"tab1": 2.0})
+    b = _record(tmp_path / "b.json", {"tab1": 2.6})   # +30% > 25%
+    assert bench_compare.main([str(a), str(b)]) == 1
+    assert "REGRESSION" in capsys.readouterr().out
+
+
+def test_custom_threshold(tmp_path):
+    a = _record(tmp_path / "a.json", {"tab1": 2.0})
+    b = _record(tmp_path / "b.json", {"tab1": 2.6})
+    assert bench_compare.main([str(a), str(b), "--threshold", "0.5"]) == 0
+
+
+def test_noise_floor_skips_tiny_modules(tmp_path, capsys):
+    # 3x regression on a 10ms module is jitter, not signal
+    a = _record(tmp_path / "a.json", {"tab2": 0.01})
+    b = _record(tmp_path / "b.json", {"tab2": 0.03})
+    assert bench_compare.main([str(a), str(b)]) == 0
+    assert "noise floor" in capsys.readouterr().out
+
+
+def test_new_module_has_no_baseline(tmp_path, capsys):
+    a = _record(tmp_path / "a.json", {"tab1": 2.0})
+    b = _record(tmp_path / "b.json", {"tab1": 2.0, "prefix_reuse": 9.0})
+    assert bench_compare.main([str(a), str(b)]) == 0
+    assert "new module" in capsys.readouterr().out
+
+
+def test_incomparable_records_skip(tmp_path, capsys):
+    a = _record(tmp_path / "a.json", {"tab1": 1.0}, fast=False)
+    b = _record(tmp_path / "b.json", {"tab1": 9.0}, fast=True)
+    assert bench_compare.main([str(a), str(b)]) == 0
+    assert "not comparable" in capsys.readouterr().out
+    a = _record(tmp_path / "a.json", {"tab1": 1.0}, backend="tpu")
+    b = _record(tmp_path / "b.json", {"tab1": 9.0}, backend="cpu")
+    assert bench_compare.main([str(a), str(b)]) == 0
+
+
+def test_missing_baseline_is_not_an_error(tmp_path):
+    b = _record(tmp_path / "b.json", {"tab1": 1.0})
+    assert bench_compare.main([str(tmp_path / "absent.json"), str(b)]) == 0

@@ -121,11 +121,26 @@ class TestDonation:
             jnp.full(nb, -1, jnp.int32), jnp.zeros(nb, bool))
         assert lowered.as_text().count("tf.aliasing_output") >= 2  # k, v
 
-        lowered = sched._prefill_fn.lower(
+        lowered = sched._chunk_fn.lower(
             sched._k, sched._v, params, jnp.zeros((1, 8), jnp.int32),
-            jnp.int32(4), jnp.int32(0),
-            jnp.asarray(jax.random.PRNGKey(0)))
+            jnp.int32(0), jnp.int32(4), jnp.int32(0),
+            jnp.asarray(jax.random.PRNGKey(0)), 8)
         assert lowered.as_text().count("tf.aliasing_output") >= 2
+
+    def test_prefix_block_programs_declare_donated_state(self, qwen):
+        """The block movers donate too: copy donates the slot cache it
+        writes, insert donates the pool it writes."""
+        _, api, params = qwen
+        sched = Scheduler(api, params, max_batch=2, cache_len=32,
+                          buckets=(8,), block_size=8)
+        ids = jnp.zeros(1, jnp.int32)
+        lowered = sched._copy_fn.lower(sched._k, sched._v, sched._pk,
+                                       sched._pv, ids, jnp.int32(0))
+        assert lowered.as_text().count("tf.aliasing_output") >= 2  # k, v
+        lowered = sched._insert_fn.lower(sched._pk, sched._pv, sched._k,
+                                         sched._v, ids, jnp.int32(0),
+                                         jnp.int32(0))
+        assert lowered.as_text().count("tf.aliasing_output") >= 2  # pk, pv
 
     def test_engine_decode_program_declares_donated_cache(self, qwen):
         cfg, api, params = qwen

@@ -1,0 +1,340 @@
+"""Cross-request prefix reuse (DESIGN.md §5): radix-trie match/insert/evict
+semantics, warm-vs-cold greedy token parity, chunked-prefill bitwise parity
+with the monolithic prefill, counter behavior on shared vs disjoint
+traffic, and LRU eviction safety under pool pressure."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.models import build_model
+from repro.serve import PrefixTrie, Scheduler, generate
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = ARCHS["qwen2-0.5b"].reduced()
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    return cfg, api, params
+
+
+def _ref_tokens(api, params, prompt, max_new):
+    out = generate(api, params, jnp.asarray(prompt)[None], max_new=max_new)
+    return np.asarray(out["tokens"][0])
+
+
+# --------------------------------------------------------------------------
+# Host-side trie (no jax)
+# --------------------------------------------------------------------------
+
+class TestTrie:
+    def test_match_insert_roundtrip(self):
+        t = PrefixTrie(8, block_size=4)
+        toks = np.arange(10, dtype=np.int32)        # blocks [0:4), [4:8)
+        assert t.match(toks) == ([], 0)
+        new, start = t.insert(toks)
+        assert len(new) == 2 and start == 0
+        ids, hit = t.match(toks)
+        assert ids == new and hit == 8
+        # a prompt sharing one block matches exactly that block
+        other = np.concatenate([toks[:4], toks[:4] + 90])
+        ids, hit = t.match(other)
+        assert ids == new[:1] and hit == 4
+
+    def test_insert_extends_existing_prefix(self):
+        t = PrefixTrie(8, block_size=4)
+        t.insert(np.arange(8, dtype=np.int32))
+        new, start = t.insert(np.arange(16, dtype=np.int32))
+        assert len(new) == 2 and start == 8         # only the tail is new
+        assert len(t) == 4
+
+    def test_lru_leaf_eviction(self):
+        t = PrefixTrie(2, block_size=2)
+        a = np.asarray([1, 2], np.int32)
+        b = np.asarray([3, 4], np.int32)
+        c = np.asarray([5, 6], np.int32)
+        t.insert(a)
+        t.insert(b)
+        t.match(a)                                  # refresh a; b is LRU
+        t.insert(c)                                 # pool full -> evict b
+        assert t.evictions == 1
+        assert t.match(b) == ([], 0)
+        assert t.match(a)[1] == 2 and t.match(c)[1] == 2
+
+    def test_interior_nodes_never_evicted(self):
+        t = PrefixTrie(3, block_size=2)
+        t.insert(np.asarray([1, 2, 3, 4, 5, 6], np.int32))  # chain of 3
+        # the two interior nodes are pinned by their child refcounts;
+        # only the chain leaf is evictable
+        new, _ = t.insert(np.asarray([7, 8], np.int32))
+        assert len(new) == 1 and t.evictions == 1
+        assert t.match(np.asarray([1, 2, 3, 4, 5, 6], np.int32))[1] == 4
+
+    def test_pool_exhausted_by_own_path_inserts_partially(self):
+        t = PrefixTrie(1, block_size=2)
+        new, start = t.insert(np.asarray([1, 2, 3, 4], np.int32))
+        assert len(new) == 1 and start == 0         # second block dropped
+        assert t.free_blocks == 0
+
+
+# --------------------------------------------------------------------------
+# Chunked prefill == monolithic prefill (bitwise, model level)
+# --------------------------------------------------------------------------
+
+class TestChunkedPrefillParity:
+    def test_chunk_by_chunk_matches_monolithic_bitwise(self, qwen):
+        """prefill_chunk over 8-token chunks reproduces api.prefill's
+        logits AND cache contents bit for bit — the property that makes
+        warm/cold scheduler outputs token-identical by construction."""
+        cfg, api, params = qwen
+        rng = np.random.default_rng(0)
+        s, cache_len, ch = 21, 48, 8
+        prompt = rng.integers(0, cfg.vocab, s).astype(np.int32)
+        ref_logits, ref_cache = api.prefill(
+            params, {"tokens": jnp.asarray(prompt)[None]}, cache_len)
+
+        cache = api.init_cache(1, cache_len)
+        padded = np.zeros(-(-s // ch) * ch, np.int32)
+        padded[:s] = prompt
+        last = None
+        for pos in range(0, s, ch):
+            logits, cache = api.prefill_chunk(
+                params, jnp.asarray(padded[pos:pos + ch])[None], cache)
+            true_c = min(ch, s - pos)
+            last = logits[0, true_c - 1]
+            cache = {**cache, "len": jnp.asarray(min(pos + ch, s), jnp.int32)}
+        np.testing.assert_array_equal(np.asarray(last),
+                                      np.asarray(ref_logits[0, s - 1]))
+        np.testing.assert_array_equal(np.asarray(cache["k"][:, 0, :s]),
+                                      np.asarray(ref_cache["k"][:, 0, :s]))
+        np.testing.assert_array_equal(np.asarray(cache["v"][:, 0, :s]),
+                                      np.asarray(ref_cache["v"][:, 0, :s]))
+
+    def test_attend_prefill_cached_per_slot_offsets(self):
+        """Layer level: a [B] offset vector RoPEs/scatters each lane at
+        its own position — lane b of a batched chunk call equals a
+        batch-1 call at lane b's offset."""
+        from repro.layers import attention
+        rng = jax.random.PRNGKey(0)
+        n_heads, n_kv, d_head, d_model, c, s = 4, 2, 8, 32, 3, 16
+        params = attention.init(rng, d_model, n_heads, n_kv, d_head)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, c, d_model),
+                              jnp.float32)
+        kv = attention.init_kv_cache(2, s, n_kv, d_head, dtype=jnp.float32)
+        kv["k"] = jax.random.normal(jax.random.PRNGKey(2), kv["k"].shape)
+        kv["v"] = jax.random.normal(jax.random.PRNGKey(3), kv["v"].shape)
+        offs = jnp.asarray([2, 7], jnp.int32)
+        y_vec, cache_vec = attention.attend_prefill_cached(
+            params, x, {"k": kv["k"], "v": kv["v"], "len": offs},
+            n_heads=n_heads, n_kv=n_kv, d_head=d_head)
+        for b in range(2):
+            y_b, cache_b = attention.attend_prefill_cached(
+                params, x[b:b + 1],
+                {"k": kv["k"][b:b + 1], "v": kv["v"][b:b + 1],
+                 "len": jnp.asarray(int(offs[b]), jnp.int32)},
+                n_heads=n_heads, n_kv=n_kv, d_head=d_head)
+            np.testing.assert_allclose(np.asarray(y_vec[b]),
+                                       np.asarray(y_b[0]), rtol=1e-5,
+                                       atol=1e-5)
+            np.testing.assert_array_equal(np.asarray(cache_vec["k"][b]),
+                                          np.asarray(cache_b["k"][0]))
+
+
+# --------------------------------------------------------------------------
+# Scheduler: warm-vs-cold parity, counters, fixed programs, eviction
+# --------------------------------------------------------------------------
+
+class TestPrefixReuse:
+    def _shared_prompts(self, cfg, n=4, prefix_len=24, suffix_len=6, seed=0):
+        rng = np.random.default_rng(seed)
+        prefix = rng.integers(0, cfg.vocab, prefix_len).astype(np.int32)
+        return [np.concatenate([prefix,
+                                rng.integers(0, cfg.vocab, suffix_len)
+                                .astype(np.int32)])
+                for _ in range(n)]
+
+    def test_warm_cold_parity_and_saved_tokens(self, qwen):
+        """The same shared-prefix batch twice through one scheduler: the
+        second wave hits the trie (prefill_tokens_saved > 0) and every
+        request — warm or cold — matches cold-cache serve.generate."""
+        cfg, api, params = qwen
+        prompts = self._shared_prompts(cfg)
+        refs = [_ref_tokens(api, params, p, 4) for p in prompts]
+        sched = Scheduler(api, params, max_batch=2, cache_len=64,
+                          buckets=(8, 16), block_size=8)
+        # wave 1: two concurrent admits against an empty trie — cold
+        rids = [sched.submit(p, max_new=4) for p in prompts[:2]]
+        res = sched.run()
+        assert sched.metrics["prefill_tokens_saved"] == 0
+        for rid, ref in zip(rids, refs):
+            np.testing.assert_array_equal(res[rid].tokens, ref)
+        # wave 2: warm — shared prefix blocks come from the pool
+        rids = [sched.submit(p, max_new=4) for p in prompts]
+        res = sched.run()
+        saved = sched.metrics["prefill_tokens_saved"]
+        # all four requests hit the 24-token shared prefix (3 blocks)
+        assert saved == 4 * 24
+        assert sched.metrics["prefix_hit_tokens"] >= saved
+        for rid, ref in zip(rids, refs):
+            np.testing.assert_array_equal(res[rid].tokens, ref)
+        for rid in rids:
+            assert res[rid].ttft_s > 0.0
+
+    def test_disjoint_prompts_save_nothing(self, qwen):
+        cfg, api, params = qwen
+        rng = np.random.default_rng(3)
+        # vocab-offset ranges guarantee no shared block between prompts
+        # (and no prompt repeats, so nothing ever matches its own insert)
+        prompts = [rng.integers(i * 97, i * 97 + 90, 20).astype(np.int32)
+                   for i in range(1, 9)]
+        sched = Scheduler(api, params, max_batch=2, cache_len=64,
+                          buckets=(8, 16), block_size=8)
+        rids = [sched.submit(p, max_new=3) for p in prompts]
+        res = sched.run()
+        assert sorted(res) == sorted(rids)
+        assert sched.metrics["prefill_tokens_saved"] == 0
+        assert sched.metrics["prefix_hit_tokens"] == 0
+        assert sched.metrics["pool_inserts"] > 0    # cached, just unmatched
+
+    def test_fixed_program_set_with_chunked_prefill(self, qwen):
+        """Replaying shared-prefix traffic compiles nothing outside the
+        {chunk, batch, block-count} bucket sets — no per-request
+        retrace, hits or misses."""
+        cfg, api, params = qwen
+        prompts = self._shared_prompts(cfg, n=3)
+        sched = Scheduler(api, params, max_batch=2, cache_len=64,
+                          buckets=(8, 16), block_size=8)
+        for p in prompts:
+            sched.submit(p, max_new=4)
+        sched.run()
+        counts = sched.program_counts()
+        # chunk buckets {8, 16} x KV-window buckets (pow2 <= 64)
+        assert counts["prefill"] <= 4
+        assert counts["decode"] <= 2        # batch buckets {1, 2}
+        assert counts["copy"] <= 3          # block-count buckets {1, 2, 4}
+        assert counts["insert"] <= 3
+        # replay (now warm): same program set, bit for bit
+        for _ in range(2):
+            for p in prompts:
+                sched.submit(p, max_new=4)
+            sched.run()
+        assert sched.program_counts() == counts
+
+    def test_lru_eviction_under_pool_pressure_keeps_slots_correct(self, qwen):
+        """A pool far smaller than the traffic's block footprint churns
+        (evictions > 0) while every completion stays parity-exact —
+        eviction can never corrupt a live slot because matches are
+        copied into the slot, never aliased."""
+        cfg, api, params = qwen
+        rng = np.random.default_rng(5)
+        prompts = [rng.integers(0, cfg.vocab, 24).astype(np.int32)
+                   for _ in range(6)]
+        refs = [_ref_tokens(api, params, p, 3) for p in prompts]
+        sched = Scheduler(api, params, max_batch=2, cache_len=64,
+                          buckets=(8, 16), block_size=8, pool_blocks=4)
+        for wave in range(2):
+            rids = [sched.submit(p, max_new=3) for p in prompts]
+            res = sched.run()
+            for rid, ref in zip(rids, refs):
+                np.testing.assert_array_equal(res[rid].tokens, ref)
+        assert sched.metrics["pool_evictions"] > 0
+        assert sched.metrics["pool_inserts"] > 0
+
+    def test_prefix_cache_disabled_is_cold_every_time(self, qwen):
+        cfg, api, params = qwen
+        prompts = self._shared_prompts(cfg, n=2)
+        refs = [_ref_tokens(api, params, p, 3) for p in prompts]
+        sched = Scheduler(api, params, max_batch=2, cache_len=64,
+                          buckets=(8, 16), prefix_cache=False)
+        for _ in range(2):
+            rids = [sched.submit(p, max_new=3) for p in prompts]
+            res = sched.run()
+            for rid, ref in zip(rids, refs):
+                np.testing.assert_array_equal(res[rid].tokens, ref)
+        assert sched.metrics["prefill_tokens_saved"] == 0
+        assert sched.program_counts()["copy"] == 0
+
+    def test_tail_chunk_window_crossing_cache_end_stays_exact(self, qwen):
+        """A prompt whose bucket-padded tail chunk crosses ``cache_len``
+        must drop the dead padding rows, not clamp the scatter window
+        back over valid KV (dynamic_update_slice semantics silently
+        corrupted this: prompt 98, buckets (16,32,64), cache 100 -> the
+        pos-64 chunk pads to [64, 128) in a 100-row cache)."""
+        cfg, api, params = qwen
+        rng = np.random.default_rng(11)
+        p = rng.integers(0, cfg.vocab, 98).astype(np.int32)
+        sched = Scheduler(api, params, max_batch=2, cache_len=100,
+                          buckets=(16, 32, 64))
+        rid = sched.submit(p, max_new=2)
+        res = sched.run()
+        np.testing.assert_array_equal(res[rid].tokens,
+                                      _ref_tokens(api, params, p, 2))
+
+    def test_insert_window_crossing_cache_end_keeps_pool_exact(self, qwen):
+        """A pool insert whose bucket-padded read window crosses
+        ``cache_len`` must clamp per padding row (garbage -> scratch
+        block), not shift the window start (which poisoned the *real*
+        blocks: A=16 tok then B=A+40 inserts 5 blocks at start=16 padded
+        to 8 -> reads [16, 80) from a 64-row stripe).  C then consumes
+        B's cached prefix and must stay parity-exact."""
+        cfg, api, params = qwen
+        rng = np.random.default_rng(12)
+        a = rng.integers(0, cfg.vocab, 16).astype(np.int32)
+        b = np.concatenate([a, rng.integers(0, cfg.vocab, 40)
+                            .astype(np.int32)])
+        c = np.concatenate([b[:48], rng.integers(0, cfg.vocab, 8)
+                            .astype(np.int32)])
+        sched = Scheduler(api, params, max_batch=1, cache_len=64,
+                          buckets=(8, 16), block_size=8)
+        rids = [sched.submit(p, max_new=3) for p in (a, b, c)]
+        res = sched.run()
+        assert sched.metrics["prefill_tokens_saved"] > 0  # C hit B's blocks
+        for rid, p in zip(rids, (a, b, c)):
+            np.testing.assert_array_equal(res[rid].tokens,
+                                          _ref_tokens(api, params, p, 3))
+
+    def test_metrics_dataclass_contract(self, qwen):
+        """SchedulerMetrics: dict-style reads, to_dict round-trip, and
+        unknown keys rejected."""
+        from repro.serve import SchedulerMetrics
+        m = SchedulerMetrics()
+        m["chunks"] = 3
+        assert m.chunks == 3 == m["chunks"]
+        d = m.to_dict()
+        assert d["chunks"] == 3 and "prefill_tokens_saved" in d
+        with pytest.raises(KeyError):
+            m["no_such_counter"] = 1
+
+    def test_prefill_interleaves_with_decode(self, qwen):
+        """Co-scheduling: while one slot decodes a long output, a newly
+        admitted long prompt advances chunk-by-chunk across steps —
+        decode emission and chunk dispatch appear in the same steps."""
+        cfg, api, params = qwen
+        rng = np.random.default_rng(8)
+        a = rng.integers(0, cfg.vocab, 5).astype(np.int32)
+        b = rng.integers(0, cfg.vocab, 40).astype(np.int32)
+        sched = Scheduler(api, params, max_batch=2, cache_len=64,
+                          buckets=(8,), horizon=2, prefix_cache=False)
+        ra = sched.submit(a, max_new=24)
+        sched.step()                     # a prefills + starts decoding
+        rb = sched.submit(b, max_new=4)
+        interleaved = 0
+        while True:
+            c0 = sched.metrics["chunks"]
+            d0 = sched.metrics["decode_lanes"]
+            busy = sched.step()
+            if (sched.metrics["chunks"] > c0
+                    and sched.metrics["decode_lanes"] > d0):
+                interleaved += 1
+            if not busy:
+                break
+        res = sched.pop_results()
+        # b's 40-token prompt takes 5 chunk dispatches at bucket 8; each
+        # rides a step that also emitted decode tokens for a
+        assert interleaved >= 4
+        np.testing.assert_array_equal(res[ra].tokens,
+                                      _ref_tokens(api, params, a, 24))
+        np.testing.assert_array_equal(res[rb].tokens,
+                                      _ref_tokens(api, params, b, 4))

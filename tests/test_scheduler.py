@@ -128,14 +128,31 @@ class TestEdgeCases:
         _, api, params = qwen
         sched = Scheduler(api, params, max_batch=2, cache_len=32,
                           buckets=(8, 16))
-        with pytest.raises(ValueError, match="largest bucket"):
-            sched.submit(np.zeros(17, np.int32))
         with pytest.raises(ValueError, match="cache_len"):
             sched.submit(np.zeros(8, np.int32), max_new=32)
         with pytest.raises(ValueError, match="empty"):
             sched.submit(np.zeros(0, np.int32))
         with pytest.raises(ValueError, match="max_new"):
             sched.submit(np.zeros(4, np.int32), max_new=0)
+        # prompts longer than the largest chunk bucket are admissible now:
+        # chunked prefill advances bucket-by-bucket (DESIGN.md §5)
+        assert sched.submit(np.ones(17, np.int32), max_new=4) >= 0
+
+    def test_long_prompt_chunked_prefill_parity(self, qwen):
+        """A prompt longer than every chunk bucket — rejected outright by
+        the monolithic-prefill scheduler — prefills in bucket-sized
+        chunks and still matches ``serve.generate`` token for token."""
+        cfg, api, params = qwen
+        rng = np.random.default_rng(7)
+        p = rng.integers(0, cfg.vocab, 37).astype(np.int32)
+        sched = Scheduler(api, params, max_batch=2, cache_len=64,
+                          buckets=(8, 16))
+        rid = sched.submit(p, max_new=5)
+        res = sched.run()
+        np.testing.assert_array_equal(res[rid].tokens,
+                                      _ref_tokens(api, params, p, 5))
+        # 37 = 16 + 16 + 5: two full chunks + one tail bucket
+        assert sched.metrics["chunks"] == 3
 
     def test_sampled_streams_differ_per_request(self, qwen):
         """temperature > 0: two identical prompts in flight draw from

@@ -122,3 +122,25 @@ class TestEngine:
         b = generate(api, params, prompts, max_new=16, temperature=1.0,
                      rng=jax.random.PRNGKey(1))
         assert not bool(jnp.all(a["tokens"] == b["tokens"]))
+
+    def test_chunked_prefill_split_matches_monolithic(self, qwen):
+        """generate(chunk=...) — the prefill-from-cache program split —
+        is bitwise-identical to the monolithic prefill, across prompt
+        lengths that tile the chunk evenly and with a padded tail."""
+        cfg, api, params = qwen
+        for s, max_new in ((12, 6), (8, 6), (21, 6), (21, 2)):
+            # (21, 2): the padded tail chunk's window [16, 24) crosses
+            # cache_len=23 — the dead rows must drop, not clamp-shift
+            # the window back over valid cache rows
+            prompts = (jnp.arange(2 * s, dtype=jnp.int32).reshape(2, s) * 3
+                       ) % cfg.vocab
+            mono = generate(api, params, prompts, max_new=max_new,
+                            cache_len=s + max_new)
+            split = generate(api, params, prompts, max_new=max_new,
+                             cache_len=s + max_new, chunk=8)
+            np.testing.assert_array_equal(np.asarray(mono["tokens"]),
+                                          np.asarray(split["tokens"]))
+            np.testing.assert_array_equal(np.asarray(mono["logprobs"]),
+                                          np.asarray(split["logprobs"]))
+        with pytest.raises(ValueError, match="chunk"):
+            generate(api, params, jnp.zeros((1, 4), jnp.int32), chunk=0)

@@ -1,0 +1,103 @@
+"""Perf-regression gate: diff two BENCH_crew.json records.
+
+The CI benchmark step has archived a BENCH_crew.json per commit since
+PR 2, but the trajectory was collected and never *enforced* — a module
+could quietly triple its wall time and nothing would go red.  This tool
+closes the loop:
+
+    python tools/bench_compare.py BASELINE.json CURRENT.json [--threshold 0.25]
+
+For every module present in both records it compares ``seconds`` and
+fails (exit 1) when any module regressed by more than ``--threshold``
+(fractional; default 0.25 = +25%).  Guards against noise on small
+absolute times with ``--min-seconds`` (default 0.2s: a 0.01s->0.02s
+jitter on a trivial module is not a regression).  Records from
+different fastness (``--full`` vs fast subset) or different backends are
+incomparable and skip with a notice rather than fail, as does a missing
+baseline (first run on a branch).  CI fetches the previous successful
+run's artifact and runs this after the fresh benchmark.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load_modules(path: str):
+    with open(path) as fh:
+        obj = json.load(fh)
+    return obj, {m["name"]: m for m in obj.get("modules", [])}
+
+
+def compare(baseline: dict, current: dict, *, threshold: float = 0.25,
+            min_seconds: float = 0.2):
+    """Returns (regressions, lines): regressions is the failing subset."""
+    base_obj, base = baseline["obj"], baseline["modules"]
+    cur_obj, cur = current["obj"], current["modules"]
+    lines = []
+    if base_obj.get("fast") != cur_obj.get("fast"):
+        return None, ["records have different fastness; not comparable"]
+    if base_obj.get("backend") and cur_obj.get("backend") \
+            and base_obj["backend"] != cur_obj["backend"]:
+        return None, [f"records from different backends "
+                      f"({base_obj['backend']} vs {cur_obj['backend']}); "
+                      "not comparable"]
+    regressions = []
+    for name in cur:
+        if name not in base:
+            lines.append(f"  {name}: new module (no baseline), skipped")
+            continue
+        b, c = base[name]["seconds"], cur[name]["seconds"]
+        if max(b, c) < min_seconds:
+            lines.append(f"  {name}: {b:.3f}s -> {c:.3f}s (below "
+                         f"{min_seconds}s noise floor, skipped)")
+            continue
+        delta = (c - b) / max(b, 1e-9)
+        tag = "REGRESSION" if delta > threshold else "ok"
+        lines.append(f"  {name}: {b:.3f}s -> {c:.3f}s ({delta:+.1%}) {tag}")
+        if delta > threshold:
+            regressions.append((name, b, c, delta))
+    return regressions, lines
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline", help="previous run's BENCH_crew.json")
+    ap.add_argument("current", help="fresh BENCH_crew.json")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="max tolerated fractional seconds increase per "
+                         "module (default 0.25)")
+    ap.add_argument("--min-seconds", type=float, default=0.2,
+                    help="modules faster than this in both records are "
+                         "noise, not signal (default 0.2)")
+    args = ap.parse_args(argv)
+
+    try:
+        base_obj, base = load_modules(args.baseline)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"bench_compare: no usable baseline ({e}); skipping")
+        return 0
+    cur_obj, cur = load_modules(args.current)
+
+    regressions, lines = compare(
+        {"obj": base_obj, "modules": base},
+        {"obj": cur_obj, "modules": cur},
+        threshold=args.threshold, min_seconds=args.min_seconds)
+    print(f"bench_compare: {args.baseline} "
+          f"({base_obj.get('git_sha', '?')}) -> {args.current} "
+          f"({cur_obj.get('git_sha', '?')})")
+    for line in lines:
+        print(line)
+    if regressions is None:
+        return 0
+    if regressions:
+        print(f"bench_compare: {len(regressions)} module(s) regressed "
+              f"> {args.threshold:.0%}", file=sys.stderr)
+        return 1
+    print("bench_compare: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
