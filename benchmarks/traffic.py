@@ -97,13 +97,13 @@ def _workload(vocab, fast, seed=0):
 def _run_continuous(sched, workload):
     """(useful tokens, decode steps, seconds) for one closed-loop drain."""
     t0 = time.perf_counter()
-    steps0 = sched.metrics["decode_steps"]
+    steps0 = sched.metrics.decode_steps
     for prompt, max_new in workload:
         sched.submit(prompt, max_new=max_new)
     results = sched.run()
     dt = time.perf_counter() - t0
     return (sum(c.tokens.size for c in results.values()),
-            sched.metrics["decode_steps"] - steps0, dt)
+            sched.metrics.decode_steps - steps0, dt)
 
 
 def _run_static(sched, workload):
@@ -115,7 +115,7 @@ def _run_static(sched, workload):
     pays on mixed traffic.  (A fused one-program variant of this
     baseline lives in ``repro.launch.serve --compare-static``.)"""
     t0 = time.perf_counter()
-    steps0 = sched.metrics["decode_steps"]
+    steps0 = sched.metrics.decode_steps
     useful = 0
     for i in range(0, len(workload), MAX_BATCH):
         wave = workload[i:i + MAX_BATCH]
@@ -124,7 +124,7 @@ def _run_static(sched, workload):
             sched.submit(prompt, max_new=n_max)
         sched.run()
         useful += sum(m for _, m in wave)
-    return (useful, sched.metrics["decode_steps"] - steps0,
+    return (useful, sched.metrics.decode_steps - steps0,
             time.perf_counter() - t0)
 
 

@@ -18,6 +18,7 @@ from .pack import (
 from .ppa import PPAResult, ppa_layout, ppa_row, force_max_unique
 from .convert import (
     CrewMatrixUniform,
+    CrewMatrixCached,
     CrewMatrixVar,
     crew_uniform_from_dense,
     crew_var_from_dense,
@@ -36,8 +37,9 @@ __all__ = [
     "pack_rows_word_aligned", "unpack_rows_word_aligned", "build_width_classes",
     "elems_per_word",
     "PPAResult", "ppa_layout", "ppa_row", "force_max_unique",
-    "CrewMatrixUniform", "CrewMatrixVar", "crew_uniform_from_dense",
-    "crew_var_from_dense", "crew_reconstruct_uniform", "crew_reconstruct_var",
+    "CrewMatrixUniform", "CrewMatrixCached", "CrewMatrixVar",
+    "crew_uniform_from_dense", "crew_var_from_dense",
+    "crew_reconstruct_uniform", "crew_reconstruct_var",
     "crew_matmul_uniform", "crew_matmul_var", "unpack_words",
     "CrewStats", "layout_stats", "aggregate_stats", "unique_histogram",
     "frequency_histogram",

@@ -38,6 +38,7 @@ from .unique import CrewLayout, analyze_matrix, index_width
 
 __all__ = [
     "CrewMatrixUniform",
+    "CrewMatrixCached",
     "CrewMatrixVar",
     "crew_uniform_from_dense",
     "crew_var_from_dense",
@@ -90,6 +91,43 @@ class CrewMatrixUniform:
     @property
     def k(self) -> int:
         return self.uniq.shape[1]
+
+
+@register_dataclass_pytree
+class CrewMatrixCached:
+    """A :class:`CrewMatrixUniform` plus its decompressed weight buffer.
+
+    CREW's compressed form stays the source of truth (``cm``); ``wbuf``
+    is ``crew_reconstruct_uniform(cm)`` materialized **once** at serve
+    setup (``repro.serve.cache_decode_weights``) so decode-shaped applies
+    become a plain GEMV against a resident buffer instead of a
+    decompress-per-dispatch.  Stored in the *params* tree (never donated,
+    shared freely across prefill/decode programs and batch buckets),
+    unlike the per-bucket ``pbuf`` decode state which lives in the cache.
+
+    ``layers/linear.apply`` / ``kernels/ops.crew_matmul`` dispatch on the
+    type: the apply is bitwise-identical to the ``xla-dense`` strategy on
+    ``cm`` (same reconstruct -> cast -> matmul -> epilogue pipeline).
+    """
+
+    cm: CrewMatrixUniform
+    wbuf: jnp.ndarray     # [..., N, M] reconstructed weights (uniq dtype)
+
+    @property
+    def width(self) -> int:
+        return self.cm.width
+
+    @property
+    def n_out(self) -> int:
+        return self.cm.n_out
+
+    @property
+    def n_in(self) -> int:
+        return self.cm.n_in
+
+    @property
+    def k(self) -> int:
+        return self.cm.k
 
 
 @register_dataclass_pytree

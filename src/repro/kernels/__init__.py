@@ -6,9 +6,19 @@ crew_matmul.py — pl.pallas_call kernel (VMEM BlockSpec tiling, two step-2
 ops.py         — jit'd dispatch wrapper used by layers.
 ref.py         — pure-jnp oracles for the allclose sweeps.
 """
-from .crew_matmul import crew_matmul_pallas
-from .ops import crew_matmul, pick_strategy, resolve_auto_strategy
+from .crew_matmul import crew_matmul_pallas, crew_matmul_decode_pallas
+from .plan import CrewPlan
+from .ops import (
+    crew_matmul,
+    crew_matmul_decode,
+    init_decode_state,
+    pick_strategy,
+    resolve_auto_strategy,
+    resolve_decode_plan,
+)
 from . import ref
 
-__all__ = ["crew_matmul_pallas", "crew_matmul", "pick_strategy",
-           "resolve_auto_strategy", "ref"]
+__all__ = ["crew_matmul_pallas", "crew_matmul_decode_pallas", "CrewPlan",
+           "crew_matmul", "crew_matmul_decode", "init_decode_state",
+           "pick_strategy", "resolve_auto_strategy", "resolve_decode_plan",
+           "ref"]

@@ -43,7 +43,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-__all__ = ["crew_matmul_pallas", "EPILOGUE_ACTIVATIONS",
+__all__ = ["crew_matmul_pallas", "crew_matmul_decode_pallas",
+           "decode_pbuf_rows", "EPILOGUE_ACTIVATIONS",
            "DEFAULT_BLOCK_N", "DEFAULT_BLOCK_WORDS"]
 
 DEFAULT_BLOCK_N = 128      # input rows per block (sublane-aligned)
@@ -195,3 +196,168 @@ def crew_matmul_pallas(
         interpret=interpret,
     )(*args)
     return out[:, :m_out]
+
+
+# --------------------------------------------------------------------------
+# Decode-shaped (GEMV / skinny-batch) kernel with a carried product buffer
+# --------------------------------------------------------------------------
+
+def decode_pbuf_rows(n: int) -> int:
+    """Sublane-aligned row count of the decode product buffer for an
+    ``n``-input CREW matrix (f32 sublane = 8)."""
+    return -(-n // 8) * 8
+
+
+def _decode_kernel(x_ref, words_ref, uniq_ref, pbuf_in_ref, *rest,
+                   width: int, strategy: str, activation):
+    """One m-block grid step of the decode kernel.  The full partial
+    product buffer P[b, i, k] = x[b, i] * uniq[i, k] is formed **once**,
+    on the first m-block, straight into the ``pbuf`` output ref (aliased
+    to the ``pbuf`` input, so across an H-step scan the same VMEM/HBM
+    buffer is overwritten in place rather than re-allocated); every
+    m-block then only decodes its index tile and gathers from the
+    resident buffer.  Contrast ``_kernel`` above, whose (m, n) grid
+    recomputes P once per *m*-block — grid_m redundant multiplies that
+    dominate at decode shapes."""
+    del pbuf_in_ref  # aliased to pbuf_ref; present only for the alias
+    bias_ref = rest[0] if len(rest) == 3 else None
+    out_ref, pbuf_ref = rest[-2], rest[-1]
+    im = pl.program_id(0)
+
+    @pl.when(im == 0)
+    def _fill():
+        # step 1, exactly once per activation: [B, n_pad, K]
+        pbuf_ref[...] = (x_ref[...].astype(jnp.float32)[:, :, None]
+                         * uniq_ref[...].astype(jnp.float32)[None])
+
+    words = words_ref[...]                      # [n_pad, bw] uint32
+    bn = words.shape[0]
+    epw = 32 // width
+    bw = words.shape[1]
+    bm = bw * epw
+
+    # ---- decode: word-aligned shift+mask unpack -> idx [n_pad, bm] ----
+    shifts = (jax.lax.broadcasted_iota(jnp.uint32, (1, 1, epw), 2)
+              * np.uint32(width))
+    mask = np.uint32((1 << width) - 1)
+    fields = (words[:, :, None] >> shifts) & mask
+    idx = fields.reshape(bn, bm).astype(jnp.int32)
+
+    # ---- step 2: indexed accumulation from the *resident* buffer ----
+    p = pbuf_ref[...]                           # [B, n_pad, K]
+    b, _, k = p.shape
+    if strategy == "gather":
+        gathered = jnp.take_along_axis(
+            p, jnp.broadcast_to(idx[None], (b, bn, bm)), axis=2)
+        contrib = gathered.sum(axis=1)          # [B, bm]
+    elif strategy == "onehot":
+        kk = jax.lax.broadcasted_iota(jnp.int32, (bn, k, bm), 1)
+        oh = (idx[:, None, :] == kk).astype(jnp.float32)
+        contrib = jnp.dot(p.reshape(b, bn * k), oh.reshape(bn * k, bm),
+                          preferred_element_type=jnp.float32)
+    else:
+        raise ValueError(f"unknown strategy {strategy!r}")
+
+    # each m-block is complete in one grid step (the whole N reduction is
+    # resident), so the epilogue applies unconditionally
+    if bias_ref is not None:
+        contrib = contrib + bias_ref[...].astype(jnp.float32)  # [1, bm]
+    if activation is not None:
+        contrib = EPILOGUE_ACTIVATIONS[activation](contrib)
+    out_ref[...] = contrib
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("width", "m_out", "strategy", "activation",
+                     "block_words", "interpret"),
+)
+def crew_matmul_decode_pallas(
+    x: jnp.ndarray,
+    words: jnp.ndarray,
+    uniq: jnp.ndarray,
+    pbuf: jnp.ndarray,
+    *,
+    width: int,
+    m_out: int,
+    strategy: str = "gather",
+    bias=None,
+    activation=None,
+    block_words=None,
+    interpret: bool = True,
+):
+    """Decode-shaped CREW matmul: ``x[B, N] x crew(W[N, M]) -> (out, pbuf)``.
+
+    The product buffer ``pbuf`` ([B, decode_pbuf_rows(N), K] f32, e.g.
+    from ``jnp.zeros``) is both argument and result: it is aliased
+    input->output (``input_output_aliases``), filled on the first m-block,
+    and read by every later m-block — so when the caller threads it
+    through a ``lax.scan`` carry under a donating jit, the H-step decode
+    loop reuses one resident buffer instead of re-materializing P each
+    step.  The returned ``pbuf`` holds this step's products (its content
+    is a pure function of ``x``; carrying it is a buffer-residency
+    optimization, not a numerical dependency between steps).
+
+    The grid covers m-blocks only (``block_words`` packed words each;
+    None = all of W in one block); every block sees the full padded N, so
+    the reduction order matches ``crew_matmul_pallas`` called with
+    ``block_n >= decode_pbuf_rows(N)`` on identically padded operands —
+    the bitwise-parity contract tests/test_kernels.py pins.
+
+    bias/activation form the same fused epilogue as the prefill kernel,
+    applied per m-block (each is finished in one grid step).
+    """
+    if activation is not None and activation not in EPILOGUE_ACTIVATIONS:
+        raise ValueError(f"unknown epilogue activation {activation!r}")
+    b, n = x.shape
+    n_words = words.shape[1]
+    k = uniq.shape[1]
+    epw = 32 // width
+    n_pad = decode_pbuf_rows(n)
+    if pbuf.shape != (b, n_pad, k):
+        raise ValueError(
+            f"pbuf shape {pbuf.shape} != {(b, n_pad, k)} "
+            f"(= [B, decode_pbuf_rows(N), K])")
+
+    bw = n_words if block_words is None else min(block_words, n_words)
+    w_pad = (n_words + bw - 1) // bw * bw
+    if n_pad != n:
+        x = jnp.pad(x, ((0, 0), (0, n_pad - n)))
+        words = jnp.pad(words, ((0, n_pad - n), (0, 0)))
+        uniq = jnp.pad(uniq, ((0, n_pad - n), (0, 0)))
+    if w_pad != n_words:
+        words = jnp.pad(words, ((0, 0), (0, w_pad - n_words)))
+
+    bm = bw * epw
+    grid = (w_pad // bw,)
+
+    in_specs = [
+        pl.BlockSpec((b, n_pad), lambda im: (0, 0)),
+        pl.BlockSpec((n_pad, bw), lambda im: (0, im)),
+        pl.BlockSpec((n_pad, k), lambda im: (0, 0)),
+        pl.BlockSpec((b, n_pad, k), lambda im: (0, 0, 0)),
+    ]
+    args = [x, words, uniq, pbuf]
+    if bias is not None:
+        bias_p = jnp.pad(bias.astype(jnp.float32).reshape(-1),
+                         (0, grid[0] * bm - m_out)).reshape(1, -1)
+        in_specs.append(pl.BlockSpec((1, bm), lambda im: (0, im)))
+        args.append(bias_p)
+
+    out, pbuf_new = pl.pallas_call(
+        functools.partial(_decode_kernel, width=width, strategy=strategy,
+                          activation=activation),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((b, bm), lambda im: (0, im)),
+            pl.BlockSpec((b, n_pad, k), lambda im: (0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, grid[0] * bm), jnp.float32),
+            jax.ShapeDtypeStruct((b, n_pad, k), jnp.float32),
+        ],
+        input_output_aliases={3: 1},
+        interpret=interpret,
+    )(*args)
+    return out[:, :m_out], pbuf_new

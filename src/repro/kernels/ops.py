@@ -1,12 +1,20 @@
 """Public jit'd wrappers around the CREW kernels.
 
-``crew_matmul`` is the one entry point layers use; it dispatches between
+``crew_matmul`` is the one entry point layers use; a :class:`CrewPlan`
+(see repro.kernels.plan) describes the apply and dispatches between
 
   * ``pallas-gather`` / ``pallas-onehot`` — the fused TPU kernel
     (interpret-mode on CPU),
+  * ``pallas-decode`` — the decode-shaped kernel whose partial-product
+    buffer is computed once and kept VMEM-resident; one-shot here, or
+    carried across an H-step scan via ``crew_matmul_decode``,
   * ``xla-dense`` / ``xla-gather``        — the pure-XLA paths from
     repro.core.convert (used by the big-model serve graphs and the
     512-device dry-runs, where a CPU-interpreted kernel is not meaningful),
+  * ``xla-cached`` — the decompress-once path: against a
+    ``CrewMatrixCached`` leaf it is a plain GEMM on the resident weight
+    buffer; against a bare ``CrewMatrixUniform`` it degrades to
+    ``xla-dense`` (same numerics, per-dispatch reconstruct),
   * ``auto`` — measured dispatch: the repro.perf autotune store is probed
     for this (B, N, M, K, width, backend, epilogue) shape (a Python dict
     lookup on static shapes, free at trace time); on a cold cache the
@@ -18,29 +26,48 @@
     Variable-width matrices resolve per *width class* — each class is a
     uniform sub-matrix with its own apply shape and measured winner.
 
-``bias`` / ``activation`` form the fused epilogue (DESIGN.md §3): the
-Pallas paths apply them to the VMEM-resident output block on the last
-n-block; the XLA paths apply them as trailing elementwise ops that XLA
-fuses into the same computation.  Either way each FC layer stays one
-kernel instead of kernel + bias-add + activation.
+``bias`` rides alongside the plan as data; ``plan.activation`` selects
+the fused epilogue (DESIGN.md §3): the Pallas paths apply both to the
+VMEM-resident output block in-kernel; the XLA paths apply them as
+trailing elementwise ops that XLA fuses into the same computation.
+
+The pre-CrewPlan kwargs (``strategy=``, ``activation=``) still work for
+one release behind a DeprecationWarning — docs/api.md has the migration
+table.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 
 from ..core.convert import (
+    CrewMatrixCached,
     CrewMatrixUniform,
     CrewMatrixVar,
     crew_matmul_uniform,
     crew_matmul_var,
 )
 from ..perf import autotune
-from .crew_matmul import EPILOGUE_ACTIVATIONS, crew_matmul_pallas
+from .crew_matmul import (
+    EPILOGUE_ACTIVATIONS,
+    crew_matmul_decode_pallas,
+    crew_matmul_pallas,
+    decode_pbuf_rows,
+)
+from .plan import CrewPlan, warn_deprecated
 
-__all__ = ["crew_matmul", "pick_strategy", "resolve_auto_strategy"]
+__all__ = [
+    "crew_matmul",
+    "crew_matmul_decode",
+    "init_decode_state",
+    "resolve_decode_plan",
+    "pick_strategy",
+    "resolve_auto_strategy",
+    "CrewPlan",
+]
 
 # B*K*width budget below which the one-hot MXU path stays memory bound on a
 # v5e-like chip (197 TFLOP/s vs 819 GB/s * 8/width idx/s) — DESIGN.md §3.
@@ -77,6 +104,41 @@ def resolve_auto_strategy(batch: int, cm: CrewMatrixUniform, *,
                              epilogue)
 
 
+def _resolve_auto_plan(plan: CrewPlan, batch: int, cm, epilogue: str) -> CrewPlan:
+    """Resolve ``strategy="auto"`` to a concrete plan: a measured record
+    contributes its strategy *and* block shape; explicit caller blocks
+    win over measured ones; the activation always comes from the caller's
+    plan (it is part of the epilogue, not the measurement)."""
+    key = autotune.make_key(batch, cm.n_in, cm.n_out, cm.k, cm.width,
+                            jax.default_backend(), epilogue=epilogue)
+    measured = autotune.lookup_plan(key)
+    if measured is None:
+        strat = pick_strategy(batch, cm.width, compute_rich=batch >= 64)
+        return plan.with_strategy(strat)
+    return dataclasses.replace(
+        measured,
+        block_n=plan.block_n if plan.block_n is not None else measured.block_n,
+        block_words=(plan.block_words if plan.block_words is not None
+                     else measured.block_words),
+        activation=plan.activation,
+    )
+
+
+def resolve_decode_plan(batch: int, n_in: int, n_out: int, k: int,
+                        width: int, *, backend: Optional[str] = None
+                        ) -> Optional[CrewPlan]:
+    """Measured winner for a *decode-shaped* apply (kind="decode" key),
+    or None on a cold store.  Decode keys are epilogue-independent: the
+    winner is a buffer-residency decision about the weight representation,
+    not about the trailing elementwise ops.  None means "no measurement"
+    — callers must then leave the decode path untouched (no carried
+    state, no cached weights), which keeps a cold store bitwise-identical
+    to the pre-decode-kernel behavior."""
+    key = autotune.make_key(batch, n_in, n_out, k, width,
+                            backend or jax.default_backend(), kind="decode")
+    return autotune.lookup_plan(key)
+
+
 def _apply_epilogue(out: jnp.ndarray, bias, activation) -> jnp.ndarray:
     """XLA-path epilogue (the Pallas paths fuse it in-kernel instead)."""
     if bias is not None:
@@ -86,7 +148,7 @@ def _apply_epilogue(out: jnp.ndarray, bias, activation) -> jnp.ndarray:
     return out
 
 
-def _apply_class(xb, c, n_in: int, n_out: int, strategy: str,
+def _apply_class(xb, c, n_in: int, n_out: int, plan: CrewPlan,
                  interpret: bool, block_m: int) -> jnp.ndarray:
     """One width class of a variable-width matrix -> f32 [B, n_out].
 
@@ -94,10 +156,12 @@ def _apply_class(xb, c, n_in: int, n_out: int, strategy: str,
     single-class view (one decode/gather implementation, no drift); the
     Pallas paths call the kernel directly.
     """
+    strategy = plan.strategy
     if strategy in ("pallas-gather", "pallas-onehot"):
         return crew_matmul_pallas(
             xb[:, c.row_ids], c.words, c.uniq, width=c.width, m_out=n_out,
-            strategy=strategy.split("-")[1], interpret=interpret)
+            strategy=strategy.split("-")[1], interpret=interpret,
+            **_block_kwargs(plan))
     if strategy not in ("xla-dense", "xla-gather"):
         raise ValueError(f"unknown strategy {strategy!r}")
     sub = CrewMatrixVar(classes=(c,), n_in=n_in, n_out=n_out)
@@ -106,23 +170,67 @@ def _apply_class(xb, c, n_in: int, n_out: int, strategy: str,
     return out.astype(jnp.float32)
 
 
+def _block_kwargs(plan: CrewPlan) -> dict:
+    kw = {}
+    if plan.block_n is not None:
+        kw["block_n"] = plan.block_n
+    if plan.block_words is not None:
+        kw["block_words"] = plan.block_words
+    return kw
+
+
+def _normalize_plan(plan, strategy, activation, caller: str) -> CrewPlan:
+    """Fold the deprecated ``strategy=`` / ``activation=`` kwargs into the
+    plan (warning once per kwarg per process)."""
+    if strategy is not None:
+        warn_deprecated(
+            f"{caller}:strategy",
+            f"{caller}(strategy=...) is deprecated; pass a CrewPlan "
+            f"(e.g. plan=CrewPlan(strategy={strategy!r})) — see docs/api.md",
+            stacklevel=4)
+        if plan is None:
+            plan = CrewPlan(strategy=strategy)
+    plan = CrewPlan.of(plan)
+    if activation is not None:
+        warn_deprecated(
+            f"{caller}:activation",
+            f"{caller}(activation=...) is deprecated; fold the epilogue "
+            f"into the plan (CrewPlan(..., activation={activation!r})) — "
+            f"see docs/api.md",
+            stacklevel=4)
+        plan = plan.with_activation(activation)
+    return plan
+
+
 def crew_matmul(
     x: jnp.ndarray,
-    cm: Union[CrewMatrixUniform, CrewMatrixVar],
+    cm: Union[CrewMatrixUniform, CrewMatrixCached, CrewMatrixVar],
+    plan: Union[None, str, CrewPlan] = None,
     *,
-    strategy: str = "auto",
+    strategy: Optional[str] = None,
     bias=None,
     activation: Optional[str] = None,
     interpret: bool = True,
     block_m: int = 1024,
 ) -> jnp.ndarray:
-    """x[..., N] @ crew(W[N, M]) (+ bias, activation) -> [..., M] in x.dtype."""
-    if activation is not None and activation not in EPILOGUE_ACTIVATIONS:
-        raise ValueError(f"unknown epilogue activation {activation!r}")
+    """x[..., N] @ crew(W[N, M]) (+ bias, plan.activation) -> [..., M] in
+    x.dtype.  ``plan`` is a CrewPlan, a strategy string, or None (auto);
+    ``strategy=`` / ``activation=`` are the deprecated spellings."""
+    plan = _normalize_plan(plan, strategy, activation, "crew_matmul")
+    activation = plan.activation
     lead = x.shape[:-1]
     xb = x.reshape(-1, x.shape[-1])
     b = xb.shape[0]
     epilogue = autotune.epilogue_tag(bias is not None, activation)
+
+    if isinstance(cm, CrewMatrixCached):
+        # decompress-once: plain GEMM against the resident weight buffer,
+        # bitwise-identical to xla-dense on cm.cm (same reconstruct ->
+        # cast -> matmul -> epilogue pipeline, reconstruct just happened
+        # at serve setup instead of per dispatch).
+        out = xb @ cm.wbuf.astype(x.dtype)
+        out = _apply_epilogue(out, bias, activation)
+        return out.reshape(*lead, cm.n_out).astype(x.dtype)
 
     if isinstance(cm, CrewMatrixVar):
         # Each width class is a uniform sub-matrix with its own apply shape:
@@ -133,29 +241,85 @@ def crew_matmul(
         # sum, so per-class strategy cost is epilogue-independent.
         out = jnp.zeros((b, cm.n_out), dtype=jnp.float32)
         for c in cm.classes:
-            strat = strategy
-            if strat == "auto":
-                strat = _resolve_measured(
+            cplan = plan
+            if cplan.strategy == "auto":
+                cplan = cplan.with_strategy(_resolve_measured(
                     b, int(c.uniq.shape[0]), cm.n_out, int(c.uniq.shape[1]),
-                    c.width, "none")
-            out = out + _apply_class(xb, c, cm.n_in, cm.n_out, strat,
+                    c.width, "none"))
+            out = out + _apply_class(xb, c, cm.n_in, cm.n_out, cplan,
                                      interpret, block_m)
         out = _apply_epilogue(out, bias, activation)
         return out.reshape(*lead, cm.n_out).astype(x.dtype)
 
     # uniform matrix
-    if strategy == "auto":
-        strategy = resolve_auto_strategy(b, cm, epilogue=epilogue)
-    if strategy in ("xla-dense", "xla-gather"):
-        out = crew_matmul_uniform(xb, cm, strategy=strategy.split("-")[1],
-                                  block_m=block_m)
+    if plan.strategy == "auto":
+        plan = _resolve_auto_plan(plan, b, cm, epilogue)
+    strat = plan.strategy
+    if strat in ("xla-dense", "xla-gather", "xla-cached"):
+        # xla-cached against a bare CrewMatrixUniform has no resident
+        # buffer to use — identical numerics via the dense reconstruct.
+        xla = "dense" if strat == "xla-cached" else strat.split("-")[1]
+        out = crew_matmul_uniform(xb, cm, strategy=xla, block_m=block_m)
         out = _apply_epilogue(out, bias, activation)
-    elif strategy in ("pallas-gather", "pallas-onehot"):
+    elif strat in ("pallas-gather", "pallas-onehot"):
         out = crew_matmul_pallas(
             xb, cm.words, cm.uniq, width=cm.width, m_out=cm.n_out,
-            strategy=strategy.split("-")[1], bias=bias, activation=activation,
-            interpret=interpret,
+            strategy=strat.split("-")[1], bias=bias, activation=activation,
+            interpret=interpret, **_block_kwargs(plan),
+        )
+    elif strat == "pallas-decode":
+        out, _ = crew_matmul_decode_pallas(
+            xb, cm.words, cm.uniq, init_decode_state(cm, b)["pbuf"],
+            width=cm.width, m_out=cm.n_out, bias=bias, activation=activation,
+            block_words=plan.block_words, interpret=interpret,
         )
     else:
-        raise ValueError(f"unknown strategy {strategy!r}")
+        raise ValueError(f"unknown strategy {strat!r}")
     return out.reshape(*lead, cm.n_out).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Carried decode state (the scan-carry product buffer)
+# --------------------------------------------------------------------------
+
+def init_decode_state(cm: CrewMatrixUniform, batch: int) -> dict:
+    """Zero product-buffer state for a decode-shaped apply:
+    ``{"pbuf": f32[batch, decode_pbuf_rows(N), K]}``.  The buffer content
+    is a pure function of each step's activation (overwritten in full
+    every call), so zeros are a valid start."""
+    n = cm.words.shape[-2]
+    return {"pbuf": jnp.zeros((batch, decode_pbuf_rows(n), cm.k),
+                              jnp.float32)}
+
+
+def crew_matmul_decode(
+    x: jnp.ndarray,
+    cm: Union[CrewMatrixUniform, CrewMatrixCached],
+    state: Optional[dict],
+    *,
+    plan: Union[None, str, CrewPlan] = None,
+    bias=None,
+    interpret: bool = True,
+):
+    """Decode-shaped apply with carried product-buffer state.
+
+    ``state`` is ``init_decode_state(cm, B)`` (or a prior step's returned
+    state) to run the VMEM-resident decode kernel, or None to fall back
+    to the stateless ``crew_matmul`` path (returned state is then None).
+    Thread the returned state through the decode ``lax.scan`` carry —
+    under a donating jit the buffer is updated in place across all H
+    steps.  Output values are bitwise those of the one-shot decode
+    kernel: the carry saves allocation/traffic, never changes numbers.
+    """
+    plan = CrewPlan.of(plan)
+    if state is None or isinstance(cm, CrewMatrixCached):
+        return crew_matmul(x, cm, plan, bias=bias, interpret=interpret), state
+    lead = x.shape[:-1]
+    xb = x.reshape(-1, x.shape[-1])
+    out, pbuf = crew_matmul_decode_pallas(
+        xb, cm.words, cm.uniq, state["pbuf"],
+        width=cm.width, m_out=cm.n_out, bias=bias,
+        activation=plan.activation, block_words=plan.block_words,
+        interpret=interpret,
+    )
+    return out.reshape(*lead, cm.n_out).astype(x.dtype), {"pbuf": pbuf}

@@ -1,0 +1,109 @@
+"""CrewPlan: the one value that describes a CREW apply — DESIGN.md §3.
+
+``crew_matmul`` historically grew a loose kwarg sprawl (``strategy=``,
+``activation=``, ad-hoc block overrides) that every layer had to thread
+separately and the autotune store could only partially key on.  A
+:class:`CrewPlan` replaces that: one frozen, hashable dataclass carrying
+
+* ``strategy``     — dispatch path ("auto", "xla-dense", "xla-gather",
+                     "pallas-gather", "pallas-onehot", "pallas-decode",
+                     "xla-cached"),
+* ``block_n`` / ``block_words`` — Pallas tiling overrides (None = the
+                     kernel defaults; autotune block sweeps fill these),
+* ``activation``   — the fused-epilogue activation (the bias half of the
+                     epilogue is data, not plan: it rides the ``bias``
+                     array argument).
+
+Being frozen and hashable, a plan can be a static jit argument and a
+dispatch-cache key component.  ``CrewPlan.of`` accepts the three spellings
+callers use (None, a strategy string, a plan) so model-level code keeps
+its ergonomic ``crew_strategy="auto"`` knob and normalizes at the layer
+boundary.
+
+The module also hosts the warn-once deprecation helper the old kwargs
+(``crew_matmul(strategy=..., activation=...)``,
+``linear.apply(crew_strategy=..., activation=...)``, dict-style
+``SchedulerMetrics`` reads) are parked behind for one release —
+docs/api.md has the migration notes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Optional, Union
+
+__all__ = ["CrewPlan", "warn_deprecated", "reset_deprecation_warnings"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CrewPlan:
+    """One CREW apply described as data (strategy, block shape, epilogue)."""
+
+    strategy: str = "auto"
+    block_n: Optional[int] = None
+    block_words: Optional[int] = None
+    activation: Optional[str] = None
+
+    def __post_init__(self):
+        # activation names are validated here (the kernel table lives in
+        # crew_matmul; import deferred to avoid a cycle at module load)
+        if self.activation is not None:
+            from .crew_matmul import EPILOGUE_ACTIVATIONS
+            if self.activation not in EPILOGUE_ACTIVATIONS:
+                raise ValueError(
+                    f"unknown epilogue activation {self.activation!r}")
+
+    @classmethod
+    def of(cls, plan: Union[None, str, "CrewPlan"]) -> "CrewPlan":
+        """Normalize the caller spellings: None -> auto plan, a strategy
+        string -> a plan with that strategy, a plan -> itself."""
+        if plan is None:
+            return cls()
+        if isinstance(plan, str):
+            return cls(strategy=plan)
+        if isinstance(plan, cls):
+            return plan
+        raise TypeError(f"cannot make a CrewPlan from {type(plan).__name__}")
+
+    def with_strategy(self, strategy: str) -> "CrewPlan":
+        return dataclasses.replace(self, strategy=strategy)
+
+    def with_activation(self, activation: Optional[str]) -> "CrewPlan":
+        return dataclasses.replace(self, activation=activation)
+
+    def with_blocks(self, block_n: Optional[int],
+                    block_words: Optional[int]) -> "CrewPlan":
+        return dataclasses.replace(self, block_n=block_n,
+                                   block_words=block_words)
+
+    def label(self) -> str:
+        """Canonical short name (autotune ``times_s`` keys): the bare
+        strategy when the blocks are defaults, else strategy@nN.wW."""
+        if self.block_n is None and self.block_words is None:
+            return self.strategy
+        return (f"{self.strategy}@n{self.block_n or '-'}"
+                f".w{self.block_words or '-'}")
+
+
+# --------------------------------------------------------------------------
+# Warn-once deprecation shims (old kwargs / dict-style metrics reads)
+# --------------------------------------------------------------------------
+
+_WARNED: set = set()
+
+
+def warn_deprecated(key: str, message: str, *, stacklevel: int = 3) -> None:
+    """Emit ``message`` as a DeprecationWarning once per ``key`` per
+    process.  ``stacklevel`` defaults to the *caller's caller* so the
+    warning points at external code using the deprecated surface, not at
+    the shim — which also keeps the repo's own pytest filter
+    (``error::DeprecationWarning:repro``) trained on internal callers."""
+    if key in _WARNED:
+        return
+    _WARNED.add(key)
+    warnings.warn(message, DeprecationWarning, stacklevel=stacklevel)
+
+
+def reset_deprecation_warnings() -> None:
+    """Forget which deprecations already fired (tests only)."""
+    _WARNED.clear()

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from ..dist.ctx import constrain
+from ..kernels.plan import CrewPlan
 from . import linear
 from .rope import apply_rope, rope_freqs
 
@@ -317,9 +318,10 @@ def attend(params, x, *, n_heads, n_kv, d_head, rope_theta=10000.0,
                      forward path; scores never leave VMEM).
     """
     b, s, _ = x.shape
-    q = linear.apply(params["q"], x, crew_strategy=crew_strategy)
-    k = linear.apply(params["k"], x, crew_strategy=crew_strategy)
-    v = linear.apply(params["v"], x, crew_strategy=crew_strategy)
+    plan = CrewPlan.of(crew_strategy)
+    q = linear.apply(params["q"], x, plan=plan)
+    k = linear.apply(params["k"], x, plan=plan)
+    v = linear.apply(params["v"], x, plan=plan)
     q = constrain(q.reshape(b, s, n_heads, d_head), "batch", None, "heads", None)
     k = constrain(k.reshape(b, s, n_kv, d_head), "batch", None, "kv_heads", None)
     v = constrain(v.reshape(b, s, n_kv, d_head), "batch", None, "kv_heads", None)
@@ -335,7 +337,7 @@ def attend(params, x, *, n_heads, n_kv, d_head, rope_theta=10000.0,
         out = chunked_attention(q, k, v, causal=causal, q_chunk=q_chunk,
                                 kv_chunk=kv_chunk)
     out = out.reshape(b, s, n_heads * d_head)
-    return linear.apply(params["o"], out, crew_strategy=crew_strategy), (k, v)
+    return linear.apply(params["o"], out, plan=plan), (k, v)
 
 
 # int8 KV-cache quantization scale (§Perf decode iteration): K/V entries
@@ -358,47 +360,69 @@ def _maybe_dequant_kv(t: jnp.ndarray, dtype) -> jnp.ndarray:
     return t
 
 
+def _lens_vector(ln: jnp.ndarray, b: int) -> jnp.ndarray:
+    """The one documented cache-length signature (DESIGN.md §5 /
+    docs/api.md): ``len`` is a scalar (every lane at the same position)
+    or a vector ``[B]`` of per-lane positions.  Both normalize to the
+    ``[B]`` vector here — every consumer below is written against the
+    vector form only, and the *returned* cache preserves the caller's
+    rank (scalar in, scalar out)."""
+    if ln.ndim == 1:
+        return ln
+    return jnp.broadcast_to(ln.reshape(1), (b,))
+
+
 def attend_decode(params, x, cache, *, n_heads, n_kv, d_head,
-                  rope_theta=10000.0, crew_strategy="auto"):
+                  rope_theta=10000.0, crew_strategy="auto",
+                  crew_state=None):
     """Decode path. x [B, 1, d]; cache {"k","v","len"} -> (out, new_cache).
 
-    ``cache["len"]`` is either a scalar (every sequence at the same
-    position — the one-shot ``serve.generate`` path) or a vector ``[B]``
-    of per-sequence positions (the continuous-batching scheduler,
-    DESIGN.md §5): each lane RoPEs its query/key at its own offset and
-    scatters its new KV entry at its own cache position.
+    ``cache["len"]`` follows the unified scalar-or-``[B]`` signature (see
+    :func:`_lens_vector`): internally always the per-lane vector — each
+    lane RoPEs its query/key at its own offset and scatters its new KV
+    entry at its own cache position — with the returned ``len``
+    preserving the caller's rank.
+
+    ``crew_state`` is the decode product-buffer mirror of ``params``
+    (repro.serve builds it); when given, the q/k/v/o projections run the
+    VMEM-resident decode kernel and the returned cache carries the
+    updated mirror under ``"crew"`` for the scan.
 
     An int8 cache (``init_kv_cache(dtype=jnp.int8)``) is quantized on
     write and dequantized on read at a fixed scale.
     """
     b = x.shape[0]
-    q = linear.apply(params["q"], x, crew_strategy=crew_strategy)
-    k = linear.apply(params["k"], x, crew_strategy=crew_strategy)
-    v = linear.apply(params["v"], x, crew_strategy=crew_strategy)
+    plan = CrewPlan.of(crew_strategy)
+    st = crew_state or {}
+    q, sq = linear.apply_with_state(params["q"], x, plan=plan,
+                                    state=st.get("q"))
+    k, sk = linear.apply_with_state(params["k"], x, plan=plan,
+                                    state=st.get("k"))
+    v, sv = linear.apply_with_state(params["v"], x, plan=plan,
+                                    state=st.get("v"))
     q = q.reshape(b, 1, n_heads, d_head)
     k = k.reshape(b, 1, n_kv, d_head)
     v = v.reshape(b, 1, n_kv, d_head)
     ln = cache["len"]
-    per_slot = ln.ndim == 1  # static at trace time
-    pos = ln[:, None] if per_slot else jnp.broadcast_to(ln.reshape(1, 1), (b, 1))
+    ln_b = _lens_vector(ln, b)
+    pos = ln_b[:, None]
     inv = rope_freqs(d_head, rope_theta)
     q = apply_rope(q, pos, inv)
     k = apply_rope(k, pos, inv)
-    if per_slot:
-        lane = jnp.arange(b)
-        k_cache = cache["k"].at[lane, ln].set(
-            _maybe_quant_kv(k, cache["k"])[:, 0])
-        v_cache = cache["v"].at[lane, ln].set(
-            _maybe_quant_kv(v, cache["v"])[:, 0])
-    else:
-        k_cache = jax.lax.dynamic_update_slice_in_dim(
-            cache["k"], _maybe_quant_kv(k, cache["k"]), ln, axis=1)
-        v_cache = jax.lax.dynamic_update_slice_in_dim(
-            cache["v"], _maybe_quant_kv(v, cache["v"]), ln, axis=1)
-    out = decode_attention(q, k_cache, v_cache, ln + 1)
+    lane = jnp.arange(b)
+    k_cache = cache["k"].at[lane, ln_b].set(
+        _maybe_quant_kv(k, cache["k"])[:, 0])
+    v_cache = cache["v"].at[lane, ln_b].set(
+        _maybe_quant_kv(v, cache["v"])[:, 0])
+    out = decode_attention(q, k_cache, v_cache, ln_b + 1)
     out = out.reshape(b, 1, n_heads * d_head)
-    y = linear.apply(params["o"], out, crew_strategy=crew_strategy)
-    return y, {"k": k_cache, "v": v_cache, "len": cache["len"] + 1}
+    y, so = linear.apply_with_state(params["o"], out, plan=plan,
+                                    state=st.get("o"))
+    new_cache = {"k": k_cache, "v": v_cache, "len": cache["len"] + 1}
+    if crew_state is not None:
+        new_cache["crew"] = {**crew_state, "q": sq, "k": sk, "v": sv,
+                             "o": so}
+    return y, new_cache
 
 
 def attend_prefill_cached(params, x, cache, *, n_heads, n_kv, d_head,
@@ -406,14 +430,15 @@ def attend_prefill_cached(params, x, cache, *, n_heads, n_kv, d_head,
     """Chunked-prefill path: a chunk of prompt tokens against prior cache.
 
     x [B, C, d] holds C consecutive prompt tokens whose first token sits
-    at cache position ``cache["len"]`` — either a scalar (all lanes at
-    the same offset) or a vector ``[B]`` of per-slot offsets (the
-    scheduler's chunked prefill, DESIGN.md §5): each lane RoPEs its
-    chunk at its own offset and scatters its K/V rows at its own cache
-    positions.  Positions [0, offset) may hold *reused* KV state (a
-    prefix-cache hit or an earlier chunk) — the chunk attends to them
-    without recomputing, which is the whole point: prefill work becomes
-    O(suffix), not O(prompt).
+    at cache position ``cache["len"]`` — the unified scalar-or-``[B]``
+    cache-length signature (see :func:`_lens_vector`): normalized to the
+    per-lane vector internally, each lane RoPEs its chunk at its own
+    offset and scatters its K/V rows at its own cache positions, and the
+    returned ``len`` preserves the caller's rank.  Positions
+    [0, offset) may hold *reused* KV state (a prefix-cache hit or an
+    earlier chunk) — the chunk attends to them without recomputing,
+    which is the whole point: prefill work becomes O(suffix), not
+    O(prompt).
 
     Returns (out [B, C, d], new cache) with ``len`` advanced by C; a
     padded tail chunk advances past its padding, so the caller resets
@@ -428,14 +453,14 @@ def attend_prefill_cached(params, x, cache, *, n_heads, n_kv, d_head,
     ``cache_len``).
     """
     b, c, _ = x.shape
-    q = linear.apply(params["q"], x, crew_strategy=crew_strategy)
-    k = linear.apply(params["k"], x, crew_strategy=crew_strategy)
-    v = linear.apply(params["v"], x, crew_strategy=crew_strategy)
+    plan = CrewPlan.of(crew_strategy)
+    q = linear.apply(params["q"], x, plan=plan)
+    k = linear.apply(params["k"], x, plan=plan)
+    v = linear.apply(params["v"], x, plan=plan)
     q = q.reshape(b, c, n_heads, d_head)
     k = k.reshape(b, c, n_kv, d_head)
     v = v.reshape(b, c, n_kv, d_head)
-    off = cache["len"]
-    off_b = off if off.ndim == 1 else jnp.broadcast_to(off.reshape(1), (b,))
+    off_b = _lens_vector(cache["len"], b)
     pos = off_b[:, None] + jnp.arange(c)[None]          # [B, C]
     inv = rope_freqs(d_head, rope_theta)
     q = apply_rope(q, pos, inv)
@@ -446,7 +471,7 @@ def attend_prefill_cached(params, x, cache, *, n_heads, n_kv, d_head,
     out = cached_chunk_attention(q, _maybe_dequant_kv(k_cache, q.dtype),
                                  _maybe_dequant_kv(v_cache, q.dtype), pos)
     out = out.reshape(b, c, n_heads * d_head)
-    y = linear.apply(params["o"], out, crew_strategy=crew_strategy)
+    y = linear.apply(params["o"], out, plan=plan)
     return y, {"k": k_cache, "v": v_cache, "len": cache["len"] + c}
 
 

@@ -5,10 +5,17 @@ a ``CrewMatrixUniform`` (serving after ``repro.serve.convert`` CREW-izes the
 checkpoint).  ``apply`` dispatches on the leaf type so every model in the
 framework gets CREW support for free.
 
-``apply(..., activation=...)`` fuses the layer's bias and activation into
-the matmul (DESIGN.md §3 "epilogue fusion"): on the CREW Pallas paths the
-epilogue runs on the VMEM-resident output block, so an FC layer is one
-kernel instead of kernel + bias-add + activation.
+``apply(..., plan=CrewPlan(..., activation=...))`` fuses the layer's bias
+and activation into the matmul (DESIGN.md §3 "epilogue fusion"): on the
+CREW Pallas paths the epilogue runs on the VMEM-resident output block, so
+an FC layer is one kernel instead of kernel + bias-add + activation.
+The pre-CrewPlan kwargs (``crew_strategy=``, ``activation=``) still work
+for one release behind a DeprecationWarning (docs/api.md).
+
+``apply(..., state=...)`` threads the decode product-buffer state
+(DESIGN.md §3): ``state`` mirrors the params dict ({"w": {"pbuf": ...}})
+and switches the CREW apply onto the VMEM-resident decode kernel; the
+call then returns ``(y, new_state)`` for the caller's scan carry.
 """
 from __future__ import annotations
 
@@ -18,11 +25,12 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from ..core.convert import CrewMatrixUniform, CrewMatrixVar
+from ..core.convert import CrewMatrixCached, CrewMatrixUniform, CrewMatrixVar
 from ..kernels.crew_matmul import EPILOGUE_ACTIVATIONS
-from ..kernels.ops import crew_matmul
+from ..kernels.ops import crew_matmul, crew_matmul_decode
+from ..kernels.plan import CrewPlan, warn_deprecated
 
-__all__ = ["init", "spec", "apply"]
+__all__ = ["init", "spec", "apply", "apply_with_state"]
 
 
 def init(rng, n_in: int, n_out: int, *, bias: bool = False,
@@ -69,15 +77,56 @@ def crew_spec(in_axis: Optional[str], out_axis: Optional[str], *, bias: bool = F
     return s
 
 
-def apply(params, x: jnp.ndarray, *, crew_strategy: str = "auto",
-          activation: Optional[str] = None) -> jnp.ndarray:
-    w = params["w"]
-    if isinstance(w, (CrewMatrixUniform, CrewMatrixVar)):
-        return crew_matmul(x, w, strategy=crew_strategy,
-                           bias=params.get("b"), activation=activation)
-    y = x @ w.astype(x.dtype)
-    if "b" in params:
-        y = y + params["b"].astype(y.dtype)
+def apply(params, x: jnp.ndarray, *, plan=None, state=None,
+          crew_strategy: Optional[str] = None,
+          activation: Optional[str] = None):
+    """Apply the layer.  ``plan`` is a CrewPlan / strategy string / None;
+    its ``activation`` is the fused epilogue (also applied on the dense
+    path).  With ``state`` (the decode product-buffer mirror,
+    ``{"w": {"pbuf": ...}}``) the return value is ``(y, new_state)``;
+    stateless calls return ``y`` alone.  ``crew_strategy=`` /
+    ``activation=`` are the deprecated pre-CrewPlan spellings."""
+    if crew_strategy is not None:
+        warn_deprecated(
+            "linear.apply:crew_strategy",
+            "linear.apply(crew_strategy=...) is deprecated; pass "
+            "plan=CrewPlan(strategy=...) — see docs/api.md", stacklevel=3)
+        if plan is None:
+            plan = CrewPlan.of(crew_strategy)
+    plan = CrewPlan.of(plan)
     if activation is not None:
-        y = EPILOGUE_ACTIVATIONS[activation](y)
+        warn_deprecated(
+            "linear.apply:activation",
+            "linear.apply(activation=...) is deprecated; fold it into the "
+            "plan (CrewPlan(..., activation=...)) — see docs/api.md",
+            stacklevel=3)
+        plan = plan.with_activation(activation)
+
+    w = params["w"]
+    leaf_state = None if state is None else state.get("w")
+    if isinstance(w, (CrewMatrixUniform, CrewMatrixCached)) \
+            and leaf_state is not None:
+        y, new_leaf = crew_matmul_decode(x, w, leaf_state, plan=plan,
+                                         bias=params.get("b"))
+        return y, {**state, "w": new_leaf}
+    if isinstance(w, (CrewMatrixUniform, CrewMatrixCached, CrewMatrixVar)):
+        y = crew_matmul(x, w, plan, bias=params.get("b"))
+    else:
+        y = x @ w.astype(x.dtype)
+        if "b" in params:
+            y = y + params["b"].astype(y.dtype)
+        if plan.activation is not None:
+            y = EPILOGUE_ACTIVATIONS[plan.activation](y)
+    if state is not None:
+        return y, state
     return y
+
+
+def apply_with_state(params, x: jnp.ndarray, *, plan=None, state=None):
+    """Uniform-arity helper for scan bodies: always returns
+    ``(y, new_state)`` (``new_state`` is None / the unchanged mirror when
+    the layer carries no product buffer)."""
+    out = apply(params, x, plan=plan, state=state)
+    if state is None:
+        return out, None
+    return out

@@ -121,7 +121,7 @@ def apply_chunked(params, xin, *, head_dim: int = 64, state: int = 64,
                   chunk: int = 256, crew_strategy="auto", h0=None):
     """Training/prefill forward. xin [B, S, d] -> ([B, S, d], final_state)."""
     b, s, d_model = xin.shape
-    proj = linear.apply(params["in_proj"], xin, crew_strategy=crew_strategy)
+    proj = linear.apply(params["in_proj"], xin, plan=crew_strategy)
     d_inner = params["norm"].shape[-1]
     n_heads = d_inner // head_dim
     z, xbc, dt_pre = _split_proj(proj, d_inner, state, n_heads)
@@ -164,14 +164,14 @@ def apply_chunked(params, xin, *, head_dim: int = 64, state: int = 64,
     var = jnp.mean(y * y, axis=-1, keepdims=True)
     y = y * jax.lax.rsqrt(var + 1e-6) * params["norm"].astype(jnp.float32)
     y = y.astype(xin.dtype)
-    return linear.apply(params["out_proj"], y, crew_strategy=crew_strategy), h_fin
+    return linear.apply(params["out_proj"], y, plan=crew_strategy), h_fin
 
 
 def apply_decode(params, xin, cache, *, head_dim: int = 64, state: int = 64,
                  crew_strategy="auto"):
     """Single-token decode. xin [B, 1, d]; cache {"conv", "h"}."""
     b = xin.shape[0]
-    proj = linear.apply(params["in_proj"], xin, crew_strategy=crew_strategy)
+    proj = linear.apply(params["in_proj"], xin, plan=crew_strategy)
     d_inner = params["norm"].shape[-1]
     n_heads = d_inner // head_dim
     z, xbc, dt_pre = _split_proj(proj, d_inner, state, n_heads)
@@ -192,7 +192,7 @@ def apply_decode(params, xin, cache, *, head_dim: int = 64, state: int = 64,
     var = jnp.mean(y * y, axis=-1, keepdims=True)
     y = y * jax.lax.rsqrt(var + 1e-6) * params["norm"].astype(jnp.float32)
     y = y.astype(xin.dtype)
-    out = linear.apply(params["out_proj"], y, crew_strategy=crew_strategy)
+    out = linear.apply(params["out_proj"], y, plan=crew_strategy)
     return out, {"conv": conv_carry, "h": h}
 
 

@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from . import linear
+from ..kernels.plan import CrewPlan
 
 __all__ = ["swiglu_init", "swiglu_spec", "swiglu_apply",
            "gelu_init", "gelu_spec", "gelu_apply"]
@@ -34,11 +35,22 @@ def swiglu_spec(stack_axes=()):
     }
 
 
-def swiglu_apply(params, x, *, crew_strategy="auto"):
-    g = linear.apply(params["gate"], x, crew_strategy=crew_strategy,
-                     activation="silu")
-    u = linear.apply(params["up"], x, crew_strategy=crew_strategy)
-    return linear.apply(params["down"], g * u, crew_strategy=crew_strategy)
+def swiglu_apply(params, x, *, crew_strategy="auto", crew_state=None):
+    """SwiGLU FFN.  ``crew_strategy`` is a strategy string or CrewPlan.
+    With ``crew_state`` (the decode product-buffer mirror of ``params``)
+    the return value is ``(y, new_state)`` for the decode scan carry."""
+    plan = CrewPlan.of(crew_strategy)
+    st = crew_state or {}
+    g, sg = linear.apply_with_state(params["gate"], x,
+                                    plan=plan.with_activation("silu"),
+                                    state=st.get("gate"))
+    u, su = linear.apply_with_state(params["up"], x, plan=plan,
+                                    state=st.get("up"))
+    y, sd = linear.apply_with_state(params["down"], g * u, plan=plan,
+                                    state=st.get("down"))
+    if crew_state is None:
+        return y
+    return y, {**crew_state, "gate": sg, "up": su, "down": sd}
 
 
 def gelu_init(rng, d_model: int, d_ff: int, *, dtype=jnp.float32, stack=()):
@@ -57,7 +69,14 @@ def gelu_spec(stack_axes=()):
     }
 
 
-def gelu_apply(params, x, *, crew_strategy="auto"):
-    h = linear.apply(params["up"], x, crew_strategy=crew_strategy,
-                     activation="gelu")
-    return linear.apply(params["down"], h, crew_strategy=crew_strategy)
+def gelu_apply(params, x, *, crew_strategy="auto", crew_state=None):
+    plan = CrewPlan.of(crew_strategy)
+    st = crew_state or {}
+    h, su = linear.apply_with_state(params["up"], x,
+                                    plan=plan.with_activation("gelu"),
+                                    state=st.get("up"))
+    y, sd = linear.apply_with_state(params["down"], h, plan=plan,
+                                    state=st.get("down"))
+    if crew_state is None:
+        return y
+    return y, {**crew_state, "up": su, "down": sd}

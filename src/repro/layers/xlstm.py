@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from ..dist.ctx import constrain
+from ..kernels.plan import CrewPlan
 from . import linear
 
 __all__ = [
@@ -97,11 +98,11 @@ def mlstm_apply(params, x, state=None, *, n_heads: int, pf: float = 2.0,
     b, s, d = x.shape
     di = int(pf * d)
     dh = di // n_heads
-    up = linear.apply(params["up"], x, crew_strategy=crew_strategy)
+    up = linear.apply(params["up"], x, plan=crew_strategy)
     xm, og = jnp.split(up, 2, axis=-1)
-    q = linear.apply(params["q"], xm, crew_strategy=crew_strategy)
-    k = linear.apply(params["k"], xm, crew_strategy=crew_strategy) * dh ** -0.5
-    v = linear.apply(params["v"], xm, crew_strategy=crew_strategy)
+    q = linear.apply(params["q"], xm, plan=crew_strategy)
+    k = linear.apply(params["k"], xm, plan=crew_strategy) * dh ** -0.5
+    v = linear.apply(params["v"], xm, plan=crew_strategy)
     gates = linear.apply(params["ifg"], xm.astype(jnp.float32))
     ig, fg = jnp.split(gates, 2, axis=-1)                  # [B, S, H]
     fg = jax.nn.log_sigmoid(fg)
@@ -125,7 +126,7 @@ def mlstm_apply(params, x, state=None, *, n_heads: int, pf: float = 2.0,
     y = jnp.moveaxis(ys, 0, 1).reshape(b, s, di)           # [B, S, di]
     y = y * jax.nn.silu(og.astype(jnp.float32))
     y = y.astype(x.dtype)
-    return linear.apply(params["down"], y, crew_strategy=crew_strategy), state
+    return linear.apply(params["down"], y, plan=crew_strategy), state
 
 
 # --------------------------------------------------------------------------
@@ -205,6 +206,6 @@ def slstm_apply(params, x, state=None, *, n_heads: int,
     step = lambda st, wx_t: _slstm_step(params["r"], params["b"], n_heads, st, wx_t)
     state, hs = jax.lax.scan(step, state, jnp.moveaxis(wx, 1, 0))
     y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)              # [B, S, d]
-    h = linear.apply(params["up"], y, crew_strategy=crew_strategy,
-                     activation="gelu")
-    return linear.apply(params["down"], h, crew_strategy=crew_strategy), state
+    h = linear.apply(params["up"], y,
+                     plan=CrewPlan.of(crew_strategy).with_activation("gelu"))
+    return linear.apply(params["down"], h, plan=crew_strategy), state

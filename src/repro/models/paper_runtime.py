@@ -90,7 +90,7 @@ def ds2_apply(params, features: jnp.ndarray, crew_strategy: str = "auto"):
     x = features
     for lp in params["gru"]:
         x = _bigru_apply(lp, x)
-    return linear.apply(params["head"], x, crew_strategy=crew_strategy)
+    return linear.apply(params["head"], x, plan=crew_strategy)
 
 
 # --------------------------------------------------------------------------
@@ -111,7 +111,7 @@ def kaldi_apply(params, feats: jnp.ndarray, crew_strategy: str = "auto"):
     """feats [B, F] -> senone logits."""
     x = feats
     for i, lp in enumerate(params["affine"]):
-        x = linear.apply(lp, x, crew_strategy=crew_strategy)
+        x = linear.apply(lp, x, plan=crew_strategy)
         if i < len(params["affine"]) - 1:
             x = jax.nn.relu(x)
     return x

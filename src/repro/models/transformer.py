@@ -116,17 +116,29 @@ def param_spec(cfg: ModelConfig) -> Dict[str, Any]:
 # Forward (train / prefill)
 # --------------------------------------------------------------------------
 
-def _ffn_apply(cfg: ModelConfig, blk, h, crew_strategy):
-    """Returns (y, aux_loss)."""
+def _ffn_apply(cfg: ModelConfig, blk, h, crew_strategy, crew_state=None):
+    """Returns (y, aux_loss, new_ffn_state).  ``crew_state`` is the decode
+    product-buffer mirror of the FFN params (None when stateless; MoE
+    expert stacks carry no state — their mirror passes through)."""
     if _is_encoder(cfg) or cfg.mlp == "gelu":
-        return mlp.gelu_apply(blk["ffn"], h, crew_strategy=crew_strategy), 0.0
+        if crew_state is None:
+            return (mlp.gelu_apply(blk["ffn"], h,
+                                   crew_strategy=crew_strategy), 0.0, None)
+        y, st = mlp.gelu_apply(blk["ffn"], h, crew_strategy=crew_strategy,
+                               crew_state=crew_state)
+        return y, 0.0, st
     if cfg.moe is not None:
         y, stats = moe.apply(blk["moe"], h, top_k=cfg.moe.top_k,
                              capacity_factor=cfg.moe.capacity_factor,
                              group_size=cfg.moe.group_size,
                              crew_strategy=crew_strategy)
-        return y, stats.aux_loss
-    return mlp.swiglu_apply(blk["ffn"], h, crew_strategy=crew_strategy), 0.0
+        return y, stats.aux_loss, crew_state
+    if crew_state is None:
+        return (mlp.swiglu_apply(blk["ffn"], h,
+                                 crew_strategy=crew_strategy), 0.0, None)
+    y, st = mlp.swiglu_apply(blk["ffn"], h, crew_strategy=crew_strategy,
+                             crew_state=crew_state)
+    return y, 0.0, st
 
 
 def _norm(cfg: ModelConfig, p, x):
@@ -174,7 +186,7 @@ def forward(
             impl=attn_impl)
         x = x + y
         h = _norm(cfg, blk["n2"], x)
-        y, aux = _ffn_apply(cfg, blk, h, crew_strategy)
+        y, aux, _ = _ffn_apply(cfg, blk, h, crew_strategy)
         return constrain(x + y, "batch", None, None), aux
 
     if remat:
@@ -191,7 +203,7 @@ def forward(
     if _is_encoder(cfg):
         from ..layers import linear as _linear  # CREW-dispatching head
         logits = _linear.apply(params["head"], x.astype(jnp.float32),
-                               crew_strategy=crew_strategy)
+                               plan=crew_strategy)
         logits = constrain(logits, "batch", None, "vocab")
     else:
         logits = embed.logits(params["embed"], x)
@@ -230,7 +242,7 @@ def prefill(
             q_chunk=q_chunk, kv_chunk=kv_chunk, crew_strategy=crew_strategy)
         x = x + y
         h = _norm(cfg, blk["n2"], x)
-        y, _ = _ffn_apply(cfg, blk, h, crew_strategy)
+        y, _, _ = _ffn_apply(cfg, blk, h, crew_strategy)
         pad = ((0, 0), (0, cache_len - s), (0, 0), (0, 0))
         return x + y, (jnp.pad(k, pad).astype(dtype), jnp.pad(v, pad).astype(dtype))
 
@@ -276,7 +288,7 @@ def prefill_chunk(
             rope_theta=cfg.rope_theta, crew_strategy=crew_strategy)
         x = x + y
         h = _norm(cfg, blk["n2"], x)
-        y, _ = _ffn_apply(cfg, blk, h, crew_strategy)
+        y, _, _ = _ffn_apply(cfg, blk, h, crew_strategy)
         return x + y, (new["k"], new["v"])
 
     x, (k_new, v_new) = jax.lax.scan(
@@ -311,11 +323,22 @@ def decode_step(
     dtype=jnp.bfloat16,
     crew_strategy: str = "auto",
 ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
-    """tokens [B, 1] -> (logits [B, vocab] f32, new cache)."""
+    """tokens [B, 1] -> (logits [B, vocab] f32, new cache).
+
+    ``cache`` may carry a ``"crew"`` entry — the decode product-buffer
+    state tree ``repro.serve.decode_state_for_params`` builds (DESIGN.md
+    §3): its ``"blocks"`` mirror rides the layer scan as an extra
+    xs/ys pair, so each layer's CREW projections run the VMEM-resident
+    decode kernel against their own carried buffer, and the returned
+    cache carries the updated tree for the next step's carry.  Without
+    it the step is the historical stateless path, bit for bit.
+    """
     if _is_encoder(cfg):
         raise ValueError("encoder family has no decode step")
     x = embed.embed(params["embed"], tokens, dtype=dtype)
     ln = cache["len"]
+    cs = cache.get("crew")
+    ffn_key = "moe" if cfg.moe is not None else "ffn"
 
     def step(x, inp):
         blk, k_c, v_c = inp
@@ -326,11 +349,34 @@ def decode_step(
             rope_theta=cfg.rope_theta, crew_strategy=crew_strategy)
         x = x + y
         h = _norm(cfg, blk["n2"], x)
-        y, _ = _ffn_apply(cfg, blk, h, crew_strategy)
+        y, _, _ = _ffn_apply(cfg, blk, h, crew_strategy)
         return x + y, (new["k"], new["v"])
 
-    x, (k_new, v_new) = jax.lax.scan(
-        step, x, (params["blocks"], cache["k"], cache["v"]))
+    def step_crew(x, inp):
+        blk, k_c, v_c, st = inp
+        h = _norm(cfg, blk["n1"], x)
+        y, new = attention.attend_decode(
+            blk["attn"], h, {"k": k_c, "v": v_c, "len": ln},
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv, d_head=cfg.head_dim,
+            rope_theta=cfg.rope_theta, crew_strategy=crew_strategy,
+            crew_state=st["attn"])
+        x = x + y
+        h = _norm(cfg, blk["n2"], x)
+        y, _, st_ffn = _ffn_apply(cfg, blk, h, crew_strategy,
+                                  crew_state=st.get(ffn_key))
+        st_new = {**st, "attn": new["crew"], ffn_key: st_ffn}
+        return x + y, (new["k"], new["v"], st_new)
+
+    if cs is None:
+        x, (k_new, v_new) = jax.lax.scan(
+            step, x, (params["blocks"], cache["k"], cache["v"]))
+    else:
+        x, (k_new, v_new, cs_blocks) = jax.lax.scan(
+            step_crew, x,
+            (params["blocks"], cache["k"], cache["v"], cs["blocks"]))
     x = _norm(cfg, params["final_norm"], x)
     logits = embed.logits(params["embed"], x)[:, 0]
-    return logits, {"k": k_new, "v": v_new, "len": ln + 1}
+    new_cache = {"k": k_new, "v": v_new, "len": ln + 1}
+    if cs is not None:
+        new_cache["crew"] = {**cs, "blocks": cs_blocks}
+    return logits, new_cache

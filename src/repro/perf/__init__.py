@@ -10,8 +10,10 @@ from .autotune import (
     Measurement,
     get_store,
     lookup,
+    lookup_plan,
     make_key,
     measure_crew_matmul,
+    measure_crew_matmul_decode,
     set_store,
 )
 
@@ -20,7 +22,9 @@ __all__ = [
     "Measurement",
     "get_store",
     "lookup",
+    "lookup_plan",
     "make_key",
     "measure_crew_matmul",
+    "measure_crew_matmul_decode",
     "set_store",
 ]

@@ -38,18 +38,27 @@ from typing import Callable, Dict, Optional, Sequence, Tuple
 
 __all__ = [
     "DEFAULT_CANDIDATES",
+    "DECODE_CANDIDATES",
     "Measurement",
     "AutotuneStore",
     "get_store",
     "set_store",
     "lookup",
+    "lookup_plan",
     "make_key",
     "epilogue_tag",
     "measure_crew_matmul",
+    "measure_crew_matmul_decode",
 ]
 
 DEFAULT_CANDIDATES: Tuple[str, ...] = (
     "xla-dense", "xla-gather", "pallas-gather", "pallas-onehot")
+
+# Decode-shaped (GEMV / skinny-batch) candidates: the decompress-once GEMM
+# and the carried-product-buffer kernel first, then the per-step paths.
+DECODE_CANDIDATES: Tuple[str, ...] = (
+    "xla-cached", "pallas-decode",
+    "xla-dense", "pallas-gather", "pallas-onehot")
 
 _ENV_PATH = "REPRO_AUTOTUNE_CACHE"
 
@@ -67,34 +76,53 @@ def epilogue_tag(has_bias: bool, activation: Optional[str]) -> str:
 
 
 def make_key(b: int, n: int, m: int, k: int, width: int, backend: str,
-             epilogue: str = "none") -> str:
+             epilogue: str = "none", kind: str = "matmul") -> str:
     """Dispatch key for one apply shape (all entries static at trace time).
 
     ``epilogue`` is an :func:`epilogue_tag`; "none" keeps the historical
-    key format so pre-epilogue persisted caches stay valid.
+    key format so pre-epilogue persisted caches stay valid.  ``kind``
+    separates key spaces per apply shape *class*: "matmul" (historical,
+    no suffix) vs "decode" (skinny-batch scan-carried applies, suffixed
+    ``-decode``) — a decode-shaped measurement must never shadow the
+    one-shot measurement for the same (B, N, M, K, width).
     """
     key = f"b{b}-n{n}-m{m}-k{k}-w{width}-{backend}"
     if epilogue != "none":
         key += f"-e{epilogue}"
+    if kind != "matmul":
+        key += f"-{kind}"
     return key
 
 
 @dataclasses.dataclass
 class Measurement:
-    """Timed candidates for one dispatch key; ``strategy`` is the winner."""
+    """Timed candidates for one dispatch key; ``strategy`` is the winner.
+
+    ``block`` holds the winner's block-shape overrides (``block_n`` /
+    ``block_words``) when the winning candidate was a swept
+    :class:`~repro.kernels.plan.CrewPlan` rather than a bare strategy;
+    empty for default blocking.  Absent in pre-sweep persisted caches
+    (``from_json`` defaults it), so old JSON stores stay valid.
+    """
 
     strategy: str
     times_s: Dict[str, float]
+    block: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     def to_json(self) -> Dict:
-        return {"strategy": self.strategy,
-                "times_s": {k: self.times_s[k] for k in sorted(self.times_s)}}
+        obj = {"strategy": self.strategy,
+               "times_s": {k: self.times_s[k] for k in sorted(self.times_s)}}
+        if self.block:
+            obj["block"] = {k: self.block[k] for k in sorted(self.block)}
+        return obj
 
     @classmethod
     def from_json(cls, obj: Dict) -> "Measurement":
         return cls(strategy=str(obj["strategy"]),
                    times_s={str(k): float(v)
-                            for k, v in obj.get("times_s", {}).items()})
+                            for k, v in obj.get("times_s", {}).items()},
+                   block={str(k): int(v)
+                          for k, v in obj.get("block", {}).items()})
 
 
 class AutotuneStore:
@@ -194,6 +222,18 @@ def lookup(key: str) -> Optional[str]:
     return rec.strategy if rec is not None else None
 
 
+def lookup_plan(key: str):
+    """Measured winner as a :class:`~repro.kernels.plan.CrewPlan`
+    (strategy + any swept block shape), or None on a cold cache."""
+    from ..kernels.plan import CrewPlan
+    rec = get_store().get(key)
+    if rec is None:
+        return None
+    return CrewPlan(strategy=rec.strategy,
+                    block_n=rec.block.get("block_n"),
+                    block_words=rec.block.get("block_words"))
+
+
 def _default_timer(fn: Callable[[], None], repeats: int) -> float:
     best = float("inf")
     for _ in range(repeats):
@@ -203,11 +243,38 @@ def _default_timer(fn: Callable[[], None], repeats: int) -> float:
     return best
 
 
+def _as_plan(cand, activation=None):
+    """Normalize a candidate (strategy string or CrewPlan) to a CrewPlan,
+    folding the epilogue activation in."""
+    from ..kernels.plan import CrewPlan
+    plan = cand if isinstance(cand, CrewPlan) else CrewPlan(strategy=str(cand))
+    if activation is not None:
+        plan = plan.with_activation(activation)
+    return plan
+
+
+def _winner_record(labels, plans, times: Dict[str, float],
+                   key: str) -> Measurement:
+    """Pick the fastest finite candidate (ties break by candidate order)
+    and fold its plan into a Measurement."""
+    finite = {s: t for s, t in times.items() if t != float("inf")}
+    if not finite:
+        raise RuntimeError(f"no candidate strategy ran for key {key}")
+    winner = min(finite, key=lambda s: (finite[s], labels.index(s)))
+    plan = plans[labels.index(winner)]
+    block = {}
+    if plan.block_n is not None:
+        block["block_n"] = plan.block_n
+    if plan.block_words is not None:
+        block["block_words"] = plan.block_words
+    return Measurement(strategy=plan.strategy, times_s=times, block=block)
+
+
 def measure_crew_matmul(
     x,
     cm,
     *,
-    candidates: Sequence[str] = DEFAULT_CANDIDATES,
+    candidates: Sequence = DEFAULT_CANDIDATES,
     repeats: int = 3,
     interpret: bool = True,
     block_m: int = 1024,
@@ -217,8 +284,12 @@ def measure_crew_matmul(
     remeasure: bool = False,
     timer: Callable[[Callable[[], None], int], float] = _default_timer,
 ) -> Measurement:
-    """Time each candidate strategy for (x, cm) and cache the winner.
+    """Time each candidate for (x, cm) and cache the winner.
 
+    A candidate is a strategy string or a
+    :class:`~repro.kernels.plan.CrewPlan` (block-shape sweeps: e.g.
+    ``CrewPlan("pallas-gather", block_n=64)`` times the same strategy at a
+    non-default tiling and records ``times_s`` under its ``label()``).
     Runs eagerly: each candidate is jitted once (compile excluded from the
     timing via a warmup call) and timed best-of-``repeats`` with
     ``block_until_ready``.  A candidate that fails to lower/execute (e.g. a
@@ -242,21 +313,104 @@ def measure_crew_matmul(
     if cached is not None and not remeasure:
         return cached
 
+    plans = [_as_plan(c, activation) for c in candidates]
+    labels = [p.with_activation(None).label() for p in plans]
     times: Dict[str, float] = {}
-    for strat in candidates:
+    for label, plan in zip(labels, plans):
         fn = jax.jit(functools.partial(
-            crew_matmul, strategy=strat, interpret=interpret, block_m=block_m,
-            bias=bias, activation=activation))
+            crew_matmul, plan=plan, interpret=interpret, block_m=block_m,
+            bias=bias))
         try:
             fn(x, cm).block_until_ready()  # compile + warmup
-            times[strat] = timer(
+            times[label] = timer(
                 lambda: fn(x, cm).block_until_ready(), repeats)
         except Exception:
-            times[strat] = float("inf")
-    finite = {s: t for s, t in times.items() if t != float("inf")}
-    if not finite:
-        raise RuntimeError(f"no candidate strategy ran for key {key}")
-    winner = min(finite, key=lambda s: (finite[s], candidates.index(s)))
-    rec = Measurement(strategy=winner, times_s=times)
+            times[label] = float("inf")
+    rec = _winner_record(labels, plans, times, key)
+    store.put(key, rec)
+    return rec
+
+
+def measure_crew_matmul_decode(
+    x,
+    cm,
+    *,
+    candidates: Sequence = DECODE_CANDIDATES,
+    repeats: int = 3,
+    interpret: bool = True,
+    store: Optional[AutotuneStore] = None,
+    remeasure: bool = False,
+    timer: Callable[[Callable[[], None], int], float] = _default_timer,
+) -> Measurement:
+    """Time each candidate for a *decode-shaped* apply and cache the
+    winner under the ``kind="decode"`` key.
+
+    Decode candidates are timed at their steady-state cost:
+
+    * ``"xla-cached"`` — the weight buffer is reconstructed **outside**
+      the timer (serve setup does it once) and the timed step is the
+      plain GEMM against the resident buffer;
+    * ``"pallas-decode"`` — the product-buffer state is threaded through
+      a donating jit exactly as the decode scan carries it, so the timed
+      step reuses one resident buffer;
+    * plain strategies — the per-step stateless apply (what the decode
+      loop pays today without carried state).
+
+    Decode keys are epilogue-independent (the winner is a representation
+    decision; see ``kernels.ops.resolve_decode_plan``), so no
+    bias/activation parameters here.
+    """
+    import jax
+
+    from ..core.convert import CrewMatrixCached, crew_reconstruct_uniform
+    from ..kernels.ops import crew_matmul, crew_matmul_decode, \
+        init_decode_state
+
+    store = store or get_store()
+    b = 1
+    for d in x.shape[:-1]:
+        b *= int(d)
+    key = make_key(b, cm.n_in, cm.n_out, cm.k, cm.width,
+                   jax.default_backend(), kind="decode")
+    cached = store.get(key)
+    if cached is not None and not remeasure:
+        return cached
+
+    plans = [_as_plan(c) for c in candidates]
+    labels = [p.label() for p in plans]
+    times: Dict[str, float] = {}
+    for label, plan in zip(labels, plans):
+        try:
+            if plan.strategy == "xla-cached":
+                wrapped = CrewMatrixCached(
+                    cm=cm, wbuf=crew_reconstruct_uniform(cm))
+                fn = jax.jit(functools.partial(
+                    crew_matmul, plan=plan, interpret=interpret))
+                fn(x, wrapped).block_until_ready()
+                times[label] = timer(
+                    lambda: fn(x, wrapped).block_until_ready(), repeats)
+            elif plan.strategy == "pallas-decode":
+                step = jax.jit(
+                    functools.partial(crew_matmul_decode, plan=plan,
+                                      interpret=interpret),
+                    donate_argnums=(2,))
+                holder = {"st": init_decode_state(cm, b)}
+
+                def run(step=step, holder=holder):
+                    out, st = step(x, cm, holder["st"])
+                    out.block_until_ready()
+                    holder["st"] = st
+
+                run()  # compile + warmup
+                times[label] = timer(run, repeats)
+            else:
+                fn = jax.jit(functools.partial(
+                    crew_matmul, plan=plan, interpret=interpret))
+                fn(x, cm).block_until_ready()
+                times[label] = timer(
+                    lambda: fn(x, cm).block_until_ready(), repeats)
+        except Exception:
+            times[label] = float("inf")
+    rec = _winner_record(labels, plans, times, key)
     store.put(key, rec)
     return rec

@@ -1,11 +1,53 @@
-"""Serving: CREW checkpoint conversion, one-shot generate engine, and the
-continuous-batching scheduler (docs/serving.md walks the full path)."""
-from .convert import (crewize_params, abstract_crew_params,
-                      autotune_crew_params, crewize_spec, CrewReport)
-from .engine import generate
-from .prefix import PrefixTrie
-from .scheduler import Scheduler, SchedulerMetrics, Request, Completion
+"""repro.serve — the stable serving surface (docs/api.md).
 
-__all__ = ["crewize_params", "abstract_crew_params", "autotune_crew_params",
-           "crewize_spec", "CrewReport", "generate", "PrefixTrie",
-           "Scheduler", "SchedulerMetrics", "Request", "Completion"]
+Two entry points generate tokens:
+
+* :class:`Engine` / :func:`generate` — one-shot batched serving: every
+  request shares one prompt length and one ``max_new``.
+* :class:`Scheduler` — continuous batching over mixed traffic
+  (``submit`` requests, ``step``/``run`` the engine loop, read
+  :class:`SchedulerMetrics` / :class:`Completion` results), with the
+  radix-tree prefix cache (:class:`PrefixTrie`) underneath.
+
+Checkpoint preparation: :func:`crewize_params` converts a dense tree to
+CREW, :func:`autotune_crew_params` warms the measured-dispatch store
+(including the decode-shaped keys), :func:`cache_decode_weights` /
+:func:`decode_state_for_params` materialize the decode-time weight and
+product-buffer residency those measurements select.
+
+Everything in ``__all__`` is covered by the deprecation policy (one
+release of DeprecationWarning before a breaking change); other names are
+internal.  docs/serving.md walks the full path.
+"""
+from .convert import (
+    CrewReport,
+    abstract_crew_params,
+    autotune_crew_params,
+    cache_decode_weights,
+    crewize_params,
+    crewize_spec,
+    decode_state_for_params,
+)
+from .engine import Engine, generate
+from .prefix import PrefixTrie
+from .scheduler import Completion, Request, Scheduler, SchedulerMetrics
+
+__all__ = [
+    # engines
+    "Engine",
+    "generate",
+    "Scheduler",
+    "SchedulerMetrics",
+    "Request",
+    "Completion",
+    # checkpoint preparation
+    "crewize_params",
+    "abstract_crew_params",
+    "crewize_spec",
+    "CrewReport",
+    "autotune_crew_params",
+    "cache_decode_weights",
+    "decode_state_for_params",
+    # prefix cache
+    "PrefixTrie",
+]

@@ -32,7 +32,8 @@ from ..core.stats import CrewStats, aggregate_stats, layout_stats
 from ..core.unique import analyze_matrix, index_width
 
 __all__ = ["crewize_params", "abstract_crew_params", "crewize_spec",
-           "autotune_crew_params", "CrewReport"]
+           "autotune_crew_params", "cache_decode_weights",
+           "decode_state_for_params", "CrewReport"]
 
 
 @dataclasses.dataclass
@@ -165,6 +166,7 @@ def autotune_crew_params(
     *,
     batch_sizes: Tuple[int, ...] = (1, 8),
     activations: Tuple[Optional[str], ...] = (None,),
+    decode_batch_sizes: Tuple[int, ...] = (),
     dtype=jnp.float32,
     interpret: bool = True,
     repeats: int = 2,
@@ -195,6 +197,14 @@ def autotune_crew_params(
     request batch but prefill keys on ``batch * prompt_len``.  To cover
     prefill, include those products (e.g. ``(1, 8, 8 * 512)``) — shapes not
     warmed here simply fall back to the analytical prior.
+
+    ``decode_batch_sizes`` additionally warms *decode-shaped* keys
+    (``kind="decode"``, epilogue-independent) via
+    ``repro.perf.measure_crew_matmul_decode`` — the buffer-residency
+    tournament between the carried-state VMEM decode kernel, the
+    decompress-once cached GEMV, and the per-step strategies.  Those keys
+    gate ``decode_state_for_params`` / :func:`cache_decode_weights`:
+    with none warmed both are no-ops and decode behavior is unchanged.
     """
     from ..perf import autotune
 
@@ -240,7 +250,119 @@ def autotune_crew_params(
                     x, cm, repeats=repeats, interpret=interpret, store=store,
                     bias=bias, activation=act)
                 winners[key] = rec.strategy
+        for b in decode_batch_sizes:
+            key = autotune.make_key(
+                b, cm.n_in, cm.n_out, cm.k, cm.width,
+                jax.default_backend(), kind="decode")
+            if key in winners:
+                continue
+            x = jnp.asarray(
+                rng.standard_normal((b, cm.n_in)).astype(np.float32),
+                dtype=dtype)
+            rec = autotune.measure_crew_matmul_decode(
+                x, cm, repeats=repeats, interpret=interpret, store=store)
+            winners[key] = rec.strategy
     return winners
+
+
+def decode_state_for_params(params, batch: int, *, backend=None):
+    """Build the decode product-buffer state tree for a CREW param tree.
+
+    The returned tree mirrors ``params`` dict-for-dict; at each ``"w"``
+    key holding a CREW leaf whose *measured* decode winner (see
+    ``autotune_crew_params(decode_batch_sizes=...)``) is the VMEM-resident
+    ``pallas-decode`` kernel, the mirror holds
+    ``{"pbuf": f32[*stack, batch, N_pad, K]}`` — the carried
+    partial-product buffer, zero-initialized (its content is a pure
+    function of each step's activation).  Every other position is None.
+
+    Attach it as ``cache["crew"]`` before the decode loop
+    (``models.transformer.decode_step`` threads the ``"blocks"`` mirror
+    through its layer scan; the serve engine/scheduler carry the whole
+    tree through the H-step horizon scan with donated buffers).
+
+    Returns None when no leaf qualifies — a cold autotune store, or every
+    winner preferring the stateless strategies — in which case the decode
+    program runs the historical stateless path bit for bit.  MoE expert
+    stacks (two stack dims) never qualify: experts apply via vmap'd
+    reconstruct, not ``linear.apply``.
+    """
+    from ..kernels.crew_matmul import decode_pbuf_rows
+    from ..kernels.ops import resolve_decode_plan
+
+    found = [False]
+
+    def leaf_state(w):
+        if not isinstance(w, CrewMatrixUniform):
+            return None
+        stack = w.words.shape[:-2]
+        if len(stack) > 1:
+            return None
+        n = int(w.words.shape[-2])
+        k = int(w.uniq.shape[-1])
+        plan = resolve_decode_plan(batch, n, w.n_out, k, w.width,
+                                   backend=backend)
+        if plan is None or plan.strategy != "pallas-decode":
+            return None
+        found[0] = True
+        return {"pbuf": jnp.zeros(
+            (*stack, batch, decode_pbuf_rows(n), k), jnp.float32)}
+
+    def rec(node):
+        if isinstance(node, dict):
+            return {key: (leaf_state(val) if key == "w" else rec(val))
+                    for key, val in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(rec(v) for v in node)
+        return None
+
+    mirror = rec(params)
+    return mirror if found[0] else None
+
+
+def cache_decode_weights(params, *, batch_sizes: Tuple[int, ...] = (1,),
+                         backend=None):
+    """Wrap CREW leaves whose measured decode winner is the
+    decompress-once strategy in :class:`~repro.core.CrewMatrixCached`.
+
+    For each CREW ``"w"`` leaf, probes the decode-shaped autotune keys for
+    ``batch_sizes``; when any winner is ``"xla-cached"`` the leaf is
+    replaced by ``CrewMatrixCached(cm, wbuf)`` with the weight buffer
+    reconstructed **once** here (vmapped over the layer-stack axes) —
+    decode applies then skip the per-dispatch decompress.  The wrapped
+    leaf lives in the params tree (shared, never donated) and its apply
+    is bitwise the ``xla-dense`` strategy on the same leaf, so wrapping
+    never changes tokens.  Leaves with no measurement (cold store) are
+    left untouched.
+    """
+    from ..core.convert import CrewMatrixCached, crew_reconstruct_uniform
+    from ..kernels.ops import resolve_decode_plan
+
+    def wrap(w):
+        stack = w.words.shape[:-2]
+        n = int(w.words.shape[-2])
+        k = int(w.uniq.shape[-1])
+        plans = [resolve_decode_plan(b, n, w.n_out, k, w.width,
+                                     backend=backend) for b in batch_sizes]
+        if not any(p is not None and p.strategy == "xla-cached"
+                   for p in plans):
+            return w
+        rec_fn = crew_reconstruct_uniform
+        for _ in stack:
+            rec_fn = jax.vmap(rec_fn)
+        return CrewMatrixCached(cm=w, wbuf=rec_fn(w))
+
+    def rec(node):
+        if isinstance(node, dict):
+            return {key: (wrap(val) if key == "w"
+                          and isinstance(val, CrewMatrixUniform)
+                          else rec(val))
+                    for key, val in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(rec(v) for v in node)
+        return node
+
+    return rec(params)
 
 
 def crewize_spec(spec_tree, crew_params):

@@ -48,7 +48,7 @@ import jax.numpy as jnp
 
 from ..models import ModelApi
 
-__all__ = ["generate"]
+__all__ = ["Engine", "generate"]
 
 
 def _sample(key, logits, temperature: float):
@@ -153,6 +153,7 @@ def generate(
     rng: Optional[jnp.ndarray] = None,
     crew_strategy: str = "auto",
     chunk: Optional[int] = None,
+    decode_state: str = "auto",
 ) -> Dict[str, jnp.ndarray]:
     """prompts [B, S] int32 -> {"tokens": [B, max_new], "logprobs": ...}.
 
@@ -162,10 +163,20 @@ def generate(
     donated between pieces.  Outputs are bitwise-identical to the
     monolithic default — use it when sweeping many prompt lengths, where
     the monolithic path compiles one prefill per length.
+
+    ``decode_state="auto"`` resolves the CREW decode product-buffer
+    state tree for this batch from the warmed autotune store
+    (``serve.decode_state_for_params``) and attaches it to the cache: the
+    decode scan then carries the VMEM-resident partial-product buffers
+    across all ``max_new`` steps inside the donated cache.  A cold store
+    (or dense params, or ``"off"``) resolves to no state — the
+    historical stateless decode program, bit for bit.
     """
     if chunk is not None and chunk < 1:
         raise ValueError("chunk must be >= 1")
-    _, s = prompts.shape
+    if decode_state not in ("auto", "off"):
+        raise ValueError('decode_state must be "auto" or "off"')
+    b, s = prompts.shape
     cache_len = cache_len or (s + max_new)
     rng = rng if rng is not None else jax.random.PRNGKey(0)
     # One split up front: key 0 samples the first token, keys 1..max_new-1
@@ -180,7 +191,46 @@ def generate(
         first, cache = _chunked_prefill(api, params, prompts, keys[0],
                                         cache_len, int(chunk), temperature,
                                         crew_strategy)
+    if decode_state == "auto":
+        from .convert import decode_state_for_params
+        state = decode_state_for_params(params, b)
+        if state is not None:
+            cache = {**cache, "crew": state}
     toks, lps, _ = _decode_program(api, params, cache, first, keys[1:],
                                    temperature, crew_strategy)
     tokens = jnp.concatenate([first[None], toks], axis=0).T  # [B, max_new]
     return {"tokens": tokens, "logprobs": lps.T}
+
+
+class Engine:
+    """Stable one-shot serving facade (``repro.serve.Engine``).
+
+    Binds ``(api, params)`` and the static sampling/dispatch knobs once;
+    each :meth:`generate` call is the module-level :func:`generate` with
+    those bindings.  Dense and CREW-converted params are interchangeable
+    (``layers.linear.apply`` dispatches on the weight leaf type), and the
+    same instance can serve any batch/prompt shape — programs are cached
+    per shape by jit.  Mixed traffic with admission/retirement belongs on
+    :class:`~repro.serve.Scheduler`; docs/serving.md compares the two.
+    """
+
+    def __init__(self, api: ModelApi, params, *, temperature: float = 0.0,
+                 crew_strategy: str = "auto", decode_state: str = "auto"):
+        if decode_state not in ("auto", "off"):
+            raise ValueError('decode_state must be "auto" or "off"')
+        self.api = api
+        self.params = params
+        self.temperature = float(temperature)
+        self.crew_strategy = crew_strategy
+        self.decode_state = decode_state
+
+    def generate(self, prompts: jnp.ndarray, *, max_new: int = 32,
+                 cache_len: Optional[int] = None,
+                 rng: Optional[jnp.ndarray] = None,
+                 chunk: Optional[int] = None) -> Dict[str, jnp.ndarray]:
+        """prompts [B, S] int32 -> {"tokens", "logprobs"} (see
+        :func:`generate`)."""
+        return generate(self.api, self.params, prompts, max_new=max_new,
+                        cache_len=cache_len, temperature=self.temperature,
+                        rng=rng, crew_strategy=self.crew_strategy,
+                        chunk=chunk, decode_state=self.decode_state)

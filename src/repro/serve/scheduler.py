@@ -76,7 +76,9 @@ import numpy as np
 
 from ..dist.ctx import sharding_ctx
 from ..dist.sharding import SERVE_RULES
+from ..kernels.plan import warn_deprecated
 from ..models import ModelApi
+from .convert import decode_state_for_params
 from .prefix import PrefixTrie
 
 __all__ = ["Scheduler", "SchedulerMetrics", "Request", "Completion",
@@ -129,8 +131,10 @@ class Completion:
 
 @dataclasses.dataclass
 class SchedulerMetrics:
-    """Engine counters; dict-style reads (``m["steps"]``) keep callers
-    written against the historical ad-hoc dict working unchanged."""
+    """Engine counters.  Read them as attributes (``m.steps``); the
+    dict-style spellings (``m["steps"]``) from the pre-dataclass era
+    still work for one release behind a DeprecationWarning
+    (docs/api.md)."""
     steps: int = 0              # engine steps (admit + chunk + horizon)
     prefills: int = 0           # prompts admitted
     chunks: int = 0             # chunk-prefill programs dispatched
@@ -146,9 +150,20 @@ class SchedulerMetrics:
     wasted_lane_steps: int = 0  # dead-or-padding lane-steps per horizon
 
     def __getitem__(self, key: str) -> int:
+        warn_deprecated(
+            "SchedulerMetrics:getitem",
+            "dict-style SchedulerMetrics reads (metrics[...]) are "
+            "deprecated; read the attribute (metrics.steps etc.) — see "
+            "docs/api.md")
+        if not hasattr(self, key):
+            raise KeyError(key)
         return getattr(self, key)
 
     def __setitem__(self, key: str, value: int) -> None:
+        warn_deprecated(
+            "SchedulerMetrics:setitem",
+            "dict-style SchedulerMetrics writes (metrics[...] = ...) are "
+            "deprecated; set the attribute — see docs/api.md")
         if not hasattr(self, key):
             raise KeyError(key)
         setattr(self, key, value)
@@ -177,7 +192,7 @@ class Scheduler:
         syncs once per horizon; ``horizon=1`` is the token-synchronous
         baseline.  Retirement happens at horizon boundaries, so a lane
         whose request dies mid-horizon idles (masked, scratch-directed)
-        until the boundary — ``metrics["wasted_lane_steps"]`` counts it.
+        until the boundary — ``metrics.wasted_lane_steps`` counts it.
       prefix_cache: enable the radix-tree prefix cache (default).  Off,
         every prompt prefills cold — the PR-4-equivalent baseline that
         ``benchmarks/prefix_reuse.py`` measures against.
@@ -193,6 +208,12 @@ class Scheduler:
         hot prefix set is large.
       temperature / crew_strategy: static sampling and CREW dispatch
         knobs, shared by all programs (as in ``serve.generate``).
+      decode_state: "auto" (default) resolves the CREW decode
+        product-buffer state per batch bucket from the warmed autotune
+        store (``serve.decode_state_for_params``) and threads it through
+        the horizon scan carry with donated buffers; "off" disables it.
+        A cold store resolves to no state — the historical stateless
+        horizon, bit for bit.
       rng: base PRNG key; each request derives its own key stream via
         ``fold_in(fold_in(rng, rid), n_generated)``.
       mesh: optional device mesh; programs then trace under
@@ -213,6 +234,7 @@ class Scheduler:
         pool_blocks: Optional[int] = None,
         temperature: float = 0.0,
         crew_strategy: str = "auto",
+        decode_state: str = "auto",
         rng: Optional[jnp.ndarray] = None,
         mesh=None,
         cache_dtype=jnp.bfloat16,
@@ -241,6 +263,13 @@ class Scheduler:
                 f"{self._cache_len}")
         self._temperature = float(temperature)
         self._crew_strategy = crew_strategy
+        if decode_state not in ("auto", "off"):
+            raise ValueError('decode_state must be "auto" or "off"')
+        self._decode_state_mode = decode_state
+        # per-batch-bucket CREW decode product-buffer state trees (None
+        # when the bucket's shapes have no measured pallas-decode winner);
+        # resolved lazily on first use of each bucket.
+        self._crew_state: Dict[int, object] = {}
         self._base_key = rng if rng is not None else jax.random.PRNGKey(0)
         self._mesh = mesh
 
@@ -320,6 +349,8 @@ class Scheduler:
         self._chunk_fn = jax.jit(self._chunk_impl, donate_argnums=(0, 1),
                                  static_argnums=(8,))
         self._horizon_fn = jax.jit(self._horizon_impl, donate_argnums=(0, 1))
+        self._horizon_crew_fn = jax.jit(self._horizon_crew_impl,
+                                        donate_argnums=(0, 1, 2))
         self._copy_fn = jax.jit(self._copy_impl, donate_argnums=(0, 1))
         self._insert_fn = jax.jit(self._insert_impl, donate_argnums=(0, 1))
 
@@ -407,7 +438,7 @@ class Scheduler:
         pv = pv.at[:, ids].set(seg_v.reshape(l, n, bs, kv, d))
         return pk, pv
 
-    def _horizon_impl(self, k_all, v_all, params, slot_ids, toks, lens,
+    def _horizon_body(self, k_all, v_all, crew, params, slot_ids, toks, lens,
                       req_keys, steps, rem, eos, alive):
         """H fused decode steps over the gathered lanes — one host sync.
 
@@ -418,20 +449,28 @@ class Scheduler:
         samples EOS or exhausts ``rem`` (its remaining ``max_new`` budget)
         flips dead and keeps stepping against the scratch slot at a
         pinned position — the program is fixed-shape for every iteration.
-        Returns per-lane [nb, H] token/logprob/emitted-mask panels plus
-        the updated (donated) cache.
+        ``crew`` is this batch bucket's decode product-buffer state tree
+        (or None): it rides the scan carry next to the KV buffers, so the
+        CREW projections' partial-product buffers stay resident across
+        all H steps (DESIGN.md §3).  Returns per-lane [nb, H]
+        token/logprob/emitted-mask panels plus the updated (donated)
+        cache and state.
         """
         scratch = self._max_batch
 
         def body(carry, _):
-            k_all, v_all, tok, lens, steps, rem, alive = carry
+            k_all, v_all, crew, tok, lens, steps, rem, alive = carry
             sid = jnp.where(alive, slot_ids, scratch)
             ln = jnp.where(alive, lens, 0)
             k_sel = k_all[:, sid]
             v_sel = v_all[:, sid]
+            cache = {"k": k_sel, "v": v_sel, "len": ln}
+            if crew is not None:
+                cache["crew"] = crew
             logits, new = self._api.decode_step(
-                params, tok[:, None], {"k": k_sel, "v": v_sel, "len": ln},
+                params, tok[:, None], cache,
                 crew_strategy=self._crew_strategy)
+            crew = new["crew"] if crew is not None else None
             if self._temperature == 0.0:
                 nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             else:
@@ -451,13 +490,30 @@ class Scheduler:
             tok = jnp.where(emitted, nxt, tok)
             lens = lens + step1
             steps = steps + step1
-            return (k_all, v_all, tok, lens, steps, rem, alive), \
+            return (k_all, v_all, crew, tok, lens, steps, rem, alive), \
                 (nxt, lp, emitted)
 
-        carry = (k_all, v_all, toks, lens, steps, rem, alive)
-        (k_all, v_all, *_), (toks_h, lps_h, emit_h) = jax.lax.scan(
+        carry = (k_all, v_all, crew, toks, lens, steps, rem, alive)
+        (k_all, v_all, crew, *_), (toks_h, lps_h, emit_h) = jax.lax.scan(
             body, carry, None, length=self._horizon)
-        return toks_h.T, lps_h.T, emit_h.T, k_all, v_all   # [nb, H] panels
+        # [nb, H] panels
+        return toks_h.T, lps_h.T, emit_h.T, k_all, v_all, crew
+
+    def _horizon_impl(self, k_all, v_all, params, slot_ids, toks, lens,
+                      req_keys, steps, rem, eos, alive):
+        """Stateless horizon program (no CREW decode state warmed)."""
+        out = self._horizon_body(k_all, v_all, None, params, slot_ids, toks,
+                                 lens, req_keys, steps, rem, eos, alive)
+        return out[:-1]
+
+    def _horizon_crew_impl(self, k_all, v_all, crew, params, slot_ids, toks,
+                           lens, req_keys, steps, rem, eos, alive):
+        """Horizon program with the bucket's carried CREW decode state —
+        donated like the KV buffers, so the product buffers update in
+        place across dispatches."""
+        return self._horizon_body(k_all, v_all, crew, params, slot_ids,
+                                  toks, lens, req_keys, steps, rem, eos,
+                                  alive)
 
     def program_counts(self) -> Dict[str, int]:
         """Live XLA program counts — {bucket set} sized, not request sized.
@@ -471,8 +527,9 @@ class Scheduler:
         longer exposes it."""
         def size(fn):
             return getattr(fn, "_cache_size", lambda: -1)()
+        hs = (size(self._horizon_fn), size(self._horizon_crew_fn))
         return {"prefill": size(self._chunk_fn),
-                "decode": size(self._horizon_fn),
+                "decode": -1 if min(hs) < 0 else sum(hs),
                 "copy": size(self._copy_fn),
                 "insert": size(self._insert_fn)}
 
@@ -505,6 +562,16 @@ class Scheduler:
 
     def _batch_bucket(self, n: int) -> int:
         return _bucket_for(self._batch_buckets, n)
+
+    def _bucket_state(self, nb: int):
+        """This batch bucket's CREW decode product-buffer state tree
+        (resolved once per bucket; None with mode "off", a cold autotune
+        store, or no pallas-decode winner at this batch)."""
+        if self._decode_state_mode == "off":
+            return None
+        if nb not in self._crew_state:
+            self._crew_state[nb] = decode_state_for_params(self._params, nb)
+        return self._crew_state[nb]
 
     def _chunk_sizes(self, remaining: int) -> Tuple[int, int]:
         """(bucket, true) chunk sizes for a suffix of ``remaining`` tokens:
@@ -698,12 +765,22 @@ class Scheduler:
             rem[i] = req.max_new - int(self._slot_ngen[s])
             eos[i] = -1 if req.eos_id is None else int(req.eos_id)
             alive[i] = True
+        crew = self._bucket_state(nb)
         with self._ctx():
-            toks_h, lps_h, emit_h, self._k, self._v = self._horizon_fn(
-                self._k, self._v, self._params, jnp.asarray(slot_ids),
-                jnp.asarray(toks), jnp.asarray(lens), jnp.asarray(keys),
-                jnp.asarray(steps), jnp.asarray(rem), jnp.asarray(eos),
-                jnp.asarray(alive))
+            if crew is None:
+                toks_h, lps_h, emit_h, self._k, self._v = self._horizon_fn(
+                    self._k, self._v, self._params, jnp.asarray(slot_ids),
+                    jnp.asarray(toks), jnp.asarray(lens), jnp.asarray(keys),
+                    jnp.asarray(steps), jnp.asarray(rem), jnp.asarray(eos),
+                    jnp.asarray(alive))
+            else:
+                (toks_h, lps_h, emit_h, self._k, self._v,
+                 self._crew_state[nb]) = self._horizon_crew_fn(
+                    self._k, self._v, crew, self._params,
+                    jnp.asarray(slot_ids), jnp.asarray(toks),
+                    jnp.asarray(lens), jnp.asarray(keys),
+                    jnp.asarray(steps), jnp.asarray(rem), jnp.asarray(eos),
+                    jnp.asarray(alive))
         toks_h = np.asarray(toks_h)
         lps_h = np.asarray(lps_h)
         emit_h = np.asarray(emit_h)

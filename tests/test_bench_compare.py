@@ -65,3 +65,59 @@ def test_incomparable_records_skip(tmp_path, capsys):
 def test_missing_baseline_is_not_an_error(tmp_path):
     b = _record(tmp_path / "b.json", {"tab1": 1.0})
     assert bench_compare.main([str(tmp_path / "absent.json"), str(b)]) == 0
+
+
+# --------------------------------------------------------------------------
+# --require-ratio: the absolute CREW >= dense decode-throughput gate
+# --------------------------------------------------------------------------
+
+def _decode_record(path, crew_tps, dense_tps, fast=True):
+    rows = [{"weights": w, "horizon": h, "tokens_per_s": tps}
+            for w, by_h in (("crew", crew_tps), ("dense", dense_tps))
+            for h, tps in by_h.items()]
+    obj = {"fast": fast, "backend": "cpu", "git_sha": "abc",
+           "modules": [{"name": "decode_latency", "seconds": 3.0,
+                        "rows": len(rows), "data": rows}]}
+    path.write_text(json.dumps(obj))
+    return path
+
+
+def _ratio_args(a, b, op=">=", value="1.0"):
+    return ["--require-ratio", "decode_latency", "crew/dense", op, value,
+            str(a), str(b)]
+
+
+def test_ratio_gate_passes_at_largest_common_horizon(tmp_path, capsys):
+    # H=1 would fail the bar; the gate reads the largest common horizon
+    a = _record(tmp_path / "a.json", {"decode_latency": 3.0})
+    b = _decode_record(tmp_path / "b.json",
+                       {1: 50.0, 8: 210.0}, {1: 100.0, 8: 200.0})
+    assert bench_compare.main(_ratio_args(a, b)) == 0
+    assert "horizon=8" in capsys.readouterr().out
+
+
+def test_ratio_gate_fails_below_bar(tmp_path, capsys):
+    a = _record(tmp_path / "a.json", {"decode_latency": 3.0})
+    b = _decode_record(tmp_path / "b.json",
+                       {1: 50.0, 8: 150.0}, {1: 100.0, 8: 200.0})
+    assert bench_compare.main(_ratio_args(a, b)) == 1
+    assert "FAIL" in capsys.readouterr().out
+
+
+def test_ratio_gate_applies_without_baseline(tmp_path):
+    # the regression diff tolerates a missing baseline; the absolute
+    # gate still runs (and still fails) on the current record alone
+    b = _decode_record(tmp_path / "b.json", {8: 100.0}, {8: 200.0})
+    assert bench_compare.main(
+        _ratio_args(tmp_path / "absent.json", b)) == 1
+
+
+def test_ratio_gate_missing_module_or_group_fails(tmp_path, capsys):
+    b = _record(tmp_path / "b.json", {"tab1": 1.0})
+    assert bench_compare.main(
+        _ratio_args(tmp_path / "absent.json", b)) == 1
+    assert "missing" in capsys.readouterr().out
+    # module present but one weights group absent
+    b2 = _decode_record(tmp_path / "b2.json", {}, {8: 200.0})
+    assert bench_compare.main(
+        _ratio_args(tmp_path / "absent.json", b2)) == 1

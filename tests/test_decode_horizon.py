@@ -56,9 +56,9 @@ class TestHorizonParity:
             assert np.all(res[rid].logprobs <= 0)
         # device steps come in whole horizons; the program set stays
         # bucket-bounded (batch buckets {1, 2})
-        assert sched.metrics["decode_steps"] % horizon == 0
-        assert sched.metrics["decode_steps"] == \
-            sched.metrics["horizons"] * horizon
+        assert sched.metrics.decode_steps % horizon == 0
+        assert sched.metrics.decode_steps == \
+            sched.metrics.horizons * horizon
         assert sched.program_counts()["decode"] <= 2
 
     def test_eos_mid_horizon_retires_at_boundary(self, qwen):
@@ -83,7 +83,7 @@ class TestHorizonParity:
         np.testing.assert_array_equal(res[rid_b].tokens,
                                       _ref_tokens(api, params, b, 5))
         # lane A idled from its mid-horizon death to the boundary
-        assert sched.metrics["wasted_lane_steps"] > 0
+        assert sched.metrics.wasted_lane_steps > 0
 
     def test_sampled_parity_across_horizons(self, qwen):
         """temperature > 0: the per-request fold_in(rid, n_generated) key

@@ -1,0 +1,369 @@
+"""The VMEM-resident decode kernel + the CrewPlan/serve API contract.
+
+Four contracts from the decode-state redesign (DESIGN.md §3, docs/api.md):
+
+* **bitwise kernel parity** — ``crew_matmul_decode_pallas`` threading its
+  product buffer across H steps is bit-for-bit the one-shot kernel on
+  identically padded operands with matched blocking, for every index
+  width class and H in {1, 4, 8};
+* **decode-shaped autotune keys** — ``kind="decode"`` keys (with swept
+  block shapes) round-trip the JSON store across processes, exactly like
+  the ship-a-warmed-cache flow serves them;
+* **deprecation shims** — the pre-CrewPlan kwargs and dict-style
+  SchedulerMetrics reads keep working for one release and warn exactly
+  once per process;
+* **serving parity** — with forced ``pallas-decode`` winners the engine
+  and scheduler carry the product-buffer state and still emit tokens
+  identical to the stateless path (``decode_state="off"``).
+"""
+import os
+import pathlib
+import subprocess
+import sys
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CrewMatrixUniform, crew_uniform_from_dense
+from repro.core.pack import pack_rows_word_aligned
+from repro.kernels.crew_matmul import (crew_matmul_decode_pallas,
+                                       crew_matmul_pallas, decode_pbuf_rows)
+from repro.kernels.ops import crew_matmul, crew_matmul_decode, \
+    init_decode_state
+from repro.kernels.plan import CrewPlan, reset_deprecation_warnings
+from repro.perf import autotune
+from repro.perf.autotune import AutotuneStore, Measurement, make_key
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+@pytest.fixture(autouse=True)
+def fresh_store():
+    autotune.set_store(AutotuneStore())
+    yield
+    autotune.set_store(None)
+
+
+def make_case(rng, n, m, width, b, steps=1):
+    k = 1 << width
+    idx = rng.integers(0, k, size=(n, m)).astype(np.int32)
+    words = pack_rows_word_aligned(idx, width)
+    uniq = (rng.standard_normal((n, k)) * 0.1).astype(np.float32)
+    xs = [jnp.asarray(rng.standard_normal((b, n)).astype(np.float32))
+          for _ in range(steps)]
+    return xs, jnp.asarray(words), jnp.asarray(uniq)
+
+
+def _ref_one_shot(x, words, uniq, width, m, block_words=None, **kw):
+    """The pre-decode-kernel reduction on identically padded operands:
+    one n-block covering all of decode_pbuf_rows(N) — the matched-blocking
+    contract the decode kernel's docstring pins."""
+    n = x.shape[1]
+    n_pad = decode_pbuf_rows(n)
+    if n_pad != n:
+        x = jnp.pad(x, ((0, 0), (0, n_pad - n)))
+        words = jnp.pad(words, ((0, n_pad - n), (0, 0)))
+        uniq = jnp.pad(uniq, ((0, n_pad - n), (0, 0)))
+    bw = words.shape[1] if block_words is None else block_words
+    return crew_matmul_pallas(x, words, uniq, width=width, m_out=m,
+                              strategy="gather", block_n=n_pad,
+                              block_words=bw, **kw)
+
+
+class TestDecodeKernelParity:
+    @pytest.mark.parametrize("width", [1, 2, 3, 4, 5, 6, 7, 8])
+    @pytest.mark.parametrize("horizon", [1, 4, 8])
+    def test_bitwise_parity_width_by_horizon(self, width, horizon):
+        """Every width class, H in {1,4,8}: the carried buffer changes
+        residency, never bits — each step's output is bit-identical to
+        the one-shot kernel on that step's activation."""
+        rng = np.random.default_rng(width * 100 + horizon)
+        xs, words, uniq = make_case(rng, n=40, m=52, width=width, b=2,
+                                    steps=horizon)
+        pbuf = jnp.zeros((2, decode_pbuf_rows(40), 1 << width), jnp.float32)
+        for x in xs:
+            out, pbuf = crew_matmul_decode_pallas(
+                x, words, uniq, pbuf, width=width, m_out=52)
+            ref = _ref_one_shot(x, words, uniq, width, 52)
+            np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+    @pytest.mark.parametrize("block_words", [None, 1, 2, 5])
+    def test_block_words_sweep(self, block_words):
+        """Swept m-tilings (the autotune block sweep's candidates) keep
+        the bitwise contract: each m-block still sees the whole padded N
+        reduction, so tiling only changes the grid, not the bits."""
+        rng = np.random.default_rng(7)
+        xs, words, uniq = make_case(rng, n=33, m=70, width=4, b=1, steps=3)
+        pbuf = jnp.zeros((1, decode_pbuf_rows(33), 16), jnp.float32)
+        for x in xs:
+            out, pbuf = crew_matmul_decode_pallas(
+                x, words, uniq, pbuf, width=4, m_out=70,
+                block_words=block_words)
+            ref = _ref_one_shot(x, words, uniq, 4, 70,
+                                block_words=block_words)
+            np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+    def test_fused_epilogue_parity(self):
+        """bias + activation ride the same fused epilogue as the one-shot
+        kernel — applied per finished m-block, bit-identical."""
+        rng = np.random.default_rng(11)
+        xs, words, uniq = make_case(rng, n=24, m=36, width=3, b=2, steps=4)
+        bias = jnp.asarray(np.linspace(-1, 1, 36).astype(np.float32))
+        pbuf = jnp.zeros((2, decode_pbuf_rows(24), 8), jnp.float32)
+        for x in xs:
+            out, pbuf = crew_matmul_decode_pallas(
+                x, words, uniq, pbuf, width=3, m_out=36, bias=bias,
+                activation="silu")
+            ref = _ref_one_shot(x, words, uniq, 3, 36, bias=bias,
+                                activation="silu")
+            np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+    def test_carried_state_matches_stateless_ops_path(self):
+        """ops-level: ``crew_matmul_decode`` threading state across H
+        steps == the stateless ``plan="pallas-decode"`` apply (which
+        zero-initializes a fresh buffer every call) — the carry is a
+        residency optimization, not a numerical dependency."""
+        rng = np.random.default_rng(3)
+        w = (rng.standard_t(4, size=(48, 64)) * 0.05).astype(np.float32)
+        cm, _, _ = crew_uniform_from_dense(w, dtype=jnp.float32)
+        state = init_decode_state(cm, 2)
+        for t in range(4):
+            x = jnp.asarray(rng.standard_normal((2, 48)).astype(np.float32))
+            out, state = crew_matmul_decode(x, cm, state)
+            ref = crew_matmul(x, cm, CrewPlan(strategy="pallas-decode"))
+            np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+        assert state["pbuf"].shape == (2, decode_pbuf_rows(48), cm.k)
+
+    def test_none_state_falls_back_stateless(self):
+        """state=None is the historical path: same numbers as
+        ``crew_matmul``, and the returned state stays None (a cold
+        autotune store must not invent a carry)."""
+        rng = np.random.default_rng(5)
+        w = (rng.standard_t(4, size=(32, 40)) * 0.05).astype(np.float32)
+        cm, _, _ = crew_uniform_from_dense(w, dtype=jnp.float32)
+        x = jnp.asarray(rng.standard_normal((1, 32)).astype(np.float32))
+        out, state = crew_matmul_decode(x, cm, None, plan="xla-dense")
+        assert state is None
+        np.testing.assert_array_equal(
+            np.asarray(out), np.asarray(crew_matmul(x, cm, "xla-dense")))
+
+
+class TestDecodeAutotuneKeys:
+    def test_decode_key_is_distinct_namespace(self):
+        assert make_key(1, 2, 3, 4, 5, "cpu", kind="decode") \
+            == "b1-n2-m3-k4-w5-cpu-decode"
+        assert make_key(1, 2, 3, 4, 5, "cpu", kind="decode") \
+            != make_key(1, 2, 3, 4, 5, "cpu")
+
+    def test_decode_keys_roundtrip_json_across_processes(self, tmp_path):
+        """A conversion process warms decode-shaped winners (including a
+        swept block shape); the serving process must resolve them from
+        REPRO_AUTOTUNE_CACHE — block fields intact."""
+        path = str(tmp_path / "autotune.json")
+        code = """
+from repro.perf import autotune
+from repro.perf.autotune import Measurement, make_key
+store = autotune.get_store()
+store.put(make_key(1, 48, 64, 32, 5, "cpu", kind="decode"),
+          Measurement(strategy="pallas-decode", times_s={},
+                      block={"block_words": 4}))
+store.put(make_key(4, 48, 64, 32, 5, "cpu", kind="decode"),
+          Measurement(strategy="xla-cached", times_s={"xla-cached": 0.1}))
+print("CHILD-WROTE")
+"""
+        env = dict(os.environ)
+        env["REPRO_AUTOTUNE_CACHE"] = path
+        env["PYTHONPATH"] = str(ROOT / "src")
+        out = subprocess.run([sys.executable, "-c", code],
+                             capture_output=True, text=True, timeout=120,
+                             env=env)
+        assert out.returncode == 0, out.stderr[-2000:]
+
+        os.environ["REPRO_AUTOTUNE_CACHE"] = path
+        try:
+            autotune.set_store(None)
+            plan = autotune.lookup_plan(
+                make_key(1, 48, 64, 32, 5, "cpu", kind="decode"))
+            assert plan.strategy == "pallas-decode"
+            assert plan.block_words == 4
+            assert autotune.lookup(
+                make_key(4, 48, 64, 32, 5, "cpu", kind="decode")) \
+                == "xla-cached"
+            # the one-shot key space stays cold: decode never shadows it
+            assert autotune.lookup(make_key(1, 48, 64, 32, 5, "cpu")) is None
+        finally:
+            del os.environ["REPRO_AUTOTUNE_CACHE"]
+            autotune.set_store(None)
+
+    def test_measure_decode_records_and_winner_is_correct(self):
+        rng = np.random.default_rng(9)
+        w = (rng.standard_t(4, size=(40, 56)) * 0.05).astype(np.float32)
+        cm, _, qm = crew_uniform_from_dense(w, dtype=jnp.float32)
+        x = jnp.asarray(rng.standard_normal((1, 40)).astype(np.float32))
+        rec = autotune.measure_crew_matmul_decode(
+            x, cm, candidates=("xla-cached", "pallas-decode"), repeats=1)
+        key = make_key(1, cm.n_in, cm.n_out, cm.k, cm.width,
+                       jax.default_backend(), kind="decode")
+        assert autotune.get_store().get(key) is rec
+        ref = np.asarray(x @ jnp.asarray(qm.q * float(qm.scale), jnp.float32))
+        out = np.asarray(crew_matmul(x, cm, CrewPlan(strategy=rec.strategy)))
+        np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)
+
+
+class TestDeprecationShims:
+    """Each deprecated spelling works, warns once per process, and never
+    warns again (the warn-once registry is keyed per surface)."""
+
+    @pytest.fixture(autouse=True)
+    def fresh_registry(self):
+        reset_deprecation_warnings()
+        yield
+        reset_deprecation_warnings()
+
+    def _case(self):
+        rng = np.random.default_rng(0)
+        w = (rng.standard_t(4, size=(16, 24)) * 0.05).astype(np.float32)
+        cm, _, _ = crew_uniform_from_dense(w, dtype=jnp.float32)
+        x = jnp.asarray(rng.standard_normal((2, 16)).astype(np.float32))
+        return x, cm
+
+    def _assert_warns_once(self, fn):
+        with pytest.warns(DeprecationWarning):
+            first = fn()
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", DeprecationWarning)
+            second = fn()      # second use: shim already burned, silent
+        return first, second
+
+    def test_crew_matmul_strategy_kwarg(self):
+        x, cm = self._case()
+        old, new = self._assert_warns_once(
+            lambda: crew_matmul(x, cm, strategy="xla-dense"))
+        ref = crew_matmul(x, cm, "xla-dense")
+        np.testing.assert_array_equal(np.asarray(old), np.asarray(ref))
+        np.testing.assert_array_equal(np.asarray(new), np.asarray(ref))
+
+    def test_crew_matmul_activation_kwarg(self):
+        x, cm = self._case()
+        old, _ = self._assert_warns_once(
+            lambda: crew_matmul(x, cm, "xla-dense", activation="gelu"))
+        ref = crew_matmul(
+            x, cm, CrewPlan(strategy="xla-dense", activation="gelu"))
+        np.testing.assert_array_equal(np.asarray(old), np.asarray(ref))
+
+    def test_linear_apply_crew_strategy_kwarg(self):
+        from repro.layers import linear
+        x, cm = self._case()
+        params = {"w": cm, "b": jnp.zeros((cm.n_out,), jnp.float32)}
+        old, _ = self._assert_warns_once(
+            lambda: linear.apply(params, x, crew_strategy="xla-dense"))
+        ref = linear.apply(params, x, plan="xla-dense")
+        np.testing.assert_array_equal(np.asarray(old), np.asarray(ref))
+
+    def test_scheduler_metrics_dict_reads(self):
+        from repro.serve import SchedulerMetrics
+        m = SchedulerMetrics()
+        m.decode_steps = 3
+        val, again = self._assert_warns_once(lambda: m["decode_steps"])
+        assert val == again == 3
+        self._assert_warns_once(lambda: m.__setitem__("decode_steps", 5))
+        assert m.decode_steps == 5
+        with pytest.raises(KeyError):
+            m["not_a_counter"]
+
+
+@pytest.fixture(scope="module")
+def served():
+    """Reduced model + CREW twin with every decode-shaped key forced to
+    ``pallas-decode`` — the carried-state path engages deterministically
+    regardless of this host's measured timings."""
+    from repro.configs import ARCHS
+    from repro.models import build_model
+    from repro.serve import crewize_params
+
+    cfg = ARCHS["qwen2-0.5b"].reduced()
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    crew, _ = crewize_params(params)
+
+    store = AutotuneStore()
+    leaves = [l for l in jax.tree_util.tree_leaves(
+        crew, is_leaf=lambda v: isinstance(v, CrewMatrixUniform))
+        if isinstance(l, CrewMatrixUniform)]
+    assert leaves, "crewize_params produced no CREW leaves"
+    for cm in leaves:
+        # key on the trailing (matrix) axes: stacked leaves carry a
+        # leading layer dim, and the decode key describes one layer's
+        # apply shape (the same shape the per-layer scan step applies)
+        n, k = int(cm.words.shape[-2]), int(cm.uniq.shape[-1])
+        for b in (1, 2):
+            store.put(make_key(b, n, cm.n_out, k, cm.width,
+                               jax.default_backend(), kind="decode"),
+                      Measurement(strategy="pallas-decode", times_s={}))
+    return cfg, api, params, crew, store
+
+
+class TestServingParity:
+    """Forced carried-state decode vs the stateless path: token parity
+    end to end (the ISSUE's acceptance bar) with the state demonstrably
+    engaged, for the one-shot engine and the horizon scheduler."""
+
+    def test_generate_auto_equals_off(self, served):
+        from repro.serve import decode_state_for_params, generate
+        cfg, api, params, crew, store = served
+        rng = np.random.default_rng(0)
+        prompts = jnp.asarray(
+            rng.integers(0, cfg.vocab, (2, 6)).astype(np.int32))
+        autotune.set_store(store)
+        assert decode_state_for_params(crew, 2) is not None
+        warm = generate(api, crew, prompts, max_new=8)
+        autotune.set_store(AutotuneStore())   # cold: state resolves None
+        cold = generate(api, crew, prompts, max_new=8)
+        autotune.set_store(store)
+        off = generate(api, crew, prompts, max_new=8, decode_state="off")
+        np.testing.assert_array_equal(np.asarray(warm["tokens"]),
+                                      np.asarray(cold["tokens"]))
+        np.testing.assert_array_equal(np.asarray(warm["tokens"]),
+                                      np.asarray(off["tokens"]))
+        np.testing.assert_allclose(np.asarray(warm["logprobs"]),
+                                   np.asarray(cold["logprobs"]),
+                                   rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("horizon", [1, 4])
+    def test_scheduler_carried_state_token_parity(self, served, horizon):
+        from repro.serve import Scheduler, generate
+        cfg, api, params, crew, store = served
+        autotune.set_store(store)
+        rng = np.random.default_rng(1)
+        prompts = [rng.integers(0, cfg.vocab, n).astype(np.int32)
+                   for n in (5, 9)]
+        sched = Scheduler(api, crew, max_batch=2, cache_len=32,
+                          buckets=(16,), horizon=horizon)
+        rids = [sched.submit(p, max_new=6) for p in prompts]
+        res = sched.run()
+        assert sched._crew_state and \
+            any(s is not None for s in sched._crew_state.values())
+        for rid, p in zip(rids, prompts):
+            ref = generate(api, crew, jnp.asarray(p)[None], max_new=6,
+                           decode_state="off")
+            np.testing.assert_array_equal(
+                res[rid].tokens, np.asarray(ref["tokens"][0]))
+
+    def test_scheduler_decode_state_off(self, served):
+        from repro.serve import Scheduler, generate
+        cfg, api, params, crew, store = served
+        autotune.set_store(store)
+        rng = np.random.default_rng(2)
+        p = rng.integers(0, cfg.vocab, 7).astype(np.int32)
+        sched = Scheduler(api, crew, max_batch=1, cache_len=32,
+                          buckets=(16,), horizon=4, decode_state="off")
+        rid = sched.submit(p, max_new=6)
+        res = sched.run()
+        assert all(s is None for s in sched._crew_state.values())
+        ref = generate(api, crew, jnp.asarray(p)[None], max_new=6,
+                       decode_state="off")
+        np.testing.assert_array_equal(res[rid].tokens,
+                                      np.asarray(ref["tokens"][0]))

@@ -72,6 +72,41 @@ class TestTrie:
         assert len(new) == 1 and t.evictions == 1
         assert t.match(np.asarray([1, 2, 3, 4, 5, 6], np.int32))[1] == 4
 
+    def test_eviction_follows_recency_order_exactly(self):
+        """Successive evictions under sustained pressure walk the trie's
+        recency order stalest-first — the contract the insertion-ordered
+        O(1) LRU map must preserve from the old tick-scan implementation.
+        """
+        t = PrefixTrie(4, block_size=1)
+        blocks = [np.asarray([v], np.int32) for v in (1, 2, 3, 4)]
+        for b in blocks:
+            t.insert(b)                 # recency now 1, 2, 3, 4
+        t.match(blocks[1])              # -> 1, 3, 4, 2
+        t.match(blocks[0])              # -> 3, 4, 2, 1
+        expected_victims = [3, 4, 2, 1]
+        for i, v in enumerate(expected_victims):
+            t.insert(np.asarray([10 + i], np.int32))    # evicts stalest
+            assert t.evictions == i + 1
+            # a missed match touches nothing, so probing the victim does
+            # not perturb the recency order the next round depends on
+            assert t.match(np.asarray([v], np.int32)) == ([], 0)
+        for i in range(4):      # the four fresh inserts all survived
+            assert t.match(np.asarray([10 + i], np.int32))[1] == 1
+
+    def test_eviction_skips_protected_path_in_order(self):
+        """Under pressure from its own insert path, eviction takes the
+        stalest node *not* on the path — order is preserved across the
+        skip."""
+        t = PrefixTrie(2, block_size=1)
+        t.insert(np.asarray([1], np.int32))
+        t.insert(np.asarray([2], np.int32))     # recency 1, 2
+        # extending [1] needs a block; [1] itself is stalest but on the
+        # protected path -> the victim is [2], the next-stalest
+        new, _ = t.insert(np.asarray([1, 9], np.int32))
+        assert len(new) == 1 and t.evictions == 1
+        assert t.match(np.asarray([2], np.int32)) == ([], 0)
+        assert t.match(np.asarray([1, 9], np.int32))[1] == 2
+
     def test_pool_exhausted_by_own_path_inserts_partially(self):
         t = PrefixTrie(1, block_size=2)
         new, start = t.insert(np.asarray([1, 2, 3, 4], np.int32))
@@ -167,16 +202,16 @@ class TestPrefixReuse:
         # wave 1: two concurrent admits against an empty trie — cold
         rids = [sched.submit(p, max_new=4) for p in prompts[:2]]
         res = sched.run()
-        assert sched.metrics["prefill_tokens_saved"] == 0
+        assert sched.metrics.prefill_tokens_saved == 0
         for rid, ref in zip(rids, refs):
             np.testing.assert_array_equal(res[rid].tokens, ref)
         # wave 2: warm — shared prefix blocks come from the pool
         rids = [sched.submit(p, max_new=4) for p in prompts]
         res = sched.run()
-        saved = sched.metrics["prefill_tokens_saved"]
+        saved = sched.metrics.prefill_tokens_saved
         # all four requests hit the 24-token shared prefix (3 blocks)
         assert saved == 4 * 24
-        assert sched.metrics["prefix_hit_tokens"] >= saved
+        assert sched.metrics.prefix_hit_tokens >= saved
         for rid, ref in zip(rids, refs):
             np.testing.assert_array_equal(res[rid].tokens, ref)
         for rid in rids:
@@ -194,9 +229,9 @@ class TestPrefixReuse:
         rids = [sched.submit(p, max_new=3) for p in prompts]
         res = sched.run()
         assert sorted(res) == sorted(rids)
-        assert sched.metrics["prefill_tokens_saved"] == 0
-        assert sched.metrics["prefix_hit_tokens"] == 0
-        assert sched.metrics["pool_inserts"] > 0    # cached, just unmatched
+        assert sched.metrics.prefill_tokens_saved == 0
+        assert sched.metrics.prefix_hit_tokens == 0
+        assert sched.metrics.pool_inserts > 0    # cached, just unmatched
 
     def test_fixed_program_set_with_chunked_prefill(self, qwen):
         """Replaying shared-prefix traffic compiles nothing outside the
@@ -239,8 +274,8 @@ class TestPrefixReuse:
             res = sched.run()
             for rid, ref in zip(rids, refs):
                 np.testing.assert_array_equal(res[rid].tokens, ref)
-        assert sched.metrics["pool_evictions"] > 0
-        assert sched.metrics["pool_inserts"] > 0
+        assert sched.metrics.pool_evictions > 0
+        assert sched.metrics.pool_inserts > 0
 
     def test_prefix_cache_disabled_is_cold_every_time(self, qwen):
         cfg, api, params = qwen
@@ -253,7 +288,7 @@ class TestPrefixReuse:
             res = sched.run()
             for rid, ref in zip(rids, refs):
                 np.testing.assert_array_equal(res[rid].tokens, ref)
-        assert sched.metrics["prefill_tokens_saved"] == 0
+        assert sched.metrics.prefill_tokens_saved == 0
         assert sched.program_counts()["copy"] == 0
 
     def test_tail_chunk_window_crossing_cache_end_stays_exact(self, qwen):
@@ -290,7 +325,7 @@ class TestPrefixReuse:
                           buckets=(8, 16), block_size=8)
         rids = [sched.submit(p, max_new=3) for p in (a, b, c)]
         res = sched.run()
-        assert sched.metrics["prefill_tokens_saved"] > 0  # C hit B's blocks
+        assert sched.metrics.prefill_tokens_saved > 0  # C hit B's blocks
         for rid, p in zip(rids, (a, b, c)):
             np.testing.assert_array_equal(res[rid].tokens,
                                           _ref_tokens(api, params, p, 3))
@@ -322,11 +357,11 @@ class TestPrefixReuse:
         rb = sched.submit(b, max_new=4)
         interleaved = 0
         while True:
-            c0 = sched.metrics["chunks"]
-            d0 = sched.metrics["decode_lanes"]
+            c0 = sched.metrics.chunks
+            d0 = sched.metrics.decode_lanes
             busy = sched.step()
-            if (sched.metrics["chunks"] > c0
-                    and sched.metrics["decode_lanes"] > d0):
+            if (sched.metrics.chunks > c0
+                    and sched.metrics.decode_lanes > d0):
                 interleaved += 1
             if not busy:
                 break

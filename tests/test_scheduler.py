@@ -60,7 +60,7 @@ class TestParity:
 
         # queue outran the slots: every request prefillled exactly once,
         # and the program set is bucket-sized, not request-sized.
-        assert sched.metrics["prefills"] == len(prompts)
+        assert sched.metrics.prefills == len(prompts)
         counts = sched.program_counts()
         assert counts["prefill"] == 3   # buckets 8, 16, 24 all used
         assert counts["decode"] <= 2    # batch buckets {1, 2}
@@ -114,7 +114,7 @@ class TestEdgeCases:
         rid = sched.submit(p, max_new=8, eos_id=eos)
         res = sched.run()
         np.testing.assert_array_equal(res[rid].tokens, [eos])
-        assert sched.metrics["decode_steps"] == 0
+        assert sched.metrics.decode_steps == 0
 
     def test_empty_queue_drain(self, qwen):
         _, api, params = qwen
@@ -152,7 +152,7 @@ class TestEdgeCases:
         np.testing.assert_array_equal(res[rid].tokens,
                                       _ref_tokens(api, params, p, 5))
         # 37 = 16 + 16 + 5: two full chunks + one tail bucket
-        assert sched.metrics["chunks"] == 3
+        assert sched.metrics.chunks == 3
 
     def test_sampled_streams_differ_per_request(self, qwen):
         """temperature > 0: two identical prompts in flight draw from

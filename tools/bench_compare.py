@@ -16,6 +16,20 @@ different fastness (``--full`` vs fast subset) or different backends are
 incomparable and skip with a notice rather than fail, as does a missing
 baseline (first run on a branch).  CI fetches the previous successful
 run's artifact and runs this after the fresh benchmark.
+
+``--require-ratio MODULE NUMER/DENOM OP VALUE`` (repeatable) adds an
+*absolute* gate on the current record, independent of any baseline: the
+module's rows are grouped by their ``weights`` field and the
+``tokens_per_s`` ratio between the two named groups — at the largest
+``horizon`` both groups report — must satisfy ``OP VALUE``.  CI uses
+
+    --require-ratio decode_latency crew/dense '>=' 1.0
+
+to pin the paper's headline claim (CREW at least matches dense decode
+throughput once the VMEM-resident product-buffer kernel is carried
+across the horizon) as a hard gate rather than a tracked trajectory.
+Unlike the regression diff, a missing module or group here *fails*: the
+gate is only meaningful if the benchmark actually ran.
 """
 from __future__ import annotations
 
@@ -61,6 +75,55 @@ def compare(baseline: dict, current: dict, *, threshold: float = 0.25,
     return regressions, lines
 
 
+_OPS = {
+    ">=": lambda a, b: a >= b,
+    ">": lambda a, b: a > b,
+    "<=": lambda a, b: a <= b,
+    "<": lambda a, b: a < b,
+}
+
+
+def check_ratio(modules: dict, module: str, spec: str, op: str,
+                value: float):
+    """Evaluate one --require-ratio gate against the current record.
+
+    Returns (ok, line).  ``spec`` is ``numer/denom`` over the module's
+    per-row ``weights`` tag; the compared metric is ``tokens_per_s`` at
+    the largest ``horizon`` both groups report.  Any missing piece
+    (module, group, common horizon) is a gate *failure* — an absent
+    benchmark must not pass the bar it was meant to enforce.
+    """
+    if op not in _OPS:
+        return False, f"  {module}: unknown comparator {op!r}"
+    try:
+        numer_tag, denom_tag = spec.split("/", 1)
+    except ValueError:
+        return False, f"  {module}: malformed ratio spec {spec!r}"
+    rec = modules.get(module)
+    if rec is None:
+        return False, f"  {module}: module missing from current record"
+    groups: dict = {}
+    for row in rec.get("data", []):
+        tag, h = row.get("weights"), row.get("horizon")
+        if tag in (numer_tag, denom_tag) and h is not None \
+                and "tokens_per_s" in row:
+            groups.setdefault(tag, {})[int(h)] = float(row["tokens_per_s"])
+    if numer_tag not in groups or denom_tag not in groups:
+        missing = [t for t in (numer_tag, denom_tag) if t not in groups]
+        return False, (f"  {module}: no rows for group(s) "
+                       f"{', '.join(missing)}")
+    common = sorted(set(groups[numer_tag]) & set(groups[denom_tag]))
+    if not common:
+        return False, f"  {module}: groups share no horizon"
+    h = common[-1]
+    numer, denom = groups[numer_tag][h], groups[denom_tag][h]
+    ratio = numer / max(denom, 1e-9)
+    ok = _OPS[op](ratio, value)
+    return ok, (f"  {module}: {spec} tokens/s @ horizon={h} is "
+                f"{numer:.1f}/{denom:.1f} = {ratio:.3f} "
+                f"(require {op} {value}) {'ok' if ok else 'FAIL'}")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("baseline", help="previous run's BENCH_crew.json")
@@ -71,14 +134,34 @@ def main(argv=None) -> int:
     ap.add_argument("--min-seconds", type=float, default=0.2,
                     help="modules faster than this in both records are "
                          "noise, not signal (default 0.2)")
+    ap.add_argument("--require-ratio", nargs=4, action="append", default=[],
+                    metavar=("MODULE", "NUMER/DENOM", "OP", "VALUE"),
+                    help="absolute gate on the current record: the "
+                         "tokens_per_s ratio between two weights groups "
+                         "at their largest common horizon must satisfy "
+                         "OP VALUE (e.g. decode_latency crew/dense "
+                         "'>=' 1.0); repeatable")
     args = ap.parse_args(argv)
+
+    cur_obj, cur = load_modules(args.current)
+
+    # Absolute gates first: they read only the current record, so they
+    # apply even when no baseline exists for the regression diff.
+    gate_failures = 0
+    for module, spec, op, value in args.require_ratio:
+        ok, line = check_ratio(cur, module, spec, op, float(value))
+        print(line)
+        gate_failures += 0 if ok else 1
+    if gate_failures:
+        print(f"bench_compare: {gate_failures} --require-ratio gate(s) "
+              "failed", file=sys.stderr)
+        return 1
 
     try:
         base_obj, base = load_modules(args.baseline)
     except (OSError, json.JSONDecodeError) as e:
         print(f"bench_compare: no usable baseline ({e}); skipping")
         return 0
-    cur_obj, cur = load_modules(args.current)
 
     regressions, lines = compare(
         {"obj": base_obj, "modules": base},
