@@ -1,0 +1,155 @@
+"""Overload: goodput-under-SLO at 2x offered load, shedding on vs off.
+
+Raw tokens/sec is the wrong number at overload: an unbounded queue keeps
+the device busy while every request goes late — throughput stays flat as
+*goodput* (completions finishing within the SLO per second) falls to
+zero and TTFT grows without bound.  This module measures the admission
+layer built in the lifecycle PR (DESIGN.md §5 "request lifecycle"):
+
+1. **calibrate** — a closed-loop drain measures the engine's capacity
+   (requests/s) and a per-request service-time scale, which sets the SLO
+   (4x the lightly-loaded mean) and the offered rate (2x capacity);
+2. **burst** — the same Poisson trace (pure function of the seed,
+   ``repro.launch.serve.make_workload``) is replayed at 2x capacity
+   through two identical schedulers: **shedding off** (unbounded queue,
+   no deadlines — the pre-lifecycle behavior) and **shedding on**
+   (bounded queue + per-request deadline): over the bound submits shed,
+   past the deadline queued work times out, and what *is* admitted
+   finishes within the SLO.
+
+The headline contrast per weights row: shedding on holds ``ttft_p95_ms``
+bounded with nonzero ``goodput_rps`` while off shows queue growth
+(``queue_peak``) and collapsing goodput.  Dense and CREW weights run the
+same protocol — CREW's footprint is what lets the big model fit, the
+lifecycle layer is what keeps it answering under pressure.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.models import build_model
+
+MAX_BATCH = 4
+CACHE_LEN = 64
+BUCKETS = (16, 32)
+HORIZON = 4
+PROMPT_RNG = (8, 24)
+MAX_NEW_RNG = (4, 8)
+N_CALIBRATE = 8
+N_REQUESTS = 24          # burst size (fast); --full scales it up
+FULL_FACTOR = 3
+OFFERED_X = 2.0          # offered load vs measured capacity
+SLO_FACTOR = 4.0         # SLO = 4x lightly-loaded mean request latency
+SEED = 7
+
+_STATE = {}
+
+
+def _calibration_workload(vocab):
+    rng = np.random.default_rng(SEED)
+    return [(rng.integers(0, vocab, int(rng.integers(*PROMPT_RNG))
+                          ).astype(np.int32),
+             int(rng.integers(MAX_NEW_RNG[0], MAX_NEW_RNG[1] + 1)))
+            for _ in range(N_CALIBRATE)]
+
+
+def _calibrate(sched, vocab):
+    """Closed-loop drain -> (capacity req/s, mean request seconds).
+    Also serves as the compile warmup for this scheduler instance."""
+    work = _calibration_workload(vocab)
+    t0 = time.perf_counter()
+    rids = [sched.submit(p, max_new=m) for p, m in work]
+    results = sched.run()
+    wall = time.perf_counter() - t0
+    assert all(results[r].status == "completed" for r in rids)
+    return len(work) / wall, wall / len(work)
+
+
+def _new_sched(weights: str, shedding: bool):
+    import jax
+    from repro.serve import Scheduler
+
+    return Scheduler(
+        _STATE["api"], _STATE["params"][weights], max_batch=MAX_BATCH,
+        cache_len=CACHE_LEN, buckets=BUCKETS, horizon=HORIZON,
+        max_queue=2 * MAX_BATCH if shedding else None,
+        rng=jax.random.PRNGKey(SEED), faults=False)
+
+
+def prepare(fast: bool = True):
+    """Build dense + CREW params and one scheduler per (weights,
+    shedding) cell; calibrate each (which also compiles it) so ``main``
+    times only the overload burst."""
+    if _STATE.get("fast") == fast:
+        return _STATE
+    _STATE.clear()
+    import jax
+    from repro.serve import crewize_params
+
+    cfg = ARCHS["qwen2-0.5b"].reduced()
+    api = build_model(cfg)
+    dense = api.init(jax.random.PRNGKey(0))
+    crew, _ = crewize_params(dense)
+    _STATE.update(fast=fast, api=api, vocab=cfg.vocab,
+                  params={"dense": dense, "crew": crew},
+                  scheds={}, cal={})
+    for weights in ("dense", "crew"):
+        for shedding in (False, True):
+            sched = _new_sched(weights, shedding)
+            _STATE["scheds"][(weights, shedding)] = sched
+            _calibrate(sched, cfg.vocab)    # compile warmup, discarded
+            _STATE["cal"][(weights, shedding)] = _calibrate(sched,
+                                                            cfg.vocab)
+    return _STATE
+
+
+def main(fast: bool = False):
+    from repro.launch.serve import make_workload, serve_continuous
+
+    state = prepare(fast)
+    n = N_REQUESTS if fast else N_REQUESTS * FULL_FACTOR
+    rows = []
+    for weights in ("dense", "crew"):
+        # one capacity/SLO per weights class (mean over its two cells)
+        cals = [state["cal"][(weights, s)] for s in (False, True)]
+        capacity = float(np.mean([c[0] for c in cals]))
+        slo_s = SLO_FACTOR * float(np.mean([c[1] for c in cals]))
+        rate = OFFERED_X * capacity
+        for shedding in (False, True):
+            sched = state["scheds"][(weights, shedding)]
+            workload = make_workload(n, PROMPT_RNG, MAX_NEW_RNG,
+                                     state["vocab"], rate, seed=SEED)
+            t0 = time.perf_counter()
+            results, rep = serve_continuous(
+                sched, workload,
+                deadline_s=slo_s if shedding else None, slo_s=slo_s)
+            wall = time.perf_counter() - t0
+            by = rep["by_status"]
+            rows.append({
+                "bench": "overload",
+                "weights": weights,
+                "shedding": "on" if shedding else "off",
+                "offered_x": OFFERED_X,
+                "rate_rps": round(rate, 2),
+                "slo_ms": round(slo_s * 1e3, 1),
+                "requests": n,
+                "completed": by.get("completed", 0),
+                "shed": by.get("shed", 0),
+                "timed_out": by.get("timed_out", 0),
+                "goodput_rps": round(rep["goodput_rps"], 2),
+                "ttft_p95_ms": round(rep["ttft_p95_s"] * 1e3, 1),
+                "lat_p95_ms": round(rep["lat_p95_s"] * 1e3, 1),
+                "queue_peak": rep["queue_peak"],
+                "tokens_per_s": round(rep["tokens_per_s"], 1),
+                "seconds": round(wall, 3),
+            })
+    return rows
+
+
+if __name__ == "__main__":
+    prepare(fast=True)
+    for r in main(fast=True):
+        print(r)

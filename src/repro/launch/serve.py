@@ -26,6 +26,13 @@ percentiles the reuse buys (``benchmarks/prefix_reuse.py`` measures the
 same axis steady-state).  The whole trace — arrivals, lengths, prefix
 assignment — is a pure function of ``--seed``, so latency percentiles
 are reproducible run-to-run.
+
+Overload knobs: ``--deadline`` attaches a TTL to every request,
+``--max-queue`` bounds the queue (over it, submits are shed), and
+``--preempt-after`` enables aged preemption to the prefix pool.  The
+report then buckets outcomes by terminal status and adds
+goodput-under-SLO (completions within ``--slo`` per second) — the
+overload number ``benchmarks/overload.py`` tracks.
 """
 from __future__ import annotations
 
@@ -78,24 +85,41 @@ def make_workload(n, prompt_rng, new_rng, vocab, rate, *, seed=0,
     return out
 
 
-def serve_continuous(sched, workload):
+def serve_continuous(sched, workload, *, deadline_s=None, slo_s=None):
     """Drive the scheduler against timed arrivals; returns (results, report).
 
     Requests become visible to the queue only once their arrival time has
     passed; the loop idles (sleeps to the next arrival) when the engine
     drains before the stream does.
+
+    Every terminal outcome flows through the report: completions feed
+    the latency/TTFT percentiles, while shed / timed-out / cancelled
+    requests are counted in their own status buckets (a shed ``submit``
+    returns a typed ``Shed`` — its rid still lands in ``results``).
+    ``deadline_s`` attaches a TTL to every submitted request; ``slo_s``
+    (default: the deadline) defines **goodput** — completions finishing
+    within the SLO per second of wall time — the number that matters at
+    overload, where raw throughput stays high while every request is
+    late (ISSUE: goodput-under-SLO, ``benchmarks/overload.py``).
     """
+    from ..serve import Shed
+
     t0 = time.perf_counter()
     pending = list(workload)
     finished_at = {}
     submitted_at = {}
     results = {}
+    queue_peak = 0
     while pending or sched.pending:
         now = time.perf_counter() - t0
         while pending and pending[0][0] <= now:
             arr, prompt, max_new = pending.pop(0)
-            rid = sched.submit(prompt, max_new=max_new)
+            rid = sched.submit(prompt, max_new=max_new,
+                               deadline_s=deadline_s)
+            if isinstance(rid, Shed):
+                rid = rid.rid       # terminal Completion arrives below
             submitted_at[rid] = arr
+        queue_peak = max(queue_peak, sched.pending)
         busy = sched.step()
         for rid, comp in sched.pop_results().items():
             results[rid] = comp
@@ -103,13 +127,24 @@ def serve_continuous(sched, workload):
         if not busy and pending:
             time.sleep(max(0.0, pending[0][0] - (time.perf_counter() - t0)))
     wall = time.perf_counter() - t0
-    lat = np.asarray([finished_at[r] - submitted_at[r] for r in results])
-    ttft = np.asarray([c.ttft_s for c in results.values()])
+    by_status = {}
+    for comp in results.values():
+        by_status[comp.status] = by_status.get(comp.status, 0) + 1
+    done = {r: c for r, c in results.items() if c.status == "completed"}
+    lat = np.asarray([finished_at[r] - submitted_at[r] for r in done])
+    ttft = np.asarray([c.ttft_s for c in done.values()])
     toks = sum(c.tokens.size for c in results.values())
+    slo = slo_s if slo_s is not None else deadline_s
+    good = (sum(1 for r in done
+                if finished_at[r] - submitted_at[r] <= slo)
+            if slo is not None else len(done))
     report = {
         "wall_s": wall,
         "tokens": toks,
         "tokens_per_s": toks / max(wall, 1e-9),
+        "by_status": by_status,
+        "queue_peak": queue_peak,
+        "goodput_rps": good / max(wall, 1e-9),
         "lat_p50_s": float(np.percentile(lat, 50)) if lat.size else 0.0,
         "lat_p95_s": float(np.percentile(lat, 95)) if lat.size else 0.0,
         "lat_max_s": float(lat.max()) if lat.size else 0.0,
@@ -178,6 +213,19 @@ def main() -> None:
     ap.add_argument("--pool-blocks", type=int, default=None,
                     help="KV pool capacity in blocks (default: two full "
                          "batches' worth)")
+    ap.add_argument("--deadline", type=float, default=None, metavar="S",
+                    help="per-request TTL in seconds (enforced at horizon "
+                         "boundaries; expired requests report timed_out)")
+    ap.add_argument("--slo", type=float, default=None, metavar="S",
+                    help="latency SLO for the goodput report (default: "
+                         "--deadline)")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bound on queued requests; over it, submits are "
+                         "shed (default: unbounded)")
+    ap.add_argument("--preempt-after", type=int, default=None,
+                    metavar="STEPS",
+                    help="preempt the longest decode to the prefix pool "
+                         "after this many queue-starved steps")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--compare-static", action="store_true",
                     help="replay the workload through static-batched "
@@ -231,11 +279,19 @@ def main() -> None:
                       block_size=args.block_size,
                       pool_blocks=args.pool_blocks,
                       temperature=args.temperature,
+                      max_queue=args.max_queue,
+                      preempt_after_steps=args.preempt_after,
                       rng=jax.random.PRNGKey(args.seed))
-    results, rep = serve_continuous(sched, workload)
+    results, rep = serve_continuous(sched, workload,
+                                    deadline_s=args.deadline,
+                                    slo_s=args.slo)
     print(f"[serve] continuous: {len(results)} reqs, "
           f"{rep['tokens']} tokens in {rep['wall_s']:.2f}s "
           f"-> {rep['tokens_per_s']:.1f} tok/s (incl. compile)")
+    print(f"[serve] outcomes {rep['by_status']}  queue peak "
+          f"{rep['queue_peak']}  goodput {rep['goodput_rps']:.1f} req/s"
+          + (f" (SLO {args.slo or args.deadline}s)"
+             if (args.slo or args.deadline) else " (no SLO)"))
     print(f"[serve] latency p50 {rep['lat_p50_s']:.3f}s  "
           f"p95 {rep['lat_p95_s']:.3f}s  max {rep['lat_max_s']:.3f}s  "
           f"ttft p50 {rep['ttft_p50_s']:.3f}s p95 {rep['ttft_p95_s']:.3f}s")

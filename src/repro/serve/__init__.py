@@ -7,7 +7,15 @@ Two entry points generate tokens:
 * :class:`Scheduler` — continuous batching over mixed traffic
   (``submit`` requests, ``step``/``run`` the engine loop, read
   :class:`SchedulerMetrics` / :class:`Completion` results), with the
-  radix-tree prefix cache (:class:`PrefixTrie`) underneath.
+  radix-tree prefix cache (:class:`PrefixTrie`) underneath.  Requests
+  walk an explicit lifecycle (:class:`RequestState`): they can carry
+  deadlines and priorities, be cancelled (``Scheduler.cancel``), be
+  preempted to the prefix pool and resumed, or be shed at admission
+  (typed :class:`Shed` return) — every rid ends in exactly one terminal
+  :class:`Completion`.  ``run()`` is watchdogged
+  (:class:`SchedulerStalledError`), and :class:`FaultInjector`
+  (``serve.faults``) drives every recovery path deterministically from
+  a seed.
 
 Checkpoint preparation: :func:`crewize_params` converts a dense tree to
 CREW, :func:`autotune_crew_params` warms the measured-dispatch store
@@ -29,8 +37,17 @@ from .convert import (
     decode_state_for_params,
 )
 from .engine import Engine, generate
+from .faults import FaultInjector
 from .prefix import PrefixTrie
-from .scheduler import Completion, Request, Scheduler, SchedulerMetrics
+from .scheduler import (
+    Completion,
+    Request,
+    RequestState,
+    Scheduler,
+    SchedulerMetrics,
+    SchedulerStalledError,
+    Shed,
+)
 
 __all__ = [
     # engines
@@ -40,6 +57,11 @@ __all__ = [
     "SchedulerMetrics",
     "Request",
     "Completion",
+    # request lifecycle
+    "RequestState",
+    "Shed",
+    "SchedulerStalledError",
+    "FaultInjector",
     # checkpoint preparation
     "crewize_params",
     "abstract_crew_params",

@@ -1,0 +1,145 @@
+"""Deterministic fault injection for the serving stack (DESIGN.md §5).
+
+A robustness layer is only as good as the recovery paths it actually
+exercises, and the interesting failures — a request preempted mid-decode,
+a deadline expiring while its slot idles in a horizon, a pool block
+evicted between preemption and resume — occur on schedules real traffic
+produces rarely and irreproducibly.  :class:`FaultInjector` makes those
+schedules a **pure function of a seed**: each hook draws from its own
+``numpy`` generator stream (seeded from ``(seed, hook index)``), so the
+decision sequence per hook depends only on the seed and the call order —
+and the call order is fixed by the scheduler's deterministic host loop.
+Same seed + same workload → same schedule of injected faults → same
+terminal statuses (``tests/test_faults.py`` pins this end to end).
+
+Hooks, and where :class:`~repro.serve.Scheduler` calls them:
+
+* ``horizon_delay()`` — seconds to stall before a horizon dispatch
+  (once per dispatched horizon).  Simulates a slow device / noisy
+  neighbor; with deadlines set, drives requests into ``TIMED_OUT``.
+* ``should_preempt()`` — force a preemption this step even without
+  queue pressure (once per step).  Exercises preempt-to-prefix-pool →
+  resume; greedy outputs must be unchanged.
+* ``should_expire(rid)`` — treat this request's deadline as already
+  exceeded (once per deadline-bearing request per step).  Exercises the
+  timeout path without wall-clock sleeps.
+* ``pool_drop(trie)`` — evict LRU leaf blocks from the prefix pool
+  (once per step).  Exercises resume and warm admits with missing
+  blocks; matches just shorten, outputs must be unchanged.
+
+``trace`` records every *injected* fault as ``(hook, call_index, ...)``
+tuples — the schedule two same-seed runs must agree on.
+
+``default_injector()`` is the suite-wide chaos switch: with
+``REPRO_FAULTS`` set (CI runs the tier-1 suite a second time under it),
+every ``Scheduler`` that was not given an explicit ``faults=`` argument
+gets a *benign* injector — forced preemptions and pool drops, whose
+recovery is output-preserving, but no delays or expiries, which are not.
+The whole parity suite then doubles as a chaos suite.
+"""
+from __future__ import annotations
+
+import os
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["FaultInjector", "default_injector"]
+
+
+class FaultInjector:
+    """Seeded chaos layer over the scheduler's recovery paths.
+
+    All probabilities default to 0 — an injector injects only what it is
+    asked to.  ``seed`` fully determines every decision (see module
+    docstring); two injectors with the same seed and config produce the
+    same decisions for the same call sequence.
+    """
+
+    _HOOKS = ("delay", "preempt", "expire", "drop")
+
+    def __init__(self, seed: int = 0, *,
+                 delay_p: float = 0.0, max_delay_s: float = 0.0,
+                 preempt_p: float = 0.0,
+                 expire_p: float = 0.0,
+                 drop_p: float = 0.0, max_drop: int = 1):
+        self.seed = int(seed)
+        self.delay_p = float(delay_p)
+        self.max_delay_s = float(max_delay_s)
+        self.preempt_p = float(preempt_p)
+        self.expire_p = float(expire_p)
+        self.drop_p = float(drop_p)
+        self.max_drop = int(max_drop)
+        self._rng = {
+            hook: np.random.default_rng(
+                np.random.SeedSequence(entropy=self.seed, spawn_key=(i,)))
+            for i, hook in enumerate(self._HOOKS)
+        }
+        self._calls = {hook: 0 for hook in self._HOOKS}
+        self.trace: List[Tuple] = []
+
+    # ------------------------------------------------------------------
+
+    def _tick(self, hook: str) -> int:
+        n = self._calls[hook]
+        self._calls[hook] = n + 1
+        return n
+
+    def horizon_delay(self) -> float:
+        """Seconds to sleep before the next horizon dispatch (0 = none)."""
+        n = self._tick("delay")
+        rng = self._rng["delay"]
+        hit = rng.random() < self.delay_p
+        dt = float(rng.random()) * self.max_delay_s  # drawn either way:
+        if not hit or dt <= 0.0:                     # stream advances at a
+            return 0.0                               # fixed rate per call
+        self.trace.append(("delay", n, round(dt, 6)))
+        return dt
+
+    def should_preempt(self) -> bool:
+        """Force a preemption this scheduler step."""
+        n = self._tick("preempt")
+        hit = self._rng["preempt"].random() < self.preempt_p
+        if hit:
+            self.trace.append(("preempt", n))
+        return hit
+
+    def should_expire(self, rid: int) -> bool:
+        """Treat request ``rid``'s deadline as already exceeded."""
+        n = self._tick("expire")
+        hit = self._rng["expire"].random() < self.expire_p
+        if hit:
+            self.trace.append(("expire", n, rid))
+        return hit
+
+    def pool_drop(self, trie) -> int:
+        """Evict up to ``max_drop`` LRU leaf blocks from ``trie``; returns
+        the number actually dropped (matches afterwards just shorten —
+        recovery must be output-preserving)."""
+        n = self._tick("drop")
+        rng = self._rng["drop"]
+        hit = rng.random() < self.drop_p
+        k = int(rng.integers(1, self.max_drop + 1))  # fixed stream rate
+        if not hit or trie is None:
+            return 0
+        dropped = trie.drop_lru_leaves(k)
+        if dropped:
+            self.trace.append(("drop", n, dropped))
+        return dropped
+
+
+def default_injector() -> Optional["FaultInjector"]:
+    """The suite-wide benign injector, or None when ``REPRO_FAULTS`` is
+    unset/0.  The value seeds the schedule (``REPRO_FAULTS=7`` → seed 7),
+    so CI can sweep schedules by changing one env var.  Only
+    output-preserving faults are enabled: forced preemptions and pool
+    drops — never delays (slow) or expiries (change terminal statuses).
+    """
+    raw = os.environ.get("REPRO_FAULTS", "").strip()
+    if not raw or raw == "0":
+        return None
+    try:
+        seed = int(raw)
+    except ValueError:
+        seed = 1
+    return FaultInjector(seed, preempt_p=0.05, drop_p=0.05, max_drop=2)

@@ -70,6 +70,7 @@ class PrefixTrie:
         if block_size < 1:
             raise ValueError("block_size must be >= 1")
         self.block_size = int(block_size)
+        self.n_blocks = int(n_blocks)
         self.root = TrieNode(block=-1, key=b"", parent=None)
         self._free: List[int] = list(range(n_blocks))
         self._nodes: Dict[int, TrieNode] = {}   # block id -> node
@@ -172,3 +173,59 @@ class PrefixTrie:
         del self._lru[node.block]
         self._free.append(node.block)
         self.evictions += 1
+
+    def drop_lru_leaves(self, n: int) -> int:
+        """Evict up to ``n`` least-recently-used leaves; returns the count.
+
+        The fault-injection hook (``serve.faults``): losing pool blocks
+        must never change outputs — a later ``match`` just returns a
+        shorter prefix and the admitting request prefills the difference.
+        Same victim-selection order as pressure eviction, so a dropped
+        block is always one the next allocation would have taken anyway.
+        """
+        dropped = 0
+        while dropped < n:
+            victim = next(
+                (nd for nd in self._lru.values() if not nd.children), None)
+            if victim is None:
+                break
+            self._evict(victim)
+            dropped += 1
+        return dropped
+
+    def check_invariants(self) -> List[str]:
+        """Structural audit -> list of violations (empty = healthy).
+
+        Pinned by the chaos property test (tests/test_faults.py): after a
+        faulted run drains, every block is either free or reachable from
+        the root, the LRU index mirrors the node table, and refcounts
+        (child counts) are consistent — i.e. no pool block leaked and no
+        request left a pin behind.
+        """
+        errs: List[str] = []
+        if len(self._free) + len(self._nodes) != self.n_blocks:
+            errs.append(
+                f"block leak: {len(self._free)} free + {len(self._nodes)} "
+                f"cached != {self.n_blocks} pool blocks")
+        if set(self._lru) != set(self._nodes):
+            errs.append("LRU index out of sync with node table")
+        if set(self._nodes) & set(self._free):
+            errs.append("block both free and cached")
+        reachable = 0
+        stack = [self.root]
+        while stack:
+            node = stack.pop()
+            for key, child in node.children.items():
+                reachable += 1
+                if child.parent is not node:
+                    errs.append(f"block {child.block}: bad parent link")
+                if child.key != key:
+                    errs.append(f"block {child.block}: edge key mismatch")
+                if self._nodes.get(child.block) is not child:
+                    errs.append(f"block {child.block}: not in node table")
+                stack.append(child)
+        if reachable != len(self._nodes):
+            errs.append(
+                f"{len(self._nodes) - reachable} cached blocks unreachable "
+                "from root")
+        return errs

@@ -58,6 +58,24 @@ params flow through the same ``crew_strategy="auto"`` autotuned dispatch
 as the one-shot engine; under an active mesh the programs trace inside
 ``sharding_ctx(mesh, SERVE_RULES)`` so ``constrain`` calls bind.
 
+On top of the data path sits the **request lifecycle** (DESIGN.md §5
+"request lifecycle"): every submitted request walks an explicit state
+machine — QUEUED → PREFILLING → DECODING → one of the terminal states
+{COMPLETED, CANCELLED, TIMED_OUT, SHED}, or PREEMPTED → QUEUED and
+around again — and every rid gets **exactly one** terminal
+:class:`Completion` whose ``status``/``reason`` say how it ended.
+Admission is bounded (priority lanes + per-tenant token buckets; over
+the bound ``submit`` returns a typed :class:`Shed` instead of growing
+the queue), deadlines and cancellation are enforced at horizon
+boundaries, and under pressure the scheduler **preempts to the prefix
+pool**: the victim's block-aligned KV scatters into the pool through the
+existing insert path, the request re-queues, and resume is just a prefix
+hit that re-prefills the unaligned tail — preemption costs one chunk,
+not a full re-prefill, which is the paper's reuse insight applied to
+scheduling.  A seeded chaos layer (``serve.faults``) can force every one
+of those paths deterministically; greedy outputs are token-identical
+under benign faults, pinned by tests.
+
 Requires the transformer-family cache contract ``{"k","v","len"}`` with
 ``[L, B, S, KV, D]`` KV tensors (dense / MoE configs; families without a
 chunked-prefill path are rejected at construction).
@@ -67,8 +85,9 @@ from __future__ import annotations
 import collections
 import contextlib
 import dataclasses
+import enum
 import time
-from typing import Deque, Dict, Optional, Sequence, Tuple
+from typing import Deque, Dict, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -79,9 +98,11 @@ from ..dist.sharding import SERVE_RULES
 from ..kernels.plan import warn_deprecated
 from ..models import ModelApi
 from .convert import decode_state_for_params
+from .faults import FaultInjector, default_injector
 from .prefix import PrefixTrie
 
 __all__ = ["Scheduler", "SchedulerMetrics", "Request", "Completion",
+           "RequestState", "Shed", "SchedulerStalledError",
            "DEFAULT_BUCKETS", "DEFAULT_HORIZON", "DEFAULT_BLOCK_SIZE"]
 
 DEFAULT_BUCKETS: Tuple[int, ...] = (16, 32, 64, 128)
@@ -108,6 +129,51 @@ def _bucket_for(ladder: Tuple[int, ...], n: int) -> int:
     return ladder[-1]
 
 
+class RequestState(enum.Enum):
+    """Lifecycle states.  QUEUED/PREFILLING/DECODING are transient;
+    COMPLETED/CANCELLED/TIMED_OUT/SHED are terminal (each produces the
+    request's single :class:`Completion`).  PREEMPTED is instantaneous —
+    a preempted request re-enters QUEUED in the same step, its KV parked
+    in the prefix pool (``Request.preemptions`` counts the round trips).
+    """
+    QUEUED = "queued"
+    PREFILLING = "prefilling"
+    DECODING = "decoding"
+    COMPLETED = "completed"
+    CANCELLED = "cancelled"
+    TIMED_OUT = "timed_out"
+    SHED = "shed"
+    PREEMPTED = "preempted"
+
+
+TERMINAL_STATES = frozenset({
+    RequestState.COMPLETED, RequestState.CANCELLED,
+    RequestState.TIMED_OUT, RequestState.SHED,
+})
+
+
+@dataclasses.dataclass(frozen=True)
+class Shed:
+    """Typed admission rejection returned by ``submit`` under overload.
+
+    The rid is still real: a shed request gets its terminal
+    ``Completion(status="shed")`` like every other outcome, so drivers
+    can account for it without special-casing the return value beyond
+    an ``isinstance`` check.
+    """
+    rid: int
+    reason: str                 # "queue-full" | "tenant-rate"
+
+
+class SchedulerStalledError(RuntimeError):
+    """``run()`` detected no forward progress (or blew its step budget).
+
+    The message lists every live slot's state — rid, lifecycle phase,
+    cache length, prefill cursor, generated count — plus queue depth,
+    so a wedged scheduler reports *what* is stuck instead of spinning.
+    """
+
+
 @dataclasses.dataclass
 class Request:
     """One queued generation request (host-side)."""
@@ -116,17 +182,31 @@ class Request:
     max_new: int
     eos_id: Optional[int]
     submitted_s: float = 0.0    # perf_counter at submit (TTFT accounting)
+    deadline_s: Optional[float] = None  # TTL from submit; None = no deadline
+    priority: int = 0           # lower value = more urgent (lane index)
+    tenant: Optional[str] = None        # token-rate accounting bucket
+    state: RequestState = RequestState.QUEUED
+    preemptions: int = 0        # times preempted to the prefix pool
 
 
 @dataclasses.dataclass
 class Completion:
-    """A finished request: generated tokens (EOS included if hit)."""
+    """A finished request: generated tokens (EOS included if hit).
+
+    Every submitted rid — completed, cancelled, timed out, or shed —
+    produces exactly one Completion; ``status`` is the terminal
+    :class:`RequestState` value and ``reason`` the human-readable cause.
+    Non-completed outcomes keep whatever tokens were generated before
+    the request ended (possibly none).
+    """
     rid: int
     prompt_len: int
     tokens: np.ndarray          # [n_generated] int32
     logprobs: np.ndarray        # [n_generated] float32
     n_steps: int                # engine steps from admission to retirement
     ttft_s: float = 0.0         # submit -> first token wall time
+    status: str = "completed"   # terminal RequestState value
+    reason: str = ""            # why, for non-completed statuses
 
 
 @dataclasses.dataclass
@@ -148,6 +228,16 @@ class SchedulerMetrics:
     decode_lanes: int = 0       # useful (emitted) lane-steps
     padded_lanes: int = 0       # batch-bucket padding lane-steps
     wasted_lane_steps: int = 0  # dead-or-padding lane-steps per horizon
+    # terminal-status counters (attributes only — new dict-style keys
+    # would defeat the deprecation shim below; docs/api.md)
+    completed: int = 0          # requests retired normally
+    cancelled: int = 0          # requests cancelled (queued or in-flight)
+    timed_out: int = 0          # requests past deadline_s
+    shed: int = 0               # requests rejected at admission
+    preempted: int = 0          # preempt-to-prefix-pool round trips
+    resumed: int = 0            # preempted requests re-admitted
+    resume_reprefill_tokens: int = 0  # tokens re-prefilled on resume
+    queue_peak: int = 0         # high-water queued-request count
 
     def __getitem__(self, key: str) -> int:
         warn_deprecated(
@@ -218,6 +308,27 @@ class Scheduler:
         ``fold_in(fold_in(rng, rid), n_generated)``.
       mesh: optional device mesh; programs then trace under
         ``sharding_ctx(mesh, SERVE_RULES)``.
+      max_queue: bound on *queued* (not in-flight) requests.  At the
+        bound, ``submit`` sheds: a strictly-lower-priority queued victim
+        if one exists (the newcomer takes its place), else the newcomer
+        itself — returning a typed :class:`Shed`.  Preemption re-queues
+        are exempt (they hold no new admission).  None = unbounded (the
+        pre-lifecycle behavior).
+      tenant_rate / tenant_burst: per-tenant token-bucket admission —
+        ``tenant_rate`` tokens/s refill up to ``tenant_burst`` (default
+        = rate); a submit whose worst-case cost (prompt + max_new
+        tokens) exceeds the tenant's level is shed with reason
+        "tenant-rate".  Requests without a tenant are never
+        rate-limited.  None disables.
+      preempt_after_steps: with a non-empty queue and no free slot for
+        this many consecutive steps, preempt the longest-running decode
+        to the prefix pool and re-queue it (aged-pressure trigger;
+        higher-priority arrivals preempt immediately regardless).  None
+        disables aged preemption.
+      faults: a ``serve.faults.FaultInjector`` chaos layer, or None.
+        With None the ``REPRO_FAULTS`` env var (when set) supplies the
+        suite-wide benign injector; pass ``faults=False`` to force
+        fault-free operation even under the env switch.
     """
 
     def __init__(
@@ -238,6 +349,11 @@ class Scheduler:
         rng: Optional[jnp.ndarray] = None,
         mesh=None,
         cache_dtype=jnp.bfloat16,
+        max_queue: Optional[int] = None,
+        tenant_rate: Optional[float] = None,
+        tenant_burst: Optional[float] = None,
+        preempt_after_steps: Optional[int] = None,
+        faults: Union[FaultInjector, None, bool] = None,
     ):
         if not api.cfg.has_decode:
             raise ValueError(f"{api.cfg.arch_id} is encoder-only: no decode")
@@ -329,15 +445,40 @@ class Scheduler:
         self._slot_pref_pos = np.zeros(nb, np.int32)    # next chunk offset
         self._slot_pref_end = np.zeros(nb, np.int32)    # prompt length
 
-        self._queue: Deque[Request] = collections.deque()
+        # priority lanes: lane index = Request.priority (lower = more
+        # urgent), FIFO within a lane; preemption re-queues at the front.
+        self._lanes: Dict[int, Deque[Request]] = {}
         self._free: Deque[int] = collections.deque(range(nb))
         self._live: Dict[int, Request] = {}             # rid -> request
+        # effective admission sequence per slot (prompt, or prompt + the
+        # already-generated tokens for a preempt-resume)
+        self._slot_seq: Dict[int, np.ndarray] = {}
         self._out_toks: Dict[int, list] = {}
         self._out_lps: Dict[int, list] = {}
         self._admit_step: Dict[int, int] = {}
         self._ttft: Dict[int, float] = {}
         self._results: Dict[int, Completion] = {}
+        self._terminal_state: Dict[int, RequestState] = {}
         self._next_rid = 0
+
+        # lifecycle / admission-control state
+        if max_queue is not None and max_queue < 1:
+            raise ValueError("max_queue must be >= 1 (or None)")
+        self._max_queue = None if max_queue is None else int(max_queue)
+        self._tenant_rate = None if tenant_rate is None else float(tenant_rate)
+        if self._tenant_rate is not None and self._tenant_rate <= 0:
+            raise ValueError("tenant_rate must be > 0 (or None)")
+        self._tenant_burst = (self._tenant_rate if tenant_burst is None
+                              else float(tenant_burst))
+        self._preempt_after = (None if preempt_after_steps is None
+                               else int(preempt_after_steps))
+        self._tenant_level: Dict[str, float] = {}       # tokens available
+        self._tenant_t: Dict[str, float] = {}           # last refill time
+        self._cancel_pending: set = set()               # in-flight cancels
+        self._starved_steps = 0     # consecutive full-slot steps w/ queue
+        self._faults: Optional[FaultInjector] = (
+            default_injector() if faults is None
+            else (faults if isinstance(faults, FaultInjector) else None))
 
         self.metrics = SchedulerMetrics()
 
@@ -347,7 +488,7 @@ class Scheduler:
         # declared aliasing.
         self._win_buckets = _pow2_ladder(self._cache_len)
         self._chunk_fn = jax.jit(self._chunk_impl, donate_argnums=(0, 1),
-                                 static_argnums=(8,))
+                                 static_argnums=(9,))
         self._horizon_fn = jax.jit(self._horizon_impl, donate_argnums=(0, 1))
         self._horizon_crew_fn = jax.jit(self._horizon_crew_impl,
                                         donate_argnums=(0, 1, 2))
@@ -364,7 +505,7 @@ class Scheduler:
         return sharding_ctx(self._mesh, SERVE_RULES)
 
     def _chunk_impl(self, k_all, v_all, params, tokens, offset, true_c, slot,
-                    req_key, win):
+                    req_key, step, win):
         """One prefill chunk for one slot -> (token, logprob, cache).
 
         tokens [1, C] sit at slot cache positions [offset, offset + C);
@@ -381,7 +522,11 @@ class Scheduler:
         padded cache rows are dead (masked by the slot length, then
         overwritten as decode advances) — DESIGN.md §5.  The sampled
         token/logprob are read by the host only for the chunk that
-        completes a prompt.
+        completes a prompt.  ``step`` is the request's generated-token
+        count at sampling time — 0 for a fresh prompt (the historical
+        key, bit for bit), ``len(gen)`` for a preempt-resume, so sampled
+        decoding continues the per-request ``fold_in`` stream exactly
+        where the horizon program left it.
         """
         cache = {"k": k_all[:, slot, :win][:, None],
                  "v": v_all[:, slot, :win][:, None], "len": offset}
@@ -393,7 +538,7 @@ class Scheduler:
             tok = jnp.argmax(last).astype(jnp.int32)
         else:
             tok = jax.random.categorical(
-                jax.random.fold_in(req_key, 0),
+                jax.random.fold_in(req_key, step),
                 last / self._temperature).astype(jnp.int32)
         # gather + logsumexp, not a full-vocab log_softmax read at [tok]
         lp = last[tok] - jax.scipy.special.logsumexp(last)
@@ -537,9 +682,83 @@ class Scheduler:
     # Queue API
     # ------------------------------------------------------------------
 
+    def _queue_len(self) -> int:
+        return sum(len(q) for q in self._lanes.values())
+
+    def _queue_iter(self):
+        """Queued requests in pop order (priority lanes, FIFO within)."""
+        for pr in sorted(self._lanes):
+            yield from self._lanes[pr]
+
+    def _queue_push(self, req: Request, *, front: bool = False) -> None:
+        lane = self._lanes.setdefault(req.priority, collections.deque())
+        (lane.appendleft if front else lane.append)(req)
+        self.metrics.queue_peak = max(self.metrics.queue_peak,
+                                      self._queue_len())
+
+    def _queue_pop(self) -> Optional[Request]:
+        for pr in sorted(self._lanes):
+            if self._lanes[pr]:
+                return self._lanes[pr].popleft()
+        return None
+
+    def _queue_head(self) -> Optional[Request]:
+        for pr in sorted(self._lanes):
+            if self._lanes[pr]:
+                return self._lanes[pr][0]
+        return None
+
+    def _queue_remove(self, rid: int) -> Optional[Request]:
+        for lane in self._lanes.values():
+            for req in lane:
+                if req.rid == rid:
+                    lane.remove(req)
+                    return req
+        return None
+
+    def _tenant_admit(self, req: Request) -> bool:
+        """Charge ``req``'s worst-case token cost against its tenant's
+        bucket; False = insufficient budget (shed)."""
+        if self._tenant_rate is None or req.tenant is None:
+            return True
+        now = time.perf_counter()
+        last = self._tenant_t.get(req.tenant, now)
+        level = min(self._tenant_burst,
+                    self._tenant_level.get(req.tenant, self._tenant_burst)
+                    + (now - last) * self._tenant_rate)
+        self._tenant_t[req.tenant] = now
+        cost = req.prompt.size + req.max_new
+        if cost > level:
+            self._tenant_level[req.tenant] = level
+            return False
+        self._tenant_level[req.tenant] = level - cost
+        return True
+
+    def _shed_victim(self, priority: int) -> Optional[Request]:
+        """Last request of the lowest-priority non-empty lane, if that
+        lane is *strictly* lower priority than ``priority``."""
+        for pr in sorted(self._lanes, reverse=True):
+            if pr > priority and self._lanes[pr]:
+                return self._lanes[pr].pop()
+        return None
+
     def submit(self, prompt, *, max_new: int = 32,
-               eos_id: Optional[int] = None) -> int:
-        """Queue one request; returns its request id."""
+               eos_id: Optional[int] = None,
+               deadline_s: Optional[float] = None,
+               priority: int = 0,
+               tenant: Optional[str] = None) -> Union[int, Shed]:
+        """Queue one request; returns its request id — or a typed
+        :class:`Shed` when admission control rejects it (bounded queue
+        full with no lower-priority victim, or the tenant's token bucket
+        is empty).  A shed rid still receives its terminal Completion.
+
+        ``deadline_s`` is a TTL from submit time, enforced at horizon
+        boundaries; ``priority`` picks the queue lane (lower = more
+        urgent; a higher-priority arrival may preempt a running decode
+        when no slot is free); ``tenant`` names the token-rate bucket.
+        Malformed requests (empty prompt, bad max_new, cache overflow)
+        still raise ValueError — those are caller bugs, not overload.
+        """
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size == 0:
             raise ValueError("empty prompt")
@@ -549,16 +768,66 @@ class Scheduler:
             raise ValueError(
                 f"prompt {prompt.size} + max_new {max_new} exceeds "
                 f"cache_len {self._cache_len}")
+        if deadline_s is not None and deadline_s < 0:
+            raise ValueError("deadline_s must be >= 0 (or None)")
         rid = self._next_rid
         self._next_rid += 1
-        self._queue.append(Request(rid, prompt, int(max_new), eos_id,
-                                   submitted_s=time.perf_counter()))
+        req = Request(rid, prompt, int(max_new), eos_id,
+                      submitted_s=time.perf_counter(),
+                      deadline_s=deadline_s, priority=int(priority),
+                      tenant=tenant)
+        if not self._tenant_admit(req):
+            self._terminal(req, RequestState.SHED,
+                           f"tenant-rate: {tenant} over token budget")
+            return Shed(rid, "tenant-rate")
+        if (self._max_queue is not None
+                and self._queue_len() >= self._max_queue):
+            victim = self._shed_victim(req.priority)
+            if victim is None:
+                self._terminal(req, RequestState.SHED,
+                               f"queue-full: {self._queue_len()} queued at "
+                               f"bound {self._max_queue}")
+                return Shed(rid, "queue-full")
+            self._terminal(victim, RequestState.SHED,
+                           "queue-full: displaced by higher-priority "
+                           f"rid {rid}")
+        self._queue_push(req)
         return rid
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a request; True if the cancellation took.
+
+        Queued requests terminate immediately; in-flight requests
+        terminate at the next step boundary (their lane may emit a few
+        more tokens first — those are kept in the Completion).  Unknown
+        or already-terminal rids return False.
+        """
+        req = self._queue_remove(rid)
+        if req is not None:
+            self._terminal(req, RequestState.CANCELLED,
+                           "cancelled while queued")
+            return True
+        if rid in self._live and rid not in self._cancel_pending:
+            self._cancel_pending.add(rid)
+            return True
+        return False
+
+    def request_state(self, rid: int) -> Optional[RequestState]:
+        """Current lifecycle state of ``rid`` — None for unknown rids
+        and for terminal rids already drained by ``pop_results``."""
+        if rid in self._live:
+            return self._live[rid].state
+        for req in self._queue_iter():
+            if req.rid == rid:
+                return RequestState.QUEUED
+        if 0 <= rid < self._next_rid:
+            return self._terminal_state.get(rid)
+        return None
 
     @property
     def pending(self) -> int:
         """Queued + in-flight request count."""
-        return len(self._queue) + len(self._live)
+        return self._queue_len() + len(self._live)
 
     def _batch_bucket(self, n: int) -> int:
         return _bucket_for(self._batch_buckets, n)
@@ -593,24 +862,52 @@ class Scheduler:
     # Engine loop
     # ------------------------------------------------------------------
 
-    def _retire(self, slot: int) -> None:
-        rid = int(self._slot_rid[slot])
-        req = self._live.pop(rid)
+    def _terminal(self, req: Request, state: RequestState,
+                  reason: str = "") -> None:
+        """Record ``req``'s single terminal outcome (request not in a
+        slot — slot holders go through ``_finish_slot``).  Non-completed
+        outcomes keep any tokens generated before the end."""
+        assert state in TERMINAL_STATES
+        assert req.rid not in self._terminal_state, \
+            f"rid {req.rid} terminated twice"
+        req.state = state
+        rid = req.rid
+        admit = self._admit_step.pop(rid, None)
         self._results[rid] = Completion(
             rid=rid,
             prompt_len=req.prompt.size,
-            tokens=np.asarray(self._out_toks.pop(rid), np.int32),
-            logprobs=np.asarray(self._out_lps.pop(rid), np.float32),
-            n_steps=self.metrics.steps - self._admit_step.pop(rid) + 1,
+            tokens=np.asarray(self._out_toks.pop(rid, []), np.int32),
+            logprobs=np.asarray(self._out_lps.pop(rid, []), np.float32),
+            n_steps=0 if admit is None else self.metrics.steps - admit + 1,
             ttft_s=self._ttft.pop(rid, 0.0),
+            status=state.value,
+            reason=reason,
         )
+        self._terminal_state[rid] = state
+        counter = {RequestState.COMPLETED: "completed",
+                   RequestState.CANCELLED: "cancelled",
+                   RequestState.TIMED_OUT: "timed_out",
+                   RequestState.SHED: "shed"}[state]
+        setattr(self.metrics, counter, getattr(self.metrics, counter) + 1)
+
+    def _clear_slot(self, slot: int) -> None:
         self._slot_rid[slot] = -1
         self._slot_done[slot] = True
         self._slot_len[slot] = 0
         self._slot_ngen[slot] = 0
         self._slot_pref_pos[slot] = 0
         self._slot_pref_end[slot] = 0
+        self._slot_seq.pop(slot, None)
         self._free.append(slot)
+
+    def _finish_slot(self, slot: int,
+                     state: RequestState = RequestState.COMPLETED,
+                     reason: str = "") -> None:
+        rid = int(self._slot_rid[slot])
+        req = self._live.pop(rid)
+        self._cancel_pending.discard(rid)
+        self._terminal(req, state, reason)
+        self._clear_slot(slot)
 
     def _record(self, slot: int, tok: int, lp: float) -> bool:
         """Append one generated token; returns True if the slot retired."""
@@ -624,29 +921,142 @@ class Scheduler:
         self._slot_ngen[slot] += 1
         if ((req.eos_id is not None and tok == req.eos_id)
                 or int(self._slot_ngen[slot]) >= req.max_new):
-            self._retire(slot)
+            self._finish_slot(slot)
             return True
         return False
+
+    def _slot_of(self, rid: int) -> int:
+        for s in range(self._max_batch):
+            if int(self._slot_rid[s]) == rid:
+                return s
+        raise KeyError(rid)
+
+    def _enforce_lifecycle(self) -> None:
+        """Step-boundary lifecycle sweep: apply pending cancellations,
+        expire deadlines (queued and in-flight), and let the chaos layer
+        force expiries / drop pool blocks.  Runs before admission so a
+        freed slot backfills in the same step."""
+        for rid in sorted(self._cancel_pending & set(self._live)):
+            self._finish_slot(self._slot_of(rid), RequestState.CANCELLED,
+                              "cancelled mid-flight")
+        self._cancel_pending.clear()
+        now = time.perf_counter()
+
+        def expired(req: Request) -> bool:
+            if req.deadline_s is None:
+                return False
+            if now - req.submitted_s > req.deadline_s:
+                return True
+            return (self._faults is not None
+                    and self._faults.should_expire(req.rid))
+
+        for req in [r for r in self._queue_iter() if expired(r)]:
+            self._queue_remove(req.rid)
+            self._terminal(req, RequestState.TIMED_OUT,
+                           f"deadline {req.deadline_s}s exceeded in queue")
+        for rid in [r for r in sorted(self._live) if expired(self._live[r])]:
+            dl = self._live[rid].deadline_s
+            self._finish_slot(self._slot_of(rid), RequestState.TIMED_OUT,
+                              f"deadline {dl}s exceeded in flight")
+        if self._faults is not None and self._trie is not None:
+            if self._faults.pool_drop(self._trie):
+                self.metrics.pool_evictions = self._trie.evictions
+
+    def _preempt_slot(self, slot: int, reason: str) -> None:
+        """Preempt-to-prefix-pool: park the slot's block-aligned KV in
+        the pool via the existing insert path and re-queue the request
+        at the front of its lane.  The recorded sequence
+        ``prompt + gen[:-1]`` is exactly the slot's valid KV rows
+        (``slot_len = P + len(gen) - 1``: the last sampled token's KV is
+        written by the *next* decode step, which never runs) — resume
+        re-prefills only past the pool hit.  Without a prefix cache the
+        request simply re-prefills from scratch; outputs are identical
+        either way."""
+        rid = int(self._slot_rid[slot])
+        req = self._live.pop(rid)
+        gen = self._out_toks[rid]
+        assert gen, "only decoding slots are preempted"
+        seq = np.concatenate(
+            [req.prompt, np.asarray(gen[:-1], np.int32)])
+        assert seq.size == int(self._slot_len[slot]), \
+            (seq.size, int(self._slot_len[slot]))
+        self._pool_insert(slot, seq)
+        self._clear_slot(slot)
+        req.state = RequestState.PREEMPTED
+        req.preemptions += 1
+        self.metrics.preempted += 1
+        req.state = RequestState.QUEUED
+        self._queue_push(req, front=True)
+
+    def _maybe_preempt(self) -> None:
+        """Preemption triggers, checked once per step (at most one
+        preemption each): a fault-forced preempt, a queued request that
+        strictly outranks a running decode when no slot is free, or
+        aged starvation (``preempt_after_steps``)."""
+        forced = (self._faults is not None
+                  and self._faults.should_preempt())
+        decoding = self._decoding()
+        if not decoding:
+            self._starved_steps = 0
+            return
+        # longest-running decode = most KV parked per chunk re-prefilled
+        victim = max(decoding, key=lambda s: int(self._slot_ngen[s]))
+        if forced:
+            self._preempt_slot(victim, "fault-injected preemption")
+            return
+        head = self._queue_head()
+        if head is None or self._free:
+            self._starved_steps = 0
+            return
+        self._starved_steps += 1
+        ranked = [s for s in decoding
+                  if self._live[int(self._slot_rid[s])].priority
+                  > head.priority]
+        if ranked:
+            victim = max(ranked, key=lambda s: int(self._slot_ngen[s]))
+            self._preempt_slot(
+                victim, f"preempted for priority-{head.priority} rid "
+                f"{head.rid}")
+            self._starved_steps = 0
+        elif (self._preempt_after is not None
+              and self._starved_steps >= self._preempt_after):
+            self._preempt_slot(
+                victim, f"aged pressure: queue starved {self._starved_steps} "
+                "steps")
+            self._starved_steps = 0
 
     def _admit(self) -> None:
         """Fill free slots from the queue: prefix match + block copy.
 
-        Admission does *not* prefill: it resolves the prompt's longest
-        cached prefix, copies those pool blocks into the slot stripe
-        (one bucketed gather program, dead-padded with the scratch
-        block), and parks the slot in the prefill phase with its chunk
-        cursor at the hit length.  The chunk phase advances it."""
-        while self._free and self._queue:
+        Admission does *not* prefill: it resolves the effective
+        sequence's longest cached prefix, copies those pool blocks into
+        the slot stripe (one bucketed gather program, dead-padded with
+        the scratch block), and parks the slot in the prefill phase with
+        its chunk cursor at the hit length.  The chunk phase advances it.
+
+        The effective sequence is the prompt — or, for a request
+        preempted mid-decode, ``prompt + generated-so-far``: its first
+        ``P + g - 1`` tokens' KV went to the pool at preemption, so the
+        match covers everything block-aligned and only the unaligned
+        tail (at most ``block_size`` tokens plus the one always-live
+        suffix token) re-prefills.  The completing chunk's logits sit at
+        the last generated token, so the sampled continuation is exactly
+        token ``g + 1`` of the uninterrupted run."""
+        while self._free and self._queue_len():
+            req = self._queue_pop()
             slot = self._free.popleft()
-            req = self._queue.popleft()
+            gen = self._out_toks.get(req.rid, [])
+            seq = (np.concatenate([req.prompt,
+                                   np.asarray(gen, np.int32)])
+                   if gen else req.prompt)
             hit = 0
             if self._trie is not None:
-                ids, raw = self._trie.match(req.prompt)
+                ids, raw = self._trie.match(seq)
                 self.metrics.prefix_hit_tokens += raw
                 # keep >= 1 suffix token: first-token logits must come
-                # from a live forward over the prompt's true tail
+                # from a live forward over the sequence's true tail
                 bs = self._block_size
-                hit = min(raw, ((req.prompt.size - 1) // bs) * bs)
+                hit = min(raw, ((seq.size - 1) // bs) * bs)
                 ids = ids[:hit // bs]
                 if ids:
                     with self._ctx():
@@ -655,24 +1065,31 @@ class Scheduler:
                             self._padded_block_ids(ids), jnp.int32(slot))
                     self.metrics.prefill_tokens_saved += hit
             self.metrics.prefills += 1
+            if gen:
+                self.metrics.resumed += 1
+                self.metrics.resume_reprefill_tokens += seq.size - hit
             self._live[req.rid] = req
-            self._out_toks[req.rid] = []
-            self._out_lps[req.rid] = []
-            self._admit_step[req.rid] = self.metrics.steps
+            req.state = RequestState.PREFILLING
+            self._out_toks.setdefault(req.rid, [])
+            self._out_lps.setdefault(req.rid, [])
+            # n_steps spans first admission -> terminal, across preempts
+            self._admit_step.setdefault(req.rid, self.metrics.steps)
+            self._slot_seq[slot] = seq
             self._slot_rid[slot] = req.rid
             self._slot_done[slot] = False
             self._slot_len[slot] = hit
-            self._slot_ngen[slot] = 0
+            self._slot_ngen[slot] = len(gen)
             self._slot_key[slot] = np.asarray(
                 jax.random.fold_in(self._base_key, req.rid))
             self._slot_pref_pos[slot] = hit
-            self._slot_pref_end[slot] = req.prompt.size
+            self._slot_pref_end[slot] = seq.size
 
-    def _pool_insert(self, slot: int, req: Request) -> None:
-        """Cache the completed prompt's block-aligned KV prefix."""
+    def _pool_insert(self, slot: int, tokens: np.ndarray) -> None:
+        """Cache ``tokens``' block-aligned KV prefix from ``slot``'s
+        stripe (prefill completion and preemption both land here)."""
         if self._trie is None:
             return
-        new_ids, start = self._trie.insert(req.prompt)
+        new_ids, start = self._trie.insert(tokens)
         if new_ids:
             with self._ctx():
                 self._pk, self._pv = self._insert_fn(
@@ -706,42 +1123,50 @@ class Scheduler:
                 return
             completed = []
             for slot in prefilling:
-                req = self._live[int(self._slot_rid[slot])]
+                seq = self._slot_seq[slot]
+                end = int(self._slot_pref_end[slot])
                 pos = int(self._slot_pref_pos[slot])
-                c_bkt, c_true = self._chunk_sizes(req.prompt.size - pos)
+                c_bkt, c_true = self._chunk_sizes(end - pos)
                 win = _bucket_for(self._win_buckets, pos + c_bkt)
                 tokens = np.zeros((1, c_bkt), np.int32)
-                tokens[0, :c_true] = req.prompt[pos:pos + c_true]
+                tokens[0, :c_true] = seq[pos:pos + c_true]
+                step = int(self._slot_ngen[slot])    # 0 unless resuming
                 with self._ctx():
                     tok, lp, self._k, self._v = self._chunk_fn(
                         self._k, self._v, self._params, jnp.asarray(tokens),
                         jnp.int32(pos), jnp.int32(c_true), jnp.int32(slot),
-                        jnp.asarray(self._slot_key[slot]), win)
+                        jnp.asarray(self._slot_key[slot]), jnp.int32(step),
+                        win)
                 self.metrics.chunks += 1
                 self.metrics.prefill_chunk_tokens += c_bkt
                 self._slot_pref_pos[slot] = pos + c_true
                 self._slot_len[slot] = pos + c_true
-                if pos + c_true >= req.prompt.size:
-                    completed.append((slot, req, tok, lp))
-            for slot, req, tok, lp in completed:
-                self._pool_insert(slot, req)
+                if pos + c_true >= end:
+                    completed.append((slot, seq, tok, lp))
+            for slot, seq, tok, lp in completed:
+                self._pool_insert(slot, seq)
+                self._live[int(self._slot_rid[slot])].state = \
+                    RequestState.DECODING
                 self._record(slot, int(tok), float(lp))
             if self._decoding():
                 return
 
     def step(self) -> bool:
-        """Admit, advance prefill chunks, run one fused H-step horizon,
-        retire; True while busy.
+        """One horizon boundary: enforce lifecycle (cancels, deadlines,
+        injected faults), maybe preempt, admit, advance prefill chunks,
+        run one fused H-step horizon, retire; True while busy.
 
         An empty queue with no active slots is an idle drain: returns
         False without launching any program.
         """
         self.metrics.steps += 1
+        self._enforce_lifecycle()
+        self._maybe_preempt()
         self._admit()
         self._prefill_chunks()
         active = self._decoding()
         if not active:
-            busy = bool(self._queue or self._live)
+            busy = bool(self._queue_len() or self._live)
             if not busy:
                 self.metrics.steps -= 1  # nothing ran
             return busy
@@ -766,6 +1191,10 @@ class Scheduler:
             eos[i] = -1 if req.eos_id is None else int(req.eos_id)
             alive[i] = True
         crew = self._bucket_state(nb)
+        if self._faults is not None:
+            dt = self._faults.horizon_delay()
+            if dt:
+                time.sleep(dt)   # chaos: a slow device / noisy neighbor
         with self._ctx():
             if crew is None:
                 toks_h, lps_h, emit_h, self._k, self._v = self._horizon_fn(
@@ -798,14 +1227,81 @@ class Scheduler:
                 self._slot_len[s] += 1  # step t wrote the prior token's KV
                 if self._record(s, int(toks_h[i, t]), float(lps_h[i, t])):
                     break
-        return bool(self._queue or self._live)
+        return bool(self._queue_len() or self._live)
 
-    def run(self) -> Dict[int, Completion]:
-        """Drain the queue to completion; returns {rid: Completion}."""
+    def _step_budget(self) -> int:
+        """Generous upper bound on the steps draining the current work
+        could take — chunks plus horizons per request as if each ran
+        alone, with slack for preempt/resume cycles and injected faults.
+        A healthy scheduler finishes far under it; only a stall crosses
+        it."""
+        work = 0
+        for req in list(self._queue_iter()) + list(self._live.values()):
+            total = req.prompt.size + req.max_new
+            chunks = -(-total // self._buckets[0])      # ceil, worst bucket
+            horizons = -(-req.max_new // self._horizon)
+            work += chunks + horizons
+        return 64 + 8 * work
+
+    def _stall_report(self, steps: int, budget: int) -> str:
+        lines = [f"scheduler stalled after {steps} steps "
+                 f"(budget {budget}): no forward progress",
+                 f"  queue: {self._queue_len()} waiting "
+                 f"(rids {[r.rid for r in self._queue_iter()][:8]}), "
+                 f"{len(self._free)} free slots"]
+        for s in range(self._max_batch):
+            if self._slot_done[s]:
+                continue
+            rid = int(self._slot_rid[s])
+            req = self._live.get(rid)
+            lines.append(
+                f"  slot {s}: rid {rid} "
+                f"state={req.state.value if req else '?'} "
+                f"len={int(self._slot_len[s])} "
+                f"prefill={int(self._slot_pref_pos[s])}/"
+                f"{int(self._slot_pref_end[s])} "
+                f"ngen={int(self._slot_ngen[s])}"
+                + (f"/{req.max_new}" if req else ""))
+        return "\n".join(lines)
+
+    def _progress_sig(self) -> tuple:
+        return (self._queue_len(), tuple(sorted(self._live)),
+                tuple(int(x) for x in self._slot_len),
+                tuple(int(x) for x in self._slot_ngen),
+                tuple(int(x) for x in self._slot_pref_pos),
+                len(self._results))
+
+    def run(self, max_steps: Optional[int] = None) -> Dict[int, Completion]:
+        """Drain the queue to completion; returns {rid: Completion} for
+        every terminal outcome (completed, cancelled, timed out, shed).
+
+        A watchdog bounds the drain: ``max_steps`` caps the step count
+        (default: a generous budget derived from the outstanding work,
+        ``_step_budget``), and a no-progress detector trips when the
+        scheduler state signature is unchanged across 16 consecutive
+        busy steps.  Either raises :class:`SchedulerStalledError` with a
+        per-slot diagnostic instead of spinning forever.
+        """
+        budget = int(max_steps) if max_steps is not None \
+            else self._step_budget()
+        steps = 0
+        stalled = 0
+        sig = self._progress_sig()
         while self.step():
-            pass
+            steps += 1
+            new_sig = self._progress_sig()
+            stalled = stalled + 1 if new_sig == sig else 0
+            sig = new_sig
+            if steps >= budget or stalled >= 16:
+                raise SchedulerStalledError(
+                    self._stall_report(steps, budget))
         return self.pop_results()
 
     def pop_results(self) -> Dict[int, Completion]:
         out, self._results = self._results, {}
+        for rid in out:
+            # a popped rid can never re-terminate (it left the queue and
+            # the slots at terminal time), so its state entry can go —
+            # keeps lifecycle bookkeeping bounded on a long-lived server
+            self._terminal_state.pop(rid, None)
         return out

@@ -124,7 +124,7 @@ class TestDonation:
         lowered = sched._chunk_fn.lower(
             sched._k, sched._v, params, jnp.zeros((1, 8), jnp.int32),
             jnp.int32(0), jnp.int32(4), jnp.int32(0),
-            jnp.asarray(jax.random.PRNGKey(0)), 8)
+            jnp.asarray(jax.random.PRNGKey(0)), jnp.int32(0), 8)
         assert lowered.as_text().count("tf.aliasing_output") >= 2
 
     def test_prefix_block_programs_declare_donated_state(self, qwen):

@@ -1,0 +1,154 @@
+"""Deterministic fault injection (serve.faults, DESIGN.md §5 "request
+lifecycle"): the injected schedule is a pure function of the seed, hook
+streams are independent, and a seeded chaos run over the scheduler keeps
+every lifecycle invariant — one terminal Completion per rid, completed
+outputs token-identical to cold serve.generate, a consistent prefix pool
+after drain, and run-to-run identical terminal statuses."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.models import build_model
+from repro.serve import (FaultInjector, PrefixTrie, Scheduler, Shed,
+                         generate)
+from repro.serve.faults import default_injector
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = ARCHS["qwen2-0.5b"].reduced()
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    return cfg, api, params
+
+
+def _ref_tokens(api, params, prompt, max_new):
+    out = generate(api, params, jax.numpy.asarray(prompt)[None],
+                   max_new=max_new)
+    return np.asarray(out["tokens"][0])
+
+
+class TestInjectorPurity:
+    def _drive(self, seed):
+        inj = FaultInjector(seed, delay_p=0.4, max_delay_s=0.001,
+                            preempt_p=0.4, expire_p=0.4,
+                            drop_p=0.4, max_drop=3)
+        trie = PrefixTrie(16, block_size=2)
+        out = []
+        for i in range(40):
+            trie.insert(np.asarray([2 * i, 2 * i + 2], np.int32))
+            out.append((inj.horizon_delay(), inj.should_preempt(),
+                        inj.should_expire(i), inj.pool_drop(trie)))
+        return out, inj.trace
+
+    def test_same_seed_same_decisions_and_trace(self):
+        a, trace_a = self._drive(5)
+        b, trace_b = self._drive(5)
+        assert a == b and trace_a == trace_b
+        c, trace_c = self._drive(6)
+        assert trace_c != trace_a
+
+    def test_hook_streams_independent(self):
+        """Consuming one hook's stream never shifts another's — the
+        property that keeps fault schedules stable when the scheduler
+        calls hooks at different per-step rates."""
+        a = FaultInjector(7, preempt_p=0.5, expire_p=0.5)
+        b = FaultInjector(7, preempt_p=0.5, expire_p=0.5)
+        for i in range(9):
+            b.should_expire(i)              # advance only b's expire stream
+        assert ([a.should_preempt() for _ in range(20)]
+                == [b.should_preempt() for _ in range(20)])
+
+    def test_streams_advance_on_misses_too(self):
+        """Decisions draw at a fixed rate per call even when nothing is
+        injected, so raising a probability never reshuffles the other
+        outcomes' positions."""
+        lo = FaultInjector(9, preempt_p=0.0)
+        hi = FaultInjector(9, preempt_p=1.0)
+        for _ in range(10):
+            assert lo.should_preempt() is False
+            assert hi.should_preempt() is True
+
+    def test_pool_drop_handles_missing_trie(self):
+        inj = FaultInjector(0, drop_p=1.0, max_drop=2)
+        assert inj.pool_drop(None) == 0     # prefix_cache=False scheduler
+        assert inj.trace == []
+
+    def test_default_injector_env_switch(self, monkeypatch):
+        monkeypatch.delenv("REPRO_FAULTS", raising=False)
+        assert default_injector() is None
+        monkeypatch.setenv("REPRO_FAULTS", "0")
+        assert default_injector() is None
+        monkeypatch.setenv("REPRO_FAULTS", "7")
+        inj = default_injector()
+        assert inj is not None and inj.seed == 7
+        # benign: only output-preserving faults are on
+        assert inj.preempt_p > 0 and inj.drop_p > 0
+        assert inj.delay_p == 0 and inj.expire_p == 0
+
+
+class TestSeededChaos:
+    def _workload(self, cfg):
+        rng = np.random.default_rng(11)
+        lens = [8, 12, 20, 8, 16, 12, 20, 8, 16, 12]
+        news = [4, 6, 4, 6, 4, 6, 4, 6, 4, 6]
+        return [(rng.integers(0, cfg.vocab, n).astype(np.int32), m)
+                for n, m in zip(lens, news)]
+
+    def _drive(self, api, params, reqs, seed):
+        """Submit/step/cancel on a fixed schedule under an aggressive
+        injector; returns (sched, {i: rid}, {rid: Completion})."""
+        sched = Scheduler(
+            api, params, max_batch=2, cache_len=64, buckets=(8, 16),
+            horizon=4, block_size=8, max_queue=6,
+            faults=FaultInjector(seed, preempt_p=0.5, expire_p=0.1,
+                                 drop_p=0.5, max_drop=2))
+        rids = {}
+        for i, (p, m) in enumerate(reqs):
+            # every third request carries a (fault-expirable) deadline
+            # far beyond the test's wall clock
+            dl = 1000.0 if i % 3 == 0 else None
+            r = sched.submit(p, max_new=m, deadline_s=dl)
+            rids[i] = r.rid if isinstance(r, Shed) else r
+            sched.step()
+            if i in (4, 7):                 # cancel a mid-run rid
+                sched.cancel(rids[i - 2])
+        return sched, rids, sched.run()
+
+    def test_chaos_preserves_lifecycle_invariants(self, qwen):
+        cfg, api, params = qwen
+        reqs = self._workload(cfg)
+        refs = {i: _ref_tokens(api, params, p, m)
+                for i, (p, m) in enumerate(reqs)}
+        sched, rids, res = self._drive(api, params, reqs, seed=9)
+        # something actually happened: the schedule injected faults
+        assert sched.metrics.preempted >= 1
+        assert any(h == "drop" for h, *_ in sched._faults.trace)
+        # exactly one terminal Completion per submitted rid
+        assert sorted(res) == sorted(rids.values())
+        statuses = {i: res[rids[i]].status for i in rids}
+        assert set(statuses.values()) <= {"completed", "cancelled",
+                                          "timed_out", "shed"}
+        # completed outputs are token-identical to cold generate
+        n_completed = 0
+        for i in rids:
+            if statuses[i] == "completed":
+                n_completed += 1
+                np.testing.assert_array_equal(res[rids[i]].tokens, refs[i])
+        assert n_completed >= 1
+        # the prefix pool is consistent after drain (refcounts, LRU,
+        # free-list/node-table accounting)
+        assert sched._trie.check_invariants() == []
+        # purity end to end: same seed -> same fault schedule -> same
+        # terminal statuses (and the same per-status outputs)
+        sched2, rids2, res2 = self._drive(api, params, reqs, seed=9)
+        assert sched2._faults.trace == sched._faults.trace
+        assert {i: res2[rids2[i]].status for i in rids2} == statuses
+
+    def test_different_seed_different_schedule(self, qwen):
+        cfg, api, params = qwen
+        reqs = self._workload(cfg)
+        sched_a, _, _ = self._drive(api, params, reqs, seed=9)
+        sched_b, _, _ = self._drive(api, params, reqs, seed=10)
+        assert sched_a._faults.trace != sched_b._faults.trace

@@ -2,6 +2,8 @@
 semantics, warm-vs-cold greedy token parity, chunked-prefill bitwise parity
 with the monolithic prefill, counter behavior on shared vs disjoint
 traffic, and LRU eviction safety under pool pressure."""
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -10,6 +12,12 @@ import pytest
 from repro.configs import ARCHS
 from repro.models import build_model
 from repro.serve import PrefixTrie, Scheduler, generate
+
+# Under REPRO_FAULTS forced preempt/resume re-prefills through the pool
+# (its own inserted blocks), and forced drops evict cached blocks — both
+# output-preserving, so parity pins stay unconditional, but exact saved-
+# token / program-count accounting legitimately shifts.
+FAULT_MODE = os.environ.get("REPRO_FAULTS", "").strip() not in ("", "0")
 
 
 @pytest.fixture(scope="module")
@@ -202,7 +210,8 @@ class TestPrefixReuse:
         # wave 1: two concurrent admits against an empty trie — cold
         rids = [sched.submit(p, max_new=4) for p in prompts[:2]]
         res = sched.run()
-        assert sched.metrics.prefill_tokens_saved == 0
+        if not FAULT_MODE:  # a forced resume hits its own pool blocks
+            assert sched.metrics.prefill_tokens_saved == 0
         for rid, ref in zip(rids, refs):
             np.testing.assert_array_equal(res[rid].tokens, ref)
         # wave 2: warm — shared prefix blocks come from the pool
@@ -210,7 +219,8 @@ class TestPrefixReuse:
         res = sched.run()
         saved = sched.metrics.prefill_tokens_saved
         # all four requests hit the 24-token shared prefix (3 blocks)
-        assert saved == 4 * 24
+        if not FAULT_MODE:  # preempt/resume adds hits, drops remove them
+            assert saved == 4 * 24
         assert sched.metrics.prefix_hit_tokens >= saved
         for rid, ref in zip(rids, refs):
             np.testing.assert_array_equal(res[rid].tokens, ref)
@@ -229,8 +239,9 @@ class TestPrefixReuse:
         rids = [sched.submit(p, max_new=3) for p in prompts]
         res = sched.run()
         assert sorted(res) == sorted(rids)
-        assert sched.metrics.prefill_tokens_saved == 0
-        assert sched.metrics.prefix_hit_tokens == 0
+        if not FAULT_MODE:  # a forced resume matches its own insert
+            assert sched.metrics.prefill_tokens_saved == 0
+            assert sched.metrics.prefix_hit_tokens == 0
         assert sched.metrics.pool_inserts > 0    # cached, just unmatched
 
     def test_fixed_program_set_with_chunked_prefill(self, qwen):
@@ -245,17 +256,19 @@ class TestPrefixReuse:
             sched.submit(p, max_new=4)
         sched.run()
         counts = sched.program_counts()
-        # chunk buckets {8, 16} x KV-window buckets (pow2 <= 64)
-        assert counts["prefill"] <= 4
-        assert counts["decode"] <= 2        # batch buckets {1, 2}
-        assert counts["copy"] <= 3          # block-count buckets {1, 2, 4}
-        assert counts["insert"] <= 3
+        if not FAULT_MODE:  # resume offsets can touch extra window buckets
+            # chunk buckets {8, 16} x KV-window buckets (pow2 <= 64)
+            assert counts["prefill"] <= 4
+            assert counts["decode"] <= 2    # batch buckets {1, 2}
+            assert counts["copy"] <= 3      # block-count buckets {1, 2, 4}
+            assert counts["insert"] <= 3
         # replay (now warm): same program set, bit for bit
         for _ in range(2):
             for p in prompts:
                 sched.submit(p, max_new=4)
             sched.run()
-        assert sched.program_counts() == counts
+        if not FAULT_MODE:
+            assert sched.program_counts() == counts
 
     def test_lru_eviction_under_pool_pressure_keeps_slots_correct(self, qwen):
         """A pool far smaller than the traffic's block footprint churns
@@ -325,7 +338,8 @@ class TestPrefixReuse:
                           buckets=(8, 16), block_size=8)
         rids = [sched.submit(p, max_new=3) for p in (a, b, c)]
         res = sched.run()
-        assert sched.metrics.prefill_tokens_saved > 0  # C hit B's blocks
+        if not FAULT_MODE:  # a forced drop can evict B's blocks first
+            assert sched.metrics.prefill_tokens_saved > 0  # C hit B's blocks
         for rid, p in zip(rids, (a, b, c)):
             np.testing.assert_array_equal(res[rid].tokens,
                                           _ref_tokens(api, params, p, 3))
@@ -368,7 +382,8 @@ class TestPrefixReuse:
         res = sched.pop_results()
         # b's 40-token prompt takes 5 chunk dispatches at bucket 8; each
         # rides a step that also emitted decode tokens for a
-        assert interleaved >= 4
+        if not FAULT_MODE:  # a forced preempt of `a` breaks the overlap
+            assert interleaved >= 4
         np.testing.assert_array_equal(res[ra].tokens,
                                       _ref_tokens(api, params, a, 24))
         np.testing.assert_array_equal(res[rb].tokens,

@@ -17,6 +17,13 @@ from repro.serve import Scheduler, generate
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 
+# Under REPRO_FAULTS the whole suite runs with the benign chaos injector
+# (serve.faults): forced preemptions / pool drops are output-preserving,
+# so parity assertions stay unconditional — but exact work accounting
+# (prefill counts, chunk counts, compiled-program tallies) legitimately
+# shifts when requests bounce through preempt/resume.
+FAULT_MODE = os.environ.get("REPRO_FAULTS", "").strip() not in ("", "0")
+
 
 @pytest.fixture(scope="module")
 def qwen():
@@ -60,9 +67,14 @@ class TestParity:
 
         # queue outran the slots: every request prefillled exactly once,
         # and the program set is bucket-sized, not request-sized.
-        assert sched.metrics.prefills == len(prompts)
+        # (Fault mode bounces requests through preempt/resume, which
+        # re-prefills and may touch extra chunk/window buckets — counts
+        # stay bucket-bounded but lose their exact values.)
+        if not FAULT_MODE:
+            assert sched.metrics.prefills == len(prompts)
         counts = sched.program_counts()
-        assert counts["prefill"] == 3   # buckets 8, 16, 24 all used
+        if not FAULT_MODE:
+            assert counts["prefill"] == 3   # buckets 8, 16, 24 all used
         assert counts["decode"] <= 2    # batch buckets {1, 2}
 
         # replaying more traffic compiles nothing outside the bucket set:
@@ -72,11 +84,13 @@ class TestParity:
         sched.submit(prompts[0], max_new=3)
         sched.run()
         counts = sched.program_counts()
-        assert counts["prefill"] == 3
+        if not FAULT_MODE:
+            assert counts["prefill"] == 3
         assert counts["decode"] <= 2    # batch buckets {1, 2}
         sched.submit(prompts[1], max_new=3)
         sched.run()
-        assert sched.program_counts() == counts
+        if not FAULT_MODE:
+            assert sched.program_counts() == counts
 
 
 class TestEdgeCases:
@@ -152,7 +166,8 @@ class TestEdgeCases:
         np.testing.assert_array_equal(res[rid].tokens,
                                       _ref_tokens(api, params, p, 5))
         # 37 = 16 + 16 + 5: two full chunks + one tail bucket
-        assert sched.metrics.chunks == 3
+        if not FAULT_MODE:   # a forced preempt/resume re-chunks the tail
+            assert sched.metrics.chunks == 3
 
     def test_sampled_streams_differ_per_request(self, qwen):
         """temperature > 0: two identical prompts in flight draw from
