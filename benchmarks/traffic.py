@@ -160,6 +160,18 @@ def prepare(fast: bool = True):
     return _SERVE
 
 
+def _kv_mem_mb(sched):
+    """Peak KV bytes the paged pool actually referenced versus the
+    dense per-slot layout it replaced (every slot a full ``cache_len``
+    stripe, resident for the whole run).  One pool block's bytes are
+    read off the live ``[L, total+1, bs, KV, D]`` tensors, so dtype and
+    scratch row are accounted for."""
+    blk_b = 2 * sched._pk.nbytes / sched._pk.shape[1]       # k + v, 1 block
+    paged = blk_b * sched.metrics.pool_blocks_peak
+    dense = blk_b * sched._max_batch * sched._nb_full
+    return round(paged / 1e6, 3), round(dense / 1e6, 3)
+
+
 def serve_throughput(fast: bool = True):
     """Measured continuous-vs-static rows (call ``prepare`` first)."""
     state = prepare(fast)
@@ -179,6 +191,9 @@ def serve_throughput(fast: bool = True):
             })
         rows[-2]["speedup_vs_static"] = round(
             (c_tok / max(c_dt, 1e-9)) / max(s_tok / max(s_dt, 1e-9), 1e-9), 2)
+        kv_peak, kv_dense = _kv_mem_mb(sched)
+        rows[-2]["kv_peak_MB"] = kv_peak
+        rows[-2]["kv_dense_slot_MB"] = kv_dense
     return rows
 
 

@@ -29,6 +29,7 @@ __all__ = [
     "init", "spec", "crew_names",
     "chunked_attention", "decode_attention", "cached_chunk_attention",
     "attend", "attend_decode", "attend_prefill_cached",
+    "attend_decode_paged", "attend_prefill_cached_paged",
     "init_kv_cache", "cache_spec",
 ]
 
@@ -473,6 +474,132 @@ def attend_prefill_cached(params, x, cache, *, n_heads, n_kv, d_head,
     out = out.reshape(b, c, n_heads * d_head)
     y = linear.apply(params["o"], out, plan=plan)
     return y, {"k": k_cache, "v": v_cache, "len": cache["len"] + c}
+
+
+def _paged_gather(pool: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    """pool [P, bs, KV, D] indexed by table [B, NB] -> [B, NB*bs, KV, D].
+
+    The paged read path: a slot's logical KV stripe materializes as a
+    gather through its block table.  Entries past the slot's blocks are 0
+    (the scratch block) — their rows are garbage but every consumer masks
+    positions >= the true length to an exact zero weight (NEG_INF bias ->
+    exp underflow), so the gathered width never changes outputs; this is
+    the same argument that makes window-bucket width changes bitwise-safe
+    on the dense path.  Storage dtype is preserved (int8 pools stream
+    natively into ``decode_attention``).
+    """
+    b, nb = table.shape
+    _, bs, kv, d = pool.shape
+    return pool[table].reshape(b, nb * bs, kv, d)
+
+
+def attend_decode_paged(params, x, cache, *, n_heads, n_kv, d_head,
+                        rope_theta=10000.0, crew_strategy="auto",
+                        crew_state=None):
+    """Paged decode: KV lives in a shared block pool, not a slot stripe.
+
+    ``cache`` is {"k": [P, bs, KV, D], "v": [P, bs, KV, D], "len"
+    (scalar-or-``[B]``, see :func:`_lens_vector`), "table": [B, NB]
+    int32}.  Device block id 0 is the scratch block: dead lanes carry
+    all-zero tables so their writes and reads land there, never on a
+    live block.  Each lane writes its new K/V row at pool position
+    ``(table[lane, len // bs], len % bs)`` and attends the gathered
+    ``[B, NB*bs]`` stripe with positions >= len+1 masked — bitwise the
+    same softmax as the dense-stripe :func:`attend_decode` because the
+    extra gathered width is exactly zero-weighted.
+
+    Write-safety is structural: a slot's write block index ``len // bs``
+    is always >= its prompt's block count, and blocks shared with the
+    prefix trie (or other slots) are only ever the prompt's *full*
+    blocks — so decode never writes a shared block.
+    """
+    b = x.shape[0]
+    plan = CrewPlan.of(crew_strategy)
+    st = crew_state or {}
+    q, sq = linear.apply_with_state(params["q"], x, plan=plan,
+                                    state=st.get("q"))
+    k, sk = linear.apply_with_state(params["k"], x, plan=plan,
+                                    state=st.get("k"))
+    v, sv = linear.apply_with_state(params["v"], x, plan=plan,
+                                    state=st.get("v"))
+    q = q.reshape(b, 1, n_heads, d_head)
+    k = k.reshape(b, 1, n_kv, d_head)
+    v = v.reshape(b, 1, n_kv, d_head)
+    ln = cache["len"]
+    ln_b = _lens_vector(ln, b)
+    pos = ln_b[:, None]
+    inv = rope_freqs(d_head, rope_theta)
+    q = apply_rope(q, pos, inv)
+    k = apply_rope(k, pos, inv)
+    tbl = cache["table"]
+    bs = cache["k"].shape[1]
+    blk = jnp.take_along_axis(tbl, (ln_b // bs)[:, None], axis=1)[:, 0]
+    off = ln_b % bs
+    k_pool = cache["k"].at[blk, off].set(_maybe_quant_kv(k, cache["k"])[:, 0])
+    v_pool = cache["v"].at[blk, off].set(_maybe_quant_kv(v, cache["v"])[:, 0])
+    out = decode_attention(q, _paged_gather(k_pool, tbl),
+                           _paged_gather(v_pool, tbl), ln_b + 1)
+    out = out.reshape(b, 1, n_heads * d_head)
+    y, so = linear.apply_with_state(params["o"], out, plan=plan,
+                                    state=st.get("o"))
+    new_cache = {"k": k_pool, "v": v_pool, "len": cache["len"] + 1,
+                 "table": tbl}
+    if crew_state is not None:
+        new_cache["crew"] = {**crew_state, "q": sq, "k": sk, "v": sv,
+                             "o": so}
+    return y, new_cache
+
+
+def attend_prefill_cached_paged(params, x, cache, *, n_heads, n_kv, d_head,
+                                rope_theta=10000.0, crew_strategy="auto"):
+    """Paged chunked-prefill: the block-table twin of
+    :func:`attend_prefill_cached`.
+
+    x [B, C, d] holds C consecutive prompt tokens whose first token sits
+    at position ``cache["len"]`` (scalar-or-``[B]``); K/V rows scatter
+    into the pool through the block table at ``(table[b, pos // bs],
+    pos % bs)``.  Chunk positions whose block index falls off the table
+    — bucket padding past the slot's allocation — are *explicitly
+    redirected to the scratch block* (device id 0), never index-clamped:
+    clamping a write position back onto the last valid block is exactly
+    the ``dynamic_update_slice`` start-clamp bug class that silently
+    corrupted caches three times pre-paging (DESIGN.md §5).  Positions
+    inside the table but past the true prompt write dead rows into the
+    slot's own tail block, masked until decode overwrites them — same
+    semantics as dense bucket padding.  Prefix-hit blocks ([0, hit))
+    sit strictly below every write position, so shared blocks are
+    read-only here by construction.
+    """
+    b, c, _ = x.shape
+    plan = CrewPlan.of(crew_strategy)
+    q = linear.apply(params["q"], x, plan=plan)
+    k = linear.apply(params["k"], x, plan=plan)
+    v = linear.apply(params["v"], x, plan=plan)
+    q = q.reshape(b, c, n_heads, d_head)
+    k = k.reshape(b, c, n_kv, d_head)
+    v = v.reshape(b, c, n_kv, d_head)
+    off_b = _lens_vector(cache["len"], b)
+    pos = off_b[:, None] + jnp.arange(c)[None]          # [B, C]
+    inv = rope_freqs(d_head, rope_theta)
+    q = apply_rope(q, pos, inv)
+    k = apply_rope(k, pos, inv)
+    tbl = cache["table"]
+    bs = cache["k"].shape[1]
+    nbw = tbl.shape[1]
+    bidx = pos // bs
+    blk = jnp.where(
+        bidx < nbw,
+        jnp.take_along_axis(tbl, jnp.minimum(bidx, nbw - 1), axis=1),
+        0)                                              # [B, C]
+    k_pool = cache["k"].at[blk, pos % bs].set(_maybe_quant_kv(k, cache["k"]))
+    v_pool = cache["v"].at[blk, pos % bs].set(_maybe_quant_kv(v, cache["v"]))
+    out = cached_chunk_attention(
+        q, _maybe_dequant_kv(_paged_gather(k_pool, tbl), q.dtype),
+        _maybe_dequant_kv(_paged_gather(v_pool, tbl), q.dtype), pos)
+    out = out.reshape(b, c, n_heads * d_head)
+    y = linear.apply(params["o"], out, plan=plan)
+    return y, {"k": k_pool, "v": v_pool, "len": cache["len"] + c,
+               "table": tbl}
 
 
 def init_kv_cache(batch: int, seq_len: int, n_kv: int, d_head: int,

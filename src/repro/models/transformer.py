@@ -278,14 +278,22 @@ def prefill_chunk(
         raise NotImplementedError("vlm prefill is not chunkable (patches)")
     x = embed.embed(params["embed"], tokens, dtype=dtype)
     off = cache["len"]
+    tbl = cache.get("table")    # [B, NB] block table -> paged pool layout
 
     def step(x, inp):
         blk, k_c, v_c = inp
         h = _norm(cfg, blk["n1"], x)
-        y, new = attention.attend_prefill_cached(
-            blk["attn"], h, {"k": k_c, "v": v_c, "len": off},
-            n_heads=cfg.n_heads, n_kv=cfg.n_kv, d_head=cfg.head_dim,
-            rope_theta=cfg.rope_theta, crew_strategy=crew_strategy)
+        if tbl is None:
+            y, new = attention.attend_prefill_cached(
+                blk["attn"], h, {"k": k_c, "v": v_c, "len": off},
+                n_heads=cfg.n_heads, n_kv=cfg.n_kv, d_head=cfg.head_dim,
+                rope_theta=cfg.rope_theta, crew_strategy=crew_strategy)
+        else:
+            y, new = attention.attend_prefill_cached_paged(
+                blk["attn"], h,
+                {"k": k_c, "v": v_c, "len": off, "table": tbl},
+                n_heads=cfg.n_heads, n_kv=cfg.n_kv, d_head=cfg.head_dim,
+                rope_theta=cfg.rope_theta, crew_strategy=crew_strategy)
         x = x + y
         h = _norm(cfg, blk["n2"], x)
         y, _, _ = _ffn_apply(cfg, blk, h, crew_strategy)
@@ -295,7 +303,10 @@ def prefill_chunk(
         step, x, (params["blocks"], cache["k"], cache["v"]))
     x = _norm(cfg, params["final_norm"], x)
     logits = embed.logits(params["embed"], x)
-    return logits, {"k": k_new, "v": v_new, "len": off + tokens.shape[1]}
+    new_cache = {"k": k_new, "v": v_new, "len": off + tokens.shape[1]}
+    if tbl is not None:
+        new_cache["table"] = tbl
+    return logits, new_cache
 
 
 # --------------------------------------------------------------------------
@@ -338,15 +349,26 @@ def decode_step(
     x = embed.embed(params["embed"], tokens, dtype=dtype)
     ln = cache["len"]
     cs = cache.get("crew")
+    tbl = cache.get("table")    # [B, NB] block table -> paged pool layout
     ffn_key = "moe" if cfg.moe is not None else "ffn"
+
+    def _attend(blk, h, k_c, v_c, crew_state=None):
+        if tbl is None:
+            return attention.attend_decode(
+                blk["attn"], h, {"k": k_c, "v": v_c, "len": ln},
+                n_heads=cfg.n_heads, n_kv=cfg.n_kv, d_head=cfg.head_dim,
+                rope_theta=cfg.rope_theta, crew_strategy=crew_strategy,
+                crew_state=crew_state)
+        return attention.attend_decode_paged(
+            blk["attn"], h, {"k": k_c, "v": v_c, "len": ln, "table": tbl},
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv, d_head=cfg.head_dim,
+            rope_theta=cfg.rope_theta, crew_strategy=crew_strategy,
+            crew_state=crew_state)
 
     def step(x, inp):
         blk, k_c, v_c = inp
         h = _norm(cfg, blk["n1"], x)
-        y, new = attention.attend_decode(
-            blk["attn"], h, {"k": k_c, "v": v_c, "len": ln},
-            n_heads=cfg.n_heads, n_kv=cfg.n_kv, d_head=cfg.head_dim,
-            rope_theta=cfg.rope_theta, crew_strategy=crew_strategy)
+        y, new = _attend(blk, h, k_c, v_c)
         x = x + y
         h = _norm(cfg, blk["n2"], x)
         y, _, _ = _ffn_apply(cfg, blk, h, crew_strategy)
@@ -355,11 +377,7 @@ def decode_step(
     def step_crew(x, inp):
         blk, k_c, v_c, st = inp
         h = _norm(cfg, blk["n1"], x)
-        y, new = attention.attend_decode(
-            blk["attn"], h, {"k": k_c, "v": v_c, "len": ln},
-            n_heads=cfg.n_heads, n_kv=cfg.n_kv, d_head=cfg.head_dim,
-            rope_theta=cfg.rope_theta, crew_strategy=crew_strategy,
-            crew_state=st["attn"])
+        y, new = _attend(blk, h, k_c, v_c, crew_state=st["attn"])
         x = x + y
         h = _norm(cfg, blk["n2"], x)
         y, _, st_ffn = _ffn_apply(cfg, blk, h, crew_strategy,
@@ -379,4 +397,6 @@ def decode_step(
     new_cache = {"k": k_new, "v": v_new, "len": ln + 1}
     if cs is not None:
         new_cache["crew"] = {**cs, "blocks": cs_blocks}
+    if tbl is not None:
+        new_cache["table"] = tbl
     return logits, new_cache

@@ -38,6 +38,7 @@ from .convert import (
 )
 from .engine import Engine, generate
 from .faults import FaultInjector
+from .pool import BlockPool
 from .prefix import PrefixTrie
 from .scheduler import (
     Completion,
@@ -70,6 +71,7 @@ __all__ = [
     "autotune_crew_params",
     "cache_decode_weights",
     "decode_state_for_params",
-    # prefix cache
+    # paged KV substrate
+    "BlockPool",
     "PrefixTrie",
 ]

@@ -1,0 +1,83 @@
+"""Reference-counted KV block pool — the single owner of every block id.
+
+The paged-KV substrate (DESIGN.md §5): all KV lives in one pool tensor
+and every consumer — the prefix trie, live slot block tables, parked
+(preempted) requests — holds *references* to pool blocks instead of
+copies.  This module is the pure host-side accounting half; the device
+tensors indexed by these ids live in ``serve.scheduler``.
+
+Ownership model (the conservation law the property harness pins):
+
+* each trie node holds exactly one reference to its block;
+* each entry of a live slot's block table holds one reference;
+* each parked pin of a preempted request holds one reference;
+* a block is on the free list iff its refcount is zero.
+
+So ``refcount(b) == 1`` means "cached prefix only, no live reader" —
+the predicate that makes a trie leaf evictable.  Blocks shared between
+a cached prefix and a decoding slot carry refcount >= 2 and can never
+be freed out from under the reader.
+
+The free list is popped from the *end* (LIFO): freshly freed blocks are
+reused first, which keeps id allocation order identical to the pre-paged
+trie-owned free list so eviction-order tests stay byte-stable.
+"""
+from __future__ import annotations
+
+from typing import List
+
+__all__ = ["BlockPool"]
+
+
+class BlockPool:
+    """Refcounted allocator over ``n_blocks`` abstract block ids."""
+
+    def __init__(self, n_blocks: int):
+        if n_blocks < 1:
+            raise ValueError("need at least one pool block")
+        self.n_blocks = int(n_blocks)
+        self._free: List[int] = list(range(n_blocks))
+        self._refs: List[int] = [0] * n_blocks
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    def refcount(self, bid: int) -> int:
+        return self._refs[bid]
+
+    def alloc(self) -> int | None:
+        """Pop a free block with refcount 1, or None when exhausted."""
+        if not self._free:
+            return None
+        bid = self._free.pop()
+        assert self._refs[bid] == 0, f"free block {bid} had refs"
+        self._refs[bid] = 1
+        return bid
+
+    def ref(self, bid: int) -> None:
+        """Add one reference to a live block."""
+        assert self._refs[bid] > 0, f"ref on free block {bid}"
+        self._refs[bid] += 1
+
+    def deref(self, bid: int) -> None:
+        """Drop one reference; the block returns to the free list at zero."""
+        assert self._refs[bid] > 0, f"deref on free block {bid}"
+        self._refs[bid] -= 1
+        if self._refs[bid] == 0:
+            self._free.append(bid)
+
+    def check_invariants(self) -> List[str]:
+        """Accounting audit -> list of violations (empty = healthy)."""
+        errs: List[str] = []
+        free = set(self._free)
+        if len(free) != len(self._free):
+            errs.append("duplicate ids on the free list")
+        for bid in range(self.n_blocks):
+            if self._refs[bid] < 0:
+                errs.append(f"block {bid}: negative refcount")
+            if (self._refs[bid] == 0) != (bid in free):
+                errs.append(
+                    f"block {bid}: refcount {self._refs[bid]} but "
+                    f"{'on' if bid in free else 'not on'} the free list")
+        return errs

@@ -1,4 +1,4 @@
-"""Radix-tree prefix index over a block-granular KV pool (DESIGN.md §5).
+"""Radix-tree prefix index over a refcounted KV block pool (DESIGN.md §5).
 
 CREW's thesis one level up: admitted prompts recompute the same prefill
 products over and over whenever they share a prefix (system prompts,
@@ -9,8 +9,7 @@ unique-weight tables beat redundant multiplies.
 This module is the pure host-side bookkeeping half: a token trie whose
 edges are fixed-size token blocks, mapping every cached prefix to the
 pool block ids that hold its KV state.  The device half — the pool
-tensors themselves and the gather/scatter programs that move blocks
-between the pool and a request's slot stripe — lives in
+tensors themselves and the paged block tables that index them — lives in
 ``serve.scheduler``; nothing here touches jax, so the eviction and
 ref-count logic is unit-testable in microseconds
 (tests/test_prefix_cache.py).
@@ -19,20 +18,23 @@ Semantics:
 
 * **match** — walk the prompt block-by-block down the trie; returns the
   pool block ids of the longest cached prefix.  Matching bumps each
-  node's LRU tick.
-* **insert** — walk the same way, allocating a pool block for every
-  block-aligned prompt prefix not yet cached.  Because a trie walk
-  misses monotonically, the new blocks are always a contiguous tail; the
-  caller copies those KV rows from the request's slot into the returned
-  block ids.
+  node's LRU tick.  A hit is *zero-copy*: the admitting slot's block
+  table references the matched blocks directly (the scheduler bumps
+  their pool refcount), no gather program runs.
+* **insert / insert_owned** — walk the same way, caching every
+  block-aligned prefix not yet present.  ``insert`` allocates fresh
+  blocks (the standalone spelling); ``insert_owned`` *adopts* the
+  caller's already-written slot blocks by reference — completion never
+  copies KV back into the pool, it just hands the trie a share of the
+  blocks the slot prefilled.
 * **eviction** — allocation under pool pressure evicts the
-  least-recently-used *leaf* (a node with no children; interior nodes
-  are pinned by their descendants' refcount).  Recency is an
+  least-recently-used *leaf* whose block has no live reader
+  (``pool.refcount == 1``: the trie's own reference and nobody else's;
+  interior nodes are pinned by their descendants, shared blocks by the
+  slots or parked requests reading them).  Recency is an
   insertion-ordered map (every touch re-appends the node), so the victim
   is found by popping from the stale end — O(1) amortized, instead of a
-  linear scan over every cached node per eviction.  Requests never pin
-  blocks: a match is immediately *copied* into the request's own slot
-  stripe, so an evicted block can never be read by a live request.
+  linear scan over every cached node per eviction.
 """
 from __future__ import annotations
 
@@ -42,6 +44,8 @@ import itertools
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
+
+from repro.serve.pool import BlockPool
 
 __all__ = ["PrefixTrie", "TrieNode"]
 
@@ -62,17 +66,27 @@ class TrieNode:
 
 
 class PrefixTrie:
-    """Token trie over ``n_blocks`` pool blocks of ``block_size`` tokens."""
+    """Token trie over ``n_blocks`` pool blocks of ``block_size`` tokens.
 
-    def __init__(self, n_blocks: int, block_size: int):
+    Pass ``pool=`` to share a :class:`BlockPool` with other block owners
+    (live slot tables, parked requests); the default builds a private
+    pool, which keeps the standalone trie semantics — and allocation /
+    eviction order — identical to the pre-paged implementation.
+    """
+
+    def __init__(self, n_blocks: int, block_size: int,
+                 pool: Optional[BlockPool] = None):
         if n_blocks < 1:
             raise ValueError("need at least one pool block")
         if block_size < 1:
             raise ValueError("block_size must be >= 1")
         self.block_size = int(block_size)
         self.n_blocks = int(n_blocks)
+        self._owns_pool = pool is None
+        self.pool = BlockPool(n_blocks) if pool is None else pool
+        if self.pool.n_blocks != self.n_blocks:
+            raise ValueError("shared pool size mismatch")
         self.root = TrieNode(block=-1, key=b"", parent=None)
-        self._free: List[int] = list(range(n_blocks))
         self._nodes: Dict[int, TrieNode] = {}   # block id -> node
         # LRU order: stale end first.  Touch = move_to_end, so ordering
         # tracks last_use without comparisons; eviction pops from the
@@ -89,7 +103,7 @@ class PrefixTrie:
 
     @property
     def free_blocks(self) -> int:
-        return len(self._free)
+        return self.pool.free_blocks
 
     def _keys(self, tokens: np.ndarray):
         bs = self.block_size
@@ -103,6 +117,7 @@ class PrefixTrie:
 
         The returned length is block-aligned.  Matched nodes get their
         LRU tick bumped (root to leaf, so a prefix chain ages together).
+        The caller must ``pool.ref`` any id it intends to keep reading.
         """
         node = self.root
         ids: List[int] = []
@@ -122,10 +137,11 @@ class PrefixTrie:
 
         Returns (new pool block ids, start token offset of the first new
         block) — a contiguous tail of the prompt's block sequence; the
-        caller owns copying those KV rows into the pool.  Allocation
+        caller owns writing those KV rows into the pool.  Allocation
         evicts LRU leaves under pressure (never a node on the path being
-        inserted); when the pool is exhausted by the path itself the
-        insert stops early — the cache simply holds a shorter prefix.
+        inserted, never a block with live readers); when the pool is
+        exhausted by the path itself the insert stops early — the cache
+        simply holds a shorter prefix.
         """
         node = self.root
         tick = next(self._tick)
@@ -153,25 +169,69 @@ class PrefixTrie:
             h += self.block_size
         return new_ids, start
 
+    def insert_owned(self, tokens: np.ndarray,
+                     blocks: List[int]) -> Tuple[List[int], List[int]]:
+        """Cache ``tokens``'s aligned prefixes by *adopting* slot blocks.
+
+        ``blocks[i]`` is the caller-owned pool block already holding KV
+        for tokens ``[i*bs, (i+1)*bs)``.  Where the trie lacks a node the
+        block is adopted by reference (``pool.ref`` — zero copy); where a
+        node already exists (a prefix hit at admission, or a concurrent
+        insert of the same prefix) the trie keeps its canonical block.
+
+        Returns ``(path_ids, adopted)``: the trie's canonical block id
+        for every aligned prefix block (what a future ``match`` will
+        return — the ids to pin when parking a preempted request), and
+        the subset newly adopted from the caller.
+        """
+        node = self.root
+        tick = next(self._tick)
+        path_ids: List[int] = []
+        adopted: List[int] = []
+        for i, key in enumerate(self._keys(tokens)):
+            child = node.children.get(key)
+            if child is None:
+                bid = blocks[i]
+                assert bid not in self._nodes, \
+                    f"adopting block {bid} already cached"
+                self.pool.ref(bid)
+                child = TrieNode(block=bid, key=key, parent=node)
+                node.children[key] = child
+                self._nodes[bid] = child
+                self._lru[bid] = child
+                adopted.append(bid)
+            child.last_use = tick
+            self._lru.move_to_end(child.block)
+            path_ids.append(child.block)
+            node = child
+        return path_ids, adopted
+
     # ------------------------------------------------------------------
 
+    def _evictable(self, node: TrieNode) -> bool:
+        """Leaf with no live reader beyond the trie's own reference."""
+        return not node.children and self.pool.refcount(node.block) == 1
+
     def _alloc(self, protected: set) -> Optional[int]:
-        if self._free:
-            return self._free.pop()
+        bid = self.pool.alloc()
+        if bid is not None:
+            return bid
         victim = next(
             (n for n in self._lru.values()
-             if not n.children and id(n) not in protected), None)
+             if self._evictable(n) and id(n) not in protected), None)
         if victim is None:
             return None
         self._evict(victim)
-        return self._free.pop()
+        return self.pool.alloc()
 
     def _evict(self, node: TrieNode) -> None:
         assert not node.children, "only leaves are evictable"
+        assert self.pool.refcount(node.block) == 1, \
+            f"evicting block {node.block} with live readers"
         del node.parent.children[node.key]
         del self._nodes[node.block]
         del self._lru[node.block]
-        self._free.append(node.block)
+        self.pool.deref(node.block)
         self.evictions += 1
 
     def drop_lru_leaves(self, n: int) -> int:
@@ -180,13 +240,16 @@ class PrefixTrie:
         The fault-injection hook (``serve.faults``): losing pool blocks
         must never change outputs — a later ``match`` just returns a
         shorter prefix and the admitting request prefills the difference.
-        Same victim-selection order as pressure eviction, so a dropped
-        block is always one the next allocation would have taken anyway.
+        Same victim-selection order (and the same live-reader skip) as
+        pressure eviction, so a dropped block is always one the next
+        allocation would have taken anyway — never one a live slot or
+        parked request still reads.
         """
         dropped = 0
         while dropped < n:
             victim = next(
-                (nd for nd in self._lru.values() if not nd.children), None)
+                (nd for nd in self._lru.values() if self._evictable(nd)),
+                None)
             if victim is None:
                 break
             self._evict(victim)
@@ -196,21 +259,27 @@ class PrefixTrie:
     def check_invariants(self) -> List[str]:
         """Structural audit -> list of violations (empty = healthy).
 
-        Pinned by the chaos property test (tests/test_faults.py): after a
-        faulted run drains, every block is either free or reachable from
-        the root, the LRU index mirrors the node table, and refcounts
-        (child counts) are consistent — i.e. no pool block leaked and no
-        request left a pin behind.
+        Pinned by the chaos property test (tests/test_faults.py) and the
+        paged fuzz harness (tests/test_paged_prop.py): after a faulted
+        run drains, every block is either free or reachable from the
+        root, the LRU index mirrors the node table, and refcounts are
+        consistent — i.e. no pool block leaked and no request left a pin
+        behind.
         """
         errs: List[str] = []
-        if len(self._free) + len(self._nodes) != self.n_blocks:
+        errs += self.pool.check_invariants()
+        if self._owns_pool and \
+                self.pool.free_blocks + len(self._nodes) != self.n_blocks:
             errs.append(
-                f"block leak: {len(self._free)} free + {len(self._nodes)} "
-                f"cached != {self.n_blocks} pool blocks")
+                f"block leak: {self.pool.free_blocks} free + "
+                f"{len(self._nodes)} cached != {self.n_blocks} pool blocks")
+        for bid in self._nodes:
+            want = 1 if self._owns_pool else None
+            have = self.pool.refcount(bid)
+            if have < 1 or (want is not None and have != want):
+                errs.append(f"block {bid}: cached with refcount {have}")
         if set(self._lru) != set(self._nodes):
             errs.append("LRU index out of sync with node table")
-        if set(self._nodes) & set(self._free):
-            errs.append("block both free and cached")
         reachable = 0
         stack = [self.root]
         while stack:

@@ -3,60 +3,72 @@
 ``serve.generate`` is one static jit'd batch: every request shares one
 prompt length and one ``max_new``, so mixed traffic either pads to the
 worst case or serializes.  :class:`Scheduler` instead owns a request
-queue, a slot-based KV cache, and a cross-request **prefix cache**, and
-interleaves chunked prefill with decode:
+queue, a **paged KV block pool**, and a cross-request **prefix cache**,
+and interleaves chunked prefill with decode:
 
-* **admission + prefix reuse** — at each horizon boundary, queued
-  prompts are admitted into free slots.  The prompt first matches its
-  longest cached prefix in a radix tree over block-granular pool KV
-  (``serve.prefix.PrefixTrie``); the matched blocks are *copied* into
-  the slot's stripe (one gather on the block axis, donated like the rest
-  of the cache state) and only the **suffix** is prefilled — prefill
-  work is O(new tokens), not O(prompt), when traffic shares system
-  prompts / few-shot templates / retried requests (CREW's
-  cache-unique-products-and-index insight one level up, PAPER.md).
-* **chunked prefill** — the suffix runs through ``api.prefill_chunk`` in
-  bucket-sized chunks against the already-populated slot cache
-  (``layers.attention.attend_prefill_cached``: per-slot length offsets,
-  chunk rows scattered at their own cache positions).  One program per
-  chunk bucket — prompts longer than the largest bucket are now
-  admissible, and a prefilling prompt advances one chunk per engine
-  step while other slots keep decoding, so a long prefill no longer
-  stalls token emission.  Chunk-by-chunk prefill is token- and
-  cache-bitwise identical to the monolithic prefill (the single-pass
-  softmax in ``cached_chunk_attention`` reproduces ``chunked_attention``
-  exactly), so greedy outputs stay token-identical to cold-cache
+* **paged KV** — all KV lives in one pool tensor of fixed-size blocks
+  (``[L, blocks+1, block_size, KV, D]``; device block 0 is scratch).
+  Each slot holds a *block table* — the list of pool block ids backing
+  its sequence — and every program gathers K/V through a ``[B, NB]``
+  table index (``layers.attention.attend_decode_paged`` /
+  ``attend_prefill_cached_paged``).  There is no per-slot dense stripe
+  and no block-mover program: blocks are owned by reference counts
+  (``serve.pool.BlockPool``) shared between live slots, parked
+  (preempted) requests, and the prefix trie.
+* **admission + zero-copy prefix reuse** — at each horizon boundary,
+  queued prompts are admitted into free slots.  The prompt first
+  matches its longest cached prefix in a radix tree over pool blocks
+  (``serve.prefix.PrefixTrie``); the hit blocks go straight into the
+  slot's table with a refcount bump — **no KV moves** — and only the
+  suffix is prefilled.  Prefill work is O(new tokens), not O(prompt),
+  when traffic shares system prompts / few-shot templates / retries
+  (CREW's cache-unique-products-and-index insight one level up,
+  PAPER.md), and a hit now costs O(blocks) host bookkeeping instead of
+  a gather program over the hit KV.
+* **batched chunked prefill** — suffixes advance through
+  ``api.prefill_chunk`` in bucket-sized chunks; all prefilling slots
+  with the same (chunk bucket, table-width bucket) advance in **one
+  dispatch** (lanes padded to ``max_batch`` with dead scratch-table
+  lanes).  One program per (chunk, width) bucket pair — prompts longer
+  than the largest bucket are admissible, and a prefilling prompt
+  advances one chunk per engine step while other slots keep decoding.
+  Chunk-by-chunk prefill is token-identical to the monolithic prefill
+  (the single-pass softmax in ``cached_chunk_attention`` reproduces
+  ``chunked_attention`` exactly; width padding past the true length is
+  masked dead), so greedy outputs stay token-identical to cold-cache
   ``serve.generate`` with or without prefix hits.
 * **horizon decode** — one fused program runs ``horizon`` decode steps
-  (``lax.scan``, default H=8) across all decode-active slots.  Each scan
-  iteration gathers the live lanes out of the slot cache, decodes one
-  token per lane with a *per-slot* length vector, and scatters back.
-  EOS / per-request ``max_new`` exhaustion is masked *on device* (dead
-  lanes step against the scratch slot at a pinned position); the host
-  syncs **once per horizon**, not once per token.
-* **retire + backfill + pool insert** — at the horizon boundary the host
+  (``lax.scan``, default H=8) across all decode-active slots.  Each
+  scan iteration decodes one token per lane at its own cache position,
+  reading and writing KV through the lane's block table.  EOS /
+  per-request ``max_new`` exhaustion is masked *on device* (dead lanes
+  step against the scratch block at a pinned position); the host syncs
+  **once per horizon**, not once per token.
+* **retire + backfill + pool adopt** — at the horizon boundary the host
   replays the emitted-token mask, retires requests that hit EOS or
   ``max_new``, and backfills freed slots from the queue.  When a
-  prompt's prefill completes, its block-aligned KV prefix is inserted
-  into the pool (one scatter on the block axis) so the *next* request
-  sharing it prefills only its own suffix; pool pressure evicts
-  least-recently-used trie leaves — never state a live slot depends on,
-  because matches are copied, not aliased.
+  prompt's prefill completes, the trie **adopts** its block-aligned
+  blocks by reference (``PrefixTrie.insert_owned`` — completion never
+  copies KV back); pool pressure evicts least-recently-used trie
+  leaves, and refcounts guarantee an evicted block is never one a live
+  slot or parked request still reads.
 
 The hot loop is a fixed set of XLA programs: one chunk-prefill program
-per chunk bucket, one horizon program per batch bucket, and one
-copy/insert program per block-count bucket — no per-request retracing
-(``program_counts()`` exposes the live compile counts; tests pin them).
-The slot KV cache and the block pool — the only multi-megabyte state
-threaded between programs — are **donated** through every dispatch, so
-they update in place instead of being copied (the [nb]-sized lane
-vectors are cheap and passed by value).
+per (chunk bucket x table-width bucket) and one horizon program per
+batch bucket — no per-request retracing and no copy/insert movers
+(``program_counts()`` exposes the live compile counts; tests pin them,
+including the zero-copy ``copy == 0`` pin).  The pool KV tensors — the
+only multi-megabyte state threaded between programs — are **donated**
+through every dispatch, so they update in place instead of being
+copied (the [nb]-sized lane vectors and [nb, NB] tables are cheap and
+passed by value).
 
 Slot state (last tokens, lengths, prefill cursors, done mask,
-per-request RNG keys, generated counts) is carried as arrays; CREW
-params flow through the same ``crew_strategy="auto"`` autotuned dispatch
-as the one-shot engine; under an active mesh the programs trace inside
-``sharding_ctx(mesh, SERVE_RULES)`` so ``constrain`` calls bind.
+per-request RNG keys, generated counts, block tables) is carried
+host-side; CREW params flow through the same ``crew_strategy="auto"``
+autotuned dispatch as the one-shot engine; under an active mesh the
+programs trace inside ``sharding_ctx(mesh, SERVE_RULES)`` so
+``constrain`` calls bind.
 
 On top of the data path sits the **request lifecycle** (DESIGN.md §5
 "request lifecycle"): every submitted request walks an explicit state
@@ -68,13 +80,18 @@ Admission is bounded (priority lanes + per-tenant token buckets; over
 the bound ``submit`` returns a typed :class:`Shed` instead of growing
 the queue), deadlines and cancellation are enforced at horizon
 boundaries, and under pressure the scheduler **preempts to the prefix
-pool**: the victim's block-aligned KV scatters into the pool through the
-existing insert path, the request re-queues, and resume is just a prefix
-hit that re-prefills the unaligned tail — preemption costs one chunk,
-not a full re-prefill, which is the paper's reuse insight applied to
-scheduling.  A seeded chaos layer (``serve.faults``) can force every one
-of those paths deterministically; greedy outputs are token-identical
-under benign faults, pinned by tests.
+pool**: the victim's block-aligned blocks are adopted by the trie and
+**pinned** (an extra reference held per parked block, so eviction can
+never free them before resume), the request re-queues, and resume is a
+zero-copy prefix hit that re-prefills only the unaligned tail —
+preemption costs one chunk, not a full re-prefill, which is the
+paper's reuse insight applied to scheduling.  A seeded chaos layer
+(``serve.faults``) can force every one of those paths
+deterministically; greedy outputs are token-identical under benign
+faults, pinned by tests and by the property harness
+(tests/test_paged_prop.py), whose conservation law ``audit_blocks``
+checks: every pool block's refcount equals its owner count across
+free list ∪ trie ∪ live tables ∪ parked pins.
 
 Requires the transformer-family cache contract ``{"k","v","len"}`` with
 ``[L, B, S, KV, D]`` KV tensors (dense / MoE configs; families without a
@@ -87,7 +104,7 @@ import contextlib
 import dataclasses
 import enum
 import time
-from typing import Deque, Dict, Optional, Sequence, Tuple, Union
+from typing import Deque, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -99,6 +116,7 @@ from ..kernels.plan import warn_deprecated
 from ..models import ModelApi
 from .convert import decode_state_for_params
 from .faults import FaultInjector, default_injector
+from .pool import BlockPool
 from .prefix import PrefixTrie
 
 __all__ = ["Scheduler", "SchedulerMetrics", "Request", "Completion",
@@ -108,6 +126,8 @@ __all__ = ["Scheduler", "SchedulerMetrics", "Request", "Completion",
 DEFAULT_BUCKETS: Tuple[int, ...] = (16, 32, 64, 128)
 DEFAULT_HORIZON = 8
 DEFAULT_BLOCK_SIZE = 16
+
+_KEEP = object()     # reset(faults=...) sentinel: keep the current injector
 
 
 def _pow2_ladder(top: int) -> Tuple[int, ...]:
@@ -169,8 +189,9 @@ class SchedulerStalledError(RuntimeError):
     """``run()`` detected no forward progress (or blew its step budget).
 
     The message lists every live slot's state — rid, lifecycle phase,
-    cache length, prefill cursor, generated count — plus queue depth,
-    so a wedged scheduler reports *what* is stuck instead of spinning.
+    cache length, prefill cursor, generated count — plus queue depth
+    and pool occupancy, so a wedged scheduler reports *what* is stuck
+    instead of spinning.
     """
 
 
@@ -217,11 +238,11 @@ class SchedulerMetrics:
     (docs/api.md)."""
     steps: int = 0              # engine steps (admit + chunk + horizon)
     prefills: int = 0           # prompts admitted
-    chunks: int = 0             # chunk-prefill programs dispatched
+    chunks: int = 0             # chunk prefills advanced (per slot-chunk)
     prefill_chunk_tokens: int = 0   # chunk tokens computed (incl. padding)
     prefix_hit_tokens: int = 0  # trie-matched tokens (pre-cap)
     prefill_tokens_saved: int = 0   # prompt tokens served from the pool
-    pool_inserts: int = 0       # blocks written into the pool
+    pool_inserts: int = 0       # blocks adopted into the prefix trie
     pool_evictions: int = 0     # LRU leaf evictions under pool pressure
     horizons: int = 0           # fused H-step programs dispatched
     decode_steps: int = 0       # device decode steps (H per horizon)
@@ -238,6 +259,11 @@ class SchedulerMetrics:
     resumed: int = 0            # preempted requests re-admitted
     resume_reprefill_tokens: int = 0  # tokens re-prefilled on resume
     queue_peak: int = 0         # high-water queued-request count
+    # paged-pool occupancy (attributes only, like the status counters)
+    zero_copy_hits: int = 0     # prefix-hit blocks referenced, not copied
+    pool_blocks_in_use: int = 0     # gauge: blocks with refcount > 0
+    pool_blocks_free: int = 0       # gauge: free-list depth
+    pool_blocks_peak: int = 0       # high-water pool_blocks_in_use
 
     def __getitem__(self, key: str) -> int:
         warn_deprecated(
@@ -263,13 +289,16 @@ class SchedulerMetrics:
 
 
 class Scheduler:
-    """Continuous-batching engine over chunked-prefill/horizon programs.
+    """Continuous-batching engine over paged chunked-prefill/horizon
+    programs.
 
     Args:
       api / params: as for ``serve.generate`` (dense or CREW-converted).
-      max_batch: number of concurrent decode slots (one extra scratch
-        slot is allocated internally for batch-bucket padding and for
-        mid-horizon-retired lanes).
+      max_batch: number of concurrent decode slots.  Every slot holds a
+        block table into the shared pool; the pool reserves
+        ``max_batch * ceil(cache_len / block_size)`` blocks so a full
+        batch always fits, plus one scratch block (device block 0) for
+        padding lanes and mid-horizon-retired lanes.
       cache_len: per-slot KV capacity; every admitted request must fit
         ``prompt_len + max_new <= cache_len``.
       buckets: chunk sizes, ascending.  A prefilling prompt advances by
@@ -285,17 +314,21 @@ class Scheduler:
         until the boundary — ``metrics.wasted_lane_steps`` counts it.
       prefix_cache: enable the radix-tree prefix cache (default).  Off,
         every prompt prefills cold — the PR-4-equivalent baseline that
-        ``benchmarks/prefix_reuse.py`` measures against.
-      block_size: prefix-cache granularity in tokens; only block-aligned
+        ``benchmarks/prefix_reuse.py`` measures against — and the pool
+        holds only the per-slot reservation.
+      block_size: paged-KV granularity in tokens; only block-aligned
         prefixes are shared, and a hit is capped one block short of the
         prompt so at least one suffix token prefills (first-token logits
         must come from a live forward).
-      pool_blocks: KV pool capacity in blocks (+1 scratch block is
-        allocated internally).  None sizes it to one full batch's worth
-        of cache (``max_batch * cache_len // block_size``) — i.e. the
-        prefix cache roughly doubles the scheduler's KV memory by
-        default; pass an explicit budget when memory is tight or the
-        hot prefix set is large.
+      pool_blocks: prefix-cache budget in blocks *beyond* the per-slot
+        reservation (the reservation itself —
+        ``max_batch * ceil(cache_len / block_size)`` blocks — is always
+        allocated, so admission can never deadlock on cached prefixes).
+        None sizes the budget to one full batch's worth of cache
+        (``max_batch * cache_len // block_size``) — i.e. the prefix
+        cache roughly doubles the scheduler's KV memory by default;
+        pass an explicit budget when memory is tight or the hot prefix
+        set is large.
       temperature / crew_strategy: static sampling and CREW dispatch
         knobs, shared by all programs (as in ``serve.generate``).
       decode_state: "auto" (default) resolves the CREW decode
@@ -393,9 +426,9 @@ class Scheduler:
         # even when not a power of two).
         self._batch_buckets = _pow2_ladder(self._max_batch)
 
-        # slot cache: max_batch real slots + 1 scratch slot for padding
-        # lanes and mid-horizon-retired lanes (duplicate scatter indices
-        # must never hit a live slot).
+        # the abstract cache supplies the KV contract and tensor dtypes;
+        # the dense [B, S] slot stripes it describes are never allocated —
+        # all KV lives in the paged pool below.
         abs_cache = api.abstract_cache(self._max_batch + 1, self._cache_len,
                                        dtype=cache_dtype)
         if not (isinstance(abs_cache, dict)
@@ -403,36 +436,37 @@ class Scheduler:
             raise NotImplementedError(
                 f"{api.cfg.family} cache is not the {{k,v,len}} KV contract "
                 "the slot scheduler manages")
-        self._k = jnp.zeros(abs_cache["k"].shape, abs_cache["k"].dtype)
-        self._v = jnp.zeros(abs_cache["v"].shape, abs_cache["v"].dtype)
 
-        # prefix-cache block pool: pool_blocks real blocks + scratch block
-        # 0 (padding lanes of the bucketed copy/insert programs read and
-        # write it, never a real block).
         self._block_size = int(block_size)
         if self._block_size < 1:
             raise ValueError("block_size must be >= 1")
-        # default pool = one full batch's worth of stripes, so enabling
-        # the prefix cache costs at most ~2x the slot-cache KV memory
-        # (stated in the arg docs; size it to the hot prefix set +
+        # full table width: blocks per worst-case slot sequence
+        self._nb_full = -(-self._cache_len // self._block_size)
+        # default prefix budget = one full batch's worth of blocks, so
+        # enabling the prefix cache costs at most ~2x the reservation KV
+        # memory (stated in the arg docs; size it to the hot prefix set +
         # headroom in production — docs/serving.md "Sizing")
         if pool_blocks is None:
             pool_blocks = max(
                 self._max_batch * (self._cache_len // self._block_size), 8)
-        self._pool_blocks = int(pool_blocks)
+        self._prefix_budget = int(pool_blocks) if prefix_cache else 0
+        self._pool_blocks = (self._max_batch * self._nb_full
+                             + self._prefix_budget)
+        self._pool = BlockPool(self._pool_blocks)
         self._trie: Optional[PrefixTrie] = None
-        self._pk = self._pv = None
         if prefix_cache:
-            # block ids are offset by 1 on device (0 is scratch)
-            self._trie = PrefixTrie(self._pool_blocks, self._block_size)
-            l, _, _, kv, d = abs_cache["k"].shape
-            shape = (l, self._pool_blocks + 1, self._block_size, kv, d)
-            self._pk = jnp.zeros(shape, abs_cache["k"].dtype)
-            self._pv = jnp.zeros(shape, abs_cache["v"].dtype)
-        # block-count buckets for the copy/insert programs (powers of two
-        # up to a full stripe's worth of blocks)
-        self._nblk_buckets = _pow2_ladder(
-            max(self._cache_len // self._block_size, 1))
+            self._trie = PrefixTrie(self._pool_blocks, self._block_size,
+                                    pool=self._pool)
+        # pool KV tensors: block ids are offset by 1 on device (0 is the
+        # scratch block absorbing padded writes and dead-lane traffic)
+        l, _, _, kv, d = abs_cache["k"].shape
+        shape = (l, self._pool_blocks + 1, self._block_size, kv, d)
+        self._pk = jnp.zeros(shape, abs_cache["k"].dtype)
+        self._pv = jnp.zeros(shape, abs_cache["v"].dtype)
+        # table-width buckets for the chunk programs (powers of two up to
+        # a full table) — attention work scales with the chunk's position,
+        # not cache_len
+        self._tblw_buckets = _pow2_ladder(self._nb_full)
 
         # host-side slot state ("slot state carried as arrays")
         nb = self._max_batch
@@ -453,6 +487,11 @@ class Scheduler:
         # effective admission sequence per slot (prompt, or prompt + the
         # already-generated tokens for a preempt-resume)
         self._slot_seq: Dict[int, np.ndarray] = {}
+        # per-slot block table (host ids; device id = host id + 1) and
+        # parked pins: rid -> trie path blocks a preempted request holds
+        # an extra reference on until resume or terminal
+        self._slot_blocks: Dict[int, List[int]] = {}
+        self._parked: Dict[int, List[int]] = {}
         self._out_toks: Dict[int, list] = {}
         self._out_lps: Dict[int, list] = {}
         self._admit_step: Dict[int, int] = {}
@@ -481,22 +520,19 @@ class Scheduler:
             else (faults if isinstance(faults, FaultInjector) else None))
 
         self.metrics = SchedulerMetrics()
+        self.metrics.pool_blocks_free = self._pool.free_blocks
 
-        # Donation updates the slot KV cache / block pool in place per
-        # dispatch instead of copying them (the CPU jaxlib this repo pins
-        # aliases the buffers too); tests/test_decode_horizon.py pins the
+        # Donation updates the pool KV tensors in place per dispatch
+        # instead of copying them (the CPU jaxlib this repo pins aliases
+        # the buffers too); tests/test_decode_horizon.py pins the
         # declared aliasing.
-        self._win_buckets = _pow2_ladder(self._cache_len)
-        self._chunk_fn = jax.jit(self._chunk_impl, donate_argnums=(0, 1),
-                                 static_argnums=(9,))
+        self._chunk_fn = jax.jit(self._chunk_impl, donate_argnums=(0, 1))
         self._horizon_fn = jax.jit(self._horizon_impl, donate_argnums=(0, 1))
         self._horizon_crew_fn = jax.jit(self._horizon_crew_impl,
                                         donate_argnums=(0, 1, 2))
-        self._copy_fn = jax.jit(self._copy_impl, donate_argnums=(0, 1))
-        self._insert_fn = jax.jit(self._insert_impl, donate_argnums=(0, 1))
 
     # ------------------------------------------------------------------
-    # Programs (one compile per chunk / batch / block-count bucket)
+    # Programs (one compile per chunk / batch / table-width bucket)
     # ------------------------------------------------------------------
 
     def _ctx(self):
@@ -504,118 +540,79 @@ class Scheduler:
             return contextlib.nullcontext()
         return sharding_ctx(self._mesh, SERVE_RULES)
 
-    def _chunk_impl(self, k_all, v_all, params, tokens, offset, true_c, slot,
-                    req_key, step, win):
-        """One prefill chunk for one slot -> (token, logprob, cache).
+    def _chunk_impl(self, pk, pv, params, tokens, tables, offsets, true_cs,
+                    req_keys, steps):
+        """One batched prefill chunk -> (tokens, logprobs, pool KV).
 
-        tokens [1, C] sit at slot cache positions [offset, offset + C);
-        the chunk attends to the slot's prior cache [0, offset) — a
-        prefix-cache hit and/or earlier chunks — via
-        ``api.prefill_chunk``, never recomputing it.  ``win`` (static)
-        is the KV *window* the chunk sees: the smallest window bucket
-        covering ``offset + C``, so attention work scales with the
-        chunk's position, not with ``cache_len`` — a 32-token prompt in
-        a 4096-slot cache scores 32x32, not 32x4096 (rows past the
-        window are all masked dead anyway; the truncation is exact).
-        The tail chunk is right-padded to its bucket: causality makes
-        the logits at ``true_c - 1`` independent of the padding, and
-        padded cache rows are dead (masked by the slot length, then
-        overwritten as decode advances) — DESIGN.md §5.  The sampled
-        token/logprob are read by the host only for the chunk that
-        completes a prompt.  ``step`` is the request's generated-token
-        count at sampling time — 0 for a fresh prompt (the historical
-        key, bit for bit), ``len(gen)`` for a preempt-resume, so sampled
-        decoding continues the per-request ``fold_in`` stream exactly
-        where the horizon program left it.
+        tokens [G, C] sit at per-lane cache positions
+        [offsets[g], offsets[g] + C); each lane attends to its prior
+        cache [0, offsets[g]) — a prefix-cache hit and/or earlier
+        chunks — through its block table row (``tables`` [G, W], device
+        ids, zero-padded with the scratch block).  W is the smallest
+        table-width bucket covering ``offset + C`` blocks, so attention
+        work scales with the chunk's position, not ``cache_len`` (rows
+        past the width are all masked dead anyway; the truncation is
+        exact).  Dead lanes (group smaller than G) carry all-scratch
+        tables and ``true_c = 1``; their outputs are never read.  The
+        tail chunk is right-padded to its bucket: causality makes the
+        logits at ``true_c - 1`` independent of the padding, and padded
+        rows land in dead cache positions (masked by the slot length,
+        then overwritten as decode advances) or in the scratch block
+        when they cross the table width — DESIGN.md §5.  ``steps`` is
+        each request's generated-token count at sampling time — 0 for a
+        fresh prompt (the historical key, bit for bit), ``len(gen)``
+        for a preempt-resume, so sampled decoding continues the
+        per-request ``fold_in`` stream exactly where the horizon
+        program left it.
         """
-        cache = {"k": k_all[:, slot, :win][:, None],
-                 "v": v_all[:, slot, :win][:, None], "len": offset}
+        cache = {"k": pk, "v": pv, "len": offsets, "table": tables}
         logits, cache = self._api.prefill_chunk(
             params, tokens, cache, crew_strategy=self._crew_strategy)
-        last = jax.lax.dynamic_index_in_dim(
-            logits, true_c - 1, axis=1, keepdims=False)[0]       # [vocab]
+        last = jnp.take_along_axis(
+            logits, (true_cs - 1)[:, None, None], axis=1)[:, 0]  # [G, vocab]
         if self._temperature == 0.0:
-            tok = jnp.argmax(last).astype(jnp.int32)
+            toks = jnp.argmax(last, axis=-1).astype(jnp.int32)
         else:
-            tok = jax.random.categorical(
-                jax.random.fold_in(req_key, step),
-                last / self._temperature).astype(jnp.int32)
+            keys = jax.vmap(jax.random.fold_in)(req_keys, steps)
+            toks = jax.vmap(
+                lambda k, l: jax.random.categorical(
+                    k, l / self._temperature).astype(jnp.int32))(keys, last)
         # gather + logsumexp, not a full-vocab log_softmax read at [tok]
-        lp = last[tok] - jax.scipy.special.logsumexp(last)
-        k_all = k_all.at[:, slot, :win].set(cache["k"][:, 0])
-        v_all = v_all.at[:, slot, :win].set(cache["v"][:, 0])
-        return tok, lp, k_all, v_all
+        lps = (jnp.take_along_axis(last, toks[:, None], axis=-1)[:, 0]
+               - jax.scipy.special.logsumexp(last, axis=-1))
+        return toks, lps, cache["k"], cache["v"]
 
-    def _copy_impl(self, k_all, v_all, pk, pv, ids, slot):
-        """Prefix-cache hit: pool blocks ``ids`` -> slot positions [0, n·bs).
-
-        One gather on the block axis; ``ids`` is padded to its
-        block-count bucket with the scratch block 0, whose rows land
-        beyond the hit length and are dead (overwritten by the first
-        suffix chunk or masked).
-        """
-        bs = self._block_size
-        n = ids.shape[0]
-        blk_k = pk[:, ids]                  # [L, n, bs, KV, D]
-        blk_v = pv[:, ids]
-        l, _, _, kv, d = blk_k.shape
-        k_all = k_all.at[:, slot, :n * bs].set(blk_k.reshape(l, n * bs, kv, d))
-        v_all = v_all.at[:, slot, :n * bs].set(blk_v.reshape(l, n * bs, kv, d))
-        return k_all, v_all
-
-    def _insert_impl(self, pk, pv, k_all, v_all, ids, slot, start):
-        """Pool insert: slot positions [start, start + n·bs) -> blocks ``ids``.
-
-        One scatter on the block axis.  The rows are read by *index*,
-        never ``dynamic_slice``: when the bucket-padded window crosses
-        ``cache_len`` the padding rows must clamp individually (their
-        garbage lands in the scratch block 0, never read as real data) —
-        a dus start-clamp would instead shift the whole window back over
-        earlier rows and poison the *real* blocks for every later hit.
-        """
-        bs = self._block_size
-        n = ids.shape[0]
-        pos = start + jnp.arange(n * bs)                # [n·bs], clamped get
-        seg_k = k_all[:, slot, pos]
-        seg_v = v_all[:, slot, pos]
-        l, _, kv, d = seg_k.shape
-        pk = pk.at[:, ids].set(seg_k.reshape(l, n, bs, kv, d))
-        pv = pv.at[:, ids].set(seg_v.reshape(l, n, bs, kv, d))
-        return pk, pv
-
-    def _horizon_body(self, k_all, v_all, crew, params, slot_ids, toks, lens,
+    def _horizon_body(self, pk, pv, crew, params, tables, toks, lens,
                       req_keys, steps, rem, eos, alive):
-        """H fused decode steps over the gathered lanes — one host sync.
+        """H fused decode steps over the paged lanes — one host sync.
 
-        slot_ids/toks/lens/req_keys/steps/rem/eos/alive are [nb] lane
-        vectors (nb = the batch bucket); padding lanes point at the
-        scratch slot with ``alive=False``.  Per scan iteration each live
-        lane decodes one token at its own cache position; a lane that
-        samples EOS or exhausts ``rem`` (its remaining ``max_new`` budget)
-        flips dead and keeps stepping against the scratch slot at a
-        pinned position — the program is fixed-shape for every iteration.
-        ``crew`` is this batch bucket's decode product-buffer state tree
-        (or None): it rides the scan carry next to the KV buffers, so the
-        CREW projections' partial-product buffers stay resident across
-        all H steps (DESIGN.md §3).  Returns per-lane [nb, H]
-        token/logprob/emitted-mask panels plus the updated (donated)
-        cache and state.
+        tables is [nb, NB] (nb = the batch bucket, NB = the full table
+        width); toks/lens/req_keys/steps/rem/eos/alive are [nb] lane
+        vectors.  Per scan iteration each live lane decodes one token
+        at its own cache position, reading and writing KV through its
+        table row; a lane that samples EOS or exhausts ``rem`` (its
+        remaining ``max_new`` budget) flips dead and keeps stepping
+        against the scratch block at a pinned position — the program is
+        fixed-shape for every iteration, and a dead lane can never
+        touch a live block.  ``crew`` is this batch bucket's decode
+        product-buffer state tree (or None): it rides the scan carry
+        next to the KV pool, so the CREW projections' partial-product
+        buffers stay resident across all H steps (DESIGN.md §3).
+        Returns per-lane [nb, H] token/logprob/emitted-mask panels plus
+        the updated (donated) pool and state.
         """
-        scratch = self._max_batch
-
         def body(carry, _):
-            k_all, v_all, crew, tok, lens, steps, rem, alive = carry
-            sid = jnp.where(alive, slot_ids, scratch)
+            pk, pv, crew, tok, lens, steps, rem, alive = carry
+            tbl = jnp.where(alive[:, None], tables, 0)
             ln = jnp.where(alive, lens, 0)
-            k_sel = k_all[:, sid]
-            v_sel = v_all[:, sid]
-            cache = {"k": k_sel, "v": v_sel, "len": ln}
+            cache = {"k": pk, "v": pv, "len": ln, "table": tbl}
             if crew is not None:
                 cache["crew"] = crew
             logits, new = self._api.decode_step(
                 params, tok[:, None], cache,
                 crew_strategy=self._crew_strategy)
             crew = new["crew"] if crew is not None else None
+            pk, pv = new["k"], new["v"]
             if self._temperature == 0.0:
                 nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             else:
@@ -626,8 +623,6 @@ class Scheduler:
                 )(keys, logits)
             lp = (jnp.take_along_axis(logits, nxt[:, None], axis=-1)[:, 0]
                   - jax.scipy.special.logsumexp(logits, axis=-1))
-            k_all = k_all.at[:, sid].set(new["k"])
-            v_all = v_all.at[:, sid].set(new["v"])
             emitted = alive
             step1 = emitted.astype(jnp.int32)
             rem = rem - step1
@@ -635,48 +630,49 @@ class Scheduler:
             tok = jnp.where(emitted, nxt, tok)
             lens = lens + step1
             steps = steps + step1
-            return (k_all, v_all, crew, tok, lens, steps, rem, alive), \
+            return (pk, pv, crew, tok, lens, steps, rem, alive), \
                 (nxt, lp, emitted)
 
-        carry = (k_all, v_all, crew, toks, lens, steps, rem, alive)
-        (k_all, v_all, crew, *_), (toks_h, lps_h, emit_h) = jax.lax.scan(
+        carry = (pk, pv, crew, toks, lens, steps, rem, alive)
+        (pk, pv, crew, *_), (toks_h, lps_h, emit_h) = jax.lax.scan(
             body, carry, None, length=self._horizon)
         # [nb, H] panels
-        return toks_h.T, lps_h.T, emit_h.T, k_all, v_all, crew
+        return toks_h.T, lps_h.T, emit_h.T, pk, pv, crew
 
-    def _horizon_impl(self, k_all, v_all, params, slot_ids, toks, lens,
+    def _horizon_impl(self, pk, pv, params, tables, toks, lens,
                       req_keys, steps, rem, eos, alive):
         """Stateless horizon program (no CREW decode state warmed)."""
-        out = self._horizon_body(k_all, v_all, None, params, slot_ids, toks,
+        out = self._horizon_body(pk, pv, None, params, tables, toks,
                                  lens, req_keys, steps, rem, eos, alive)
         return out[:-1]
 
-    def _horizon_crew_impl(self, k_all, v_all, crew, params, slot_ids, toks,
+    def _horizon_crew_impl(self, pk, pv, crew, params, tables, toks,
                            lens, req_keys, steps, rem, eos, alive):
         """Horizon program with the bucket's carried CREW decode state —
-        donated like the KV buffers, so the product buffers update in
+        donated like the KV pool, so the product buffers update in
         place across dispatches."""
-        return self._horizon_body(k_all, v_all, crew, params, slot_ids,
-                                  toks, lens, req_keys, steps, rem, eos,
-                                  alive)
+        return self._horizon_body(pk, pv, crew, params, tables, toks,
+                                  lens, req_keys, steps, rem, eos, alive)
 
     def program_counts(self) -> Dict[str, int]:
         """Live XLA program counts — {bucket set} sized, not request sized.
 
         ``prefill`` counts chunk programs (one per used chunk-bucket x
-        KV-window-bucket pair — the window ladder is log-sized in
-        ``cache_len``), ``decode`` horizon programs (one per used batch
-        bucket), and ``copy`` / ``insert`` the prefix-cache block movers
-        (one per used block-count bucket).  ``_cache_size`` is a private jax API
-        (present on the pinned jax==0.4.37); -1 means this jax build no
-        longer exposes it."""
+        table-width-bucket pair — the width ladder is log-sized in the
+        full table) and ``decode`` horizon programs (one per used batch
+        bucket).  ``copy`` / ``insert`` are the retired prefix-cache
+        block movers: paged admission references hit blocks in place
+        and completion adopts slot blocks by reference, so both are
+        **always 0** — the zero-copy pin (tests/test_decode_horizon.py).
+        ``_cache_size`` is a private jax API (present on the pinned
+        jax==0.4.37); -1 means this jax build no longer exposes it."""
         def size(fn):
             return getattr(fn, "_cache_size", lambda: -1)()
         hs = (size(self._horizon_fn), size(self._horizon_crew_fn))
         return {"prefill": size(self._chunk_fn),
                 "decode": -1 if min(hs) < 0 else sum(hs),
-                "copy": size(self._copy_fn),
-                "insert": size(self._insert_fn)}
+                "copy": 0,
+                "insert": 0}
 
     # ------------------------------------------------------------------
     # Queue API
@@ -850,13 +846,124 @@ class Scheduler:
             return self._buckets[-1], self._buckets[-1]
         return _bucket_for(self._buckets, remaining), remaining
 
-    def _padded_block_ids(self, ids) -> jnp.ndarray:
-        """Block-mover ids padded to their block-count bucket with the
-        pool's scratch block 0 (host ids are 0-based; device block 0 is
-        the scratch)."""
-        padded = np.zeros(_bucket_for(self._nblk_buckets, len(ids)), np.int32)
-        padded[:len(ids)] = np.asarray(ids, np.int32) + 1
-        return jnp.asarray(padded)
+    # ------------------------------------------------------------------
+    # Block accounting
+    # ------------------------------------------------------------------
+
+    def _blocks_needed(self, req: Request) -> int:
+        """Worst-case blocks for ``req``'s full run (prompt + max_new),
+        claimed up front at admission so decode never allocates —
+        constant across preempt/resume cycles."""
+        return -(-(req.prompt.size + req.max_new) // self._block_size)
+
+    def _alloc_blocks(self, n: int) -> Optional[List[int]]:
+        """Allocate ``n`` fresh blocks (O(1) free-list pops), evicting
+        LRU refcount-1 trie leaves under pressure; None (all-or-nothing)
+        when even eviction cannot cover the request."""
+        got: List[int] = []
+        for _ in range(n):
+            bid = self._pool.alloc()
+            while bid is None and self._trie is not None \
+                    and self._trie.drop_lru_leaves(1):
+                bid = self._pool.alloc()
+            if bid is None:
+                for b in got:
+                    self._pool.deref(b)
+                return None
+            got.append(bid)
+        if self._trie is not None:
+            self.metrics.pool_evictions = self._trie.evictions
+        return got
+
+    def _release_parked(self, rid: int) -> None:
+        for b in self._parked.pop(rid, ()):
+            self._pool.deref(b)
+
+    def _pool_gauges(self) -> None:
+        free = self._pool.free_blocks
+        used = self._pool.n_blocks - free
+        self.metrics.pool_blocks_free = free
+        self.metrics.pool_blocks_in_use = used
+        self.metrics.pool_blocks_peak = max(
+            self.metrics.pool_blocks_peak, used)
+
+    def audit_blocks(self) -> List[str]:
+        """Cross-owner refcount audit -> violations (empty = healthy).
+
+        The conservation law the property harness pins
+        (tests/test_paged_prop.py): every pool block's refcount equals
+        the number of owners holding it — live slot tables, parked
+        pins, trie nodes — and the free list is exactly the
+        zero-reference blocks.  Includes the trie's own structural
+        audit when the prefix cache is on.
+        """
+        expected: collections.Counter = collections.Counter()
+        for blks in self._slot_blocks.values():
+            expected.update(blks)
+        for pins in self._parked.values():
+            expected.update(pins)
+        if self._trie is not None:
+            expected.update(self._trie._nodes.keys())
+        errs = list(self._pool.check_invariants())
+        for bid in range(self._pool.n_blocks):
+            want = expected.get(bid, 0)
+            have = self._pool.refcount(bid)
+            if want != have:
+                errs.append(
+                    f"block {bid}: refcount {have} but {want} owners")
+        if self._trie is not None:
+            errs += self._trie.check_invariants()
+        return errs
+
+    def reset(self, *, faults: object = _KEEP) -> None:
+        """Return an idle scheduler to its fresh-boot state, keeping the
+        compiled programs (the jit caches live on bound methods, so a
+        reset scheduler replays traffic with zero retracing — the
+        property harness leans on this to run hundreds of workloads).
+        Raises RuntimeError with work still queued or in flight.
+        ``faults`` optionally swaps the chaos injector, with the same
+        semantics as the constructor argument; by default the current
+        injector is kept (its RNG streams are *not* rewound).
+        """
+        if self._live or self._queue_len():
+            raise RuntimeError("reset() with work queued or in flight")
+        self._pk = jnp.zeros_like(self._pk)
+        self._pv = jnp.zeros_like(self._pv)
+        self._pool = BlockPool(self._pool_blocks)
+        if self._trie is not None:
+            self._trie = PrefixTrie(self._pool_blocks, self._block_size,
+                                    pool=self._pool)
+        self._slot_rid[:] = -1
+        self._slot_len[:] = 0
+        self._slot_tok[:] = 0
+        self._slot_ngen[:] = 0
+        self._slot_done[:] = True
+        self._slot_key[:] = 0
+        self._slot_pref_pos[:] = 0
+        self._slot_pref_end[:] = 0
+        self._lanes.clear()
+        self._free = collections.deque(range(self._max_batch))
+        self._live = {}
+        self._slot_seq.clear()
+        self._slot_blocks.clear()
+        self._parked.clear()
+        self._out_toks = {}
+        self._out_lps = {}
+        self._admit_step = {}
+        self._ttft = {}
+        self._results = {}
+        self._terminal_state = {}
+        self._next_rid = 0
+        self._tenant_level = {}
+        self._tenant_t = {}
+        self._cancel_pending = set()
+        self._starved_steps = 0
+        if faults is not _KEEP:
+            self._faults = (
+                default_injector() if faults is None
+                else (faults if isinstance(faults, FaultInjector) else None))
+        self.metrics = SchedulerMetrics()
+        self.metrics.pool_blocks_free = self._pool.free_blocks
 
     # ------------------------------------------------------------------
     # Engine loop
@@ -866,10 +973,12 @@ class Scheduler:
                   reason: str = "") -> None:
         """Record ``req``'s single terminal outcome (request not in a
         slot — slot holders go through ``_finish_slot``).  Non-completed
-        outcomes keep any tokens generated before the end."""
+        outcomes keep any tokens generated before the end; a parked
+        request's pinned blocks are released."""
         assert state in TERMINAL_STATES
         assert req.rid not in self._terminal_state, \
             f"rid {req.rid} terminated twice"
+        self._release_parked(req.rid)
         req.state = state
         rid = req.rid
         admit = self._admit_step.pop(rid, None)
@@ -891,6 +1000,8 @@ class Scheduler:
         setattr(self.metrics, counter, getattr(self.metrics, counter) + 1)
 
     def _clear_slot(self, slot: int) -> None:
+        for b in self._slot_blocks.pop(slot, ()):
+            self._pool.deref(b)
         self._slot_rid[slot] = -1
         self._slot_done[slot] = True
         self._slot_len[slot] = 0
@@ -963,15 +1074,21 @@ class Scheduler:
                 self.metrics.pool_evictions = self._trie.evictions
 
     def _preempt_slot(self, slot: int, reason: str) -> None:
-        """Preempt-to-prefix-pool: park the slot's block-aligned KV in
-        the pool via the existing insert path and re-queue the request
-        at the front of its lane.  The recorded sequence
+        """Preempt-to-prefix-pool: the trie adopts the slot's
+        block-aligned blocks (zero copy) and the request **pins** every
+        block holding a written KV row — one extra reference each, held
+        in ``_parked`` — before the slot's own references drop, so LRU
+        eviction and fault-injected pool drops can never free the
+        parked KV before resume.  The recorded sequence
         ``prompt + gen[:-1]`` is exactly the slot's valid KV rows
         (``slot_len = P + len(gen) - 1``: the last sampled token's KV is
-        written by the *next* decode step, which never runs) — resume
-        re-prefills only past the pool hit.  Without a prefix cache the
-        request simply re-prefills from scratch; outputs are identical
-        either way."""
+        written by the *next* decode step, which never runs).  The pin
+        covers the unaligned **tail block** the trie cannot adopt, so
+        resume reattaches the pinned blocks wholesale and re-enters
+        decode exactly where it left off — no recompute, no progress
+        loss, and bitwise-identical KV (see :meth:`_admit_parked`).
+        The pin works without a prefix cache too; only the trie
+        *sharing* of the aligned part needs one."""
         rid = int(self._slot_rid[slot])
         req = self._live.pop(rid)
         gen = self._out_toks[rid]
@@ -981,6 +1098,16 @@ class Scheduler:
         assert seq.size == int(self._slot_len[slot]), \
             (seq.size, int(self._slot_len[slot]))
         self._pool_insert(slot, seq)
+        # Pin the slot's OWN blocks, not the trie path: when another
+        # request cached equivalent content first, the trie's canonical
+        # block for a chunk differs from this slot's physical block —
+        # but the slot's rows live in its own blocks, and those are
+        # what resume must reattach.
+        pinned = list(self._slot_blocks[slot][:-(-seq.size
+                                                 // self._block_size)])
+        for b in pinned:
+            self._pool.ref(b)
+        self._parked[rid] = pinned
         self._clear_slot(slot)
         req.state = RequestState.PREEMPTED
         req.preemptions += 1
@@ -1026,78 +1153,188 @@ class Scheduler:
             self._starved_steps = 0
 
     def _admit(self) -> None:
-        """Fill free slots from the queue: prefix match + block copy.
+        """Fill free slots from the queue: zero-copy prefix reference.
 
-        Admission does *not* prefill: it resolves the effective
-        sequence's longest cached prefix, copies those pool blocks into
-        the slot stripe (one bucketed gather program, dead-padded with
-        the scratch block), and parks the slot in the prefill phase with
-        its chunk cursor at the hit length.  The chunk phase advances it.
+        Admission does *not* prefill and moves *no KV*: it resolves the
+        effective sequence's longest cached prefix, bumps the hit
+        blocks' refcounts straight into the slot's block table,
+        allocates fresh blocks for the rest of the request's worst case
+        (``prompt + max_new``, so decode never allocates), and parks
+        the slot in the prefill phase with its chunk cursor at the hit
+        length.  The chunk phase advances it.
 
-        The effective sequence is the prompt — or, for a request
-        preempted mid-decode, ``prompt + generated-so-far``: its first
-        ``P + g - 1`` tokens' KV went to the pool at preemption, so the
-        match covers everything block-aligned and only the unaligned
-        tail (at most ``block_size`` tokens plus the one always-live
-        suffix token) re-prefills.  The completing chunk's logits sit at
-        the last generated token, so the sampled continuation is exactly
-        token ``g + 1`` of the uninterrupted run."""
+        Hit references are taken *before* fresh allocation (so eviction
+        under pressure can never free them).  If even trie eviction
+        cannot cover the residual need —
+        possible only when parked requests pin blocks — the request
+        re-queues at the front and admission pauses until a retirement
+        frees blocks; with nothing in flight to wait for, other parked
+        requests are un-parked (stalest rid first) until the head fits,
+        which costs them a cold re-prefill but never changes outputs.
+
+        A request still holding its preemption pins short-circuits to
+        :meth:`_admit_parked` — a wholesale reattach that skips the trie
+        entirely.  The path below handles fresh requests and the rare
+        resume whose pins the pressure valve released.  For the latter,
+        generated tokens are **never re-prefilled**: a chunk-recomputed
+        KV row is not bitwise identical to the decode-written row it
+        would replace (different matmul shapes), and a near-tie argmax
+        downstream would flip off the greedy stream.  Instead, kept
+        tokens are exactly those whose decode-written KV the hit covers
+        (rows ``[0, hit)`` plus the one fed-next token), and anything
+        past the hit is discarded and re-decoded — bitwise the same
+        tokens, since decode is batch-invariant.  When the hit covers
+        at least the prompt the slot skips the prefill phase."""
+        bs = self._block_size
         while self._free and self._queue_len():
             req = self._queue_pop()
             slot = self._free.popleft()
             gen = self._out_toks.get(req.rid, [])
+            if req.rid in self._parked:
+                if self._admit_parked(req, slot, gen):
+                    continue
+                break   # could not fund the reattach: requeued at front
             seq = (np.concatenate([req.prompt,
                                    np.asarray(gen, np.int32)])
                    if gen else req.prompt)
+            raw = 0
             hit = 0
+            hit_ids: List[int] = []
             if self._trie is not None:
                 ids, raw = self._trie.match(seq)
-                self.metrics.prefix_hit_tokens += raw
                 # keep >= 1 suffix token: first-token logits must come
                 # from a live forward over the sequence's true tail
-                bs = self._block_size
                 hit = min(raw, ((seq.size - 1) // bs) * bs)
-                ids = ids[:hit // bs]
-                if ids:
-                    with self._ctx():
-                        self._k, self._v = self._copy_fn(
-                            self._k, self._v, self._pk, self._pv,
-                            self._padded_block_ids(ids), jnp.int32(slot))
-                    self.metrics.prefill_tokens_saved += hit
+                hit_ids = ids[:hit // bs]
+                for b in hit_ids:
+                    self._pool.ref(b)
+            fresh = self._alloc_blocks(self._blocks_needed(req)
+                                       - len(hit_ids))
+            if fresh is None and not self._live:
+                # nothing in flight will ever free blocks: un-park other
+                # requests (stalest first) until the head fits
+                for orid in sorted(self._parked):
+                    if orid == req.rid:
+                        continue
+                    self._release_parked(orid)
+                    fresh = self._alloc_blocks(self._blocks_needed(req)
+                                               - len(hit_ids))
+                    if fresh is not None:
+                        break
+            if fresh is None:
+                for b in hit_ids:
+                    self._pool.deref(b)
+                self._queue_push(req, front=True)
+                self._free.appendleft(slot)
+                break
+            self._slot_blocks[slot] = hit_ids + fresh
+            self.metrics.prefix_hit_tokens += raw
+            if hit_ids:
+                self.metrics.prefill_tokens_saved += hit
+                self.metrics.zero_copy_hits += len(hit_ids)
             self.metrics.prefills += 1
+            p_len = int(req.prompt.size)
+            keep = max(0, hit - p_len + 1)
             if gen:
                 self.metrics.resumed += 1
-                self.metrics.resume_reprefill_tokens += seq.size - hit
+                self.metrics.resume_reprefill_tokens += \
+                    max(0, p_len - hit) + len(gen) - keep
+                # generated tokens past the hit re-decode, never re-chunk
+                del self._out_toks[req.rid][keep:]
+                del self._out_lps[req.rid][keep:]
             self._live[req.rid] = req
-            req.state = RequestState.PREFILLING
             self._out_toks.setdefault(req.rid, [])
             self._out_lps.setdefault(req.rid, [])
             # n_steps spans first admission -> terminal, across preempts
             self._admit_step.setdefault(req.rid, self.metrics.steps)
-            self._slot_seq[slot] = seq
+            self._slot_seq[slot] = req.prompt
             self._slot_rid[slot] = req.rid
             self._slot_done[slot] = False
             self._slot_len[slot] = hit
-            self._slot_ngen[slot] = len(gen)
+            self._slot_ngen[slot] = keep
             self._slot_key[slot] = np.asarray(
                 jax.random.fold_in(self._base_key, req.rid))
-            self._slot_pref_pos[slot] = hit
-            self._slot_pref_end[slot] = seq.size
+            if keep:
+                # rows [0, hit) already hold the exact decode-written KV
+                # of prompt + gen[:keep-1]; resume decoding directly,
+                # feeding the last kept token next
+                req.state = RequestState.DECODING
+                self._slot_tok[slot] = self._out_toks[req.rid][-1]
+                self._slot_pref_pos[slot] = p_len
+                self._slot_pref_end[slot] = p_len
+            else:
+                req.state = RequestState.PREFILLING
+                self._slot_pref_pos[slot] = hit
+                self._slot_pref_end[slot] = p_len
 
-    def _pool_insert(self, slot: int, tokens: np.ndarray) -> None:
-        """Cache ``tokens``' block-aligned KV prefix from ``slot``'s
-        stripe (prefill completion and preemption both land here)."""
+    def _admit_parked(self, req: Request, slot: int, gen: List[int]) -> bool:
+        """Reattach a preempted request's pinned blocks wholesale.
+
+        The pin taken at preemption covers *every* written KV row —
+        including the unaligned tail block the trie cannot adopt — so
+        resume transfers those references straight into the slot's
+        block table and re-enters decode at the exact row it left off:
+        nothing is recomputed, no generated token is discarded, and the
+        KV is bitwise the original decode-written rows.  This keeps
+        progress monotonic under arbitrarily aggressive preemption
+        (preempt-every-step cannot livelock) where a truncate-and-
+        re-decode resume would oscillate at a block boundary.  Only
+        fresh blocks for the remaining decode need allocating; on
+        failure the request requeues at the front with its pins intact.
+        Returns True when the slot was filled."""
+        parked = self._parked[req.rid]
+        assert gen, "parked requests always have generated tokens"
+        kv_len = int(req.prompt.size) + len(gen) - 1
+        assert len(parked) == -(-kv_len // self._block_size), \
+            (len(parked), kv_len)
+        fresh = self._alloc_blocks(self._blocks_needed(req) - len(parked))
+        if fresh is None and not self._live:
+            for orid in sorted(self._parked):
+                if orid == req.rid:
+                    continue
+                self._release_parked(orid)
+                fresh = self._alloc_blocks(
+                    self._blocks_needed(req) - len(parked))
+                if fresh is not None:
+                    break
+        if fresh is None:
+            self._queue_push(req, front=True)
+            self._free.appendleft(slot)
+            return False
+        del self._parked[req.rid]   # pin references transfer to the slot
+        self._slot_blocks[slot] = list(parked) + fresh
+        self.metrics.prefix_hit_tokens += kv_len
+        self.metrics.prefill_tokens_saved += kv_len
+        self.metrics.zero_copy_hits += len(parked)
+        self.metrics.prefills += 1
+        self.metrics.resumed += 1
+        self._live[req.rid] = req
+        req.state = RequestState.DECODING
+        self._admit_step.setdefault(req.rid, self.metrics.steps)
+        self._slot_seq[slot] = req.prompt
+        self._slot_rid[slot] = req.rid
+        self._slot_done[slot] = False
+        self._slot_len[slot] = kv_len
+        self._slot_ngen[slot] = len(gen)
+        self._slot_tok[slot] = gen[-1]
+        self._slot_key[slot] = np.asarray(
+            jax.random.fold_in(self._base_key, req.rid))
+        self._slot_pref_pos[slot] = req.prompt.size
+        self._slot_pref_end[slot] = req.prompt.size
+        return True
+
+    def _pool_insert(self, slot: int, tokens: np.ndarray) -> List[int]:
+        """Adopt ``slot``'s block-aligned blocks for ``tokens`` into the
+        trie by reference (prefill completion and preemption both land
+        here — zero copy, no device program).  Returns the trie's
+        canonical path ids (what a future match will return)."""
         if self._trie is None:
-            return
-        new_ids, start = self._trie.insert(tokens)
-        if new_ids:
-            with self._ctx():
-                self._pk, self._pv = self._insert_fn(
-                    self._pk, self._pv, self._k, self._v,
-                    self._padded_block_ids(new_ids), jnp.int32(slot),
-                    jnp.int32(start))
-            self.metrics.pool_inserts += len(new_ids)
+            return []
+        path, adopted = self._trie.insert_owned(
+            tokens, self._slot_blocks[slot])
+        self.metrics.pool_inserts += len(adopted)
         self.metrics.pool_evictions = self._trie.evictions
+        return path
 
     def _prefilling(self):
         return [s for s in range(self._max_batch)
@@ -1112,42 +1349,68 @@ class Scheduler:
     def _prefill_chunks(self) -> None:
         """Advance every prefilling slot by one chunk (co-scheduled with
         the decode horizon: a long prompt spreads its prefill over
-        steps instead of stalling token emission).  With no decode-active
-        lanes there is nothing to co-schedule against, so chunking rounds
-        continue until a prompt completes and decode can start.  Chunk
-        dispatches queue back-to-back; sampled first tokens are read once
-        at the end, only for the chunks that completed a prompt."""
+        steps instead of stalling token emission).  Slots sharing a
+        (chunk bucket, table-width bucket) advance in **one** batched
+        dispatch — lanes padded to ``max_batch`` with dead scratch-table
+        lanes, so the program set stays (chunk x width) sized while a
+        warm wave of same-prefix prompts prefills in a single program
+        launch.  With no decode-active lanes there is nothing to
+        co-schedule against, so chunking rounds continue until a prompt
+        completes and decode can start.  Sampled first tokens are read
+        once per round, only for the chunks that completed a prompt."""
+        bs = self._block_size
         while True:
             prefilling = self._prefilling()
             if not prefilling:
                 return
-            completed = []
+            groups: Dict[Tuple[int, int], list] = {}
             for slot in prefilling:
-                seq = self._slot_seq[slot]
                 end = int(self._slot_pref_end[slot])
                 pos = int(self._slot_pref_pos[slot])
                 c_bkt, c_true = self._chunk_sizes(end - pos)
-                win = _bucket_for(self._win_buckets, pos + c_bkt)
-                tokens = np.zeros((1, c_bkt), np.int32)
-                tokens[0, :c_true] = seq[pos:pos + c_true]
-                step = int(self._slot_ngen[slot])    # 0 unless resuming
+                w = _bucket_for(self._tblw_buckets,
+                                -(-(pos + c_bkt) // bs))
+                groups.setdefault((c_bkt, w), []).append(
+                    (slot, pos, c_true, end))
+            completed = []
+            for (c_bkt, w), members in sorted(groups.items()):
+                g = self._max_batch
+                tokens = np.zeros((g, c_bkt), np.int32)
+                tables = np.zeros((g, w), np.int32)
+                offsets = np.zeros(g, np.int32)
+                true_cs = np.ones(g, np.int32)
+                keys = np.zeros((g, 2), np.uint32)
+                steps = np.zeros(g, np.int32)
+                for i, (slot, pos, c_true, _end) in enumerate(members):
+                    seq = self._slot_seq[slot]
+                    tokens[i, :c_true] = seq[pos:pos + c_true]
+                    blks = self._slot_blocks[slot][:w]
+                    tables[i, :len(blks)] = np.asarray(blks, np.int32) + 1
+                    offsets[i] = pos
+                    true_cs[i] = c_true
+                    keys[i] = self._slot_key[slot]
+                    steps[i] = int(self._slot_ngen[slot])
                 with self._ctx():
-                    tok, lp, self._k, self._v = self._chunk_fn(
-                        self._k, self._v, self._params, jnp.asarray(tokens),
-                        jnp.int32(pos), jnp.int32(c_true), jnp.int32(slot),
-                        jnp.asarray(self._slot_key[slot]), jnp.int32(step),
-                        win)
-                self.metrics.chunks += 1
-                self.metrics.prefill_chunk_tokens += c_bkt
-                self._slot_pref_pos[slot] = pos + c_true
-                self._slot_len[slot] = pos + c_true
-                if pos + c_true >= end:
-                    completed.append((slot, seq, tok, lp))
+                    toks, lps, self._pk, self._pv = self._chunk_fn(
+                        self._pk, self._pv, self._params,
+                        jnp.asarray(tokens), jnp.asarray(tables),
+                        jnp.asarray(offsets), jnp.asarray(true_cs),
+                        jnp.asarray(keys), jnp.asarray(steps))
+                toks = np.asarray(toks)
+                lps = np.asarray(lps)
+                self.metrics.chunks += len(members)
+                self.metrics.prefill_chunk_tokens += c_bkt * len(members)
+                for i, (slot, pos, c_true, end) in enumerate(members):
+                    self._slot_pref_pos[slot] = pos + c_true
+                    self._slot_len[slot] = pos + c_true
+                    if pos + c_true >= end:
+                        completed.append((slot, self._slot_seq[slot],
+                                          int(toks[i]), float(lps[i])))
             for slot, seq, tok, lp in completed:
                 self._pool_insert(slot, seq)
                 self._live[int(self._slot_rid[slot])].state = \
                     RequestState.DECODING
-                self._record(slot, int(tok), float(lp))
+                self._record(slot, tok, lp)
             if self._decoding():
                 return
 
@@ -1164,6 +1427,7 @@ class Scheduler:
         self._maybe_preempt()
         self._admit()
         self._prefill_chunks()
+        self._pool_gauges()
         active = self._decoding()
         if not active:
             busy = bool(self._queue_len() or self._live)
@@ -1171,9 +1435,7 @@ class Scheduler:
                 self.metrics.steps -= 1  # nothing ran
             return busy
         nb = self._batch_bucket(len(active))
-        scratch = self._max_batch
-        lanes = active + [scratch] * (nb - len(active))
-        slot_ids = np.asarray(lanes, np.int32)
+        tables = np.zeros((nb, self._nb_full), np.int32)
         toks = np.zeros(nb, np.int32)
         lens = np.zeros(nb, np.int32)
         keys = np.zeros((nb, 2), np.uint32)
@@ -1183,6 +1445,8 @@ class Scheduler:
         alive = np.zeros(nb, bool)
         for i, s in enumerate(active):
             req = self._live[int(self._slot_rid[s])]
+            blks = self._slot_blocks[s]
+            tables[i, :len(blks)] = np.asarray(blks, np.int32) + 1
             toks[i] = self._slot_tok[s]
             lens[i] = self._slot_len[s]
             keys[i] = self._slot_key[s]
@@ -1197,16 +1461,16 @@ class Scheduler:
                 time.sleep(dt)   # chaos: a slow device / noisy neighbor
         with self._ctx():
             if crew is None:
-                toks_h, lps_h, emit_h, self._k, self._v = self._horizon_fn(
-                    self._k, self._v, self._params, jnp.asarray(slot_ids),
+                toks_h, lps_h, emit_h, self._pk, self._pv = self._horizon_fn(
+                    self._pk, self._pv, self._params, jnp.asarray(tables),
                     jnp.asarray(toks), jnp.asarray(lens), jnp.asarray(keys),
                     jnp.asarray(steps), jnp.asarray(rem), jnp.asarray(eos),
                     jnp.asarray(alive))
             else:
-                (toks_h, lps_h, emit_h, self._k, self._v,
+                (toks_h, lps_h, emit_h, self._pk, self._pv,
                  self._crew_state[nb]) = self._horizon_crew_fn(
-                    self._k, self._v, crew, self._params,
-                    jnp.asarray(slot_ids), jnp.asarray(toks),
+                    self._pk, self._pv, crew, self._params,
+                    jnp.asarray(tables), jnp.asarray(toks),
                     jnp.asarray(lens), jnp.asarray(keys),
                     jnp.asarray(steps), jnp.asarray(rem), jnp.asarray(eos),
                     jnp.asarray(alive))
@@ -1227,6 +1491,7 @@ class Scheduler:
                 self._slot_len[s] += 1  # step t wrote the prior token's KV
                 if self._record(s, int(toks_h[i, t]), float(lps_h[i, t])):
                     break
+        self._pool_gauges()
         return bool(self._queue_len() or self._live)
 
     def _step_budget(self) -> int:
@@ -1244,11 +1509,14 @@ class Scheduler:
         return 64 + 8 * work
 
     def _stall_report(self, steps: int, budget: int) -> str:
+        used = self._pool.n_blocks - self._pool.free_blocks
         lines = [f"scheduler stalled after {steps} steps "
                  f"(budget {budget}): no forward progress",
                  f"  queue: {self._queue_len()} waiting "
                  f"(rids {[r.rid for r in self._queue_iter()][:8]}), "
-                 f"{len(self._free)} free slots"]
+                 f"{len(self._free)} free slots",
+                 f"  pool: {used}/{self._pool.n_blocks} blocks in use, "
+                 f"{len(self._parked)} parked requests pinning blocks"]
         for s in range(self._max_batch):
             if self._slot_done[s]:
                 continue
@@ -1260,7 +1528,8 @@ class Scheduler:
                 f"len={int(self._slot_len[s])} "
                 f"prefill={int(self._slot_pref_pos[s])}/"
                 f"{int(self._slot_pref_end[s])} "
-                f"ngen={int(self._slot_ngen[s])}"
+                f"ngen={int(self._slot_ngen[s])} "
+                f"blocks={len(self._slot_blocks.get(s, ()))}"
                 + (f"/{req.max_new}" if req else ""))
         return "\n".join(lines)
 

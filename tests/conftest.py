@@ -4,10 +4,32 @@
 test_core.py / test_pack.py.  When it is absent — minimal containers that
 only carry the runtime deps — those modules are skipped at collection
 instead of erroring the whole run; CI installs it and runs everything.
+(test_paged_prop.py is *not* gated: its seeded sweep runs without
+hypothesis, and only its hypothesis-drawn variant skips.)
+
+``--hypothesis-seed N`` derandomizes every seed-driven property test:
+it is exported as ``HYPOTHESIS_SEED`` before collection, where
+test_paged_prop.py reads it as the base seed for both its seeded sweep
+and its hypothesis draw sequence — so a CI fuzz failure replays exactly
+with the same flag.
 """
 import importlib.util
+import os
 
 collect_ignore = []
 if importlib.util.find_spec("hypothesis") is None:
     collect_ignore += ["test_core.py", "test_pack.py",
                        "test_convert_parity_prop.py"]
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--hypothesis-seed", action="store", default=None,
+        help="base seed for seed-driven property tests "
+             "(exported as HYPOTHESIS_SEED; default: env or 0)")
+
+
+def pytest_configure(config):
+    seed = config.getoption("--hypothesis-seed")
+    if seed is not None:
+        os.environ["HYPOTHESIS_SEED"] = str(seed)

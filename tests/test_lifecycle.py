@@ -214,7 +214,9 @@ class TestPreemptResume:
         chaos, rids_c, res_c = drain(FaultInjector(3, preempt_p=0.8))
         assert chaos.metrics.preempted >= 1
         assert chaos.metrics.resumed >= 1
-        assert chaos.metrics.resume_reprefill_tokens > 0
+        # wholesale pinned-block reattach: resume recomputes nothing
+        assert chaos.metrics.resume_reprefill_tokens == 0
+        assert chaos.metrics.prefill_tokens_saved > 0
         calm, rids_q, res_q = drain(False)
         assert calm.metrics.preempted == 0
         for ref, rc, rq in zip(refs, rids_c, rids_q):
@@ -259,6 +261,70 @@ class TestPreemptResume:
                                       _ref_tokens(api, params, low_p, 12))
         np.testing.assert_array_equal(res[high].tokens,
                                       _ref_tokens(api, params, high_p, 4))
+
+
+class TestPagedInterleavings:
+    """Eviction x preemption interleavings over the shared block pool:
+    the refcount ownership model (pool.py) must keep parked and
+    in-use blocks safe from every eviction path."""
+
+    def test_parked_blocks_survive_pool_drops_until_resume(self, qwen):
+        """A preempted request's parked blocks carry an extra pin
+        reference, so LRU eviction — here forced to fire maximally on
+        every step between park and resume — can never free them; the
+        resume still hits its parked prefix instead of re-prefilling
+        cold."""
+        cfg, api, params = qwen
+        rng = np.random.default_rng(20)
+        a = rng.integers(0, cfg.vocab, 12).astype(np.int32)
+        b = rng.integers(0, cfg.vocab, 12).astype(np.int32)
+        sched = _sched(api, params, max_batch=1, horizon=1,
+                       preempt_after_steps=1, pool_blocks=2,
+                       faults=FaultInjector(0, drop_p=1.0, max_drop=8))
+        ra = sched.submit(a, max_new=12)
+        rb = sched.submit(b, max_new=4)
+        res = sched.run()
+        assert sched.metrics.preempted >= 1
+        assert sched.metrics.resumed >= 1
+        # pinned parked blocks survived the every-step drops: the resume
+        # matched its aligned parked prefix (>= 1 block) from the pool
+        assert sched.metrics.prefill_tokens_saved > 0
+        assert not sched._parked          # pins released at resume
+        assert not sched.audit_blocks()
+        np.testing.assert_array_equal(res[ra].tokens,
+                                      _ref_tokens(api, params, a, 12))
+        np.testing.assert_array_equal(res[rb].tokens,
+                                      _ref_tokens(api, params, b, 4))
+
+    def test_shared_prefix_eviction_mid_decode_keeps_blocks_live(self, qwen):
+        """Evicting the cached prefix mid-decode of a sharing slot must
+        not free in-use blocks: a slot table reference holds refcount
+        >= 2, so the trie's eviction sweep skips every shared block —
+        and frees them normally once the sharer retires."""
+        cfg, api, params = qwen
+        rng = np.random.default_rng(21)
+        head = rng.integers(0, cfg.vocab, 24).astype(np.int32)
+        warm = np.concatenate(
+            [head, rng.integers(0, cfg.vocab, 6).astype(np.int32)])
+        sched = _sched(api, params, max_batch=1, horizon=1,
+                       pool_blocks=4, faults=False)
+        ra = sched.submit(head, max_new=4)
+        sched.run()                       # trie now caches head's blocks
+        rb = sched.submit(warm, max_new=12)
+        sched.step()                      # warm admit + prefill suffix
+        assert sched.metrics.zero_copy_hits > 0
+        # maximal eviction pressure mid-decode: every cached block is
+        # shared with rb's live table (refcount >= 2) -> zero victims
+        assert sched._trie.drop_lru_leaves(99) == 0
+        assert not sched.audit_blocks()
+        while sched.step():
+            pass
+        res = sched.pop_results()
+        np.testing.assert_array_equal(res[rb].tokens,
+                                      _ref_tokens(api, params, warm, 12))
+        # sharer retired: the cached chain's leaf is refcount-1 again
+        assert sched._trie.drop_lru_leaves(99) >= 1
+        assert not sched.audit_blocks()
 
 
 class TestWatchdog:

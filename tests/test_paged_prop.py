@@ -1,0 +1,206 @@
+"""Property-based KV-integrity harness over the paged scheduler.
+
+Random workloads — interleaved submits (with shared-prefix prompt
+families), engine steps, cancellations, deadlines, partial drains, and
+seeded fault injection — are generated from a seed and driven through a
+module-cached :class:`~repro.serve.Scheduler` at block sizes {4, 8, 16}.
+After **every** event the harness asserts the paged-KV conservation law
+(``Scheduler.audit_blocks``): every pool block's refcount equals its
+owner count across free list ∪ prefix trie ∪ live slot block tables ∪
+parked pins, plus the trie's structural audit.  After the final drain,
+every rid has exactly one terminal :class:`Completion`, every COMPLETED
+stream is token-identical to a cold one-shot ``serve.generate`` run, and
+every partial (cancelled / timed-out) stream is a prefix of it.
+
+The workload is a pure function of ``(base seed, block size, case)``:
+
+* ``test_paged_workload_seeded`` — the always-on tier-1 entry point, a
+  plain parametrized sweep (``PAGED_PROP_EXAMPLES`` cases per block
+  size, default 4; CI's dedicated fuzz step raises it).  Runs with or
+  without ``hypothesis`` installed.
+* ``test_paged_workload_hypothesis`` — the same executor with
+  ``hypothesis`` drawing the seeds (shrinking a seed is meaningless,
+  but the knobs are real: ``--hypothesis-seed`` / ``HYPOTHESIS_SEED``
+  derandomizes the draw sequence, threaded through conftest.py).
+  Skipped when hypothesis is absent (minimal containers).
+
+Failures reproduce exactly: the test id carries ``(block size, case)``
+and the base seed is printed by the assert context, so
+``pytest "tests/test_paged_prop.py::test_paged_workload_seeded[case-bs]"
+--hypothesis-seed N`` replays the identical workload, faults included.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.models import build_model
+from repro.serve import FaultInjector, Scheduler, Shed, generate
+
+try:
+    import hypothesis
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # minimal container: seeded sweep only
+    HAVE_HYPOTHESIS = False
+
+BLOCK_SIZES = (4, 8, 16)
+N_EXAMPLES = int(os.environ.get("PAGED_PROP_EXAMPLES", "4"))
+BASE_SEED = int(os.environ.get("HYPOTHESIS_SEED", "0") or "0")
+CACHE_LEN = 64
+# small fixed draw sets keep the distinct (prompt_len, max_new) shape
+# combinations — and so the cold-generate reference compiles — bounded
+# across hundreds of workloads
+TAIL_LENS = (1, 5)
+MAX_NEWS = (4, 8)
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = ARCHS["qwen2-0.5b"].reduced()
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    return api, params, cfg.vocab
+
+
+_SCHEDS = {}          # block_size -> Scheduler (compiled programs reused)
+_REFS = {}            # (prompt bytes, max_new) -> cold generate tokens
+
+
+def _sched_for(bs, api, params):
+    sched = _SCHEDS.get(bs)
+    # a failed example can leave work in flight; rebuild rather than
+    # cascade reset() errors through every later example at this bs
+    if sched is not None and (sched._live or sched._queue_len()):
+        sched = None
+    if sched is None:
+        sched = _SCHEDS[bs] = Scheduler(
+            api, params, max_batch=2, cache_len=CACHE_LEN,
+            buckets=(8, 16), horizon=4, block_size=bs,
+            max_queue=6, preempt_after_steps=2, faults=False)
+    return sched
+
+
+def _ref(api, params, prompt, max_new):
+    key = (prompt.tobytes(), int(max_new))
+    if key not in _REFS:
+        out = generate(api, params, jnp.asarray(prompt)[None],
+                       max_new=max_new)
+        _REFS[key] = np.asarray(out["tokens"][0])
+    return _REFS[key]
+
+
+def _gen_workload(rng, bs, vocab):
+    """(events, faults) — a pure function of the rng state.
+
+    Prompts come from two shared-prefix families (block-aligned heads of
+    1 and 2 blocks) plus head-less strays, so warm admissions, partial
+    matches, and trie adoption all occur; deadlines ride on a fault
+    injector's ``expire_p`` (no wall-clock sleeps).  Every draw happens
+    unconditionally where possible so the event stream depends only on
+    the seed, not on scheduler timing.
+    """
+    fmode = int(rng.integers(0, 4))
+    if fmode == 0:
+        faults = False              # fault-free
+    elif fmode == 1:
+        faults = None               # suite default (REPRO_FAULTS env)
+    else:
+        faults = FaultInjector(int(rng.integers(1 << 30)),
+                               preempt_p=0.3, expire_p=0.05,
+                               drop_p=0.3, max_drop=2)
+    heads = [rng.integers(0, vocab, bs * k).astype(np.int32)
+             for k in (1, 2)]
+    events = []
+    for _ in range(int(rng.integers(6, 15))):
+        u = rng.random()
+        if u < 0.55:
+            head = (heads[int(rng.integers(2))]
+                    if rng.random() < 0.7 else heads[0][:0])
+            tail = rng.integers(
+                0, vocab, TAIL_LENS[int(rng.integers(2))]).astype(np.int32)
+            events.append((
+                "submit",
+                np.concatenate([head, tail]),
+                MAX_NEWS[int(rng.integers(2))],
+                None if rng.random() < 0.8 else 5.0,
+                int(rng.integers(0, 2)),
+            ))
+        elif u < 0.75:
+            events.append(("step",))
+        elif u < 0.85:
+            events.append(("cancel", int(rng.integers(0, 64))))
+        else:
+            events.append(("drain",))
+    return events, faults
+
+
+def _run_workload(sched, api, params, events, faults):
+    sched.reset(faults=faults)
+    rids = []
+    meta = {}                       # rid -> (prompt, max_new)
+    results = {}
+    for ev in events:
+        if ev[0] == "submit":
+            _, prompt, max_new, deadline, priority = ev
+            r = sched.submit(prompt, max_new=max_new,
+                             deadline_s=deadline, priority=priority)
+            rid = r.rid if isinstance(r, Shed) else r
+            rids.append(rid)
+            meta[rid] = (prompt, max_new)
+        elif ev[0] == "step":
+            sched.step()
+        elif ev[0] == "cancel" and rids:
+            sched.cancel(rids[ev[1] % len(rids)])
+        elif ev[0] == "drain":
+            results.update(sched.run())
+        errs = sched.audit_blocks()
+        assert not errs, f"after {ev[0]}: {errs}"
+    results.update(sched.run())
+    results.update(sched.pop_results())
+    assert sched.pending == 0
+    errs = sched.audit_blocks()
+    assert not errs, f"after final drain: {errs}"
+    # exactly one terminal Completion per submitted rid (shed included)
+    assert sorted(results) == sorted(set(rids))
+    for rid, comp in results.items():
+        prompt, max_new = meta[rid]
+        if comp.status == "completed":
+            np.testing.assert_array_equal(
+                comp.tokens, _ref(api, params, prompt, max_new),
+                err_msg=f"rid {rid} completed off the greedy stream")
+        elif comp.tokens.size:      # cancelled / timed out mid-stream
+            ref = _ref(api, params, prompt, max_new)
+            np.testing.assert_array_equal(
+                comp.tokens, ref[:comp.tokens.size],
+                err_msg=f"rid {rid} ({comp.status}) partial stream "
+                        "diverged from the greedy prefix")
+
+
+def _check(model, bs, entropy):
+    api, params, vocab = model
+    rng = np.random.default_rng(np.random.SeedSequence(entropy))
+    events, faults = _gen_workload(rng, bs, vocab)
+    _run_workload(_sched_for(bs, api, params), api, params, events, faults)
+
+
+@pytest.mark.parametrize("bs", BLOCK_SIZES)
+@pytest.mark.parametrize("case", range(N_EXAMPLES))
+def test_paged_workload_seeded(model, bs, case):
+    _check(model, bs, [BASE_SEED, bs, case])
+
+
+if HAVE_HYPOTHESIS:
+    @hypothesis.settings(max_examples=N_EXAMPLES, deadline=None)
+    @hypothesis.seed(BASE_SEED)
+    @hypothesis.given(seed=st.integers(0, 2**31 - 1),
+                      bs=st.sampled_from(BLOCK_SIZES))
+    def test_paged_workload_hypothesis(model, seed, bs):
+        _check(model, bs, [seed, bs])
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_paged_workload_hypothesis():
+        pass

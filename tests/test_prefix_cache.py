@@ -257,11 +257,11 @@ class TestPrefixReuse:
         sched.run()
         counts = sched.program_counts()
         if not FAULT_MODE:  # resume offsets can touch extra window buckets
-            # chunk buckets {8, 16} x KV-window buckets (pow2 <= 64)
+            # chunk buckets {8, 16} x table-width buckets (pow2 blocks)
             assert counts["prefill"] <= 4
             assert counts["decode"] <= 2    # batch buckets {1, 2}
-            assert counts["copy"] <= 3      # block-count buckets {1, 2, 4}
-            assert counts["insert"] <= 3
+            assert counts["copy"] == 0      # zero-copy: no block movers
+            assert counts["insert"] == 0
         # replay (now warm): same program set, bit for bit
         for _ in range(2):
             for p in prompts:
@@ -271,10 +271,11 @@ class TestPrefixReuse:
             assert sched.program_counts() == counts
 
     def test_lru_eviction_under_pool_pressure_keeps_slots_correct(self, qwen):
-        """A pool far smaller than the traffic's block footprint churns
-        (evictions > 0) while every completion stays parity-exact —
-        eviction can never corrupt a live slot because matches are
-        copied into the slot, never aliased."""
+        """A prefix budget far smaller than the traffic's block footprint
+        churns (evictions > 0) while every completion stays parity-exact
+        — eviction can never corrupt a live slot because a block
+        referenced by a live table carries refcount >= 2 and the trie
+        only ever evicts refcount-1 leaves."""
         cfg, api, params = qwen
         rng = np.random.default_rng(5)
         prompts = [rng.integers(0, cfg.vocab, 24).astype(np.int32)
@@ -343,6 +344,46 @@ class TestPrefixReuse:
         for rid, p in zip(rids, (a, b, c)):
             np.testing.assert_array_equal(res[rid].tokens,
                                           _ref_tokens(api, params, p, 3))
+
+    @pytest.mark.parametrize("n", [7, 8, 9, 15, 16, 17])
+    def test_warm_parity_at_block_edges(self, qwen, n):
+        """Prompt lengths straddling block multiples (block_size ± 1 and
+        the multiple itself): these sit on the off-by-one frontier where
+        the hit cap (one block short of the prompt), the warm suffix's
+        chunk offset, and the decode write block index all flip.  Warm
+        and cold waves through one scheduler must both match cold
+        ``serve.generate``, and the pool must audit clean after."""
+        cfg, api, params = qwen
+        rng = np.random.default_rng(100 + n)
+        p = rng.integers(0, cfg.vocab, n).astype(np.int32)
+        ref = _ref_tokens(api, params, p, 4)
+        sched = Scheduler(api, params, max_batch=1, cache_len=64,
+                          buckets=(8, 16), block_size=8)
+        for _wave in range(2):
+            rid = sched.submit(p, max_new=4)
+            res = sched.run()
+            np.testing.assert_array_equal(res[rid].tokens, ref)
+        assert not sched.audit_blocks()
+        if not FAULT_MODE and n > 8:
+            # the second wave hit the prompt's full blocks, capped one
+            # block short: ((n - 1) // 8) * 8 tokens served from the pool
+            assert sched.metrics.prefill_tokens_saved == ((n - 1) // 8) * 8
+
+    def test_sequence_filling_cache_to_last_row(self, qwen):
+        """prompt + max_new == cache_len: the run's final decode write
+        lands in the last row of the slot's last table block — one
+        position past would index off the table entirely (the paged
+        twin of the dense straddle-``cache_len`` regressions)."""
+        cfg, api, params = qwen
+        rng = np.random.default_rng(13)
+        p = rng.integers(0, cfg.vocab, 60).astype(np.int32)
+        sched = Scheduler(api, params, max_batch=1, cache_len=64,
+                          buckets=(8, 16), block_size=8)
+        rid = sched.submit(p, max_new=4)
+        res = sched.run()
+        np.testing.assert_array_equal(res[rid].tokens,
+                                      _ref_tokens(api, params, p, 4))
+        assert not sched.audit_blocks()
 
     def test_metrics_dataclass_contract(self, qwen):
         """SchedulerMetrics: dict-style reads, to_dict round-trip, and
