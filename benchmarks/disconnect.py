@@ -1,0 +1,206 @@
+"""Disconnect chaos: goodput and recovery time over the live front door.
+
+The serving PRs measured the engine in-process; this module measures
+the *wire* path (DESIGN.md §5 "wire protocol & supervision"): a real
+``SSEServer`` + ``Supervisor`` stack takes seeded Poisson traffic from
+real sockets while three kinds of chaos land on it:
+
+1. **disconnects** — a client-side ``FaultInjector`` hangs up a seeded
+   subset of streams after k token frames; the server must notice EOF,
+   cancel at the next horizon boundary, and free every block;
+2. **one crash** — once a third of the requests have finished, the
+   watcher injects a supervisor crash; recovery snapshots outstanding
+   work, resets the engine (compiled programs survive), and re-admits
+   everything as prefix-pool hits — ``recovery_ms`` is that wall time;
+3. **drain** — after the burst, SIGTERM-style drain: new submits get
+   503 + Retry-After while in-flight work finishes inside the budget.
+
+Per weights row the headline numbers: ``goodput_rps`` (completed
+streams per wall second despite the chaos), ``recovery_ms``, and the
+two invariants the CI gate pins — ``terminal_coverage`` (every rid the
+clients saw reached exactly one terminal in the supervisor's results)
+and ``audit_clean`` (block conservation holds after the dust settles).
+Dense and CREW weights run the same seeded protocol.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.models import build_model
+
+MAX_BATCH = 4
+CACHE_LEN = 64
+BUCKETS = (16, 32)
+HORIZON = 4
+PROMPT_RNG = (8, 24)
+MAX_NEW_RNG = (8, 16)
+N_CALIBRATE = 8
+N_REQUESTS = 18          # burst size (fast); --full scales it up
+FULL_FACTOR = 3
+DISCONNECT_P = 0.35      # client-side hangup probability per stream
+MAX_DISC_TOKENS = 4      # hang up within the first k token frames
+CRASH_AT_FRAC = 3        # inject the crash at n // CRASH_AT_FRAC results
+SEED = 11
+
+_STATE = {}
+
+
+def _calibration_workload(vocab):
+    rng = np.random.default_rng(SEED)
+    return [(rng.integers(0, vocab, int(rng.integers(*PROMPT_RNG))
+                          ).astype(np.int32),
+             int(rng.integers(MAX_NEW_RNG[0], MAX_NEW_RNG[1] + 1)))
+            for _ in range(N_CALIBRATE)]
+
+
+def _calibrate(sched, vocab):
+    """Closed-loop drain -> capacity (req/s); doubles as compile
+    warmup so ``main`` times only the chaos burst."""
+    work = _calibration_workload(vocab)
+    t0 = time.perf_counter()
+    rids = [sched.submit(p, max_new=m) for p, m in work]
+    results = sched.run()
+    wall = time.perf_counter() - t0
+    assert all(results[r].status == "completed" for r in rids)
+    sched.pop_tokens()          # discard the warmup's stream buffer
+    return len(work) / wall
+
+
+def prepare(fast: bool = True):
+    """Build dense + CREW params and one streaming scheduler per
+    weights; calibrate each (which also compiles it)."""
+    if _STATE.get("fast") == fast:
+        return _STATE
+    _STATE.clear()
+    import jax
+    from repro.serve import Scheduler, crewize_params
+
+    cfg = ARCHS["qwen2-0.5b"].reduced()
+    api = build_model(cfg)
+    dense = api.init(jax.random.PRNGKey(0))
+    crew, _ = crewize_params(dense)
+    _STATE.update(fast=fast, api=api, vocab=cfg.vocab,
+                  params={"dense": dense, "crew": crew},
+                  scheds={}, cal={})
+    for weights in ("dense", "crew"):
+        sched = Scheduler(api, _STATE["params"][weights],
+                          max_batch=MAX_BATCH, cache_len=CACHE_LEN,
+                          buckets=BUCKETS, horizon=HORIZON,
+                          rng=jax.random.PRNGKey(SEED),
+                          stream_tokens=True, faults=False)
+        _STATE["scheds"][weights] = sched
+        _calibrate(sched, cfg.vocab)        # compile warmup, discarded
+        _STATE["cal"][weights] = _calibrate(sched, cfg.vocab)
+    return _STATE
+
+
+def _serve_one(weights: str, n: int, state):
+    from repro.launch.serve import make_workload
+    from repro.serve import SSEServer, Supervisor
+    from repro.serve.client import get_json, stream_generate
+    from repro.serve.faults import FaultInjector
+
+    sched = state["scheds"][weights]
+    sched.reset()               # clean boot: re-opens a previous drain
+    chaos = FaultInjector(SEED, disconnect_p=DISCONNECT_P,
+                          max_disconnect_tokens=MAX_DISC_TOKENS)
+    sup = Supervisor(sched).start()
+    srv = SSEServer(sup)
+    srv.start_background()
+    try:
+        rate = state["cal"][weights]        # offered load = capacity
+        workload = make_workload(n, PROMPT_RNG, MAX_NEW_RNG,
+                                 state["vocab"], rate, seed=SEED)
+        plans = [(arr, prompt, m_new, chaos.disconnect_after(i))
+                 for i, (arr, prompt, m_new) in enumerate(workload)]
+        results = [None] * len(plans)
+        stop_watch = threading.Event()
+
+        def _watch():
+            # one deterministic crash, once a third of the burst is in
+            thr = max(2, n // CRASH_AT_FRAC)
+            while not stop_watch.is_set():
+                if len(sup.results) >= thr:
+                    sup.inject_crash("disconnect-bench crash")
+                    return
+                time.sleep(0.002)
+
+        t0 = time.perf_counter()
+
+        def _one(i, arr, prompt, m_new, disc):
+            time.sleep(max(0.0, arr - (time.perf_counter() - t0)))
+            results[i] = stream_generate(srv.host, srv.port, prompt,
+                                         max_new=m_new,
+                                         disconnect_after=disc)
+
+        watcher = threading.Thread(target=_watch, daemon=True)
+        watcher.start()
+        threads = [threading.Thread(target=_one, args=(i, *plan))
+                   for i, plan in enumerate(plans)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        sup.wait_idle(timeout=120.0)
+        stop_watch.set()
+        watcher.join(timeout=5.0)
+        wall = time.perf_counter() - t0
+
+        # drain: the front door refuses politely, in-flight finishes
+        t_drain = time.perf_counter()
+        sup.begin_drain()
+        refused = stream_generate(srv.host, srv.port,
+                                  list(range(8)), max_new=4)
+        ready = get_json(srv.host, srv.port, "/readyz")
+        sup.drain(timeout=60.0)
+        drain_ms = (time.perf_counter() - t_drain) * 1e3
+        drain_503 = int(refused["http_status"] == 503
+                        and refused.get("retry_after") is not None
+                        and ready["status"] == 503)
+
+        rids = [r["rid"] for r in results if r.get("rid") is not None]
+        covered = sum(1 for rid in rids if rid in sup.results)
+        by = {}
+        for rid in rids:
+            comp = sup.results.get(rid)
+            key = comp.status if comp is not None else "missing"
+            by[key] = by.get(key, 0) + 1
+        n_disc = sum(1 for r in results if r and r["disconnected"])
+        rec = sup.recovery_log
+        return {
+            "bench": "disconnect",
+            "weights": weights,
+            "requests": n,
+            "disconnects": n_disc,
+            "completed": by.get("completed", 0),
+            "cancelled": by.get("cancelled", 0),
+            "goodput_rps": round(by.get("completed", 0) / wall, 2),
+            "recoveries": sup.recoveries,
+            "recovery_ms": round(rec[0]["wall_s"] * 1e3, 2) if rec
+                           else 0.0,
+            "drain_ms": round(drain_ms, 1),
+            "drain_503": drain_503,
+            "terminal_coverage": round(covered / max(len(rids), 1), 3),
+            "audit_clean": int(not sched.audit_blocks()),
+            "seconds": round(wall, 3),
+        }
+    finally:
+        srv.stop_background()
+        sup.stop(drain=False)
+
+
+def main(fast: bool = False):
+    state = prepare(fast)
+    n = N_REQUESTS if fast else N_REQUESTS * FULL_FACTOR
+    return [_serve_one(weights, n, state)
+            for weights in ("dense", "crew")]
+
+
+if __name__ == "__main__":
+    prepare(fast=True)
+    for r in main(fast=True):
+        print(r)

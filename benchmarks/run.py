@@ -26,9 +26,9 @@ import argparse
 import json
 import time
 
-from . import decode_latency, dispatch, fig6_ppa, fig11_speedup, overload, \
-    perf_cells, prefix_reuse, roofline_table, tab1_unique_weights, \
-    tab2_compression, traffic
+from . import decode_latency, disconnect, dispatch, fig6_ppa, \
+    fig11_speedup, overload, perf_cells, prefix_reuse, roofline_table, \
+    tab1_unique_weights, tab2_compression, traffic
 
 MODULES = [
     ("tab1_unique_weights", tab1_unique_weights),
@@ -39,6 +39,7 @@ MODULES = [
     ("decode_latency", decode_latency),
     ("prefix_reuse", prefix_reuse),
     ("overload", overload),
+    ("disconnect", disconnect),
     ("roofline_table", roofline_table),
     ("perf_cells", perf_cells),
     ("dispatch", dispatch),

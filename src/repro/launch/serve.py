@@ -33,6 +33,24 @@ Overload knobs: ``--deadline`` attaches a TTL to every request,
 report then buckets outcomes by terminal status and adds
 goodput-under-SLO (completions within ``--slo`` per second) — the
 overload number ``benchmarks/overload.py`` tracks.
+
+Chaos knobs: ``--faults-seed`` arms a ``FaultInjector`` whose schedule
+is a pure function of the seed, with per-hook rates
+(``--fault-preempt-p``, ``--fault-crash-p``, ``--fault-disconnect-p``,
+…) — the CLI twin of the ``REPRO_FAULTS`` env switch, for reproducible
+chaos runs outside the test suite.
+
+Wire modes (docs/serving.md):
+
+* ``--listen [--host H --port P]`` — run the supervised HTTP/SSE front
+  door (serve.server) instead of the synthetic driver.  SIGINT/SIGTERM
+  drain gracefully (readiness flips to 503 + Retry-After, in-flight
+  work finishes); a second signal stops hard.  Crash/stall faults are
+  recovered by the supervisor with streams resumed token-identically.
+* ``--connect HOST:PORT`` — drive a remote front door with the same
+  seeded workload over HTTP/SSE; ``--fault-disconnect-p`` /
+  ``--fault-stall-p`` then model misbehaving *clients* (hang-ups
+  mid-stream, stalled reads) from the client side.
 """
 from __future__ import annotations
 
@@ -179,6 +197,144 @@ def serve_static(api, params, workload, max_batch, temperature=0.0):
             "tokens_per_s": useful / max(wall, 1e-9)}
 
 
+def add_fault_flags(ap) -> None:
+    """CLI twin of ``REPRO_FAULTS``: a seeded, per-hook-configurable
+    injector (satellite of the resilient-front-door issue)."""
+    g = ap.add_argument_group("fault injection")
+    g.add_argument("--faults-seed", type=int, default=None, metavar="N",
+                   help="arm a FaultInjector seeded N (schedule is a "
+                        "pure function of the seed); required for any "
+                        "--fault-* rate below")
+    g.add_argument("--fault-delay-p", type=float, default=0.0)
+    g.add_argument("--fault-max-delay", type=float, default=0.05,
+                   metavar="S")
+    g.add_argument("--fault-preempt-p", type=float, default=0.0)
+    g.add_argument("--fault-expire-p", type=float, default=0.0)
+    g.add_argument("--fault-drop-p", type=float, default=0.0)
+    g.add_argument("--fault-max-drop", type=int, default=2)
+    g.add_argument("--fault-crash-p", type=float, default=0.0)
+    g.add_argument("--fault-disconnect-p", type=float, default=0.0)
+    g.add_argument("--fault-max-disconnect-tokens", type=int, default=8)
+    g.add_argument("--fault-stall-p", type=float, default=0.0)
+    g.add_argument("--fault-max-stall", type=float, default=0.5,
+                   metavar="S")
+
+
+def injector_from_args(args):
+    """A ``FaultInjector`` from ``--faults-seed`` + rates, or None when
+    unarmed (the scheduler then falls back to the REPRO_FAULTS env
+    default)."""
+    rates = (args.fault_delay_p, args.fault_preempt_p,
+             args.fault_expire_p, args.fault_drop_p, args.fault_crash_p,
+             args.fault_disconnect_p, args.fault_stall_p)
+    if args.faults_seed is None:
+        if any(r > 0 for r in rates):
+            raise SystemExit("--fault-* rates need --faults-seed")
+        return None
+    from ..serve import FaultInjector
+    return FaultInjector(
+        args.faults_seed,
+        delay_p=args.fault_delay_p, max_delay_s=args.fault_max_delay,
+        preempt_p=args.fault_preempt_p,
+        expire_p=args.fault_expire_p,
+        drop_p=args.fault_drop_p, max_drop=args.fault_max_drop,
+        crash_p=args.fault_crash_p,
+        disconnect_p=args.fault_disconnect_p,
+        max_disconnect_tokens=args.fault_max_disconnect_tokens,
+        stall_p=args.fault_stall_p, max_stall_s=args.fault_max_stall)
+
+
+def run_listen(api, params, args, faults) -> None:
+    """``--listen``: the supervised HTTP/SSE front door, draining
+    gracefully on SIGINT/SIGTERM."""
+    import asyncio
+
+    from ..serve import Scheduler, SSEServer, Supervisor
+
+    sched = Scheduler(api, params, max_batch=args.max_batch,
+                      cache_len=args.cache_len, horizon=args.horizon,
+                      prefix_cache=not args.no_prefix_cache,
+                      block_size=args.block_size,
+                      pool_blocks=args.pool_blocks,
+                      temperature=args.temperature,
+                      max_queue=args.max_queue,
+                      preempt_after_steps=args.preempt_after,
+                      rng=jax.random.PRNGKey(args.seed),
+                      stream_tokens=True,
+                      faults=faults)
+    sup = Supervisor(sched).start()
+    srv = SSEServer(sup, host=args.host, port=args.port)
+    loop = asyncio.new_event_loop()
+    asyncio.set_event_loop(loop)
+    loop.run_until_complete(srv.start())
+    srv.install_signal_handlers()
+    print(f"[serve] listening on http://{srv.host}:{srv.port} "
+          f"(SSE: POST /v1/generate; health: /healthz /readyz /metrics)")
+    print("[serve] SIGINT/SIGTERM drains gracefully; repeat to force")
+    try:
+        loop.run_forever()
+    finally:
+        sup.stop(drain=False)
+        m = sched.metrics
+        print(f"[serve] done: {m.completed} completed, {m.cancelled} "
+              f"cancelled, {m.shed} shed; {sup.recoveries} recoveries")
+
+
+def run_connect(args, vocab, faults) -> None:
+    """``--connect HOST:PORT``: replay the seeded workload over the
+    wire, with client-side disconnect/stall chaos from the injector."""
+    import threading
+
+    from ..serve.client import get_json, stream_generate
+
+    host, port = args.connect.rsplit(":", 1)
+    port = int(port)
+    ready = get_json(host, port, "/readyz")
+    print(f"[serve] target http://{host}:{port} readyz -> "
+          f"{ready['status']}")
+    workload = make_workload(args.requests, args.prompt_len,
+                             args.max_new, vocab, args.rate,
+                             seed=args.seed,
+                             shared_prefix=args.shared_prefix,
+                             prefix_pool=args.prefix_pool)
+    plans = []
+    for i, (arr, prompt, m_new) in enumerate(workload):
+        disc = faults.disconnect_after(i) if faults is not None else None
+        stall = faults.client_stall() if faults is not None else 0.0
+        plans.append((arr, prompt, m_new, disc, stall))
+    results = [None] * len(plans)
+    t0 = time.perf_counter()
+
+    def _one(i, arr, prompt, m_new, disc, stall):
+        time.sleep(max(0.0, arr - (time.perf_counter() - t0)))
+        results[i] = stream_generate(
+            host, port, prompt, max_new=m_new,
+            deadline_s=args.deadline, disconnect_after=disc,
+            stall_s=stall)
+
+    threads = [threading.Thread(target=_one, args=(i, *plan))
+               for i, plan in enumerate(plans)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    wall = time.perf_counter() - t0
+    by = {}
+    toks = 0
+    for r in results:
+        toks += len(r["tokens"])
+        key = (r["done"]["status"] if r["done"] else
+               ("hangup" if r["disconnected"] else f"http-{r['http_status']}"))
+        by[key] = by.get(key, 0) + 1
+    print(f"[serve] {len(results)} reqs over the wire in {wall:.2f}s: "
+          f"{by}  {toks} token frames "
+          f"({toks / max(wall, 1e-9):.1f} frames/s)")
+    if faults is not None:
+        chaos = [h for h, *_ in faults.trace]
+        print(f"[serve] client chaos injected: "
+              f"{ {h: chaos.count(h) for h in set(chaos)} }")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -232,7 +388,18 @@ def main() -> None:
                          "generate waves and report both throughputs")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--seed", type=int, default=0)
+    g = ap.add_argument_group("wire modes")
+    g.add_argument("--listen", action="store_true",
+                   help="serve the model over HTTP/SSE instead of "
+                        "driving the seeded workload in-process")
+    g.add_argument("--host", default="127.0.0.1")
+    g.add_argument("--port", type=int, default=8777)
+    g.add_argument("--connect", default=None, metavar="HOST:PORT",
+                   help="replay the seeded workload against a running "
+                        "--listen server (no model is built)")
+    add_fault_flags(ap)
     args = ap.parse_args()
+    faults = injector_from_args(args)
 
     from .. import ckpt as ckptlib
     from ..configs import get_config
@@ -242,6 +409,9 @@ def main() -> None:
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    if args.connect:
+        run_connect(args, cfg.vocab, faults)
+        return
     api = build_model(cfg)
     if not cfg.has_decode:
         raise SystemExit(f"{cfg.arch_id} is encoder-only: nothing to serve")
@@ -269,6 +439,10 @@ def main() -> None:
             print(f"[serve] autotune warmup ({time.perf_counter()-t0:.1f}s): "
                   f"{len(winners)} apply shapes measured")
 
+    if args.listen:
+        run_listen(api, params, args, faults)
+        return
+
     workload = make_workload(args.requests, args.prompt_len, args.max_new,
                              cfg.vocab, args.rate, seed=args.seed,
                              shared_prefix=args.shared_prefix,
@@ -281,7 +455,8 @@ def main() -> None:
                       temperature=args.temperature,
                       max_queue=args.max_queue,
                       preempt_after_steps=args.preempt_after,
-                      rng=jax.random.PRNGKey(args.seed))
+                      rng=jax.random.PRNGKey(args.seed),
+                      faults=faults)
     results, rep = serve_continuous(sched, workload,
                                     deadline_s=args.deadline,
                                     slo_s=args.slo)

@@ -43,12 +43,16 @@ from .prefix import PrefixTrie
 from .scheduler import (
     Completion,
     Request,
+    RequestSnapshot,
     RequestState,
     Scheduler,
     SchedulerMetrics,
+    SchedulerSnapshot,
     SchedulerStalledError,
     Shed,
 )
+from .server import SSEServer
+from .supervisor import StreamEvent, Supervisor
 
 __all__ = [
     # engines
@@ -63,6 +67,12 @@ __all__ = [
     "Shed",
     "SchedulerStalledError",
     "FaultInjector",
+    # supervision + wire protocol (DESIGN.md §5)
+    "Supervisor",
+    "StreamEvent",
+    "SSEServer",
+    "RequestSnapshot",
+    "SchedulerSnapshot",
     # checkpoint preparation
     "crewize_params",
     "abstract_crew_params",

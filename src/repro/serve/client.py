@@ -1,0 +1,118 @@
+"""Blocking SSE client for the front door (std-lib ``http.client``).
+
+The reference consumer of the wire protocol (docs/serving.md): the
+chaos benchmark, the CI smoke test, and ``launch/serve.py --connect``
+all speak through :func:`stream_generate`, which doubles as the chaos
+*instrument* — ``disconnect_after=k`` hangs up after ``k`` token frames
+(k=0: before the first) and ``stall_s`` stops reading mid-stream to
+exercise the server's write timeout and send-queue backpressure.
+"""
+from __future__ import annotations
+
+import http.client
+import json
+import time
+from typing import Optional
+
+__all__ = ["stream_generate", "get_json"]
+
+
+def get_json(host: str, port: int, path: str,
+             timeout: float = 10.0) -> dict:
+    """GET ``path`` and decode the JSON body; ``status`` and
+    ``retry_after`` (header, if present) are merged into the result."""
+    conn = http.client.HTTPConnection(host, port, timeout=timeout)
+    try:
+        conn.request("GET", path)
+        resp = conn.getresponse()
+        body = resp.read()
+        out = json.loads(body.decode() or "{}")
+        out["status"] = resp.status
+        retry = resp.getheader("Retry-After")
+        if retry is not None:
+            out["retry_after"] = int(retry)
+        return out
+    finally:
+        conn.close()
+
+
+def stream_generate(host: str, port: int, prompt, *,
+                    max_new: int = 32,
+                    eos_id: Optional[int] = None,
+                    deadline_s: Optional[float] = None,
+                    priority: int = 0,
+                    tenant: Optional[str] = None,
+                    disconnect_after: Optional[int] = None,
+                    stall_s: float = 0.0,
+                    stall_at: int = 1,
+                    timeout: float = 60.0) -> dict:
+    """POST one generation and consume its SSE stream.
+
+    Returns a dict: ``http_status``, ``rid`` (from ``X-Request-Id``,
+    or the error body's rid for typed sheds, or -1 when rejected before
+    admission assigned one),
+    ``tokens`` / ``logprobs`` / ``indices`` (token frames received, in
+    order), ``done`` (the final done-frame payload or None),
+    ``disconnected`` (True when this client hung up on purpose), and
+    ``retry_after`` when the server sent the header.
+
+    ``disconnect_after=k`` closes the socket after ``k`` token frames
+    (0 = immediately after the response headers); ``stall_s`` sleeps
+    that long before reading the ``stall_at``-th token frame, modelling
+    a client that stops draining its socket.
+    """
+    conn = http.client.HTTPConnection(host, port, timeout=timeout)
+    out = {"http_status": 0, "rid": -1, "tokens": [], "logprobs": [],
+           "indices": [], "done": None, "disconnected": False}
+    try:
+        body = {"prompt": [int(t) for t in prompt], "max_new": max_new,
+                "eos_id": eos_id, "deadline_s": deadline_s,
+                "priority": priority, "tenant": tenant}
+        conn.request("POST", "/v1/generate", body=json.dumps(body),
+                     headers={"Content-Type": "application/json",
+                              "Connection": "close"})
+        resp = conn.getresponse()
+        out["http_status"] = resp.status
+        retry = resp.getheader("Retry-After")
+        if retry is not None:
+            out["retry_after"] = int(retry)
+        if resp.status != 200:
+            payload = json.loads(resp.read().decode() or "{}")
+            out["error"] = payload.get("error")
+            if "rid" in payload:
+                out["rid"] = int(payload["rid"])
+            return out
+        out["rid"] = int(resp.getheader("X-Request-Id", "-1"))
+
+        if disconnect_after == 0:
+            out["disconnected"] = True
+            return out
+
+        event = None
+        n_tok = 0
+        while True:
+            line = resp.readline()
+            if not line:
+                break               # server closed (end of stream)
+            line = line.strip()
+            if line.startswith(b"event:"):
+                event = line.split(b":", 1)[1].strip().decode()
+            elif line.startswith(b"data:"):
+                data = json.loads(line.split(b":", 1)[1].decode())
+                if event == "token":
+                    n_tok += 1
+                    if stall_s > 0.0 and n_tok == stall_at:
+                        time.sleep(stall_s)
+                    out["indices"].append(data["i"])
+                    out["tokens"].append(data["token"])
+                    out["logprobs"].append(data["logprob"])
+                    if (disconnect_after is not None
+                            and n_tok >= disconnect_after):
+                        out["disconnected"] = True
+                        return out
+                elif event == "done":
+                    out["done"] = data
+                    return out
+    finally:
+        conn.close()
+    return out

@@ -27,6 +27,20 @@ Hooks, and where :class:`~repro.serve.Scheduler` calls them:
   (once per step).  Exercises resume and warm admits with missing
   blocks; matches just shorten, outputs must be unchanged.
 
+Hooks called by the supervision layer (``serve.supervisor`` /
+``serve.server``), same purity contract:
+
+* ``should_crash()`` — simulate an engine crash at this pump step
+  (once per step attempt).  The supervisor must snapshot, rebuild via
+  ``Scheduler.reset(force=True)``, restore, and resume every stream
+  greedy-token-identically.
+* ``disconnect_after(rid)`` — token count after which this client
+  connection vanishes mid-stream, or None to stay (once per accepted
+  stream).  Exercises disconnect → ``cancel(rid)`` propagation.
+* ``client_stall()`` — seconds a client stops reading its socket
+  (once per stream).  Exercises per-connection write timeouts and
+  send-queue backpressure.
+
 ``trace`` records every *injected* fault as ``(hook, call_index, ...)``
 tuples — the schedule two same-seed runs must agree on.
 
@@ -56,13 +70,21 @@ class FaultInjector:
     same decisions for the same call sequence.
     """
 
-    _HOOKS = ("delay", "preempt", "expire", "drop")
+    # append-only: each hook's RNG stream is seeded from its index
+    # here, so reordering or inserting would silently reshuffle every
+    # existing seeded schedule the tests pin
+    _HOOKS = ("delay", "preempt", "expire", "drop",
+              "crash", "disconnect", "stall")
 
     def __init__(self, seed: int = 0, *,
                  delay_p: float = 0.0, max_delay_s: float = 0.0,
                  preempt_p: float = 0.0,
                  expire_p: float = 0.0,
-                 drop_p: float = 0.0, max_drop: int = 1):
+                 drop_p: float = 0.0, max_drop: int = 1,
+                 crash_p: float = 0.0,
+                 disconnect_p: float = 0.0,
+                 max_disconnect_tokens: int = 8,
+                 stall_p: float = 0.0, max_stall_s: float = 0.0):
         self.seed = int(seed)
         self.delay_p = float(delay_p)
         self.max_delay_s = float(max_delay_s)
@@ -70,6 +92,11 @@ class FaultInjector:
         self.expire_p = float(expire_p)
         self.drop_p = float(drop_p)
         self.max_drop = int(max_drop)
+        self.crash_p = float(crash_p)
+        self.disconnect_p = float(disconnect_p)
+        self.max_disconnect_tokens = int(max_disconnect_tokens)
+        self.stall_p = float(stall_p)
+        self.max_stall_s = float(max_stall_s)
         self._rng = {
             hook: np.random.default_rng(
                 np.random.SeedSequence(entropy=self.seed, spawn_key=(i,)))
@@ -127,13 +154,47 @@ class FaultInjector:
             self.trace.append(("drop", n, dropped))
         return dropped
 
+    def should_crash(self) -> bool:
+        """Simulate an engine crash before this supervisor pump step."""
+        n = self._tick("crash")
+        hit = self._rng["crash"].random() < self.crash_p
+        if hit:
+            self.trace.append(("crash", n))
+        return hit
+
+    def disconnect_after(self, rid: int) -> Optional[int]:
+        """Token count after which the client for ``rid`` drops its
+        connection mid-stream (0 = before the first token), or None to
+        stay connected for the whole stream."""
+        n = self._tick("disconnect")
+        rng = self._rng["disconnect"]
+        hit = rng.random() < self.disconnect_p
+        k = int(rng.integers(0, self.max_disconnect_tokens + 1))
+        if not hit:                                  # both drawn either
+            return None                              # way: fixed stream
+        self.trace.append(("disconnect", n, rid, k))  # rate per call
+        return k
+
+    def client_stall(self) -> float:
+        """Seconds this stream's client stops reading (0 = never)."""
+        n = self._tick("stall")
+        rng = self._rng["stall"]
+        hit = rng.random() < self.stall_p
+        dt = float(rng.random()) * self.max_stall_s  # fixed stream rate
+        if not hit or dt <= 0.0:
+            return 0.0
+        self.trace.append(("stall", n, round(dt, 6)))
+        return dt
+
 
 def default_injector() -> Optional["FaultInjector"]:
     """The suite-wide benign injector, or None when ``REPRO_FAULTS`` is
     unset/0.  The value seeds the schedule (``REPRO_FAULTS=7`` → seed 7),
     so CI can sweep schedules by changing one env var.  Only
-    output-preserving faults are enabled: forced preemptions and pool
-    drops — never delays (slow) or expiries (change terminal statuses).
+    output-preserving faults are enabled: forced preemptions, pool
+    drops, and supervised crashes (recovery resumes every greedy stream
+    token-identically) — never delays or client stalls (slow), expiries
+    (change terminal statuses), or disconnects (cancel streams).
     """
     raw = os.environ.get("REPRO_FAULTS", "").strip()
     if not raw or raw == "0":
@@ -142,4 +203,5 @@ def default_injector() -> Optional["FaultInjector"]:
         seed = int(raw)
     except ValueError:
         seed = 1
-    return FaultInjector(seed, preempt_p=0.05, drop_p=0.05, max_drop=2)
+    return FaultInjector(seed, preempt_p=0.05, drop_p=0.05, max_drop=2,
+                         crash_p=0.05)

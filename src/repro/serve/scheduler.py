@@ -121,6 +121,7 @@ from .prefix import PrefixTrie
 
 __all__ = ["Scheduler", "SchedulerMetrics", "Request", "Completion",
            "RequestState", "Shed", "SchedulerStalledError",
+           "RequestSnapshot", "SchedulerSnapshot",
            "DEFAULT_BUCKETS", "DEFAULT_HORIZON", "DEFAULT_BLOCK_SIZE"]
 
 DEFAULT_BUCKETS: Tuple[int, ...] = (16, 32, 64, 128)
@@ -182,7 +183,42 @@ class Shed:
     an ``isinstance`` check.
     """
     rid: int
-    reason: str                 # "queue-full" | "tenant-rate"
+    reason: str                 # "queue-full" | "tenant-rate" | "draining"
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestSnapshot:
+    """Host-side descriptor of one outstanding (queued or in-flight)
+    request: everything needed to re-admit it after a crash so a greedy
+    stream resumes token-identically (DESIGN.md §5 "wire protocol &
+    supervision").  ``tokens``/``logprobs`` are what had been generated
+    at snapshot time; on restore they seed the scheduler's resume path,
+    so re-admission re-decodes (never re-prefills) anything a prefix-
+    pool hit does not cover and the full stream stays the greedy
+    stream."""
+    rid: int
+    prompt: Tuple[int, ...]
+    max_new: int
+    eos_id: Optional[int]
+    deadline_s: Optional[float]
+    priority: int
+    tenant: Optional[str]
+    submitted_s: float
+    preemptions: int
+    tokens: Tuple[int, ...] = ()
+    logprobs: Tuple[float, ...] = ()
+    ttft_s: Optional[float] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerSnapshot:
+    """Outstanding requests plus the rid high-water mark, captured by
+    :meth:`Scheduler.snapshot_requests` at a step boundary.  ``restore``
+    after ``reset(force=True)`` re-queues every request under its
+    original rid and keeps new rids from colliding with already-
+    delivered ones."""
+    next_rid: int
+    requests: Tuple[RequestSnapshot, ...]
 
 
 class SchedulerStalledError(RuntimeError):
@@ -362,6 +398,11 @@ class Scheduler:
         With None the ``REPRO_FAULTS`` env var (when set) supplies the
         suite-wide benign injector; pass ``faults=False`` to force
         fault-free operation even under the env switch.
+      stream_tokens: record every emitted ``(rid, index, token,
+        logprob)`` in a buffer drained by :meth:`pop_tokens` — the feed
+        the SSE front door streams from (``serve.supervisor``).  Off by
+        default so batch drivers that only read Completions never grow
+        the buffer.
     """
 
     def __init__(
@@ -387,6 +428,7 @@ class Scheduler:
         tenant_burst: Optional[float] = None,
         preempt_after_steps: Optional[int] = None,
         faults: Union[FaultInjector, None, bool] = None,
+        stream_tokens: bool = False,
     ):
         if not api.cfg.has_decode:
             raise ValueError(f"{api.cfg.arch_id} is encoder-only: no decode")
@@ -515,6 +557,9 @@ class Scheduler:
         self._tenant_t: Dict[str, float] = {}           # last refill time
         self._cancel_pending: set = set()               # in-flight cancels
         self._starved_steps = 0     # consecutive full-slot steps w/ queue
+        self._draining = False      # begin_drain(): submit sheds new work
+        self._stream_tokens = bool(stream_tokens)
+        self._stream: List[Tuple[int, int, int, float]] = []
         self._faults: Optional[FaultInjector] = (
             default_injector() if faults is None
             else (faults if isinstance(faults, FaultInjector) else None))
@@ -772,6 +817,13 @@ class Scheduler:
                       submitted_s=time.perf_counter(),
                       deadline_s=deadline_s, priority=int(priority),
                       tenant=tenant)
+        if self._draining:
+            # a draining scheduler admits nothing: the newcomer gets its
+            # typed terminal immediately instead of queueing forever
+            # behind a front door that will never run it
+            self._terminal(req, RequestState.SHED,
+                           "draining: not admitting new work")
+            return Shed(rid, "draining")
         if not self._tenant_admit(req):
             self._terminal(req, RequestState.SHED,
                            f"tenant-rate: {tenant} over token budget")
@@ -824,6 +876,127 @@ class Scheduler:
     def pending(self) -> int:
         """Queued + in-flight request count."""
         return self._queue_len() + len(self._live)
+
+    # ------------------------------------------------------------------
+    # Drain / snapshot / token-stream surface (serve.supervisor)
+    # ------------------------------------------------------------------
+
+    @property
+    def draining(self) -> bool:
+        """True once :meth:`begin_drain` stopped admission."""
+        return self._draining
+
+    def begin_drain(self) -> None:
+        """Stop admitting: every subsequent ``submit`` returns a typed
+        ``Shed(reason="draining")`` with its terminal Completion, while
+        already-queued and in-flight work keeps running to completion.
+        Survives ``reset(force=True)`` so crash recovery mid-drain
+        stays draining; only a clean (idle) reset re-opens admission."""
+        self._draining = True
+
+    @property
+    def faults(self) -> Optional[FaultInjector]:
+        """The armed chaos injector (None when fault-free) — read by the
+        supervisor for the ``should_crash`` hook."""
+        return self._faults
+
+    @property
+    def stream_tokens(self) -> bool:
+        """Whether per-token stream records are being collected."""
+        return self._stream_tokens
+
+    def pop_tokens(self) -> List[Tuple[int, int, int, float]]:
+        """Drain the per-token stream buffer: ``(rid, index, token,
+        logprob)`` tuples in emission order since the last call
+        (requires ``stream_tokens=True``).  ``index`` is the token's
+        absolute position in the rid's generated stream — after a
+        preempt-resume fallback or crash recovery re-decodes tokens, the
+        same indices are re-emitted with (greedy) identical tokens, so a
+        consumer that tracks a per-rid sent count dedups exactly."""
+        out, self._stream = self._stream, []
+        return out
+
+    def _snap(self, req: Request) -> RequestSnapshot:
+        rid = req.rid
+        return RequestSnapshot(
+            rid=rid,
+            prompt=tuple(int(t) for t in req.prompt),
+            max_new=req.max_new,
+            eos_id=req.eos_id,
+            deadline_s=req.deadline_s,
+            priority=req.priority,
+            tenant=req.tenant,
+            submitted_s=req.submitted_s,
+            preemptions=req.preemptions,
+            tokens=tuple(int(t) for t in self._out_toks.get(rid, [])),
+            logprobs=tuple(float(x) for x in self._out_lps.get(rid, [])),
+            ttft_s=self._ttft.get(rid),
+        )
+
+    def snapshot_requests(self) -> SchedulerSnapshot:
+        """Descriptors of every outstanding request — queued (parked
+        preemptions included) in pop order, then in-flight by rid — plus
+        the rid high-water mark.  Pure host bookkeeping: no device state
+        is captured, because recovery rebuilds KV from the descriptors
+        (re-prefill + re-decode is greedy-token-identical; DESIGN.md §5
+        recovery napkin math)."""
+        snaps = [self._snap(req) for req in self._queue_iter()]
+        snaps += [self._snap(self._live[rid]) for rid in sorted(self._live)]
+        return SchedulerSnapshot(self._next_rid, tuple(snaps))
+
+    def restore(self, snapshot: SchedulerSnapshot) -> int:
+        """Re-queue every snapshotted request under its original rid
+        (typically right after ``reset(force=True)``).  Requests that
+        had generated tokens re-enter through the scheduler's resume
+        path: their kept tokens seed ``Completion.tokens``, the prompt
+        re-prefills (as a prefix-pool hit when another recovered request
+        re-cached it first), and anything a hit does not cover is
+        re-decoded — bitwise the same tokens for greedy streams, so a
+        consumer deduping on token index sees one continuous stream
+        across the crash.  Returns the number of requests restored."""
+        queued = {r.rid for r in self._queue_iter()}
+        for snap in snapshot.requests:
+            rid = snap.rid
+            if (rid in self._live or rid in queued
+                    or rid in self._terminal_state):
+                raise ValueError(f"rid {rid} already present; restore "
+                                 "expects a reset scheduler")
+            req = Request(rid, np.asarray(snap.prompt, np.int32),
+                          int(snap.max_new), snap.eos_id,
+                          submitted_s=snap.submitted_s,
+                          deadline_s=snap.deadline_s,
+                          priority=int(snap.priority),
+                          tenant=snap.tenant,
+                          preemptions=snap.preemptions)
+            if snap.tokens:
+                self._out_toks[rid] = [int(t) for t in snap.tokens]
+                self._out_lps[rid] = [float(x) for x in snap.logprobs]
+            if snap.ttft_s is not None:
+                self._ttft[rid] = snap.ttft_s
+            self._queue_push(req)
+            queued.add(rid)
+        self._next_rid = max(self._next_rid, int(snapshot.next_rid))
+        return len(snapshot.requests)
+
+    def outstanding_rids(self) -> List[int]:
+        """Queued + in-flight rids (queued in pop order, then in-flight
+        by rid) — what a drain must retire before shutdown."""
+        out = [req.rid for req in self._queue_iter()]
+        out += sorted(self._live)
+        return out
+
+    def step_budget(self) -> int:
+        """Watchdog step budget for draining the *current* outstanding
+        work (see ``run``).  The supervisor uses it to bound a graceful
+        drain: a drain that exceeds this budget is treated as wedged
+        and the remaining requests are cancelled."""
+        return self._step_budget()
+
+    def progress_signature(self) -> tuple:
+        """Opaque engine-state fingerprint; unchanged across many busy
+        steps means no forward progress (the supervisor's out-of-band
+        stall detector compares these, mirroring ``run``'s watchdog)."""
+        return self._progress_sig()
 
     def _batch_bucket(self, n: int) -> int:
         return _bucket_for(self._batch_buckets, n)
@@ -915,17 +1088,23 @@ class Scheduler:
             errs += self._trie.check_invariants()
         return errs
 
-    def reset(self, *, faults: object = _KEEP) -> None:
+    def reset(self, *, faults: object = _KEEP,
+              force: bool = False) -> None:
         """Return an idle scheduler to its fresh-boot state, keeping the
         compiled programs (the jit caches live on bound methods, so a
         reset scheduler replays traffic with zero retracing — the
         property harness leans on this to run hundreds of workloads).
-        Raises RuntimeError with work still queued or in flight.
-        ``faults`` optionally swaps the chaos injector, with the same
-        semantics as the constructor argument; by default the current
-        injector is kept (its RNG streams are *not* rewound).
+        Raises RuntimeError with work still queued or in flight, unless
+        ``force=True`` — the crash-recovery path: outstanding requests
+        are discarded *without* terminal Completions, on the contract
+        that the caller captured them with :meth:`snapshot_requests`
+        first and will :meth:`restore` them.  ``faults`` optionally
+        swaps the chaos injector, with the same semantics as the
+        constructor argument; by default the current injector is kept
+        (its RNG streams are *not* rewound).  A drain in progress
+        (:meth:`begin_drain`) survives the reset.
         """
-        if self._live or self._queue_len():
+        if not force and (self._live or self._queue_len()):
             raise RuntimeError("reset() with work queued or in flight")
         self._pk = jnp.zeros_like(self._pk)
         self._pv = jnp.zeros_like(self._pv)
@@ -958,6 +1137,11 @@ class Scheduler:
         self._tenant_t = {}
         self._cancel_pending = set()
         self._starved_steps = 0
+        self._stream = []
+        if not force:
+            # a clean reset is a fresh boot and may admit again; a
+            # forced (crash-recovery) reset keeps a drain in progress
+            self._draining = False
         if faults is not _KEEP:
             self._faults = (
                 default_injector() if faults is None
@@ -1028,6 +1212,9 @@ class Scheduler:
             self._ttft[rid] = time.perf_counter() - req.submitted_s
         self._out_toks[rid].append(tok)
         self._out_lps[rid].append(lp)
+        if self._stream_tokens:
+            self._stream.append((rid, len(self._out_toks[rid]) - 1,
+                                 tok, lp))
         self._slot_tok[slot] = tok
         self._slot_ngen[slot] += 1
         if ((req.eos_id is not None and tok == req.eos_id)
@@ -1047,9 +1234,20 @@ class Scheduler:
         expire deadlines (queued and in-flight), and let the chaos layer
         force expiries / drop pool blocks.  Runs before admission so a
         freed slot backfills in the same step."""
-        for rid in sorted(self._cancel_pending & set(self._live)):
-            self._finish_slot(self._slot_of(rid), RequestState.CANCELLED,
-                              "cancelled mid-flight")
+        for rid in sorted(self._cancel_pending):
+            if rid in self._live:
+                self._finish_slot(self._slot_of(rid),
+                                  RequestState.CANCELLED,
+                                  "cancelled mid-flight")
+                continue
+            # A cancel can land on a rid that was preempted back to the
+            # queue (or retired) between cancel() and this boundary;
+            # dropping it silently would orphan the request forever.
+            req = self._queue_remove(rid)
+            if req is not None:
+                self._terminal(req, RequestState.CANCELLED,
+                               "cancelled while parked")
+            # else: retired on its own first — already terminal, no-op
         self._cancel_pending.clear()
         now = time.perf_counter()
 

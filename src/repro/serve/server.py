@@ -1,0 +1,400 @@
+"""Asyncio HTTP/SSE front door over the supervised scheduler.
+
+Std-lib only: a hand-rolled HTTP/1.1 responder on
+``asyncio.start_server`` — the endpoint surface is four routes
+(docs/serving.md), not a framework's worth of them, and owning the
+socket is what makes the robustness story testable: disconnects are
+*observed* (EOF on the request socket), backpressure is a bounded
+per-connection send queue, and a slow client hits an explicit write
+timeout instead of wedging the pump.
+
+Routes:
+
+* ``GET /healthz`` — liveness: the process is up (200 always).
+* ``GET /readyz`` — readiness: 200 while accepting, 503 +
+  ``Retry-After`` once draining or stopped.
+* ``GET /metrics`` — scheduler counters + supervisor recovery stats.
+* ``POST /v1/generate`` — submit ``{"prompt": [ints], "max_new": n,
+  "eos_id": …, "deadline_s": …, "priority": …, "tenant": …}``; the
+  response is an SSE stream (``X-Request-Id`` header carries the rid):
+  one ``event: token`` frame per generated token, then exactly one
+  ``event: done`` frame with the terminal Completion.  Admission
+  rejections map to HTTP: draining / queue-full → 503 + ``Retry-After``,
+  tenant-rate → 429; malformed bodies → 400.
+
+Threading model: the asyncio loop runs the sockets; the supervisor's
+pump thread runs the engine and delivers :class:`StreamEvent` callbacks,
+which hop onto the loop via ``call_soon_threadsafe`` into a bounded
+``asyncio.Queue`` per connection.  ``submit`` happens in a worker thread
+(``asyncio.to_thread``) because the supervisor lock can be held for a
+whole engine step.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import json
+import threading
+from typing import Optional, Tuple
+
+from .scheduler import Shed
+from .supervisor import StreamEvent, Supervisor
+
+__all__ = ["SSEServer"]
+
+_MAX_HEADER_BYTES = 16384
+_MAX_BODY_BYTES = 1 << 20
+
+
+def _json_bytes(obj) -> bytes:
+    return json.dumps(obj, separators=(",", ":")).encode()
+
+
+def _response(status: str, body: bytes,
+              content_type: str = "application/json",
+              extra: Tuple[Tuple[str, str], ...] = ()) -> bytes:
+    head = [f"HTTP/1.1 {status}",
+            f"Content-Type: {content_type}",
+            f"Content-Length: {len(body)}",
+            "Connection: close"]
+    head += [f"{k}: {v}" for k, v in extra]
+    return ("\r\n".join(head) + "\r\n\r\n").encode() + body
+
+
+class SSEServer:
+    """Serve a :class:`Supervisor` over HTTP/SSE (see module docstring).
+
+    ``port=0`` binds an ephemeral port; read ``server.port`` after
+    :meth:`start`.  ``send_queue`` bounds the per-connection event
+    queue: a client that stops reading long enough to overflow it (or
+    to trip ``write_timeout_s`` on a single write) is treated as
+    disconnected and its request cancelled — backpressure never reaches
+    the pump thread.
+    """
+
+    def __init__(self, supervisor: Supervisor, *,
+                 host: str = "127.0.0.1", port: int = 0,
+                 write_timeout_s: float = 10.0,
+                 send_queue: int = 256,
+                 retry_after_s: int = 1):
+        self._sup = supervisor
+        self.host = host
+        self.port = int(port)
+        self._write_timeout_s = float(write_timeout_s)
+        self._send_queue = int(send_queue)
+        self._retry_after_s = int(retry_after_s)
+        self._server: Optional[asyncio.AbstractServer] = None
+        self._loop: Optional[asyncio.AbstractEventLoop] = None
+        self._thread: Optional[threading.Thread] = None
+        self._started = threading.Event()
+        self._drain_signals = 0
+        self._conns: set = set()
+
+    # ------------------------------------------------------------------
+    # Lifecycle
+    # ------------------------------------------------------------------
+
+    async def start(self) -> "SSEServer":
+        """Bind the listener on the current event loop."""
+        self._loop = asyncio.get_running_loop()
+        self._server = await asyncio.start_server(
+            self._handle, self.host, self.port)
+        self.port = self._server.sockets[0].getsockname()[1]
+        self._started.set()
+        return self
+
+    async def aclose(self) -> None:
+        if self._server is not None:
+            self._server.close()
+            await self._server.wait_closed()
+            self._server = None
+
+    def install_signal_handlers(self) -> None:
+        """SIGINT/SIGTERM → graceful drain; a second signal → hard stop
+        (CLI mode only; background/test servers skip this)."""
+        import signal
+        assert self._loop is not None
+        for sig in (signal.SIGINT, signal.SIGTERM):
+            self._loop.add_signal_handler(sig, self._on_signal)
+
+    def _on_signal(self) -> None:
+        self._drain_signals += 1
+        if self._drain_signals == 1:
+            # readiness flips to 503 immediately; in-flight work drains
+            # on the pump thread, bounded by the watchdog budget
+            asyncio.ensure_future(self._stop_when_idle())
+        else:
+            asyncio.get_event_loop().stop()
+
+    async def _stop_when_idle(self) -> None:
+        # begin_drain can contend on the supervisor lock (held across
+        # whole engine steps) — keep that wait off the event loop so
+        # health probes stay responsive throughout the drain
+        await asyncio.to_thread(self._sup.begin_drain)
+        await asyncio.to_thread(self._sup.wait_idle, 60.0)
+        # the engine is idle but open streams may still hold queued
+        # frames (the final tokens + done); let them flush before the
+        # loop dies or the client sees EOF instead of a done event
+        if self._conns:
+            await asyncio.wait(set(self._conns),
+                               timeout=self._write_timeout_s)
+        await self.aclose()
+        assert self._loop is not None
+        self._loop.stop()
+
+    def start_background(self) -> "SSEServer":
+        """Run the loop + listener on a daemon thread (tests and the
+        chaos benchmark); returns once the port is bound."""
+        def _run() -> None:
+            loop = asyncio.new_event_loop()
+            self._loop = loop
+            asyncio.set_event_loop(loop)
+            loop.run_until_complete(self.start())
+            loop.run_forever()
+            loop.close()
+
+        self._thread = threading.Thread(target=_run, name="sse-server",
+                                        daemon=True)
+        self._thread.start()
+        if not self._started.wait(timeout=10.0):
+            raise RuntimeError("SSE server failed to bind")
+        return self
+
+    def stop_background(self) -> None:
+        loop, self._thread = self._loop, None
+        if loop is None:
+            return
+
+        def _shutdown() -> None:
+            task = asyncio.ensure_future(self.aclose())
+            task.add_done_callback(lambda _: loop.stop())
+
+        loop.call_soon_threadsafe(_shutdown)
+
+    # ------------------------------------------------------------------
+    # HTTP plumbing
+    # ------------------------------------------------------------------
+
+    async def _write(self, writer: asyncio.StreamWriter,
+                     data: bytes) -> None:
+        writer.write(data)
+        await asyncio.wait_for(writer.drain(), self._write_timeout_s)
+
+    async def _handle(self, reader: asyncio.StreamReader,
+                      writer: asyncio.StreamWriter) -> None:
+        task = asyncio.current_task()
+        self._conns.add(task)
+        try:
+            await self._handle_inner(reader, writer)
+        finally:
+            self._conns.discard(task)
+
+    async def _handle_inner(self, reader: asyncio.StreamReader,
+                            writer: asyncio.StreamWriter) -> None:
+        try:
+            head = await asyncio.wait_for(
+                reader.readuntil(b"\r\n\r\n"), timeout=30.0)
+        except (asyncio.IncompleteReadError, asyncio.TimeoutError,
+                asyncio.LimitOverrunError, ConnectionError):
+            writer.close()
+            return
+        if len(head) > _MAX_HEADER_BYTES:
+            await self._finish(writer, _response(
+                "431 Request Header Fields Too Large", b"{}"))
+            return
+        lines = head.decode("latin-1").split("\r\n")
+        try:
+            method, path, _ = lines[0].split(" ", 2)
+        except ValueError:
+            await self._finish(writer, _response("400 Bad Request", b"{}"))
+            return
+        headers = {}
+        for ln in lines[1:]:
+            if ":" in ln:
+                k, v = ln.split(":", 1)
+                headers[k.strip().lower()] = v.strip()
+        body = b""
+        clen = int(headers.get("content-length", 0) or 0)
+        if clen:
+            if clen > _MAX_BODY_BYTES:
+                await self._finish(writer, _response(
+                    "413 Payload Too Large", b"{}"))
+                return
+            try:
+                body = await asyncio.wait_for(
+                    reader.readexactly(clen), timeout=30.0)
+            except (asyncio.IncompleteReadError, asyncio.TimeoutError):
+                writer.close()
+                return
+        try:
+            await self._route(method, path, body, reader, writer)
+        except (ConnectionError, asyncio.TimeoutError):
+            writer.close()
+        except Exception:
+            try:
+                await self._finish(writer, _response(
+                    "500 Internal Server Error", b"{}"))
+            except Exception:
+                writer.close()
+
+    async def _finish(self, writer: asyncio.StreamWriter,
+                      payload: bytes) -> None:
+        try:
+            await self._write(writer, payload)
+        finally:
+            writer.close()
+
+    def _unavailable(self, reason: str) -> bytes:
+        return _response(
+            "503 Service Unavailable",
+            _json_bytes({"error": reason,
+                         "retry_after_s": self._retry_after_s}),
+            extra=(("Retry-After", str(self._retry_after_s)),))
+
+    async def _route(self, method: str, path: str, body: bytes,
+                     reader: asyncio.StreamReader,
+                     writer: asyncio.StreamWriter) -> None:
+        if method == "GET" and path == "/healthz":
+            await self._finish(writer, _response(
+                "200 OK", _json_bytes({"ok": True})))
+        elif method == "GET" and path == "/readyz":
+            if self._sup.accepting:
+                await self._finish(writer, _response(
+                    "200 OK", _json_bytes({"ready": True})))
+            else:
+                reason = ("draining" if self._sup.draining
+                          else "not accepting")
+                await self._finish(writer, self._unavailable(reason))
+        elif method == "GET" and path == "/metrics":
+            sched = self._sup.scheduler
+            payload = dataclasses.asdict(sched.metrics)
+            payload.update(
+                pending=sched.pending,
+                draining=self._sup.draining,
+                recoveries=self._sup.recoveries,
+            )
+            await self._finish(writer, _response(
+                "200 OK", _json_bytes(payload)))
+        elif method == "POST" and path == "/v1/generate":
+            await self._generate(body, reader, writer)
+        else:
+            await self._finish(writer, _response(
+                "404 Not Found", _json_bytes({"error": "no such route"})))
+
+    # ------------------------------------------------------------------
+    # The SSE stream
+    # ------------------------------------------------------------------
+
+    async def _generate(self, body: bytes,
+                        reader: asyncio.StreamReader,
+                        writer: asyncio.StreamWriter) -> None:
+        try:
+            spec = json.loads(body.decode() or "{}")
+            prompt = [int(t) for t in spec["prompt"]]
+            kwargs = dict(
+                max_new=int(spec.get("max_new", 32)),
+                eos_id=(None if spec.get("eos_id") is None
+                        else int(spec["eos_id"])),
+                deadline_s=(None if spec.get("deadline_s") is None
+                            else float(spec["deadline_s"])),
+                priority=int(spec.get("priority", 0)),
+                tenant=spec.get("tenant"),
+            )
+            if not prompt:
+                raise ValueError("empty prompt")
+        except (KeyError, TypeError, ValueError, json.JSONDecodeError) as e:
+            await self._finish(writer, _response(
+                "400 Bad Request", _json_bytes({"error": str(e)})))
+            return
+        if not self._sup.accepting:
+            await self._finish(writer, self._unavailable(
+                "draining" if self._sup.draining else "not accepting"))
+            return
+
+        loop = asyncio.get_running_loop()
+        queue: asyncio.Queue = asyncio.Queue(maxsize=self._send_queue)
+        overflow = asyncio.Event()
+
+        def _enqueue(ev: StreamEvent) -> None:
+            try:
+                queue.put_nowait(ev)
+            except asyncio.QueueFull:
+                overflow.set()
+
+        def on_event(ev: StreamEvent) -> None:
+            # pump thread → loop; bounded queue is the backpressure
+            loop.call_soon_threadsafe(_enqueue, ev)
+
+        # the supervisor lock can be held for a full engine step, so
+        # submit from a worker thread instead of blocking the loop
+        try:
+            res = await asyncio.to_thread(
+                self._sup.submit, prompt, on_event=on_event, **kwargs)
+        except ValueError as e:
+            await self._finish(writer, _response(
+                "400 Bad Request", _json_bytes({"error": str(e)})))
+            return
+        if isinstance(res, Shed):
+            if res.reason == "tenant-rate":
+                await self._finish(writer, _response(
+                    "429 Too Many Requests",
+                    _json_bytes({"error": res.reason, "rid": res.rid}),
+                    extra=(("Retry-After", str(self._retry_after_s)),)))
+            else:        # "draining" | "queue-full"
+                await self._finish(writer, self._unavailable(res.reason))
+            return
+        rid = res
+
+        await self._write(writer, (
+            "HTTP/1.1 200 OK\r\n"
+            "Content-Type: text/event-stream\r\n"
+            "Cache-Control: no-store\r\n"
+            "Connection: close\r\n"
+            f"X-Request-Id: {rid}\r\n\r\n").encode())
+
+        # the request is fully read, so any data/EOF now means the
+        # client went away → propagate as a cancel
+        eof_task = asyncio.ensure_future(reader.read(1))
+        try:
+            while True:
+                get_task = asyncio.ensure_future(queue.get())
+                done, _ = await asyncio.wait(
+                    {get_task, eof_task},
+                    return_when=asyncio.FIRST_COMPLETED)
+                if eof_task in done:
+                    get_task.cancel()
+                    self._sup.cancel(rid)
+                    break
+                if overflow.is_set():
+                    get_task.cancel()
+                    self._sup.cancel(rid)
+                    break
+                ev = get_task.result()
+                try:
+                    await self._write(writer, self._frame(ev))
+                except (ConnectionError, asyncio.TimeoutError, OSError):
+                    # reset or write-timeout: same as a disconnect
+                    self._sup.cancel(rid)
+                    break
+                if ev.kind == "done":
+                    break
+        finally:
+            eof_task.cancel()
+            writer.close()
+
+    @staticmethod
+    def _frame(ev: StreamEvent) -> bytes:
+        if ev.kind == "token":
+            data = {"i": ev.index, "token": ev.token,
+                    "logprob": round(ev.logprob, 6)}
+        else:
+            comp = ev.completion
+            data = {"rid": ev.rid, "status": comp.status,
+                    "reason": comp.reason,
+                    "prompt_len": comp.prompt_len,
+                    "n_tokens": int(comp.tokens.size),
+                    "tokens": [int(t) for t in comp.tokens],
+                    "ttft_s": round(float(comp.ttft_s), 6)}
+        return (f"event: {ev.kind}\r\n"
+                f"data: {json.dumps(data, separators=(',', ':'))}"
+                "\r\n\r\n").encode()

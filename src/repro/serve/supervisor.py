@@ -1,0 +1,373 @@
+"""Supervision layer over the synchronous scheduler (DESIGN.md §5).
+
+The :class:`~repro.serve.Scheduler` is a synchronous host loop: someone
+must pump ``step()``, route the ``[nb, H]`` horizon panels to whoever is
+waiting on each rid, and decide what happens when the engine stalls or a
+client vanishes.  :class:`Supervisor` is that someone — a worker thread
+that owns the scheduler and turns it into a long-lived service with
+three robustness guarantees:
+
+* **Disconnect propagation** — ``cancel(rid)`` routes to
+  ``Scheduler.cancel`` at the next step boundary; a dropped client can
+  never orphan a slot (the conservation audit stays clean).
+* **Graceful drain** — ``begin_drain()`` stops admission (the scheduler
+  sheds newcomers with a typed ``reason="draining"`` terminal) and the
+  pump finishes in-flight work, bounded by the scheduler's own watchdog
+  step budget; a drain that exceeds the budget cancels what remains
+  rather than hanging shutdown.
+* **Crash recovery** — on :class:`SchedulerStalledError`, an injected
+  crash fault (``FaultInjector.should_crash``), a supervisor-detected
+  stall, or an explicit :meth:`inject_crash`, the supervisor snapshots
+  every outstanding request descriptor, rebuilds the engine with
+  ``reset(force=True)`` (compiled programs are reused — no retracing),
+  and ``restore``s the snapshot.  Recovered requests re-enter through
+  the scheduler's resume path, so their streams continue
+  greedy-token-identically and consumers deduplicate on the absolute
+  token index (see :meth:`Scheduler.pop_tokens`).
+
+Subscribers attach per-rid callbacks at :meth:`submit`; each receives
+:class:`StreamEvent` values — ``kind="token"`` per generated token (in
+order, exactly once per index) and a final ``kind="done"`` carrying the
+terminal :class:`Completion`.  Callbacks run on the pump thread and must
+not block (the SSE server's callback just enqueues to an asyncio queue).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Callable, Dict, List, Optional, Set, Union
+
+from .scheduler import (
+    Completion,
+    Scheduler,
+    SchedulerStalledError,
+    Shed,
+)
+
+__all__ = ["StreamEvent", "Supervisor"]
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamEvent:
+    """One per-request event delivered to a subscriber callback.
+
+    ``kind="token"`` carries ``index`` (absolute position in the rid's
+    generated stream), ``token`` and ``logprob``; ``kind="done"``
+    carries the terminal :class:`Completion`.  Every rid sees its token
+    events in index order exactly once, then exactly one done event —
+    across disconnects, preemptions, and supervised crash recoveries.
+    """
+    kind: str                   # "token" | "done"
+    rid: int
+    index: int = -1
+    token: int = -1
+    logprob: float = 0.0
+    completion: Optional[Completion] = None
+
+
+class _InjectedCrash(RuntimeError):
+    """Raised inside the pump to simulate an engine crash."""
+
+
+class Supervisor:
+    """Own a :class:`Scheduler` on a pump thread; supervise its faults.
+
+    The scheduler must have been built with ``stream_tokens=True`` (the
+    supervisor routes the per-token buffer to subscribers).  All public
+    methods are thread-safe; scheduler access is serialized by one lock,
+    so ``submit``/``cancel`` interleave with ``step()`` only at step
+    boundaries — the same atomicity the scheduler's own lifecycle sweep
+    assumes.
+
+    ``max_recoveries`` bounds *consecutive* recoveries with no forward
+    progress (a delivered token or terminal resets the counter): past
+    it the supervisor stops restoring and cancels the survivors instead
+    of crash-looping forever.
+    """
+
+    def __init__(self, sched: Scheduler, *,
+                 max_recoveries: int = 8,
+                 stall_steps: int = 16,
+                 idle_poll_s: float = 0.05,
+                 yield_s: float = 0.001):
+        if not sched.stream_tokens:
+            raise ValueError("Supervisor requires a Scheduler built "
+                             "with stream_tokens=True")
+        self._sched = sched
+        self._max_recoveries = int(max_recoveries)
+        self._stall_steps = int(stall_steps)
+        self._idle_poll_s = float(idle_poll_s)
+        self._yield_s = float(yield_s)
+        self._lock = threading.RLock()
+        self._wake = threading.Event()
+        self._idle = threading.Event()
+        self._idle.set()
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self._subs: Dict[int, Callable[[StreamEvent], None]] = {}
+        self._sent: Dict[int, int] = {}
+        self._cancelled: Set[int] = set()
+        self._crash_cause: Optional[str] = None
+        self._drain_budget: Optional[int] = None
+        self._drain_steps = 0
+        self._drain_cancelled = False
+        self._last_sig: Optional[tuple] = None
+        self._stalled = 0
+        self._consecutive = 0
+        self.results: Dict[int, Completion] = {}
+        self.recoveries = 0
+        self.recovery_log: List[dict] = []
+
+    # ------------------------------------------------------------------
+    # Lifecycle
+    # ------------------------------------------------------------------
+
+    def start(self) -> "Supervisor":
+        """Start the pump thread (idempotent)."""
+        if self._thread is None or not self._thread.is_alive():
+            self._stop.clear()
+            self._thread = threading.Thread(
+                target=self._pump, name="scheduler-pump", daemon=True)
+            self._thread.start()
+        return self
+
+    def stop(self, *, drain: bool = True, timeout: float = 60.0) -> None:
+        """Stop the pump; with ``drain`` (default) finish outstanding
+        work first (bounded by the watchdog budget), else abandon it."""
+        if drain and self._thread is not None and self._thread.is_alive():
+            self.begin_drain()
+            self.wait_idle(timeout)
+        self._stop.set()
+        self._wake.set()
+        if self._thread is not None:
+            self._thread.join(timeout=timeout)
+            self._thread = None
+
+    @property
+    def scheduler(self) -> Scheduler:
+        """The supervised engine (for metrics / audit reads; mutate it
+        only through the supervisor)."""
+        return self._sched
+
+    @property
+    def running(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
+
+    @property
+    def draining(self) -> bool:
+        return self._sched.draining
+
+    @property
+    def accepting(self) -> bool:
+        """True while new submissions will be admitted."""
+        return (self.running and not self._stop.is_set()
+                and not self._sched.draining)
+
+    # ------------------------------------------------------------------
+    # Client surface
+    # ------------------------------------------------------------------
+
+    def submit(self, prompt, *, max_new: int = 32,
+               eos_id: Optional[int] = None,
+               deadline_s: Optional[float] = None,
+               priority: int = 0,
+               tenant: Optional[str] = None,
+               on_event: Optional[Callable[[StreamEvent], None]] = None,
+               ) -> Union[int, Shed]:
+        """Submit one request; subscription is atomic with admission, so
+        no token can be emitted before ``on_event`` is attached.  A shed
+        request (typed :class:`Shed` return) still delivers its terminal
+        done event to ``on_event`` before this returns."""
+        with self._lock:
+            res = self._sched.submit(prompt, max_new=max_new,
+                                     eos_id=eos_id, deadline_s=deadline_s,
+                                     priority=priority, tenant=tenant)
+            rid = res if isinstance(res, int) else res.rid
+            if on_event is not None:
+                self._subs[rid] = on_event
+            self._sent.setdefault(rid, 0)
+            if not isinstance(res, int):
+                self._deliver_locked()   # shed: terminal already exists
+            self._idle.clear()
+        self._wake.set()
+        return res
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel ``rid`` (disconnect propagation).  Remembered across a
+        crash recovery: a restored request that was cancelled before the
+        crash is re-cancelled after restore, never resurrected.
+        Idempotent — unknown and already-terminal rids are a no-op."""
+        with self._lock:
+            self._cancelled.add(rid)
+            took = self._sched.cancel(rid)
+        self._wake.set()
+        return took
+
+    def begin_drain(self) -> None:
+        """Stop admitting (newcomers shed with ``reason="draining"``)
+        and let the pump finish in-flight work, bounded by the
+        scheduler's watchdog step budget captured now."""
+        # flip the flag before taking the lock: a plain bool write is
+        # atomic, and readiness probes must flip to 503 immediately —
+        # not after the pump finishes a (possibly compiling) step
+        self._sched.begin_drain()
+        with self._lock:
+            if self._drain_budget is None:
+                self._drain_budget = max(64, self._sched.step_budget())
+                self._drain_steps = 0
+        self._wake.set()
+
+    def drain(self, timeout: float = 60.0) -> bool:
+        """``begin_drain`` + wait for outstanding work to finish."""
+        self.begin_drain()
+        return self.wait_idle(timeout)
+
+    def wait_idle(self, timeout: Optional[float] = None) -> bool:
+        """Block until nothing is queued or in flight (and every
+        terminal has been delivered); False on timeout."""
+        return self._idle.wait(timeout)
+
+    def inject_crash(self, reason: str = "operator-injected crash") -> None:
+        """Force one supervised crash/recovery cycle at the next pump
+        step (deterministic hook for tests and the chaos benchmark)."""
+        with self._lock:
+            self._crash_cause = reason
+        self._wake.set()
+
+    # ------------------------------------------------------------------
+    # Pump internals (all _locked methods require self._lock held)
+    # ------------------------------------------------------------------
+
+    def _emit(self, rid: int, ev: StreamEvent) -> None:
+        cb = self._subs.get(rid)
+        if cb is not None:
+            try:
+                cb(ev)
+            except Exception:
+                # a broken subscriber must not take the pump down; its
+                # connection-level handler owns client-visible errors
+                self._subs.pop(rid, None)
+
+    def _deliver_locked(self) -> None:
+        """Route buffered tokens (deduplicated on absolute index) and
+        terminal Completions to subscribers."""
+        progressed = False
+        for rid, idx, tok, lp in self._sched.pop_tokens():
+            sent = self._sent.get(rid, 0)
+            if idx < sent:
+                continue            # recovery re-decode: already delivered
+            progressed = True
+            self._emit(rid, StreamEvent("token", rid, index=idx,
+                                        token=tok, logprob=lp))
+            self._sent[rid] = idx + 1
+        for rid, comp in self._sched.pop_results().items():
+            progressed = True
+            sent = self._sent.get(rid, 0)
+            for i in range(sent, comp.tokens.size):
+                self._emit(rid, StreamEvent(
+                    "token", rid, index=i, token=int(comp.tokens[i]),
+                    logprob=float(comp.logprobs[i])))
+            self.results[rid] = comp
+            self._emit(rid, StreamEvent("done", rid, completion=comp))
+            self._subs.pop(rid, None)
+            self._sent.pop(rid, None)
+            self._cancelled.discard(rid)
+        if progressed:
+            self._consecutive = 0
+
+    def _recover_locked(self, cause: str) -> None:
+        """Snapshot → reset(force) → restore → re-apply cancels."""
+        self._deliver_locked()      # flush whatever already made it out
+        t0 = time.perf_counter()
+        self.recoveries += 1
+        self._consecutive += 1
+        snap = self._sched.snapshot_requests()
+        self._sched.reset(force=True)
+        give_up = self._consecutive > self._max_recoveries
+        restored = 0
+        if not give_up:
+            restored = self._sched.restore(snap)
+            # a subscriber may have seen fewer tokens than the engine
+            # had generated (crash between decode and delivery) — or,
+            # after restore, a prefix hit may keep more tokens than the
+            # truncate-and-re-decode path will re-emit.  Top up from
+            # the snapshot now; the dedup index keeps re-decoded tokens
+            # from double-delivering.
+            for rs in snap.requests:
+                sent = self._sent.get(rs.rid, 0)
+                for i in range(sent, len(rs.tokens)):
+                    self._emit(rs.rid, StreamEvent(
+                        "token", rs.rid, index=i, token=int(rs.tokens[i]),
+                        logprob=float(rs.logprobs[i])))
+                    self._sent[rs.rid] = i + 1
+            for rid in sorted(self._cancelled):
+                self._sched.cancel(rid)
+        else:
+            # crash loop: stop restoring, terminate the survivors so
+            # every rid still gets its exactly-one terminal Completion
+            self._sched.restore(snap)
+            for rs in snap.requests:
+                self._sched.cancel(rs.rid)
+        self._last_sig = None
+        self._stalled = 0
+        self.recovery_log.append({
+            "cause": cause,
+            "requests": len(snap.requests),
+            "restored": restored,
+            "gave_up": give_up,
+            "wall_s": time.perf_counter() - t0,
+        })
+
+    def _pump(self) -> None:
+        while not self._stop.is_set():
+            with self._lock:
+                if self._crash_cause is not None:
+                    # explicit inject_crash fires even on an idle engine
+                    # (an empty-snapshot recovery), never lies in wait
+                    # for an unrelated later request
+                    cause, self._crash_cause = self._crash_cause, None
+                    self._recover_locked(cause)
+                self._deliver_locked()
+                idle = self._sched.pending == 0
+                if idle:
+                    self._idle.set()
+            if idle:
+                self._wake.wait(self._idle_poll_s)
+                self._wake.clear()
+                continue
+            with self._lock:
+                if self._sched.pending == 0:
+                    continue
+                self._idle.clear()
+                try:
+                    faults = self._sched.faults
+                    if faults is not None and faults.should_crash():
+                        raise _InjectedCrash("fault-injected crash")
+                    self._sched.step()
+                    sig = self._sched.progress_signature()
+                    self._stalled = (self._stalled + 1
+                                     if sig == self._last_sig else 0)
+                    self._last_sig = sig
+                    if self._stalled >= self._stall_steps:
+                        raise SchedulerStalledError(
+                            f"supervisor: no progress across "
+                            f"{self._stalled} busy steps")
+                    if self._drain_budget is not None:
+                        self._drain_steps += 1
+                        if (self._drain_steps > self._drain_budget
+                                and not self._drain_cancelled):
+                            # wedged drain: cancel survivors instead of
+                            # hanging shutdown forever
+                            self._drain_cancelled = True
+                            for rid in self._sched.outstanding_rids():
+                                self._sched.cancel(rid)
+                except (_InjectedCrash, SchedulerStalledError) as e:
+                    self._recover_locked(str(e))
+                self._deliver_locked()
+            # hold the lock open for a beat: the pump re-acquires it
+            # within microseconds otherwise, starving client threads
+            # (submit / cancel / inject_crash) until the engine idles
+            time.sleep(self._yield_s)
+        with self._lock:
+            self._deliver_locked()

@@ -83,9 +83,71 @@ class TestInjectorPurity:
         monkeypatch.setenv("REPRO_FAULTS", "7")
         inj = default_injector()
         assert inj is not None and inj.seed == 7
-        # benign: only output-preserving faults are on
-        assert inj.preempt_p > 0 and inj.drop_p > 0
+        # benign: only output-preserving faults are on — supervised
+        # crashes recover token-identically, so they qualify; client
+        # disconnects (cancel streams) and stalls (slow) do not
+        assert inj.preempt_p > 0 and inj.drop_p > 0 and inj.crash_p > 0
         assert inj.delay_p == 0 and inj.expire_p == 0
+        assert inj.disconnect_p == 0 and inj.stall_p == 0
+
+    def test_hook_indices_append_only(self):
+        """Every seeded schedule the suite pins keys off each hook's
+        position in _HOOKS; new hooks must append, never reorder."""
+        assert FaultInjector._HOOKS[:4] == ("delay", "preempt",
+                                            "expire", "drop")
+        assert FaultInjector._HOOKS[4:] == ("crash", "disconnect",
+                                            "stall")
+
+
+class TestSupervisionHookPurity:
+    def _drive(self, seed):
+        inj = FaultInjector(seed, crash_p=0.4, disconnect_p=0.4,
+                            max_disconnect_tokens=6,
+                            stall_p=0.4, max_stall_s=0.001)
+        out = []
+        for i in range(40):
+            out.append((inj.should_crash(), inj.disconnect_after(i),
+                        inj.client_stall()))
+        return out, inj.trace
+
+    def test_same_seed_same_decisions_and_trace(self):
+        a, trace_a = self._drive(5)
+        b, trace_b = self._drive(5)
+        assert a == b and trace_a == trace_b
+        c, trace_c = self._drive(6)
+        assert trace_c != trace_a
+        # something actually fired on each hook at p=0.4 over 40 calls
+        hooks = {h for h, *_ in trace_a}
+        assert hooks == {"crash", "disconnect", "stall"}
+
+    def test_new_streams_independent_of_old(self):
+        """Supervision hooks must not perturb the scheduler-facing
+        streams (they seed from appended _HOOKS indices), so arming a
+        crash schedule never reshuffles a pinned preempt schedule."""
+        a = FaultInjector(7, preempt_p=0.5, crash_p=0.5)
+        b = FaultInjector(7, preempt_p=0.5, crash_p=0.5)
+        for i in range(9):                  # advance only b's new streams
+            b.should_crash()
+            b.disconnect_after(i)
+            b.client_stall()
+        assert ([a.should_preempt() for _ in range(20)]
+                == [b.should_preempt() for _ in range(20)])
+
+    def test_disconnect_stream_advances_on_misses(self):
+        """disconnect_after draws its token count even on a miss, so
+        raising disconnect_p never shifts later hit positions."""
+        lo = FaultInjector(9, disconnect_p=0.0)
+        hi = FaultInjector(9, disconnect_p=1.0, max_disconnect_tokens=6)
+        for i in range(10):
+            assert lo.disconnect_after(i) is None
+            k = hi.disconnect_after(i)
+            assert k is not None and 0 <= k <= 6
+        # the misses consumed draws at the same rate as the hits: flip
+        # lo hot and the two streams are in lockstep from here on
+        lo.disconnect_p = 1.0
+        lo.max_disconnect_tokens = 6
+        assert ([lo.disconnect_after(0) for _ in range(5)]
+                == [hi.disconnect_after(0) for _ in range(5)])
 
 
 class TestSeededChaos:

@@ -392,3 +392,152 @@ class TestAccounting:
         res = sched.run()
         assert res[rid].status == RequestState.COMPLETED.value
         assert res[rid].reason == ""
+
+
+class TestDrain:
+    def test_submit_after_drain_sheds_typed(self, qwen):
+        """The drain bugfix: a post-drain submission gets its typed
+        terminal Completion (SHED, reason "draining") immediately
+        instead of queueing forever behind a closed front door."""
+        cfg, api, params = qwen
+        rng = np.random.default_rng(20)
+        p = rng.integers(0, cfg.vocab, 8).astype(np.int32)
+        sched = _sched(api, params, faults=False)
+        assert not sched.draining
+        sched.begin_drain()
+        assert sched.draining
+        res = sched.submit(p, max_new=4)
+        assert isinstance(res, Shed) and res.reason == "draining"
+        assert sched.request_state(res.rid) is RequestState.SHED
+        out = sched.run()
+        assert out[res.rid].status == "shed"
+        assert out[res.rid].reason.startswith("draining")
+        assert sched.metrics.shed == 1 and sched.pending == 0
+
+    def test_drain_mid_horizon_finishes_inflight(self, qwen):
+        """begin_drain (the SIGTERM path) mid-run, with one slot still
+        advancing prefill chunks and another decoding: in-flight and
+        queued work all complete token-identically; only newcomers
+        shed."""
+        cfg, api, params = qwen
+        rng = np.random.default_rng(21)
+        short = rng.integers(0, cfg.vocab, 8).astype(np.int32)
+        longp = rng.integers(0, cfg.vocab, 24).astype(np.int32)
+        late = rng.integers(0, cfg.vocab, 8).astype(np.int32)
+        sched = _sched(api, params, faults=False)
+        ra = sched.submit(short, max_new=32)
+        sched.step()                    # ra decoding (4 horizons of work)
+        rb = sched.submit(longp, max_new=4)
+        sched.step()                    # rb mid-chunked-prefill
+        assert sched.request_state(ra) is RequestState.DECODING
+        assert sched.request_state(rb) is RequestState.PREFILLING
+        sched.begin_drain()
+        shed = sched.submit(late, max_new=4)
+        assert isinstance(shed, Shed) and shed.reason == "draining"
+        res = sched.run()
+        assert res[ra].status == "completed"
+        assert res[rb].status == "completed"
+        np.testing.assert_array_equal(res[ra].tokens,
+                                      _ref_tokens(api, params, short, 32))
+        np.testing.assert_array_equal(res[rb].tokens,
+                                      _ref_tokens(api, params, longp, 4))
+        assert res[shed.rid].status == "shed"
+        assert sched.audit_blocks() == []
+
+    def test_drain_races_deadline_expiry(self, qwen):
+        """A request whose deadline expires during the drain must end
+        TIMED_OUT (the deadline's terminal), not linger or shed — the
+        drain changes admission, never in-flight lifecycle rules."""
+        cfg, api, params = qwen
+        rng = np.random.default_rng(22)
+        p1 = rng.integers(0, cfg.vocab, 8).astype(np.int32)
+        p2 = rng.integers(0, cfg.vocab, 8).astype(np.int32)
+        sched = _sched(api, params, max_batch=1, faults=False)
+        live = sched.submit(p1, max_new=4)
+        dead = sched.submit(p2, max_new=4, deadline_s=0.0)  # expires now
+        sched.begin_drain()
+        res = sched.run()
+        assert res[live].status == "completed"
+        assert res[dead].status == "timed_out"
+        assert sorted(res) == [live, dead]
+        assert sched.pending == 0 and sched.audit_blocks() == []
+
+    def test_drain_survives_forced_reset(self, qwen):
+        """Crash recovery mid-drain must stay draining: reset(force)
+        keeps the drain flag so a recovered front door does not quietly
+        reopen admission."""
+        cfg, api, params = qwen
+        rng = np.random.default_rng(23)
+        p = rng.integers(0, cfg.vocab, 8).astype(np.int32)
+        sched = _sched(api, params, faults=False)
+        sched.begin_drain()
+        sched.reset(force=True)
+        assert sched.draining
+        assert isinstance(sched.submit(p, max_new=4), Shed)
+
+
+class TestCancelIdempotence:
+    def test_cancel_terminal_and_popped_rids_is_noop(self, qwen):
+        """The cancel bugfix: cancelling an already-terminal rid — even
+        after its Completion was popped — is an idempotent no-op (False),
+        never a KeyError.  A disconnect can race the natural finish."""
+        cfg, api, params = qwen
+        rng = np.random.default_rng(24)
+        p = rng.integers(0, cfg.vocab, 8).astype(np.int32)
+        sched = _sched(api, params, faults=False)
+        rid = sched.submit(p, max_new=4)
+        res = sched.run()
+        assert res[rid].status == "completed"
+        assert sched.cancel(rid) is False       # terminal, results popped
+        assert sched.cancel(rid) is False       # and stays a no-op
+
+    def test_cancel_preempted_parked_rid_releases_pins(self, qwen):
+        """Cancelling a request parked in the prefix pool mid-preemption
+        releases its pinned blocks (no leak) and terminates it exactly
+        once."""
+        cfg, api, params = qwen
+        rng = np.random.default_rng(25)
+        pa = rng.integers(0, cfg.vocab, 8).astype(np.int32)
+        pb = rng.integers(0, cfg.vocab, 8).astype(np.int32)
+        sched = _sched(api, params, max_batch=1, faults=False)
+        ra = sched.submit(pa, max_new=16)
+        sched.step()                    # ra decoding, tokens generated
+        assert sched.request_state(ra) is RequestState.DECODING
+        rb = sched.submit(pb, max_new=4, priority=-1)
+        sched.step()                    # priority preempt: ra parked
+        assert sched.request_state(ra) is RequestState.QUEUED
+        assert sched.metrics.preempted == 1
+        assert sched.cancel(ra) is True
+        assert sched.request_state(ra) is RequestState.CANCELLED
+        assert sched.cancel(ra) is False        # idempotent second call
+        res = sched.run()
+        assert res[ra].status == "cancelled"
+        assert res[rb].status == "completed"
+        np.testing.assert_array_equal(res[rb].tokens,
+                                      _ref_tokens(api, params, pb, 4))
+        assert sched.audit_blocks() == []
+
+    def test_pending_cancel_survives_preemption_race(self, qwen):
+        """A cancel that lands while its rid is live, with the rid
+        preempted back to the queue before the next boundary (the
+        supervisor-thread interleaving), must still terminate the rid
+        at that boundary instead of being dropped with the pending set."""
+        cfg, api, params = qwen
+        rng = np.random.default_rng(26)
+        pa = rng.integers(0, cfg.vocab, 8).astype(np.int32)
+        pb = rng.integers(0, cfg.vocab, 8).astype(np.int32)
+        sched = _sched(api, params, max_batch=1, faults=False)
+        ra = sched.submit(pa, max_new=16)
+        sched.step()
+        rb = sched.submit(pb, max_new=4, priority=-1)
+        sched.step()                    # ra parked in the queue
+        assert sched.request_state(ra) is RequestState.QUEUED
+        # the race: cancel() recorded the rid while it was live, the
+        # boundary arrives after the preemption re-queued it
+        sched._cancel_pending.add(ra)
+        res = sched.run()
+        assert res[ra].status == "cancelled"
+        assert res[ra].reason == "cancelled while parked"
+        assert res[rb].status == "completed"
+        assert sorted(res) == [ra, rb]
+        assert sched.audit_blocks() == []

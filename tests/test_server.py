@@ -1,0 +1,204 @@
+"""The HTTP/SSE front door (serve.server + serve.client,
+docs/serving.md): endpoint contract, stream parity with cold generate,
+disconnect-propagated cancellation with a clean block audit, honest
+503 + Retry-After during drain, and admission-rejection status codes."""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.models import build_model
+from repro.serve import (FaultInjector, Scheduler, SSEServer, Supervisor,
+                         generate)
+from repro.serve.client import get_json, stream_generate
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = ARCHS["qwen2-0.5b"].reduced()
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    return cfg, api, params
+
+
+@pytest.fixture(scope="module")
+def stack(qwen):
+    """One live server for the module: scheduler (slow horizons so
+    mid-stream races resolve deterministically) + supervisor + SSE
+    listener on an ephemeral port."""
+    cfg, api, params = qwen
+    sched = Scheduler(api, params, max_batch=2, cache_len=64,
+                      buckets=(8, 16), block_size=8, stream_tokens=True,
+                      tenant_rate=30.0, tenant_burst=30.0,
+                      faults=FaultInjector(0, delay_p=1.0,
+                                           max_delay_s=0.03))
+    sup = Supervisor(sched).start()
+    srv = SSEServer(sup).start_background()
+    yield cfg, api, params, sup, srv
+    srv.stop_background()
+    sup.stop(drain=False)
+
+
+def _ref_tokens(api, params, prompt, max_new):
+    out = generate(api, params, jax.numpy.asarray(prompt)[None],
+                   max_new=max_new)
+    return np.asarray(out["tokens"][0])
+
+
+def _prompt(cfg, seed=0, size=8):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, cfg.vocab, size).astype(np.int32)
+
+
+def _wait_terminal(sup, rid, timeout=60.0):
+    t0 = time.monotonic()
+    while time.monotonic() - t0 < timeout:
+        comp = sup.results.get(rid)
+        if comp is not None:
+            return comp
+        time.sleep(0.02)
+    raise AssertionError(f"no terminal for rid {rid}")
+
+
+class TestEndpoints:
+    def test_healthz(self, stack):
+        *_, srv = stack
+        assert get_json(srv.host, srv.port, "/healthz") == \
+            {"ok": True, "status": 200}
+
+    def test_readyz_while_accepting(self, stack):
+        *_, srv = stack
+        assert get_json(srv.host, srv.port, "/readyz") == \
+            {"ready": True, "status": 200}
+
+    def test_metrics_shape(self, stack):
+        *_, srv = stack
+        m = get_json(srv.host, srv.port, "/metrics")
+        for key in ("steps", "completed", "cancelled", "pending",
+                    "draining", "recoveries"):
+            assert key in m
+
+    def test_unknown_route_404(self, stack):
+        *_, srv = stack
+        assert get_json(srv.host, srv.port, "/nope")["status"] == 404
+
+
+class TestGenerate:
+    def test_stream_parity_with_cold_generate(self, stack):
+        cfg, api, params, sup, srv = stack
+        p = _prompt(cfg, seed=1)
+        r = stream_generate(srv.host, srv.port, p, max_new=6)
+        assert r["http_status"] == 200 and r["rid"] >= 0
+        assert r["done"]["status"] == "completed"
+        ref = _ref_tokens(api, params, p, 6)
+        assert r["tokens"] == [int(t) for t in ref]
+        assert r["indices"] == list(range(6))
+        assert r["done"]["tokens"] == r["tokens"]
+        assert r["done"]["ttft_s"] > 0
+
+    def test_malformed_body_400(self, stack):
+        *_, sup, srv = stack
+        import http.client
+        import json
+        for body in (b"", b"not json", b'{"prompt": []}',
+                     b'{"prompt": [1], "max_new": 0}'):
+            conn = http.client.HTTPConnection(srv.host, srv.port,
+                                              timeout=10)
+            try:
+                conn.request("POST", "/v1/generate", body=body,
+                             headers={"Content-Type": "application/json"})
+                resp = conn.getresponse()
+                assert resp.status == 400, body
+                assert "error" in json.loads(resp.read().decode())
+            finally:
+                conn.close()
+
+    def test_tenant_rate_429(self, stack):
+        cfg, *_ , srv = stack
+        p = _prompt(cfg, seed=2)
+        # worst-case cost 8 + 48 = 56 >> the 30-token bucket
+        r = stream_generate(srv.host, srv.port, p, max_new=48,
+                            tenant="greedy-tenant")
+        assert r["http_status"] == 429
+        assert r["error"] == "tenant-rate"
+        assert r.get("retry_after") == 1
+
+    def test_slow_client_still_completes(self, stack):
+        """A client that stalls mid-read exercises the write path
+        without breaking the stream (the send queue absorbs it)."""
+        cfg, api, params, sup, srv = stack
+        p = _prompt(cfg, seed=3)
+        r = stream_generate(srv.host, srv.port, p, max_new=6,
+                            stall_s=0.4, stall_at=2)
+        assert r["done"]["status"] == "completed"
+        assert r["tokens"] == \
+            [int(t) for t in _ref_tokens(api, params, p, 6)]
+
+
+class TestDisconnect:
+    def test_disconnect_mid_stream_cancels_and_audits_clean(self, stack):
+        cfg, api, params, sup, srv = stack
+        p = _prompt(cfg, seed=4)
+        r = stream_generate(srv.host, srv.port, p, max_new=48,
+                            disconnect_after=2)
+        assert r["disconnected"] and r["rid"] >= 0
+        comp = _wait_terminal(sup, r["rid"])
+        assert comp.status == "cancelled"
+        assert sup.wait_idle(60.0)
+        assert sup.scheduler.audit_blocks() == []
+
+    def test_disconnect_before_first_token(self, stack):
+        cfg, api, params, sup, srv = stack
+        p = _prompt(cfg, seed=5)
+        r = stream_generate(srv.host, srv.port, p, max_new=48,
+                            disconnect_after=0)
+        assert r["disconnected"] and r["rid"] >= 0
+        comp = _wait_terminal(sup, r["rid"])
+        assert comp.status == "cancelled"
+        assert sup.wait_idle(60.0)
+        assert sup.scheduler.audit_blocks() == []
+
+
+class TestDrainOverHTTP:
+    def test_drain_flips_readyz_and_sheds_with_retry_after(self, qwen):
+        """Drain needs its own stack (begin_drain is one-way): readyz
+        flips to 503 + Retry-After, a mid-drain submit is shed with the
+        same headers, in-flight work still completes token-identically,
+        and a shut-down listener refuses connections."""
+        cfg, api, params = qwen
+        sched = Scheduler(api, params, max_batch=2, cache_len=64,
+                          buckets=(8, 16), block_size=8,
+                          stream_tokens=True,
+                          faults=FaultInjector(0, delay_p=1.0,
+                                               max_delay_s=0.05))
+        sup = Supervisor(sched).start()
+        srv = SSEServer(sup).start_background()
+        try:
+            p1, p2 = _prompt(cfg, seed=6), _prompt(cfg, seed=7)
+            import threading
+            res1 = {}
+            th = threading.Thread(target=lambda: res1.update(
+                stream_generate(srv.host, srv.port, p1, max_new=16)))
+            th.start()
+            t0 = time.monotonic()
+            while not sup.scheduler.pending and \
+                    time.monotonic() - t0 < 30:
+                time.sleep(0.01)
+            sup.begin_drain()
+            rz = get_json(srv.host, srv.port, "/readyz")
+            assert rz["status"] == 503 and rz["retry_after"] == 1
+            assert rz["error"] == "draining"
+            r2 = stream_generate(srv.host, srv.port, p2, max_new=4)
+            assert r2["http_status"] == 503
+            assert r2.get("retry_after") == 1
+            th.join(120.0)
+            assert res1["done"]["status"] == "completed"
+            assert res1["tokens"] == \
+                [int(t) for t in _ref_tokens(api, params, p1, 16)]
+            assert sup.drain(60.0)
+            assert sup.scheduler.audit_blocks() == []
+        finally:
+            srv.stop_background()
+            sup.stop(drain=False)

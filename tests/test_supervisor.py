@@ -1,0 +1,309 @@
+"""Supervised serving (serve.supervisor, DESIGN.md §5 "wire protocol &
+supervision"): the pump delivers every token exactly once per index and
+exactly one done event per rid; disconnect-propagated cancels release
+their slots; crash recovery (injected or fault-scheduled) resumes greedy
+streams token-identically; graceful drain finishes in-flight work within
+the watchdog budget and sheds newcomers with a typed terminal."""
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.models import build_model
+from repro.serve import (FaultInjector, Scheduler, Shed, Supervisor,
+                         generate)
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = ARCHS["qwen2-0.5b"].reduced()
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    return cfg, api, params
+
+
+def _ref_tokens(api, params, prompt, max_new):
+    out = generate(api, params, jax.numpy.asarray(prompt)[None],
+                   max_new=max_new)
+    return np.asarray(out["tokens"][0])
+
+
+def _sched(api, params, **kw):
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("cache_len", 64)
+    kw.setdefault("buckets", (8, 16))
+    kw.setdefault("block_size", 8)
+    kw.setdefault("stream_tokens", True)
+    kw.setdefault("faults", False)
+    return Scheduler(api, params, **kw)
+
+
+class Collector:
+    """Thread-safe per-rid event sink with wait-for-terminal."""
+
+    def __init__(self):
+        self.lock = threading.Lock()
+        self.tokens = {}            # rid -> [(index, token)]
+        self.done = {}              # rid -> [Completion]
+        self.first_token = threading.Event()
+
+    def __call__(self, ev):
+        with self.lock:
+            if ev.kind == "token":
+                self.tokens.setdefault(ev.rid, []).append(
+                    (ev.index, ev.token))
+                self.first_token.set()
+            else:
+                self.done.setdefault(ev.rid, []).append(ev.completion)
+
+    def wait_done(self, rid, timeout=120.0):
+        t0 = time.monotonic()
+        while time.monotonic() - t0 < timeout:
+            with self.lock:
+                if rid in self.done:
+                    return self.done[rid][0]
+            time.sleep(0.01)
+        raise AssertionError(f"no terminal for rid {rid}")
+
+
+def _prompts(cfg, n, seed=0, size=8):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab, size).astype(np.int32)
+            for _ in range(n)]
+
+
+class TestStreaming:
+    def test_tokens_in_order_then_exactly_one_done(self, qwen):
+        cfg, api, params = qwen
+        (p,) = _prompts(cfg, 1)
+        sup = Supervisor(_sched(api, params)).start()
+        try:
+            col = Collector()
+            rid = sup.submit(p, max_new=6, on_event=col)
+            comp = col.wait_done(rid)
+            assert comp.status == "completed"
+            ref = _ref_tokens(api, params, p, 6)
+            assert [t for _, t in col.tokens[rid]] == [int(t) for t in ref]
+            assert [i for i, _ in col.tokens[rid]] == list(range(6))
+            assert len(col.done[rid]) == 1
+            np.testing.assert_array_equal(comp.tokens, ref)
+            assert sup.results[rid] is comp
+            assert sup.scheduler.audit_blocks() == []
+        finally:
+            sup.stop(drain=False)
+
+    def test_requires_stream_tokens(self, qwen):
+        cfg, api, params = qwen
+        with pytest.raises(ValueError, match="stream_tokens"):
+            Supervisor(_sched(api, params, stream_tokens=False))
+
+    def test_shed_submission_still_gets_done_event(self, qwen):
+        cfg, api, params = qwen
+        (p,) = _prompts(cfg, 1)
+        sup = Supervisor(_sched(api, params)).start()
+        try:
+            sup.begin_drain()
+            col = Collector()
+            res = sup.submit(p, max_new=4, on_event=col)
+            assert isinstance(res, Shed) and res.reason == "draining"
+            comp = col.wait_done(res.rid, timeout=10.0)
+            assert comp.status == "shed"
+            assert comp.reason.startswith("draining")
+            assert len(col.done[res.rid]) == 1
+        finally:
+            sup.stop(drain=False)
+
+
+class TestCancel:
+    def test_cancel_mid_flight_releases_slot(self, qwen):
+        cfg, api, params = qwen
+        (p,) = _prompts(cfg, 1)
+        # slow horizons so the cancel lands mid-stream deterministically
+        sup = Supervisor(_sched(
+            api, params,
+            faults=FaultInjector(0, delay_p=1.0, max_delay_s=0.05),
+        )).start()
+        try:
+            col = Collector()
+            rid = sup.submit(p, max_new=48, on_event=col)
+            assert col.first_token.wait(60.0)
+            sup.cancel(rid)
+            comp = col.wait_done(rid)
+            assert comp.status == "cancelled"
+            assert len(col.done[rid]) == 1
+            assert sup.wait_idle(60.0)
+            assert sup.scheduler.audit_blocks() == []
+        finally:
+            sup.stop(drain=False)
+
+    def test_cancel_is_idempotent(self, qwen):
+        cfg, api, params = qwen
+        (p,) = _prompts(cfg, 1)
+        sup = Supervisor(_sched(api, params)).start()
+        try:
+            col = Collector()
+            rid = sup.submit(p, max_new=4, on_event=col)
+            col.wait_done(rid)
+            assert sup.cancel(rid) is False     # already terminal: no-op
+            assert sup.cancel(9999) is False    # unknown rid: no-op
+        finally:
+            sup.stop(drain=False)
+
+
+class TestCrashRecovery:
+    def test_injected_crash_resumes_token_identical(self, qwen):
+        cfg, api, params = qwen
+        p1, p2 = _prompts(cfg, 2, seed=3)
+        # max_batch=1 so one request is in flight and one queued at the
+        # crash: both descriptor flavors must survive snapshot/restore
+        sup = Supervisor(_sched(
+            api, params, max_batch=1,
+            faults=FaultInjector(0, delay_p=1.0, max_delay_s=0.05),
+        )).start()
+        try:
+            col = Collector()
+            r1 = sup.submit(p1, max_new=24, on_event=col)
+            r2 = sup.submit(p2, max_new=8, on_event=col)
+            assert col.first_token.wait(60.0)
+            sup.inject_crash("test crash")
+            for rid, p, m in ((r1, p1, 24), (r2, p2, 8)):
+                comp = col.wait_done(rid)
+                assert comp.status == "completed"
+                ref = _ref_tokens(api, params, p, m)
+                np.testing.assert_array_equal(comp.tokens, ref)
+                # the *stream* also saw each index exactly once, in order
+                assert [i for i, _ in col.tokens[rid]] == list(range(m))
+                assert [t for _, t in col.tokens[rid]] == \
+                    [int(t) for t in ref]
+                assert len(col.done[rid]) == 1
+            assert sup.recoveries >= 1
+            assert sup.recovery_log[0]["requests"] >= 1
+            assert sup.scheduler.audit_blocks() == []
+        finally:
+            sup.stop(drain=False)
+
+    def test_cancelled_rid_not_resurrected_by_recovery(self, qwen):
+        cfg, api, params = qwen
+        p1, p2 = _prompts(cfg, 2, seed=4)
+        sup = Supervisor(_sched(
+            api, params,
+            faults=FaultInjector(0, delay_p=1.0, max_delay_s=0.05),
+        )).start()
+        try:
+            col = Collector()
+            r1 = sup.submit(p1, max_new=48, on_event=col)
+            r2 = sup.submit(p2, max_new=8, on_event=col)
+            assert col.first_token.wait(60.0)
+            sup.cancel(r1)
+            sup.inject_crash("crash right after a cancel")
+            c1 = col.wait_done(r1)
+            c2 = col.wait_done(r2)
+            assert c1.status == "cancelled"
+            assert len(col.done[r1]) == 1
+            assert c2.status == "completed"
+            np.testing.assert_array_equal(
+                c2.tokens, _ref_tokens(api, params, p2, 8))
+            assert sup.scheduler.audit_blocks() == []
+        finally:
+            sup.stop(drain=False)
+
+    def test_seeded_crash_schedule_preserves_invariants(self, qwen):
+        """Exactly one terminal per rid under a hot seeded crash
+        schedule — the REPRO_FAULTS=1 contract (default_injector arms
+        crash_p on exactly this path)."""
+        cfg, api, params = qwen
+        prompts = _prompts(cfg, 6, seed=5)
+        sup = Supervisor(_sched(
+            api, params,
+            faults=FaultInjector(2, crash_p=0.25, preempt_p=0.3),
+        )).start()
+        try:
+            col = Collector()
+            rids = [sup.submit(p, max_new=6, on_event=col)
+                    for p in prompts]
+            comps = {rid: col.wait_done(rid) for rid in rids}
+            for rid, p in zip(rids, prompts):
+                assert len(col.done[rid]) == 1
+                assert comps[rid].status == "completed"
+                ref = _ref_tokens(api, params, p, 6)
+                np.testing.assert_array_equal(comps[rid].tokens, ref)
+                assert [t for _, t in col.tokens[rid]] == \
+                    [int(t) for t in ref]
+            assert sup.recoveries >= 1, "schedule never fired a crash"
+            assert sup.scheduler.audit_blocks() == []
+        finally:
+            sup.stop(drain=False)
+
+    def test_crash_loop_gives_up_with_terminals(self, qwen):
+        """A scheduler that crashes every step must not recover forever:
+        past max_recoveries the survivors are cancelled, so every rid
+        still ends in exactly one terminal."""
+        cfg, api, params = qwen
+        (p,) = _prompts(cfg, 1, seed=6)
+        sup = Supervisor(
+            _sched(api, params, faults=FaultInjector(0, crash_p=1.0)),
+            max_recoveries=3).start()
+        try:
+            col = Collector()
+            rid = sup.submit(p, max_new=4, on_event=col)
+            comp = col.wait_done(rid)
+            assert comp.status == "cancelled"
+            assert len(col.done[rid]) == 1
+            assert any(e["gave_up"] for e in sup.recovery_log)
+            assert sup.wait_idle(60.0)
+        finally:
+            sup.stop(drain=False)
+
+
+class TestDrain:
+    def test_drain_finishes_inflight_and_sheds_new(self, qwen):
+        cfg, api, params = qwen
+        p1, p2 = _prompts(cfg, 2, seed=7)
+        sup = Supervisor(_sched(
+            api, params,
+            faults=FaultInjector(0, delay_p=1.0, max_delay_s=0.05),
+        )).start()
+        try:
+            col = Collector()
+            r1 = sup.submit(p1, max_new=16, on_event=col)
+            assert col.first_token.wait(60.0)
+            assert sup.accepting
+            sup.begin_drain()
+            assert not sup.accepting and sup.draining
+            res = sup.submit(p2, max_new=4, on_event=col)
+            assert isinstance(res, Shed) and res.reason == "draining"
+            assert sup.drain(120.0)
+            comp = col.wait_done(r1)
+            assert comp.status == "completed"
+            np.testing.assert_array_equal(
+                comp.tokens, _ref_tokens(api, params, p1, 16))
+            assert col.wait_done(res.rid).status == "shed"
+            assert sup.scheduler.audit_blocks() == []
+        finally:
+            sup.stop(drain=False)
+
+    def test_wedged_drain_cancels_within_budget(self, qwen):
+        """A drain whose work never finishes must not hang shutdown:
+        past the watchdog step budget the survivors are cancelled."""
+        cfg, api, params = qwen
+        (p,) = _prompts(cfg, 1, seed=8)
+        sup = Supervisor(_sched(
+            api, params,
+            faults=FaultInjector(0, delay_p=1.0, max_delay_s=0.02),
+        )).start()
+        try:
+            col = Collector()
+            rid = sup.submit(p, max_new=48, on_event=col)
+            assert col.first_token.wait(60.0)
+            sup.begin_drain()
+            with sup._lock:
+                sup._drain_budget = 1       # pretend the budget is spent
+            assert sup.drain(120.0)
+            comp = col.wait_done(rid)
+            assert comp.status == "cancelled"
+            assert sup.scheduler.audit_blocks() == []
+        finally:
+            sup.stop(drain=False)

@@ -30,6 +30,17 @@ throughput once the VMEM-resident product-buffer kernel is carried
 across the horizon) as a hard gate rather than a tracked trajectory.
 Unlike the regression diff, a missing module or group here *fails*: the
 gate is only meaningful if the benchmark actually ran.
+
+``--require-field MODULE FIELD OP VALUE`` (repeatable) is the scalar
+sibling: *every* row of MODULE that carries FIELD must satisfy
+``OP VALUE``.  CI pins the disconnect chaos invariants with
+
+    --require-field disconnect terminal_coverage '>=' 1.0
+    --require-field disconnect audit_clean '>=' 1
+
+so a front door that orphans a stream or leaks a block goes red even
+though its wall time looks fine.  As with ratios, a missing module or
+field fails the gate.
 """
 from __future__ import annotations
 
@@ -124,6 +135,31 @@ def check_ratio(modules: dict, module: str, spec: str, op: str,
                 f"(require {op} {value}) {'ok' if ok else 'FAIL'}")
 
 
+def check_field(modules: dict, module: str, field: str, op: str,
+                value: float):
+    """Evaluate one --require-field gate against the current record.
+
+    Returns (ok, line).  Every row of ``module`` that has ``field``
+    must satisfy ``OP VALUE``; a missing module, or no row carrying
+    the field at all, is a gate failure for the same reason as above.
+    """
+    if op not in _OPS:
+        return False, f"  {module}: unknown comparator {op!r}"
+    rec = modules.get(module)
+    if rec is None:
+        return False, f"  {module}: module missing from current record"
+    vals = [float(row[field]) for row in rec.get("data", [])
+            if field in row]
+    if not vals:
+        return False, f"  {module}: no rows carry field {field!r}"
+    bad = [v for v in vals if not _OPS[op](v, value)]
+    ok = not bad
+    shown = ", ".join(f"{v:g}" for v in vals)
+    return ok, (f"  {module}: {field} over {len(vals)} row(s) = "
+                f"[{shown}] (require {op} {value}) "
+                f"{'ok' if ok else 'FAIL'}")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("baseline", help="previous run's BENCH_crew.json")
@@ -141,6 +177,12 @@ def main(argv=None) -> int:
                          "at their largest common horizon must satisfy "
                          "OP VALUE (e.g. decode_latency crew/dense "
                          "'>=' 1.0); repeatable")
+    ap.add_argument("--require-field", nargs=4, action="append", default=[],
+                    metavar=("MODULE", "FIELD", "OP", "VALUE"),
+                    help="absolute gate on the current record: every row "
+                         "of MODULE carrying FIELD must satisfy OP VALUE "
+                         "(e.g. disconnect terminal_coverage '>=' 1.0); "
+                         "repeatable")
     args = ap.parse_args(argv)
 
     cur_obj, cur = load_modules(args.current)
@@ -152,8 +194,12 @@ def main(argv=None) -> int:
         ok, line = check_ratio(cur, module, spec, op, float(value))
         print(line)
         gate_failures += 0 if ok else 1
+    for module, field, op, value in args.require_field:
+        ok, line = check_field(cur, module, field, op, float(value))
+        print(line)
+        gate_failures += 0 if ok else 1
     if gate_failures:
-        print(f"bench_compare: {gate_failures} --require-ratio gate(s) "
+        print(f"bench_compare: {gate_failures} absolute gate(s) "
               "failed", file=sys.stderr)
         return 1
 

@@ -1,0 +1,113 @@
+"""Server integration smoke: one pass over the wire, exit 0/1.
+
+CI runs this after the unit suites as a black-box check that the
+whole front door composes (docs/serving.md): it boots a reduced model
+behind ``Scheduler -> Supervisor -> SSEServer`` on a loopback port and
+drives three probes through real sockets:
+
+1. **stream** — POST /v1/generate, read the SSE stream to ``done``,
+   and require token-for-token parity with a cold in-process
+   ``generate`` on the same prompt;
+2. **disconnect** — open a second stream and hang up after two token
+   frames; the server must cancel the request at the next horizon
+   boundary (terminal ``cancelled``) and ``audit_blocks()`` must come
+   back clean — no orphaned slot, no leaked block;
+3. **drain** — SIGTERM semantics via ``begin_drain()``: /readyz and a
+   fresh submit must both answer 503 with a Retry-After header.
+
+Horizons are slowed with a seeded delay injector so the mid-stream
+hangup deterministically lands while the request is still decoding.
+Any failed probe prints the reason and exits 1.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+
+def main() -> int:
+    import jax
+
+    from repro.configs import ARCHS
+    from repro.models import build_model
+    from repro.serve import Scheduler, SSEServer, Supervisor, generate
+    from repro.serve.client import get_json, stream_generate
+    from repro.serve.faults import FaultInjector
+
+    cfg = ARCHS["qwen2-0.5b"].reduced()
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    sched = Scheduler(api, params, max_batch=2, cache_len=64,
+                      buckets=(8, 16), block_size=8,
+                      rng=jax.random.PRNGKey(0), stream_tokens=True,
+                      faults=FaultInjector(0, delay_p=1.0,
+                                           max_delay_s=0.05))
+    sup = Supervisor(sched).start()
+    srv = SSEServer(sup)
+    srv.start_background()
+    failures = []
+
+    def check(name, ok, detail=""):
+        print(f"[smoke] {name}: {'ok' if ok else 'FAIL'} {detail}")
+        if not ok:
+            failures.append(name)
+
+    try:
+        # 1. stream to completion, token-identical to cold generate
+        p = rng.integers(0, cfg.vocab, 8).astype(np.int32)
+        r = stream_generate(srv.host, srv.port, p, max_new=6)
+        ref = np.asarray(generate(api, params,
+                                  jax.numpy.asarray(p)[None],
+                                  max_new=6)["tokens"][0])
+        check("stream-parity",
+              r["http_status"] == 200
+              and r["done"] is not None
+              and r["done"]["status"] == "completed"
+              and r["tokens"] == [int(t) for t in ref],
+              f"tokens={r['tokens']}")
+
+        # 2. hang up mid-stream -> cancelled + clean block audit
+        p2 = rng.integers(0, cfg.vocab, 8).astype(np.int32)
+        r2 = stream_generate(srv.host, srv.port, p2, max_new=48,
+                             disconnect_after=2)
+        deadline = time.monotonic() + 60.0
+        comp = None
+        while time.monotonic() < deadline:
+            comp = sup.results.get(r2["rid"])
+            if comp is not None:
+                break
+            time.sleep(0.01)
+        sup.wait_idle(timeout=60.0)
+        check("disconnect-cancels",
+              r2["disconnected"] and comp is not None
+              and comp.status == "cancelled",
+              f"rid={r2.get('rid')} status="
+              f"{comp.status if comp else None}")
+        audit = sched.audit_blocks()
+        check("audit-clean", not audit, str(audit[:3]))
+
+        # 3. drain -> honest 503 + Retry-After on both doors
+        sup.begin_drain()
+        rz = get_json(srv.host, srv.port, "/readyz")
+        r3 = stream_generate(srv.host, srv.port, p, max_new=4)
+        check("drain-503",
+              rz["status"] == 503 and rz.get("retry_after") is not None
+              and r3["http_status"] == 503
+              and r3.get("retry_after") is not None,
+              f"readyz={rz['status']} submit={r3['http_status']}")
+    finally:
+        srv.stop_background()
+        sup.stop(drain=False)
+
+    if failures:
+        print(f"[smoke] FAILED: {failures}", file=sys.stderr)
+        return 1
+    print("[smoke] all probes passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
