@@ -1,0 +1,223 @@
+"""Kill -9 chaos: durability and resumable streams across process death.
+
+``benchmarks/disconnect.py`` measures the front door surviving engine
+crashes *inside* a living process.  This module measures the one
+failure mode that layer cannot absorb — the whole process dying — and
+the journal + resume machinery that covers it (DESIGN.md §5.1):
+
+1. a real ``repro.launch.serve --listen --journal-dir`` server runs as
+   a **subprocess** on a fresh journal directory;
+2. resumable clients (``stream_generate(resume=True)``) start long
+   streams against it;
+3. once the journal shows every submit durable and token panels
+   flowing, the parent sends **SIGKILL** — no snapshot, no goodbye;
+4. a second server process starts on the *same* journal directory and
+   port; it replays the journal, re-admits the outstanding requests,
+   and the clients' jittered-backoff reconnect loops re-attach via
+   ``GET /v1/stream/<rid>`` + ``Last-Event-ID``;
+5. every stream must still end in exactly one ``done`` frame with a
+   gapless token index sequence, and the restarted server's block
+   audit must be clean once idle.
+
+Headline columns (CI-gated via ``tools/bench_compare.py
+--require-field``): ``terminal_coverage`` (streams that reached their
+done frame with no index gaps / streams started — must be 1.0),
+``audit_clean`` (block conservation after the dust settles — must be
+1.0), and ``journal_replay_ms`` (journal scan + scheduler restore wall
+time in the restarted process).  ``reconnects`` counts successful
+re-attaches across the kill.
+
+Slow by construction (two subprocess servers, each compiling the
+reduced qwen2-0.5b decode programs), so the fast row runs dense
+weights only; ``--full`` adds a CREW-served row.
+"""
+from __future__ import annotations
+
+import os
+import signal
+import socket
+import subprocess
+import sys
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+SEED = 13
+N_REQUESTS = 5
+PROMPT_RNG = (8, 16)
+MAX_NEW = 24
+MAX_BATCH = 4
+CACHE_LEN = 64
+HORIZON = 4
+READY_TIMEOUT_S = 600.0      # covers first-step compile in the child
+CLIENT_TIMEOUT_S = 300.0
+MAX_RECONNECTS = 300         # refused connects burn attempts fast while
+BACKOFF_CAP_S = 1.0          # the restarted server boots
+
+
+def _free_port() -> int:
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+def _spawn_server(port: int, journal_dir: str, log_path: str,
+                  crew: bool) -> subprocess.Popen:
+    import repro
+
+    # repro is a namespace package (no __init__.py): __path__, not __file__
+    src = os.path.dirname(os.path.abspath(list(repro.__path__)[0]))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("REPRO_FAULTS", None)   # no suite-wide injector: the kill
+    # (plus the explicit delay flags below) is the only chaos here
+    cmd = [sys.executable, "-m", "repro.launch.serve",
+           "--arch", "qwen2-0.5b", "--reduced", "--listen",
+           "--host", "127.0.0.1", "--port", str(port),
+           "--journal-dir", journal_dir, "--fsync", "horizon",
+           "--max-batch", str(MAX_BATCH), "--cache-len", str(CACHE_LEN),
+           "--horizon", str(HORIZON), "--seed", str(SEED),
+           # slow horizons (output-preserving, seeded) so the SIGKILL
+           # lands mid-stream instead of racing a millisecond decode
+           "--faults-seed", str(SEED), "--fault-delay-p", "1.0",
+           "--fault-max-delay", "0.25"]
+    if crew:
+        cmd.append("--crew")
+    log = open(log_path, "ab")
+    try:
+        return subprocess.Popen(cmd, env=env, stdout=log, stderr=log,
+                                stdin=subprocess.DEVNULL)
+    finally:
+        log.close()
+
+
+def _wait_ready(port: int, proc: subprocess.Popen,
+                timeout: float = READY_TIMEOUT_S) -> None:
+    from repro.serve.client import get_json
+
+    deadline = time.perf_counter() + timeout
+    while time.perf_counter() < deadline:
+        if proc.poll() is not None:
+            raise RuntimeError(
+                f"server exited with {proc.returncode} before ready")
+        try:
+            if get_json("127.0.0.1", port, "/readyz",
+                        timeout=2.0)["status"] == 200:
+                return
+        except OSError:
+            pass
+        time.sleep(0.1)
+    raise RuntimeError("server not ready in time")
+
+
+def _metrics(port: int) -> dict:
+    from repro.serve.client import get_json
+
+    return get_json("127.0.0.1", port, "/metrics", timeout=30.0)
+
+
+def _serve_one(weights: str) -> dict:
+    from repro.serve.client import stream_generate
+
+    rng = np.random.default_rng(SEED)
+    prompts = [rng.integers(0, 1000, int(rng.integers(*PROMPT_RNG))
+                            ).astype(np.int32)
+               for _ in range(N_REQUESTS)]
+    port = _free_port()
+    with tempfile.TemporaryDirectory(prefix="repro-restart-") as tmp:
+        jdir = os.path.join(tmp, "journal")
+        t0 = time.perf_counter()
+        proc = _spawn_server(port, jdir, os.path.join(tmp, "server-1.log"),
+                             crew=(weights == "crew"))
+        killed = 0
+        results = [None] * N_REQUESTS
+        try:
+            _wait_ready(port, proc)
+
+            def _one(i: int) -> None:
+                results[i] = stream_generate(
+                    "127.0.0.1", port, prompts[i], max_new=MAX_NEW,
+                    resume=True, max_reconnects=MAX_RECONNECTS,
+                    backoff_cap_s=BACKOFF_CAP_S, backoff_seed=SEED + i,
+                    idempotency_key=f"restart-{weights}-{i}",
+                    timeout=CLIENT_TIMEOUT_S)
+
+            threads = [threading.Thread(target=_one, args=(i,))
+                       for i in range(N_REQUESTS)]
+            for th in threads:
+                th.start()
+
+            # kill once every submit is durable and token panels are
+            # flowing: > 2x the submit count means at least N_REQUESTS
+            # token records landed after the last admission
+            deadline = time.perf_counter() + READY_TIMEOUT_S
+            while time.perf_counter() < deadline:
+                try:
+                    m = _metrics(port)
+                except OSError:
+                    m = {}
+                if m.get("journal", {}).get(
+                        "records_appended", 0) > 2 * N_REQUESTS:
+                    break
+                time.sleep(0.05)
+            time.sleep(0.2)         # admission responses are long sent
+            proc.send_signal(signal.SIGKILL)
+            proc.wait(timeout=30.0)
+            killed = 1
+
+            # same journal dir, same port: the second process replays
+            # and the clients' backoff loops find it
+            proc = _spawn_server(port, jdir,
+                                 os.path.join(tmp, "server-2.log"),
+                                 crew=(weights == "crew"))
+            _wait_ready(port, proc)
+            for th in threads:
+                th.join(timeout=READY_TIMEOUT_S)
+            alive = sum(th.is_alive() for th in threads)
+
+            m = _metrics(port)
+            jstats = m.get("journal", {})
+            covered = 0
+            reconnects = 0
+            for r in results:
+                if r is None:
+                    continue
+                reconnects += r["reconnects"]
+                done = r["done"] is not None
+                gapless = r["indices"] == list(range(len(r["indices"])))
+                covered += int(done and gapless)
+            return {
+                "bench": "restart",
+                "weights": weights,
+                "requests": N_REQUESTS,
+                "killed": killed,
+                "reconnects": reconnects,
+                "stuck_clients": alive,
+                "terminal_coverage": round(covered / N_REQUESTS, 3),
+                "audit_clean": int(bool(m.get("audit_clean", 0))),
+                "journal_replay_ms": jstats.get("restore_replay_ms", 0.0),
+                "replayed_requests": jstats.get("replayed_requests", 0),
+                "seconds": round(time.perf_counter() - t0, 3),
+            }
+        finally:
+            if proc.poll() is None:
+                proc.terminate()
+                try:
+                    proc.wait(timeout=30.0)
+                except subprocess.TimeoutExpired:
+                    proc.kill()
+                    proc.wait(timeout=30.0)
+
+
+def main(fast: bool = False):
+    rows = [_serve_one("dense")]
+    if not fast:
+        rows.append(_serve_one("crew"))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in main(fast=True):
+        print(row)

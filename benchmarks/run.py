@@ -27,8 +27,8 @@ import json
 import time
 
 from . import decode_latency, disconnect, dispatch, fig6_ppa, \
-    fig11_speedup, overload, perf_cells, prefix_reuse, roofline_table, \
-    tab1_unique_weights, tab2_compression, traffic
+    fig11_speedup, overload, perf_cells, prefix_reuse, restart, \
+    roofline_table, tab1_unique_weights, tab2_compression, traffic
 
 MODULES = [
     ("tab1_unique_weights", tab1_unique_weights),
@@ -40,6 +40,7 @@ MODULES = [
     ("prefix_reuse", prefix_reuse),
     ("overload", overload),
     ("disconnect", disconnect),
+    ("restart", restart),
     ("roofline_table", roofline_table),
     ("perf_cells", perf_cells),
     ("dispatch", dispatch),

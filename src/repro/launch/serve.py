@@ -218,6 +218,10 @@ def add_fault_flags(ap) -> None:
     g.add_argument("--fault-stall-p", type=float, default=0.0)
     g.add_argument("--fault-max-stall", type=float, default=0.5,
                    metavar="S")
+    g.add_argument("--fault-kill-p", type=float, default=0.0,
+                   help="per-pump-step probability of SIGKILLing the "
+                        "whole process (--listen only; recovery is the "
+                        "next process replaying --journal-dir)")
 
 
 def injector_from_args(args):
@@ -226,7 +230,8 @@ def injector_from_args(args):
     default)."""
     rates = (args.fault_delay_p, args.fault_preempt_p,
              args.fault_expire_p, args.fault_drop_p, args.fault_crash_p,
-             args.fault_disconnect_p, args.fault_stall_p)
+             args.fault_disconnect_p, args.fault_stall_p,
+             args.fault_kill_p)
     if args.faults_seed is None:
         if any(r > 0 for r in rates):
             raise SystemExit("--fault-* rates need --faults-seed")
@@ -241,16 +246,22 @@ def injector_from_args(args):
         crash_p=args.fault_crash_p,
         disconnect_p=args.fault_disconnect_p,
         max_disconnect_tokens=args.fault_max_disconnect_tokens,
-        stall_p=args.fault_stall_p, max_stall_s=args.fault_max_stall)
+        stall_p=args.fault_stall_p, max_stall_s=args.fault_max_stall,
+        kill_p=args.fault_kill_p)
 
 
 def run_listen(api, params, args, faults) -> None:
     """``--listen``: the supervised HTTP/SSE front door, draining
-    gracefully on SIGINT/SIGTERM."""
+    gracefully on SIGINT/SIGTERM.  With ``--journal-dir`` every
+    submit/token-panel/terminal is logged to a write-ahead journal and
+    replayed on cold start, so a restart on the same directory resumes
+    outstanding streams token-identically (DESIGN.md §5.1)."""
     import asyncio
 
-    from ..serve import Scheduler, SSEServer, Supervisor
+    from ..serve import Journal, RequestLog, Scheduler, SSEServer, Supervisor
 
+    journal = (Journal(args.journal_dir, fsync=args.fsync)
+               if args.journal_dir else None)
     sched = Scheduler(api, params, max_batch=args.max_batch,
                       cache_len=args.cache_len, horizon=args.horizon,
                       prefix_cache=not args.no_prefix_cache,
@@ -261,8 +272,14 @@ def run_listen(api, params, args, faults) -> None:
                       preempt_after_steps=args.preempt_after,
                       rng=jax.random.PRNGKey(args.seed),
                       stream_tokens=True,
-                      faults=faults)
-    sup = Supervisor(sched).start()
+                      faults=faults,
+                      journal=journal)
+    rlog = RequestLog(args.log_jsonl) if args.log_jsonl else None
+    sup = Supervisor(sched, request_log=rlog).start()
+    if journal is not None:
+        print(f"[serve] journal {args.journal_dir} (fsync={args.fsync}): "
+              f"replayed {sup.replayed} outstanding request(s) in "
+              f"{sup.replay_ms:.1f}ms")
     srv = SSEServer(sup, host=args.host, port=args.port)
     loop = asyncio.new_event_loop()
     asyncio.set_event_loop(loop)
@@ -275,6 +292,10 @@ def run_listen(api, params, args, faults) -> None:
         loop.run_forever()
     finally:
         sup.stop(drain=False)
+        if journal is not None:
+            journal.close()
+        if rlog is not None:
+            rlog.close()
         m = sched.metrics
         print(f"[serve] done: {m.completed} completed, {m.cancelled} "
               f"cancelled, {m.shed} shed; {sup.recoveries} recoveries")
@@ -394,6 +415,20 @@ def main() -> None:
                         "driving the seeded workload in-process")
     g.add_argument("--host", default="127.0.0.1")
     g.add_argument("--port", type=int, default=8777)
+    g.add_argument("--journal-dir", default=None, metavar="DIR",
+                   help="durable request journal for --listen: log every "
+                        "submit/token-panel/terminal to a WAL in DIR and "
+                        "replay it on startup, resuming outstanding "
+                        "streams across process death (docs/serving.md)")
+    g.add_argument("--fsync", choices=("record", "horizon", "none"),
+                   default="horizon",
+                   help="journal durability policy: fsync every record, "
+                        "once per horizon flush (default; submits are "
+                        "always synced), or never")
+    g.add_argument("--log-jsonl", default=None, metavar="PATH",
+                   help="append one structured JSON line per terminal "
+                        "(rid, tenant, status, reason, ttft_s, tokens, "
+                        "queue_s) to PATH")
     g.add_argument("--connect", default=None, metavar="HOST:PORT",
                    help="replay the seeded workload against a running "
                         "--listen server (no model is built)")

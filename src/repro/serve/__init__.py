@@ -38,6 +38,7 @@ from .convert import (
 )
 from .engine import Engine, generate
 from .faults import FaultInjector
+from .journal import Journal, JournalReplay, RequestLog
 from .pool import BlockPool
 from .prefix import PrefixTrie
 from .scheduler import (
@@ -52,7 +53,7 @@ from .scheduler import (
     Shed,
 )
 from .server import SSEServer
-from .supervisor import StreamEvent, Supervisor
+from .supervisor import Duplicate, StreamEvent, Supervisor
 
 __all__ = [
     # engines
@@ -70,9 +71,14 @@ __all__ = [
     # supervision + wire protocol (DESIGN.md §5)
     "Supervisor",
     "StreamEvent",
+    "Duplicate",
     "SSEServer",
     "RequestSnapshot",
     "SchedulerSnapshot",
+    # durability (DESIGN.md §5.1)
+    "Journal",
+    "JournalReplay",
+    "RequestLog",
     # checkpoint preparation
     "crewize_params",
     "abstract_crew_params",

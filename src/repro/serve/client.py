@@ -1,20 +1,29 @@
 """Blocking SSE client for the front door (std-lib ``http.client``).
 
 The reference consumer of the wire protocol (docs/serving.md): the
-chaos benchmark, the CI smoke test, and ``launch/serve.py --connect``
-all speak through :func:`stream_generate`, which doubles as the chaos
+chaos benchmarks, the CI smokes, and ``launch/serve.py --connect`` all
+speak through :func:`stream_generate`, which doubles as the chaos
 *instrument* — ``disconnect_after=k`` hangs up after ``k`` token frames
 (k=0: before the first) and ``stall_s`` stops reading mid-stream to
 exercise the server's write timeout and send-queue backpressure.
+
+Resumable consumption (``resume=True``): the client tracks the SSE
+``id:`` of the last frame it saw and, when the connection drops before
+the ``done`` frame — network blip, server restart, SIGKILL — reconnects
+to ``GET /v1/stream/<rid>`` with ``Last-Event-ID``, sleeping a jittered
+exponential backoff between attempts (seeded, so chaos runs replay).
+Replayed frames are deduplicated on the absolute token index, so the
+assembled stream is exactly the uninterrupted stream.
 """
 from __future__ import annotations
 
 import http.client
 import json
+import random
 import time
 from typing import Optional
 
-__all__ = ["stream_generate", "get_json"]
+__all__ = ["stream_generate", "resume_stream", "get_json"]
 
 
 def get_json(host: str, port: int, path: str,
@@ -36,12 +45,127 @@ def get_json(host: str, port: int, path: str,
         conn.close()
 
 
+def _read_sse(resp, out: dict, disconnect_after: Optional[int],
+              stall_s: float, stall_at: int) -> str:
+    """Consume SSE frames into ``out`` until done/EOF/planned hangup.
+    Frames at or below ``out``'s high-water index are dropped (replay
+    dedup on the absolute output index).  Returns ``"done"``,
+    ``"eof"`` (server closed early) or ``"disconnected"``."""
+    event = None
+    while True:
+        line = resp.readline()
+        if not line:
+            return "eof"            # server closed (or died) mid-stream
+        line = line.strip()
+        if line.startswith(b"event:"):
+            event = line.split(b":", 1)[1].strip().decode()
+        elif line.startswith(b"id:"):
+            out["last_event_id"] = line.split(b":", 1)[1].strip().decode()
+        elif line.startswith(b"data:"):
+            data = json.loads(line.split(b":", 1)[1].decode())
+            if event == "token":
+                if data["i"] <= out["_hw"]:
+                    continue        # replayed frame: already consumed
+                out["_hw"] = data["i"]
+                out["_n_tok"] += 1
+                if stall_s > 0.0 and out["_n_tok"] == stall_at:
+                    time.sleep(stall_s)
+                out["indices"].append(data["i"])
+                out["tokens"].append(data["token"])
+                out["logprobs"].append(data["logprob"])
+                if (disconnect_after is not None
+                        and out["_n_tok"] >= disconnect_after):
+                    out["disconnected"] = True
+                    return "disconnected"
+            elif event == "done":
+                out["done"] = data
+                return "done"
+
+
+def _new_out() -> dict:
+    return {"http_status": 0, "rid": -1, "tokens": [], "logprobs": [],
+            "indices": [], "done": None, "disconnected": False,
+            "reconnects": 0, "_hw": -1, "_n_tok": 0}
+
+
+def _finalize(out: dict) -> dict:
+    out.pop("_hw", None)
+    out.pop("_n_tok", None)
+    return out
+
+
+def _reconnect_loop(host: str, port: int, out: dict, *,
+                    max_reconnects: int, backoff_s: float,
+                    backoff_cap_s: float, timeout: float,
+                    rng: random.Random) -> dict:
+    """Re-attach to ``out['rid']`` until done or attempts exhausted.
+    Jittered exponential backoff between attempts; a refused connection
+    (server restarting) just burns an attempt and backs off again."""
+    attempts = 0
+    while out["done"] is None and attempts < max_reconnects:
+        attempts += 1
+        # full jitter: sleep U(0, min(cap, base * 2^k)) — decorrelates
+        # a thundering herd of reconnecting clients after a restart
+        delay = rng.uniform(0.0, min(backoff_cap_s,
+                                     backoff_s * (2 ** attempts)))
+        time.sleep(delay)
+        conn = http.client.HTTPConnection(host, port, timeout=timeout)
+        try:
+            headers = {"Connection": "close"}
+            if out["_hw"] >= 0:
+                headers["Last-Event-ID"] = f"{out['rid']}:{out['_hw']}"
+            conn.request("GET", f"/v1/stream/{out['rid']}",
+                         headers=headers)
+            resp = conn.getresponse()
+            if resp.status == 404:
+                out["error"] = "stream gone"
+                break               # journal compacted / unknown rid
+            if resp.status != 200:
+                continue            # 503 while booting: back off again
+            out["reconnects"] += 1
+            if _read_sse(resp, out, None, 0.0, 0) == "done":
+                break
+        except (ConnectionError, OSError, http.client.HTTPException):
+            continue                # refused/reset mid-restart: retry
+        finally:
+            conn.close()
+    return _finalize(out)
+
+
+def resume_stream(host: str, port: int, rid: int, *,
+                  last_index: int = -1,
+                  max_reconnects: int = 1,
+                  backoff_s: float = 0.05,
+                  backoff_cap_s: float = 2.0,
+                  backoff_seed: Optional[int] = None,
+                  timeout: float = 60.0) -> dict:
+    """Attach to an existing stream (``GET /v1/stream/<rid>`` with
+    ``Last-Event-ID``) and consume it to the done frame.  The result
+    dict matches :func:`stream_generate`; tokens before ``last_index+1``
+    are not re-collected."""
+    out = _new_out()
+    out["rid"] = int(rid)
+    out["_hw"] = int(last_index)
+    rng = random.Random(rid if backoff_seed is None else backoff_seed)
+    return _reconnect_loop(host, port, out,
+                           max_reconnects=max_reconnects,
+                           backoff_s=backoff_s,
+                           backoff_cap_s=backoff_cap_s,
+                           timeout=timeout, rng=rng)
+
+
 def stream_generate(host: str, port: int, prompt, *,
                     max_new: int = 32,
                     eos_id: Optional[int] = None,
                     deadline_s: Optional[float] = None,
                     priority: int = 0,
                     tenant: Optional[str] = None,
+                    idempotency_key: Optional[str] = None,
+                    resume: bool = False,
+                    max_reconnects: int = 8,
+                    backoff_s: float = 0.05,
+                    backoff_cap_s: float = 2.0,
+                    backoff_seed: Optional[int] = None,
                     disconnect_after: Optional[int] = None,
                     stall_s: float = 0.0,
                     stall_at: int = 1,
@@ -53,8 +177,19 @@ def stream_generate(host: str, port: int, prompt, *,
     admission assigned one),
     ``tokens`` / ``logprobs`` / ``indices`` (token frames received, in
     order), ``done`` (the final done-frame payload or None),
-    ``disconnected`` (True when this client hung up on purpose), and
-    ``retry_after`` when the server sent the header.
+    ``disconnected`` (True when this client hung up on purpose),
+    ``reconnects`` (successful re-attaches), ``last_event_id`` (the
+    last SSE ``id:`` seen), and ``retry_after`` when the server sent
+    the header.
+
+    ``resume=True`` marks the stream resumable server-side (disconnects
+    get a grace window instead of an instant cancel) and turns on
+    client-side auto-reconnect: up to ``max_reconnects`` attempts with
+    seeded full-jitter exponential backoff (base ``backoff_s``, cap
+    ``backoff_cap_s``), deduplicating replayed frames on the absolute
+    token index.  ``idempotency_key`` is sent as the
+    ``Idempotency-Key`` header — retrying the POST with the same key
+    re-attaches instead of double-enqueueing.
 
     ``disconnect_after=k`` closes the socket after ``k`` token frames
     (0 = immediately after the response headers); ``stall_s`` sleeps
@@ -62,15 +197,19 @@ def stream_generate(host: str, port: int, prompt, *,
     a client that stops draining its socket.
     """
     conn = http.client.HTTPConnection(host, port, timeout=timeout)
-    out = {"http_status": 0, "rid": -1, "tokens": [], "logprobs": [],
-           "indices": [], "done": None, "disconnected": False}
+    out = _new_out()
+    outcome = "eof"
     try:
         body = {"prompt": [int(t) for t in prompt], "max_new": max_new,
                 "eos_id": eos_id, "deadline_s": deadline_s,
-                "priority": priority, "tenant": tenant}
+                "priority": priority, "tenant": tenant,
+                "resumable": bool(resume)}
+        headers = {"Content-Type": "application/json",
+                   "Connection": "close"}
+        if idempotency_key is not None:
+            headers["Idempotency-Key"] = idempotency_key
         conn.request("POST", "/v1/generate", body=json.dumps(body),
-                     headers={"Content-Type": "application/json",
-                              "Connection": "close"})
+                     headers=headers)
         resp = conn.getresponse()
         out["http_status"] = resp.status
         retry = resp.getheader("Retry-After")
@@ -81,38 +220,29 @@ def stream_generate(host: str, port: int, prompt, *,
             out["error"] = payload.get("error")
             if "rid" in payload:
                 out["rid"] = int(payload["rid"])
-            return out
+            return _finalize(out)
         out["rid"] = int(resp.getheader("X-Request-Id", "-1"))
+        if resp.getheader("X-Idempotent-Replay"):
+            out["idempotent_replay"] = True
 
         if disconnect_after == 0:
             out["disconnected"] = True
-            return out
+            return _finalize(out)
 
-        event = None
-        n_tok = 0
-        while True:
-            line = resp.readline()
-            if not line:
-                break               # server closed (end of stream)
-            line = line.strip()
-            if line.startswith(b"event:"):
-                event = line.split(b":", 1)[1].strip().decode()
-            elif line.startswith(b"data:"):
-                data = json.loads(line.split(b":", 1)[1].decode())
-                if event == "token":
-                    n_tok += 1
-                    if stall_s > 0.0 and n_tok == stall_at:
-                        time.sleep(stall_s)
-                    out["indices"].append(data["i"])
-                    out["tokens"].append(data["token"])
-                    out["logprobs"].append(data["logprob"])
-                    if (disconnect_after is not None
-                            and n_tok >= disconnect_after):
-                        out["disconnected"] = True
-                        return out
-                elif event == "done":
-                    out["done"] = data
-                    return out
+        outcome = _read_sse(resp, out, disconnect_after, stall_s, stall_at)
+    except (ConnectionError, OSError, http.client.HTTPException) as e:
+        if not (resume and out["rid"] >= 0):
+            out["error"] = str(e)
+            return _finalize(out)
     finally:
         conn.close()
-    return out
+    if (resume and outcome == "eof" and out["done"] is None
+            and out["rid"] >= 0):
+        rng = random.Random(out["rid"] if backoff_seed is None
+                            else backoff_seed)
+        return _reconnect_loop(host, port, out,
+                               max_reconnects=max_reconnects,
+                               backoff_s=backoff_s,
+                               backoff_cap_s=backoff_cap_s,
+                               timeout=timeout, rng=rng)
+    return _finalize(out)

@@ -40,6 +40,10 @@ Hooks called by the supervision layer (``serve.supervisor`` /
 * ``client_stall()`` — seconds a client stops reading its socket
   (once per stream).  Exercises per-connection write timeouts and
   send-queue backpressure.
+* ``should_kill()`` — SIGKILL the whole process at this pump step
+  (once per step attempt).  Exercises the *durability* story: the
+  next process must replay the request journal (``serve.journal``)
+  and resume every stream token-identically.
 
 ``trace`` records every *injected* fault as ``(hook, call_index, ...)``
 tuples — the schedule two same-seed runs must agree on.
@@ -74,7 +78,7 @@ class FaultInjector:
     # here, so reordering or inserting would silently reshuffle every
     # existing seeded schedule the tests pin
     _HOOKS = ("delay", "preempt", "expire", "drop",
-              "crash", "disconnect", "stall")
+              "crash", "disconnect", "stall", "kill")
 
     def __init__(self, seed: int = 0, *,
                  delay_p: float = 0.0, max_delay_s: float = 0.0,
@@ -84,7 +88,8 @@ class FaultInjector:
                  crash_p: float = 0.0,
                  disconnect_p: float = 0.0,
                  max_disconnect_tokens: int = 8,
-                 stall_p: float = 0.0, max_stall_s: float = 0.0):
+                 stall_p: float = 0.0, max_stall_s: float = 0.0,
+                 kill_p: float = 0.0):
         self.seed = int(seed)
         self.delay_p = float(delay_p)
         self.max_delay_s = float(max_delay_s)
@@ -97,6 +102,7 @@ class FaultInjector:
         self.max_disconnect_tokens = int(max_disconnect_tokens)
         self.stall_p = float(stall_p)
         self.max_stall_s = float(max_stall_s)
+        self.kill_p = float(kill_p)
         self._rng = {
             hook: np.random.default_rng(
                 np.random.SeedSequence(entropy=self.seed, spawn_key=(i,)))
@@ -174,6 +180,19 @@ class FaultInjector:
             return None                              # way: fixed stream
         self.trace.append(("disconnect", n, rid, k))  # rate per call
         return k
+
+    def should_kill(self) -> bool:
+        """Kill the whole process at this pump step — ``SIGKILL``, not
+        an in-process crash (once per step attempt).  Unlike
+        ``should_crash`` there is nothing to snapshot: recovery is the
+        *next* process replaying the journal.  Only armed explicitly
+        (never by ``default_injector``); the supervisor hosts the
+        actual ``os.kill``."""
+        n = self._tick("kill")
+        hit = self._rng["kill"].random() < self.kill_p
+        if hit:
+            self.trace.append(("kill", n))
+        return hit
 
     def client_stall(self) -> float:
         """Seconds this stream's client stops reading (0 = never)."""

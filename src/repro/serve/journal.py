@@ -1,0 +1,408 @@
+"""Durable request journal: a write-ahead log for the front door.
+
+PR 9's supervisor survives engine stalls and injected crashes, but only
+while the process lives — a ``kill -9`` (OOM, node reboot, deploy) used
+to lose every in-flight request.  :class:`Journal` closes that gap with
+the smallest durable thing that works: an append-only log of the three
+facts the scheduler needs to rebuild its outstanding set —
+
+* ``submit``  — the request descriptor (prompt, limits, tenant,
+  idempotency key) the moment admission accepts it,
+* ``tokens``  — the ``[nb, H]`` token panels each horizon boundary
+  emitted, recorded per rid with their absolute start index,
+* ``terminal`` — the final :class:`~repro.serve.Completion` (status,
+  reason, full token stream).
+
+Replaying submissions minus terminals yields exactly the outstanding
+rids with their generated-so-far tokens — the same host descriptors
+``Scheduler.snapshot_requests`` captures — so cold-restart recovery
+(:meth:`Supervisor.start`) rides the existing ``restore`` path and
+greedy streams resume token-identically across full process death.
+
+On-disk format (per record)::
+
+    [u32 payload length][u32 crc32(payload)][payload: compact JSON]
+
+Records append to numbered segment files (``wal-00000001.log``, …)
+inside the journal directory; segments rotate at ``segment_bytes`` and
+the whole directory is compacted (truncated to empty) once nothing is
+outstanding, so the journal's steady-state size tracks in-flight work,
+not lifetime traffic.  Opening a journal replays every segment in
+order and **truncates the torn tail**: the first record whose length
+prefix, CRC, or JSON fails to check marks the kill point — the file is
+cut back to the last good record and any later segments are dropped.
+A crash can therefore lose at most the record being appended
+(``tests/test_journal.py`` pins this at every byte offset).
+
+Durability knobs (``fsync=``) and their napkin math (DESIGN.md §5.1):
+
+* ``"record"``  — fsync after every append.  Nothing acknowledged is
+  ever lost, but at ~0.5–5 ms per fsync a horizon emitting dozens of
+  tokens spends 10–100 ms on durability alone — more than the horizon's
+  own compute.
+* ``"horizon"`` (default) — one fsync per :meth:`commit` (the scheduler
+  calls it once per step).  At-risk window: one horizon's panels, which
+  replay re-decodes anyway from the durable submit — decode is
+  deterministic, so nothing client-visible is lost.
+* ``"none"``    — leave it to the OS writeback window (~5 s on ext4).
+  Submissions accepted in that window can vanish; clients must retry
+  (their ``Idempotency-Key`` makes the retry safe).
+
+Submit records fsync under both ``"record"`` and ``"horizon"``: they are
+rare relative to tokens, and a durable submit is what makes every other
+loss recoverable.
+
+The writer side is wired into :class:`~repro.serve.Scheduler` (pass
+``journal=``); the reader side is consumed by
+:class:`~repro.serve.Supervisor` at startup.  File discipline follows
+``repro.ckpt``: write → flush → ``os.fsync`` → (for renames) fsync the
+directory.
+
+:class:`RequestLog` rides along as the per-request JSONL observability
+sink (ROADMAP item 5): one line per terminal with rid, tenant, status,
+reason, ttft_s, token count, and queue wait.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import struct
+import time
+import zlib
+from typing import Dict, IO, List, Optional, Tuple
+
+__all__ = ["Journal", "JournalReplay", "RequestLog"]
+
+_HDR = struct.Struct("<II")         # payload length, crc32(payload)
+_SEG_FMT = "wal-%08d.log"
+_FSYNC_POLICIES = ("record", "horizon", "none")
+
+
+def _fsync_dir(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+@dataclasses.dataclass(frozen=True)
+class JournalReplay:
+    """What a journal directory contained at open time.
+
+    ``outstanding`` maps rid → the submit-record dict augmented with
+    ``tokens``/``logprobs`` accumulated from token records (requests
+    with no terminal yet); ``terminals`` maps rid → its terminal-record
+    dict.  ``truncated_bytes`` counts torn-tail bytes cut on open.
+    """
+    next_rid: int
+    outstanding: Dict[int, dict]
+    terminals: Dict[int, dict]
+    idempotency: Dict[str, int]
+    records: int
+    truncated_bytes: int
+    replay_ms: float
+
+
+class Journal:
+    """Append-only write-ahead journal over one directory.
+
+    Construction opens (creating if needed) the directory, replays all
+    segments (see :attr:`replay`), truncates any torn tail, and positions
+    the writer at the end of the last segment.  All appends go through
+    module-level record framing; readers never need the writer.
+    """
+
+    def __init__(self, path: str, *, fsync: str = "horizon",
+                 segment_bytes: int = 4 << 20):
+        if fsync not in _FSYNC_POLICIES:
+            raise ValueError(
+                f"fsync must be one of {_FSYNC_POLICIES}, got {fsync!r}")
+        self.path = str(path)
+        self.fsync = fsync
+        self._segment_bytes = int(segment_bytes)
+        os.makedirs(self.path, exist_ok=True)
+        self._fh: Optional[IO[bytes]] = None
+        self._seg_index = 0
+        self._dirty = False
+        self.appended = 0           # records appended by this writer
+        self.replay = self._open_and_replay()
+
+    # ------------------------------------------------------------------
+    # Open / replay / torn-tail truncation
+    # ------------------------------------------------------------------
+
+    def _segments(self) -> List[str]:
+        names = sorted(n for n in os.listdir(self.path)
+                       if n.startswith("wal-") and n.endswith(".log"))
+        return [os.path.join(self.path, n) for n in names]
+
+    @staticmethod
+    def _scan_segment(seg: str) -> Tuple[List[dict], int, int]:
+        """Read records from one segment; returns ``(records,
+        good_bytes, total_bytes)`` where ``good_bytes`` is the offset of
+        the first unreadable record (== total when the tail is clean)."""
+        with open(seg, "rb") as f:
+            blob = f.read()
+        records: List[dict] = []
+        off = 0
+        while off + _HDR.size <= len(blob):
+            ln, crc = _HDR.unpack_from(blob, off)
+            end = off + _HDR.size + ln
+            if end > len(blob):
+                break                           # torn: partial payload
+            payload = blob[off + _HDR.size:end]
+            if zlib.crc32(payload) != crc:
+                break                           # torn or corrupt
+            try:
+                rec = json.loads(payload.decode())
+            except (UnicodeDecodeError, json.JSONDecodeError):
+                break
+            records.append(rec)
+            off = end
+        return records, off, len(blob)
+
+    def _open_and_replay(self) -> JournalReplay:
+        t0 = time.perf_counter()
+        outstanding: Dict[int, dict] = {}
+        terminals: Dict[int, dict] = {}
+        idem: Dict[str, int] = {}
+        next_rid = 0
+        n_records = 0
+        truncated = 0
+        segs = self._segments()
+        keep: List[str] = []
+        for si, seg in enumerate(segs):
+            records, good, total = self._scan_segment(seg)
+            n_records += len(records)
+            for rec in records:
+                next_rid = max(next_rid, int(rec.get("rid", -1)) + 1)
+                self._apply(rec, outstanding, terminals, idem)
+            keep.append(seg)
+            if good < total:
+                # torn tail: cut this segment back to its last good
+                # record and drop everything after the kill point
+                truncated += total - good
+                with open(seg, "r+b") as f:
+                    f.truncate(good)
+                    f.flush()
+                    os.fsync(f.fileno())
+                for later in segs[si + 1:]:
+                    truncated += os.path.getsize(later)
+                    os.remove(later)
+                _fsync_dir(self.path)
+                break
+        if keep:
+            last = keep[-1]
+            self._seg_index = int(os.path.basename(last)[4:-4])
+            self._fh = open(last, "ab")
+        else:
+            self._roll_segment()
+        return JournalReplay(
+            next_rid=next_rid,
+            outstanding=outstanding,
+            terminals=terminals,
+            idempotency=idem,
+            records=n_records,
+            truncated_bytes=truncated,
+            replay_ms=(time.perf_counter() - t0) * 1e3,
+        )
+
+    @staticmethod
+    def _apply(rec: dict, outstanding: Dict[int, dict],
+               terminals: Dict[int, dict], idem: Dict[str, int]) -> None:
+        kind = rec.get("type")
+        rid = int(rec.get("rid", -1))
+        if kind == "submit":
+            rec = dict(rec, tokens=[], logprobs=[])
+            outstanding[rid] = rec
+            if rec.get("idem_key"):
+                idem[rec["idem_key"]] = rid
+        elif kind == "tokens":
+            req = outstanding.get(rid)
+            if req is None:
+                return              # tokens for an unknown/terminal rid
+            start = int(rec["start"])
+            toks, lps = req["tokens"], req["logprobs"]
+            del toks[start:], lps[start:]   # overwrite semantics: a
+            toks.extend(rec["tokens"])      # resume re-decodes the same
+            lps.extend(rec["logprobs"])     # indices deterministically
+        elif kind == "terminal":
+            outstanding.pop(rid, None)
+            terminals[rid] = rec
+            if rec.get("idem_key"):
+                idem[rec["idem_key"]] = rid
+
+    # ------------------------------------------------------------------
+    # Writer
+    # ------------------------------------------------------------------
+
+    def _roll_segment(self) -> None:
+        if self._fh is not None:
+            self._fh.flush()
+            os.fsync(self._fh.fileno())
+            self._fh.close()
+        self._seg_index += 1
+        seg = os.path.join(self.path, _SEG_FMT % self._seg_index)
+        self._fh = open(seg, "ab")
+        _fsync_dir(self.path)
+
+    def _append(self, rec: dict, *, force_sync: bool = False) -> None:
+        assert self._fh is not None, "journal is closed"
+        payload = json.dumps(rec, separators=(",", ":")).encode()
+        self._fh.write(_HDR.pack(len(payload), zlib.crc32(payload)))
+        self._fh.write(payload)
+        self.appended += 1
+        self._dirty = True
+        if self.fsync == "record" or (force_sync and self.fsync != "none"):
+            self._sync()
+
+    def _sync(self) -> None:
+        if self._fh is not None and self._dirty:
+            self._fh.flush()
+            os.fsync(self._fh.fileno())
+            self._dirty = False
+
+    def append_submit(self, rid: int, prompt, *, max_new: int,
+                      eos_id: Optional[int], deadline_s: Optional[float],
+                      priority: int, tenant: Optional[str],
+                      submitted_s: float,
+                      idem_key: Optional[str] = None) -> None:
+        """Log one accepted submission.  Fsyncs under ``"record"`` *and*
+        ``"horizon"`` — a durable submit is what makes every downstream
+        loss re-decodable."""
+        self._append({
+            "type": "submit", "rid": int(rid),
+            "prompt": [int(t) for t in prompt],
+            "max_new": int(max_new),
+            "eos_id": None if eos_id is None else int(eos_id),
+            "deadline_s": None if deadline_s is None else float(deadline_s),
+            "priority": int(priority),
+            "tenant": tenant,
+            "submitted_s": float(submitted_s),
+            "idem_key": idem_key,
+        }, force_sync=True)
+
+    def append_tokens(self, rid: int, start: int, tokens, logprobs) -> None:
+        """Log one rid's slice of a horizon panel: tokens
+        ``[start, start+len)`` of its generated stream."""
+        self._append({
+            "type": "tokens", "rid": int(rid), "start": int(start),
+            "tokens": [int(t) for t in tokens],
+            "logprobs": [round(float(x), 6) for x in logprobs],
+        })
+
+    def append_terminal(self, rid: int, *, status: str, reason: str,
+                        prompt_len: int, tokens, logprobs,
+                        ttft_s: float, queue_s: float = 0.0,
+                        tenant: Optional[str] = None,
+                        idem_key: Optional[str] = None) -> None:
+        """Log one terminal Completion (carries the full final stream,
+        so replay never needs earlier token records for finished rids)."""
+        self._append({
+            "type": "terminal", "rid": int(rid),
+            "status": status, "reason": reason,
+            "prompt_len": int(prompt_len),
+            "tokens": [int(t) for t in tokens],
+            "logprobs": [round(float(x), 6) for x in logprobs],
+            "ttft_s": round(float(ttft_s), 6),
+            "queue_s": round(float(queue_s), 6),
+            "tenant": tenant,
+            "idem_key": idem_key,
+        })
+
+    def commit(self, *, idle: bool = False) -> None:
+        """Horizon-boundary commit: fsync (policy ``"horizon"``), rotate
+        an oversized segment, and — when the caller reports the engine
+        idle (nothing outstanding) — compact the directory so the
+        journal never grows with lifetime traffic."""
+        if self.fsync != "none":
+            self._sync()
+        if idle:
+            if self.total_bytes() > self._segment_bytes:
+                self.compact()
+        elif self._tell() > self._segment_bytes:
+            self._roll_segment()
+
+    def _tell(self) -> int:
+        return 0 if self._fh is None else self._fh.tell()
+
+    def total_bytes(self) -> int:
+        return sum(os.path.getsize(s) for s in self._segments())
+
+    def segments(self) -> int:
+        return len(self._segments())
+
+    def compact(self) -> None:
+        """Drop every segment and start fresh.  Only valid when nothing
+        is outstanding (every journaled rid has its terminal) — replay
+        of an empty journal is trivially consistent.  Terminal records
+        for finished rids are dropped too: reconnects for them are
+        served from the living process, not the journal."""
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+        for seg in self._segments():
+            os.remove(seg)
+        _fsync_dir(self.path)
+        self._seg_index = 0
+        self._dirty = False
+        self._roll_segment()
+
+    def stats(self) -> dict:
+        return {
+            "fsync": self.fsync,
+            "records_replayed": self.replay.records,
+            "records_appended": self.appended,
+            "truncated_bytes": self.replay.truncated_bytes,
+            "replay_ms": round(self.replay.replay_ms, 3),
+            "segments": self.segments(),
+            "bytes": self.total_bytes(),
+        }
+
+    def close(self) -> None:
+        if self._fh is not None:
+            self._sync()
+            self._fh.close()
+            self._fh = None
+
+
+class RequestLog:
+    """Structured per-request JSONL log (one line per terminal).
+
+    Append-only and line-buffered; each line carries the fields the
+    ROADMAP's observability item names: rid, tenant, status, reason,
+    ttft_s, tokens (count generated), queue_s (submit → first
+    admission wait).  Crash-safety matters less than for the journal
+    (logs are observability, not state), so lines are flushed but not
+    fsynced.
+    """
+
+    def __init__(self, path: str):
+        self.path = str(path)
+        parent = os.path.dirname(os.path.abspath(self.path))
+        os.makedirs(parent, exist_ok=True)
+        self._fh = open(self.path, "a", encoding="utf-8")
+        self.lines = 0
+
+    def log(self, comp) -> None:
+        """Append one terminal :class:`~repro.serve.Completion`."""
+        rec = {
+            "ts": time.time(),
+            "rid": int(comp.rid),
+            "tenant": comp.tenant,
+            "status": comp.status,
+            "reason": comp.reason,
+            "ttft_s": round(float(comp.ttft_s), 6),
+            "tokens": int(comp.tokens.size),
+            "queue_s": round(float(comp.queue_s), 6),
+        }
+        self._fh.write(json.dumps(rec, separators=(",", ":")) + "\n")
+        self._fh.flush()
+        self.lines += 1
+
+    def close(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None

@@ -116,6 +116,7 @@ from ..kernels.plan import warn_deprecated
 from ..models import ModelApi
 from .convert import decode_state_for_params
 from .faults import FaultInjector, default_injector
+from .journal import Journal
 from .pool import BlockPool
 from .prefix import PrefixTrie
 
@@ -208,6 +209,7 @@ class RequestSnapshot:
     tokens: Tuple[int, ...] = ()
     logprobs: Tuple[float, ...] = ()
     ttft_s: Optional[float] = None
+    idem_key: Optional[str] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -244,6 +246,7 @@ class Request:
     tenant: Optional[str] = None        # token-rate accounting bucket
     state: RequestState = RequestState.QUEUED
     preemptions: int = 0        # times preempted to the prefix pool
+    idem_key: Optional[str] = None      # client idempotency key, if any
 
 
 @dataclasses.dataclass
@@ -264,6 +267,8 @@ class Completion:
     ttft_s: float = 0.0         # submit -> first token wall time
     status: str = "completed"   # terminal RequestState value
     reason: str = ""            # why, for non-completed statuses
+    tenant: Optional[str] = None    # the request's rate bucket, if any
+    queue_s: float = 0.0        # submit -> first admission wait
 
 
 @dataclasses.dataclass
@@ -300,6 +305,18 @@ class SchedulerMetrics:
     pool_blocks_in_use: int = 0     # gauge: blocks with refcount > 0
     pool_blocks_free: int = 0       # gauge: free-list depth
     pool_blocks_peak: int = 0       # high-water pool_blocks_in_use
+    # per-tenant counters (attribute-only, like the status counters):
+    # tenant name -> {submitted, completed, shed, tokens}; requests
+    # without a tenant accumulate under "-"
+    tenants: Dict[str, Dict[str, int]] = dataclasses.field(
+        default_factory=dict)
+
+    def tenant_bump(self, tenant: Optional[str], key: str,
+                    n: int = 1) -> None:
+        bucket = self.tenants.setdefault(
+            tenant if tenant is not None else "-",
+            {"submitted": 0, "completed": 0, "shed": 0, "tokens": 0})
+        bucket[key] += n
 
     def __getitem__(self, key: str) -> int:
         warn_deprecated(
@@ -429,6 +446,7 @@ class Scheduler:
         preempt_after_steps: Optional[int] = None,
         faults: Union[FaultInjector, None, bool] = None,
         stream_tokens: bool = False,
+        journal: Optional[Journal] = None,
     ):
         if not api.cfg.has_decode:
             raise ValueError(f"{api.cfg.arch_id} is encoder-only: no decode")
@@ -560,6 +578,12 @@ class Scheduler:
         self._draining = False      # begin_drain(): submit sheds new work
         self._stream_tokens = bool(stream_tokens)
         self._stream: List[Tuple[int, int, int, float]] = []
+        # durability hooks (serve.journal): submit records at admission,
+        # per-rid token slices flushed once per horizon boundary,
+        # terminal records at retirement
+        self._journal = journal
+        self._jstep: Dict[int, list] = {}   # rid -> [start, toks, lps]
+        self._queue_s: Dict[int, float] = {}    # rid -> admission wait
         self._faults: Optional[FaultInjector] = (
             default_injector() if faults is None
             else (faults if isinstance(faults, FaultInjector) else None))
@@ -787,7 +811,8 @@ class Scheduler:
                eos_id: Optional[int] = None,
                deadline_s: Optional[float] = None,
                priority: int = 0,
-               tenant: Optional[str] = None) -> Union[int, Shed]:
+               tenant: Optional[str] = None,
+               idem_key: Optional[str] = None) -> Union[int, Shed]:
         """Queue one request; returns its request id — or a typed
         :class:`Shed` when admission control rejects it (bounded queue
         full with no lower-priority victim, or the tenant's token bucket
@@ -816,7 +841,8 @@ class Scheduler:
         req = Request(rid, prompt, int(max_new), eos_id,
                       submitted_s=time.perf_counter(),
                       deadline_s=deadline_s, priority=int(priority),
-                      tenant=tenant)
+                      tenant=tenant, idem_key=idem_key)
+        self.metrics.tenant_bump(tenant, "submitted")
         if self._draining:
             # a draining scheduler admits nothing: the newcomer gets its
             # typed terminal immediately instead of queueing forever
@@ -839,6 +865,16 @@ class Scheduler:
             self._terminal(victim, RequestState.SHED,
                            "queue-full: displaced by higher-priority "
                            f"rid {rid}")
+        if self._journal is not None:
+            # write-ahead: the submit is durable before the request can
+            # generate anything (shed requests are deliberately *not*
+            # journaled — replaying one would resurrect work its client
+            # already saw rejected)
+            self._journal.append_submit(
+                rid, prompt, max_new=req.max_new, eos_id=req.eos_id,
+                deadline_s=req.deadline_s, priority=req.priority,
+                tenant=req.tenant, submitted_s=req.submitted_s,
+                idem_key=idem_key)
         self._queue_push(req)
         return rid
 
@@ -905,6 +941,12 @@ class Scheduler:
         """Whether per-token stream records are being collected."""
         return self._stream_tokens
 
+    @property
+    def journal(self) -> Optional[Journal]:
+        """The attached write-ahead journal (None when not durable) —
+        read by the supervisor for cold-restart replay and stats."""
+        return self._journal
+
     def pop_tokens(self) -> List[Tuple[int, int, int, float]]:
         """Drain the per-token stream buffer: ``(rid, index, token,
         logprob)`` tuples in emission order since the last call
@@ -931,6 +973,7 @@ class Scheduler:
             tokens=tuple(int(t) for t in self._out_toks.get(rid, [])),
             logprobs=tuple(float(x) for x in self._out_lps.get(rid, [])),
             ttft_s=self._ttft.get(rid),
+            idem_key=req.idem_key,
         )
 
     def snapshot_requests(self) -> SchedulerSnapshot:
@@ -967,7 +1010,8 @@ class Scheduler:
                           deadline_s=snap.deadline_s,
                           priority=int(snap.priority),
                           tenant=snap.tenant,
-                          preemptions=snap.preemptions)
+                          preemptions=snap.preemptions,
+                          idem_key=snap.idem_key)
             if snap.tokens:
                 self._out_toks[rid] = [int(t) for t in snap.tokens]
                 self._out_lps[rid] = [float(x) for x in snap.logprobs]
@@ -1130,6 +1174,8 @@ class Scheduler:
         self._out_lps = {}
         self._admit_step = {}
         self._ttft = {}
+        self._jstep = {}
+        self._queue_s = {}
         self._results = {}
         self._terminal_state = {}
         self._next_rid = 0
@@ -1166,7 +1212,7 @@ class Scheduler:
         req.state = state
         rid = req.rid
         admit = self._admit_step.pop(rid, None)
-        self._results[rid] = Completion(
+        comp = Completion(
             rid=rid,
             prompt_len=req.prompt.size,
             tokens=np.asarray(self._out_toks.pop(rid, []), np.int32),
@@ -1175,13 +1221,33 @@ class Scheduler:
             ttft_s=self._ttft.pop(rid, 0.0),
             status=state.value,
             reason=reason,
+            tenant=req.tenant,
+            queue_s=self._queue_s.pop(rid, 0.0),
         )
+        self._results[rid] = comp
         self._terminal_state[rid] = state
         counter = {RequestState.COMPLETED: "completed",
                    RequestState.CANCELLED: "cancelled",
                    RequestState.TIMED_OUT: "timed_out",
                    RequestState.SHED: "shed"}[state]
         setattr(self.metrics, counter, getattr(self.metrics, counter) + 1)
+        if counter in ("completed", "shed"):
+            self.metrics.tenant_bump(req.tenant, counter)
+        self.metrics.tenant_bump(req.tenant, "tokens", int(comp.tokens.size))
+        if self._journal is not None:
+            # the terminal carries the full final stream, so replay
+            # never needs this rid's earlier token records.  A shed
+            # terminal does not bind its idempotency key: a shed is a
+            # rejection, and re-enqueueing on retry is exactly what the
+            # client wants.
+            self._jstep.pop(rid, None)
+            self._journal.append_terminal(
+                rid, status=state.value, reason=reason,
+                prompt_len=comp.prompt_len, tokens=comp.tokens,
+                logprobs=comp.logprobs, ttft_s=comp.ttft_s,
+                queue_s=comp.queue_s, tenant=req.tenant,
+                idem_key=(None if state is RequestState.SHED
+                          else req.idem_key))
 
     def _clear_slot(self, slot: int) -> None:
         for b in self._slot_blocks.pop(slot, ()):
@@ -1215,6 +1281,15 @@ class Scheduler:
         if self._stream_tokens:
             self._stream.append((rid, len(self._out_toks[rid]) - 1,
                                  tok, lp))
+        if self._journal is not None:
+            # accumulate this rid's slice of the horizon panel; flushed
+            # as one tokens record per rid at the step boundary
+            ent = self._jstep.get(rid)
+            if ent is None:
+                ent = self._jstep[rid] = [
+                    len(self._out_toks[rid]) - 1, [], []]
+            ent[1].append(tok)
+            ent[2].append(lp)
         self._slot_tok[slot] = tok
         self._slot_ngen[slot] += 1
         if ((req.eos_id is not None and tok == req.eos_id)
@@ -1445,6 +1520,8 @@ class Scheduler:
             self._out_lps.setdefault(req.rid, [])
             # n_steps spans first admission -> terminal, across preempts
             self._admit_step.setdefault(req.rid, self.metrics.steps)
+            self._queue_s.setdefault(
+                req.rid, time.perf_counter() - req.submitted_s)
             self._slot_seq[slot] = req.prompt
             self._slot_rid[slot] = req.rid
             self._slot_done[slot] = False
@@ -1509,6 +1586,8 @@ class Scheduler:
         self._live[req.rid] = req
         req.state = RequestState.DECODING
         self._admit_step.setdefault(req.rid, self.metrics.steps)
+        self._queue_s.setdefault(
+            req.rid, time.perf_counter() - req.submitted_s)
         self._slot_seq[slot] = req.prompt
         self._slot_rid[slot] = req.rid
         self._slot_done[slot] = False
@@ -1631,6 +1710,7 @@ class Scheduler:
             busy = bool(self._queue_len() or self._live)
             if not busy:
                 self.metrics.steps -= 1  # nothing ran
+            self._journal_flush()
             return busy
         nb = self._batch_bucket(len(active))
         tables = np.zeros((nb, self._nb_full), np.int32)
@@ -1690,7 +1770,20 @@ class Scheduler:
                 if self._record(s, int(toks_h[i, t]), float(lps_h[i, t])):
                     break
         self._pool_gauges()
+        self._journal_flush()
         return bool(self._queue_len() or self._live)
+
+    def _journal_flush(self) -> None:
+        """Horizon-boundary durability point: write one tokens record
+        per rid that emitted this step, then commit (one fsync under the
+        ``"horizon"`` policy — the napkin math in DESIGN.md §5.1)."""
+        if self._journal is None:
+            return
+        for rid, (start, toks, lps) in self._jstep.items():
+            self._journal.append_tokens(rid, start, toks, lps)
+        self._jstep.clear()
+        self._journal.commit(
+            idle=not (self._queue_len() or self._live))
 
     def _step_budget(self) -> int:
         """Generous upper bound on the steps draining the current work

@@ -12,15 +12,33 @@ Routes:
 
 * ``GET /healthz`` — liveness: the process is up (200 always).
 * ``GET /readyz`` — readiness: 200 while accepting, 503 +
-  ``Retry-After`` once draining or stopped.
-* ``GET /metrics`` — scheduler counters + supervisor recovery stats.
+  ``Retry-After`` once draining or stopped (the value is derived from
+  the remaining drain budget × observed step latency, not a constant).
+* ``GET /metrics`` — scheduler counters (per-tenant included) +
+  supervisor recovery stats + durability state (``audit_clean``,
+  journal replay/fsync counters).
 * ``POST /v1/generate`` — submit ``{"prompt": [ints], "max_new": n,
-  "eos_id": …, "deadline_s": …, "priority": …, "tenant": …}``; the
+  "eos_id": …, "deadline_s": …, "priority": …, "tenant": …,
+  "resumable": bool}``; the
   response is an SSE stream (``X-Request-Id`` header carries the rid):
   one ``event: token`` frame per generated token, then exactly one
-  ``event: done`` frame with the terminal Completion.  Admission
-  rejections map to HTTP: draining / queue-full → 503 + ``Retry-After``,
-  tenant-rate → 429; malformed bodies → 400.
+  ``event: done`` frame with the terminal Completion.  Every frame
+  carries an SSE ``id:`` of the form ``<rid>:<index>`` (``done`` for
+  the terminal), so a client can resume after a dropped connection.
+  An ``Idempotency-Key`` header makes retries safe: a key already
+  bound to a rid re-attaches to that stream instead of enqueueing a
+  second copy.  Admission rejections map to HTTP: draining /
+  queue-full → 503 + ``Retry-After``, tenant-rate → 429; malformed
+  bodies → 400.
+* ``GET /v1/stream/<rid>`` — reconnect to an existing stream.
+  ``Last-Event-ID: <rid>:<k>`` (standard SSE reconnect header) replays
+  from absolute token index ``k+1`` — from supervisor history for live
+  rids, from the terminal Completion (journal-backed across restarts)
+  for finished ones — then continues live.  Unknown rids → 404.
+
+Disconnects on a plain stream cancel the request immediately; on a
+``resumable`` stream the request keeps running for a grace window
+(``Supervisor.resume_grace_s``) awaiting a reconnect.
 
 Threading model: the asyncio loop runs the sockets; the supervisor's
 pump thread runs the engine and delivers :class:`StreamEvent` callbacks,
@@ -32,13 +50,12 @@ whole engine step.
 from __future__ import annotations
 
 import asyncio
-import dataclasses
 import json
 import threading
 from typing import Optional, Tuple
 
 from .scheduler import Shed
-from .supervisor import StreamEvent, Supervisor
+from .supervisor import Duplicate, StreamEvent, Supervisor
 
 __all__ = ["SSEServer"]
 
@@ -227,7 +244,7 @@ class SSEServer:
                 writer.close()
                 return
         try:
-            await self._route(method, path, body, reader, writer)
+            await self._route(method, path, headers, body, reader, writer)
         except (ConnectionError, asyncio.TimeoutError):
             writer.close()
         except Exception:
@@ -244,14 +261,21 @@ class SSEServer:
         finally:
             writer.close()
 
+    def _retry_after(self) -> int:
+        """``Retry-After`` seconds: the supervisor's drain estimate
+        (remaining budget × observed step latency), floored by the
+        configured constant."""
+        return max(self._retry_after_s, self._sup.retry_after_s())
+
     def _unavailable(self, reason: str) -> bytes:
+        retry = self._retry_after()
         return _response(
             "503 Service Unavailable",
-            _json_bytes({"error": reason,
-                         "retry_after_s": self._retry_after_s}),
-            extra=(("Retry-After", str(self._retry_after_s)),))
+            _json_bytes({"error": reason, "retry_after_s": retry}),
+            extra=(("Retry-After", str(retry)),))
 
-    async def _route(self, method: str, path: str, body: bytes,
+    async def _route(self, method: str, path: str, headers: dict,
+                     body: bytes,
                      reader: asyncio.StreamReader,
                      writer: asyncio.StreamWriter) -> None:
         if method == "GET" and path == "/healthz":
@@ -266,17 +290,14 @@ class SSEServer:
                           else "not accepting")
                 await self._finish(writer, self._unavailable(reason))
         elif method == "GET" and path == "/metrics":
-            sched = self._sup.scheduler
-            payload = dataclasses.asdict(sched.metrics)
-            payload.update(
-                pending=sched.pending,
-                draining=self._sup.draining,
-                recoveries=self._sup.recoveries,
-            )
+            # assembled under the supervisor lock off the event loop
+            payload = await asyncio.to_thread(self._sup.metrics_payload)
             await self._finish(writer, _response(
                 "200 OK", _json_bytes(payload)))
         elif method == "POST" and path == "/v1/generate":
-            await self._generate(body, reader, writer)
+            await self._generate(body, headers, reader, writer)
+        elif method == "GET" and path.startswith("/v1/stream/"):
+            await self._resume(path, headers, reader, writer)
         else:
             await self._finish(writer, _response(
                 "404 Not Found", _json_bytes({"error": "no such route"})))
@@ -285,12 +306,45 @@ class SSEServer:
     # The SSE stream
     # ------------------------------------------------------------------
 
-    async def _generate(self, body: bytes,
+    def _event_queue(self):
+        """A bounded per-connection event queue plus the pump-thread →
+        loop bridge callback."""
+        loop = asyncio.get_running_loop()
+        queue: asyncio.Queue = asyncio.Queue(maxsize=self._send_queue)
+        overflow = asyncio.Event()
+
+        def _enqueue(ev: StreamEvent) -> None:
+            try:
+                queue.put_nowait(ev)
+            except asyncio.QueueFull:
+                overflow.set()
+
+        def on_event(ev: StreamEvent) -> None:
+            # pump thread → loop; bounded queue is the backpressure
+            loop.call_soon_threadsafe(_enqueue, ev)
+
+        return queue, overflow, on_event
+
+    @staticmethod
+    def _parse_last_event_id(headers: dict) -> Optional[int]:
+        """``Last-Event-ID: <rid>:<k>`` (or bare ``<k>``) → resume from
+        absolute index ``k + 1``; None/garbage → replay from 0."""
+        raw = headers.get("last-event-id", "").strip()
+        if not raw:
+            return None
+        tail = raw.rsplit(":", 1)[-1]
+        try:
+            return int(tail) + 1
+        except ValueError:
+            return None
+
+    async def _generate(self, body: bytes, headers: dict,
                         reader: asyncio.StreamReader,
                         writer: asyncio.StreamWriter) -> None:
         try:
             spec = json.loads(body.decode() or "{}")
             prompt = [int(t) for t in spec["prompt"]]
+            resumable = bool(spec.get("resumable", False))
             kwargs = dict(
                 max_new=int(spec.get("max_new", 32)),
                 eos_id=(None if spec.get("eos_id") is None
@@ -306,30 +360,24 @@ class SSEServer:
             await self._finish(writer, _response(
                 "400 Bad Request", _json_bytes({"error": str(e)})))
             return
+        idem_key = headers.get("idempotency-key") or None
         if not self._sup.accepting:
-            await self._finish(writer, self._unavailable(
-                "draining" if self._sup.draining else "not accepting"))
-            return
+            # a duplicate of already-accepted work streams even while
+            # draining (it is not new admission); everything else 503s
+            known = await asyncio.to_thread(
+                self._sup.idempotent_rid, idem_key)
+            if known is None:
+                await self._finish(writer, self._unavailable(
+                    "draining" if self._sup.draining else "not accepting"))
+                return
 
-        loop = asyncio.get_running_loop()
-        queue: asyncio.Queue = asyncio.Queue(maxsize=self._send_queue)
-        overflow = asyncio.Event()
-
-        def _enqueue(ev: StreamEvent) -> None:
-            try:
-                queue.put_nowait(ev)
-            except asyncio.QueueFull:
-                overflow.set()
-
-        def on_event(ev: StreamEvent) -> None:
-            # pump thread → loop; bounded queue is the backpressure
-            loop.call_soon_threadsafe(_enqueue, ev)
-
+        queue, overflow, on_event = self._event_queue()
         # the supervisor lock can be held for a full engine step, so
         # submit from a worker thread instead of blocking the loop
         try:
             res = await asyncio.to_thread(
-                self._sup.submit, prompt, on_event=on_event, **kwargs)
+                self._sup.submit, prompt, on_event=on_event,
+                idempotency_key=idem_key, **kwargs)
         except ValueError as e:
             await self._finish(writer, _response(
                 "400 Bad Request", _json_bytes({"error": str(e)})))
@@ -339,21 +387,79 @@ class SSEServer:
                 await self._finish(writer, _response(
                     "429 Too Many Requests",
                     _json_bytes({"error": res.reason, "rid": res.rid}),
-                    extra=(("Retry-After", str(self._retry_after_s)),)))
+                    extra=(("Retry-After", str(self._retry_after())),)))
             else:        # "draining" | "queue-full"
                 await self._finish(writer, self._unavailable(res.reason))
             return
-        rid = res
+        if isinstance(res, Duplicate):
+            # idempotent retry: re-attach to the existing stream instead
+            # of double-enqueueing; Last-Event-ID still dedups replay
+            rid = res.rid
+            from_index = self._parse_last_event_id(headers) or 0
+            ok = await asyncio.to_thread(
+                self._sup.attach, rid, on_event, from_index=from_index)
+            if not ok:
+                await self._finish(writer, _response(
+                    "404 Not Found",
+                    _json_bytes({"error": "unknown rid for key",
+                                 "rid": rid})))
+                return
+            await self._stream_events(rid, queue, overflow, reader,
+                                      writer, resumable=True,
+                                      duplicate=True)
+            return
+        await self._stream_events(res, queue, overflow, reader, writer,
+                                  resumable=resumable)
 
-        await self._write(writer, (
+    async def _resume(self, path: str, headers: dict,
+                      reader: asyncio.StreamReader,
+                      writer: asyncio.StreamWriter) -> None:
+        """``GET /v1/stream/<rid>`` — the Last-Event-ID reconnect."""
+        try:
+            rid = int(path[len("/v1/stream/"):].split("?", 1)[0])
+        except ValueError:
+            await self._finish(writer, _response(
+                "400 Bad Request", _json_bytes({"error": "bad rid"})))
+            return
+        from_index = self._parse_last_event_id(headers) or 0
+        queue, overflow, on_event = self._event_queue()
+        ok = await asyncio.to_thread(
+            self._sup.attach, rid, on_event, from_index=from_index)
+        if not ok:
+            await self._finish(writer, _response(
+                "404 Not Found",
+                _json_bytes({"error": "unknown rid (never journaled, "
+                             "or compacted away)", "rid": rid})))
+            return
+        await self._stream_events(rid, queue, overflow, reader, writer,
+                                  resumable=True)
+
+    async def _stream_events(self, rid: int, queue: "asyncio.Queue",
+                             overflow: asyncio.Event,
+                             reader: asyncio.StreamReader,
+                             writer: asyncio.StreamWriter, *,
+                             resumable: bool,
+                             duplicate: bool = False) -> None:
+        headers = (
             "HTTP/1.1 200 OK\r\n"
             "Content-Type: text/event-stream\r\n"
             "Cache-Control: no-store\r\n"
             "Connection: close\r\n"
-            f"X-Request-Id: {rid}\r\n\r\n").encode())
+            f"X-Request-Id: {rid}\r\n")
+        if duplicate:
+            headers += "X-Idempotent-Replay: 1\r\n"
+        await self._write(writer, (headers + "\r\n").encode())
+
+        def _gone() -> None:
+            # a resumable client gets a reconnect grace window; a plain
+            # disconnect propagates as an immediate cancel
+            if resumable:
+                self._sup.release(rid)
+            else:
+                self._sup.cancel(rid)
 
         # the request is fully read, so any data/EOF now means the
-        # client went away → propagate as a cancel
+        # client went away
         eof_task = asyncio.ensure_future(reader.read(1))
         try:
             while True:
@@ -363,18 +469,18 @@ class SSEServer:
                     return_when=asyncio.FIRST_COMPLETED)
                 if eof_task in done:
                     get_task.cancel()
-                    self._sup.cancel(rid)
+                    _gone()
                     break
                 if overflow.is_set():
                     get_task.cancel()
-                    self._sup.cancel(rid)
+                    _gone()
                     break
                 ev = get_task.result()
                 try:
                     await self._write(writer, self._frame(ev))
                 except (ConnectionError, asyncio.TimeoutError, OSError):
                     # reset or write-timeout: same as a disconnect
-                    self._sup.cancel(rid)
+                    _gone()
                     break
                 if ev.kind == "done":
                     break
@@ -385,9 +491,11 @@ class SSEServer:
     @staticmethod
     def _frame(ev: StreamEvent) -> bytes:
         if ev.kind == "token":
+            eid = f"{ev.rid}:{ev.index}"
             data = {"i": ev.index, "token": ev.token,
                     "logprob": round(ev.logprob, 6)}
         else:
+            eid = f"{ev.rid}:done"
             comp = ev.completion
             data = {"rid": ev.rid, "status": comp.status,
                     "reason": comp.reason,
@@ -396,5 +504,6 @@ class SSEServer:
                     "tokens": [int(t) for t in comp.tokens],
                     "ttft_s": round(float(comp.ttft_s), 6)}
         return (f"event: {ev.kind}\r\n"
+                f"id: {eid}\r\n"
                 f"data: {json.dumps(data, separators=(',', ':'))}"
                 "\r\n\r\n").encode()

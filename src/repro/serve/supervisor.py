@@ -34,18 +34,26 @@ not block (the SSE server's callback just enqueues to an asyncio queue).
 from __future__ import annotations
 
 import dataclasses
+import math
+import os
+import signal
 import threading
 import time
-from typing import Callable, Dict, List, Optional, Set, Union
+from typing import Callable, Dict, List, Optional, Set, Tuple, Union
 
+import numpy as np
+
+from .journal import RequestLog
 from .scheduler import (
     Completion,
+    RequestSnapshot,
     Scheduler,
+    SchedulerSnapshot,
     SchedulerStalledError,
     Shed,
 )
 
-__all__ = ["StreamEvent", "Supervisor"]
+__all__ = ["Duplicate", "StreamEvent", "Supervisor"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,6 +72,14 @@ class StreamEvent:
     token: int = -1
     logprob: float = 0.0
     completion: Optional[Completion] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Duplicate:
+    """:meth:`Supervisor.submit` saw an already-bound
+    ``Idempotency-Key``: the work exists under ``rid`` — attach to its
+    stream (:meth:`Supervisor.attach`) instead of double-enqueueing."""
+    rid: int
 
 
 class _InjectedCrash(RuntimeError):
@@ -90,7 +106,9 @@ class Supervisor:
                  max_recoveries: int = 8,
                  stall_steps: int = 16,
                  idle_poll_s: float = 0.05,
-                 yield_s: float = 0.001):
+                 yield_s: float = 0.001,
+                 request_log: Optional[RequestLog] = None,
+                 resume_grace_s: float = 10.0):
         if not sched.stream_tokens:
             raise ValueError("Supervisor requires a Scheduler built "
                              "with stream_tokens=True")
@@ -99,6 +117,8 @@ class Supervisor:
         self._stall_steps = int(stall_steps)
         self._idle_poll_s = float(idle_poll_s)
         self._yield_s = float(yield_s)
+        self._request_log = request_log
+        self._resume_grace_s = float(resume_grace_s)
         self._lock = threading.RLock()
         self._wake = threading.Event()
         self._idle = threading.Event()
@@ -115,22 +135,97 @@ class Supervisor:
         self._last_sig: Optional[tuple] = None
         self._stalled = 0
         self._consecutive = 0
+        # resumable-stream state: full delivered history per live rid
+        # (reconnects replay from it), idempotency-key bindings, and
+        # the grace deadlines for disconnected-but-resumable streams
+        self._hist: Dict[int, List[Tuple[int, int, float]]] = {}
+        self._idem: Dict[str, int] = {}
+        self._disc: Dict[int, float] = {}
+        self._step_ewma: Optional[float] = None
+        self._cold_replayed = False
         self.results: Dict[int, Completion] = {}
         self.recoveries = 0
         self.recovery_log: List[dict] = []
+        self.replayed = 0           # requests re-admitted from the journal
+        self.replay_ms = 0.0        # journal scan + restore wall time
 
     # ------------------------------------------------------------------
     # Lifecycle
     # ------------------------------------------------------------------
 
     def start(self) -> "Supervisor":
-        """Start the pump thread (idempotent)."""
+        """Start the pump thread (idempotent).  With a journal attached
+        to the scheduler, the first start replays it: outstanding rids
+        re-enter through the same ``restore`` path crash recovery uses
+        (greedy streams resume token-identically across full process
+        death), finished rids repopulate :attr:`results` so late
+        reconnects still get their terminal."""
+        with self._lock:
+            self._cold_replay_locked()
         if self._thread is None or not self._thread.is_alive():
             self._stop.clear()
             self._thread = threading.Thread(
                 target=self._pump, name="scheduler-pump", daemon=True)
             self._thread.start()
         return self
+
+    def _cold_replay_locked(self) -> None:
+        j = self._sched.journal
+        if j is None or self._cold_replayed:
+            return
+        self._cold_replayed = True
+        rep = j.replay
+        if not rep.records:
+            return
+        t0 = time.perf_counter()
+        self._idem.update(rep.idempotency)
+        for rid, rec in rep.terminals.items():
+            self.results[rid] = Completion(
+                rid=rid,
+                prompt_len=int(rec.get("prompt_len", 0)),
+                tokens=np.asarray(rec.get("tokens", []), np.int32),
+                logprobs=np.asarray(rec.get("logprobs", []), np.float32),
+                n_steps=0,
+                ttft_s=float(rec.get("ttft_s", 0.0)),
+                status=rec.get("status", "completed"),
+                reason=rec.get("reason", ""),
+                tenant=rec.get("tenant"),
+                queue_s=float(rec.get("queue_s", 0.0)),
+            )
+        snaps = []
+        for rid in sorted(rep.outstanding):
+            rec = rep.outstanding[rid]
+            snaps.append(RequestSnapshot(
+                rid=rid,
+                prompt=tuple(int(t) for t in rec["prompt"]),
+                max_new=int(rec["max_new"]),
+                eos_id=rec.get("eos_id"),
+                deadline_s=rec.get("deadline_s"),
+                priority=int(rec.get("priority", 0)),
+                tenant=rec.get("tenant"),
+                submitted_s=float(rec["submitted_s"]),
+                preemptions=0,
+                tokens=tuple(int(t) for t in rec["tokens"]),
+                logprobs=tuple(float(x) for x in rec["logprobs"]),
+                ttft_s=0.0 if rec["tokens"] else None,
+                idem_key=rec.get("idem_key"),
+            ))
+        # restore even with nothing outstanding: the rid high-water
+        # mark must advance past every journaled rid, or fresh submits
+        # would collide with already-delivered results
+        self.replayed = self._sched.restore(
+            SchedulerSnapshot(rep.next_rid, tuple(snaps)))
+        for snap in snaps:
+            self._sent[snap.rid] = len(snap.tokens)
+            self._hist[snap.rid] = [
+                (i, int(t), float(lp))
+                for i, (t, lp) in enumerate(zip(snap.tokens,
+                                                snap.logprobs))]
+        self.replay_ms = (rep.replay_ms
+                          + (time.perf_counter() - t0) * 1e3)
+        if snaps:
+            self._idle.clear()
+            self._wake.set()
 
     def stop(self, *, drain: bool = True, timeout: float = 60.0) -> None:
         """Stop the pump; with ``drain`` (default) finish outstanding
@@ -174,16 +269,30 @@ class Supervisor:
                priority: int = 0,
                tenant: Optional[str] = None,
                on_event: Optional[Callable[[StreamEvent], None]] = None,
-               ) -> Union[int, Shed]:
+               idempotency_key: Optional[str] = None,
+               ) -> Union[int, Shed, Duplicate]:
         """Submit one request; subscription is atomic with admission, so
         no token can be emitted before ``on_event`` is attached.  A shed
         request (typed :class:`Shed` return) still delivers its terminal
-        done event to ``on_event`` before this returns."""
+        done event to ``on_event`` before this returns.
+
+        ``idempotency_key`` makes retries safe: a key already bound to
+        a rid (in this process, or replayed from the journal) returns
+        :class:`Duplicate` without enqueueing anything — the caller
+        attaches to the existing stream instead.  Keys bind only on
+        acceptance; a shed does not consume its key."""
         with self._lock:
+            if idempotency_key:
+                known = self._idem.get(idempotency_key)
+                if known is not None:
+                    return Duplicate(known)
             res = self._sched.submit(prompt, max_new=max_new,
                                      eos_id=eos_id, deadline_s=deadline_s,
-                                     priority=priority, tenant=tenant)
+                                     priority=priority, tenant=tenant,
+                                     idem_key=idempotency_key)
             rid = res if isinstance(res, int) else res.rid
+            if idempotency_key and isinstance(res, int):
+                self._idem[idempotency_key] = rid
             if on_event is not None:
                 self._subs[rid] = on_event
             self._sent.setdefault(rid, 0)
@@ -192,6 +301,114 @@ class Supervisor:
             self._idle.clear()
         self._wake.set()
         return res
+
+    def attach(self, rid: int, on_event: Callable[[StreamEvent], None],
+               *, from_index: int = 0) -> bool:
+        """(Re)attach a subscriber to an existing rid, replaying history
+        from absolute token index ``from_index`` (the ``Last-Event-ID``
+        reconnect path).  Replayed and live events share the same
+        exactly-once-per-index contract the original stream had.  For a
+        finished rid the terminal tokens + done replay immediately from
+        its :class:`Completion`.  Returns False for unknown rids
+        (never journaled, or compacted away)."""
+        def _safe(ev: StreamEvent) -> bool:
+            try:
+                on_event(ev)
+                return True
+            except Exception:
+                return False
+        with self._lock:
+            comp = self.results.get(rid)
+            if comp is not None:
+                for i in range(max(0, from_index), comp.tokens.size):
+                    if not _safe(StreamEvent(
+                            "token", rid, index=i,
+                            token=int(comp.tokens[i]),
+                            logprob=float(comp.logprobs[i]))):
+                        return True
+                _safe(StreamEvent("done", rid, completion=comp))
+                return True
+            if rid not in set(self._sched.outstanding_rids()):
+                return False
+            for i, tok, lp in self._hist.get(rid, [])[max(0, from_index):]:
+                if not _safe(StreamEvent("token", rid, index=i,
+                                         token=tok, logprob=lp)):
+                    return True
+            self._subs[rid] = on_event
+            self._sent.setdefault(rid, 0)
+            self._disc.pop(rid, None)   # reattached within the grace
+            self._idle.clear()
+        self._wake.set()
+        return True
+
+    def release(self, rid: int) -> None:
+        """A resumable stream's client disconnected: detach the
+        subscriber but keep the request running for ``resume_grace_s``
+        seconds.  A reconnect within the grace (:meth:`attach`) keeps
+        it alive; otherwise the pump cancels it — disconnects still
+        cannot orphan a slot, they just do it on a timer."""
+        with self._lock:
+            self._subs.pop(rid, None)
+            if rid not in self.results:
+                self._disc[rid] = time.perf_counter() + self._resume_grace_s
+        self._wake.set()
+
+    def retry_after_s(self) -> int:
+        """Derived ``Retry-After`` hint: the remaining drain step budget
+        times the observed per-step wall time (EWMA) — an upper bound on
+        when a draining server will have finished its in-flight work.
+        Falls back to 1 s before a drain began or a step has run.  Reads
+        only plain attributes (GIL-atomic), so it is safe to call from
+        the event loop without contending on the supervisor lock."""
+        ewma = self._step_ewma
+        budget = self._drain_budget
+        if ewma is None or budget is None:
+            return 1
+        remaining = max(1, budget - self._drain_steps)
+        return int(max(1, min(600, math.ceil(remaining * ewma))))
+
+    def idempotent_rid(self, key: Optional[str]) -> Optional[int]:
+        """The rid bound to ``key``, or None (unknown key / no key)."""
+        if not key:
+            return None
+        with self._lock:
+            return self._idem.get(key)
+
+    def journal_stats(self) -> Optional[dict]:
+        """Journal counters for ``/metrics`` (None when not durable)."""
+        j = self._sched.journal
+        if j is None:
+            return None
+        with self._lock:
+            stats = j.stats()
+        stats["replayed_requests"] = self.replayed
+        stats["restore_replay_ms"] = round(self.replay_ms, 3)
+        return stats
+
+    def audit_clean(self) -> bool:
+        """Run the block-conservation audit at a step boundary (the
+        lock serializes against the pump)."""
+        with self._lock:
+            return not self._sched.audit_blocks()
+
+    def metrics_payload(self) -> dict:
+        """The ``/metrics`` document: scheduler counters (per-tenant
+        included) + supervision + durability state, assembled under the
+        lock so gauges are step-boundary-consistent.  Call from a worker
+        thread, not the event loop."""
+        with self._lock:
+            payload = dataclasses.asdict(self._sched.metrics)
+            payload.update(
+                pending=self._sched.pending,
+                draining=self.draining,
+                recoveries=self.recoveries,
+                audit_clean=int(not self._sched.audit_blocks()),
+            )
+        stats = self.journal_stats()
+        if stats is not None:
+            payload["journal"] = stats
+        payload["retry_after_s"] = self.retry_after_s()
+        return payload
 
     def cancel(self, rid: int) -> bool:
         """Cancel ``rid`` (disconnect propagation).  Remembered across a
@@ -249,6 +466,15 @@ class Supervisor:
                 # connection-level handler owns client-visible errors
                 self._subs.pop(rid, None)
 
+    def _emit_token_locked(self, rid: int, idx: int, tok: int,
+                           lp: float) -> None:
+        """Deliver one token and record it in the per-rid history the
+        reconnect path replays from."""
+        self._hist.setdefault(rid, []).append((idx, tok, lp))
+        self._emit(rid, StreamEvent("token", rid, index=idx,
+                                    token=tok, logprob=lp))
+        self._sent[rid] = idx + 1
+
     def _deliver_locked(self) -> None:
         """Route buffered tokens (deduplicated on absolute index) and
         terminal Completions to subscribers."""
@@ -258,20 +484,24 @@ class Supervisor:
             if idx < sent:
                 continue            # recovery re-decode: already delivered
             progressed = True
-            self._emit(rid, StreamEvent("token", rid, index=idx,
-                                        token=tok, logprob=lp))
-            self._sent[rid] = idx + 1
+            self._emit_token_locked(rid, idx, tok, lp)
         for rid, comp in self._sched.pop_results().items():
             progressed = True
             sent = self._sent.get(rid, 0)
             for i in range(sent, comp.tokens.size):
-                self._emit(rid, StreamEvent(
-                    "token", rid, index=i, token=int(comp.tokens[i]),
-                    logprob=float(comp.logprobs[i])))
+                self._emit_token_locked(rid, i, int(comp.tokens[i]),
+                                        float(comp.logprobs[i]))
             self.results[rid] = comp
             self._emit(rid, StreamEvent("done", rid, completion=comp))
+            if self._request_log is not None:
+                try:
+                    self._request_log.log(comp)
+                except OSError:
+                    pass    # observability must not take the pump down
             self._subs.pop(rid, None)
             self._sent.pop(rid, None)
+            self._hist.pop(rid, None)   # reconnects now replay from comp
+            self._disc.pop(rid, None)
             self._cancelled.discard(rid)
         if progressed:
             self._consecutive = 0
@@ -297,10 +527,8 @@ class Supervisor:
             for rs in snap.requests:
                 sent = self._sent.get(rs.rid, 0)
                 for i in range(sent, len(rs.tokens)):
-                    self._emit(rs.rid, StreamEvent(
-                        "token", rs.rid, index=i, token=int(rs.tokens[i]),
-                        logprob=float(rs.logprobs[i])))
-                    self._sent[rs.rid] = i + 1
+                    self._emit_token_locked(rs.rid, i, int(rs.tokens[i]),
+                                            float(rs.logprobs[i]))
             for rid in sorted(self._cancelled):
                 self._sched.cancel(rid)
         else:
@@ -331,6 +559,12 @@ class Supervisor:
                 self._deliver_locked()
                 idle = self._sched.pending == 0
                 if idle:
+                    if not self._idle.is_set():
+                        j = self._sched.journal
+                        if j is not None:
+                            # idle transition: make pending terminals
+                            # durable and let the journal compact
+                            j.commit(idle=True)
                     self._idle.set()
             if idle:
                 self._wake.wait(self._idle_poll_s)
@@ -340,11 +574,27 @@ class Supervisor:
                 if self._sched.pending == 0:
                     continue
                 self._idle.clear()
+                now = time.perf_counter()
+                for rid, deadline in list(self._disc.items()):
+                    if now >= deadline and rid not in self._subs:
+                        # resumable stream's grace expired unreclaimed:
+                        # disconnect propagation, on a timer
+                        self._disc.pop(rid, None)
+                        self._cancelled.add(rid)
+                        self._sched.cancel(rid)
                 try:
                     faults = self._sched.faults
+                    if faults is not None and faults.should_kill():
+                        # chaos: full process death — no snapshot, no
+                        # goodbye; only the journal survives this
+                        os.kill(os.getpid(), signal.SIGKILL)
                     if faults is not None and faults.should_crash():
                         raise _InjectedCrash("fault-injected crash")
+                    t_step = time.perf_counter()
                     self._sched.step()
+                    dt = time.perf_counter() - t_step
+                    self._step_ewma = (dt if self._step_ewma is None
+                                       else 0.8 * self._step_ewma + 0.2 * dt)
                     sig = self._sched.progress_signature()
                     self._stalled = (self._stalled + 1
                                      if sig == self._last_sig else 0)

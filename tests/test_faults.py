@@ -96,7 +96,7 @@ class TestInjectorPurity:
         assert FaultInjector._HOOKS[:4] == ("delay", "preempt",
                                             "expire", "drop")
         assert FaultInjector._HOOKS[4:] == ("crash", "disconnect",
-                                            "stall")
+                                            "stall", "kill")
 
 
 class TestSupervisionHookPurity:

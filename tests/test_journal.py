@@ -1,0 +1,396 @@
+"""Durable request journal (serve.journal, DESIGN.md §5.1): record
+framing and replay semantics, torn-tail truncation at *every* byte
+offset (a SIGKILL can land mid-write anywhere), cold-restart recovery
+through ``Supervisor.start`` with greedy-token-identical resumes, and
+the structured per-request JSONL log."""
+import json
+import os
+import struct
+
+import numpy as np
+import pytest
+
+from repro.serve.journal import Journal, RequestLog
+
+# ---------------------------------------------------------------------
+# Pure journal semantics (no model, no jax)
+# ---------------------------------------------------------------------
+
+
+def _write_reference(path, *, fsync="none"):
+    """A small but representative record sequence; returns the journal's
+    record dicts in append order (for boundary bookkeeping)."""
+    j = Journal(path, fsync=fsync)
+    j.append_submit(0, [5, 6, 7], max_new=8, eos_id=None, deadline_s=None,
+                    priority=0, tenant="acme", submitted_s=1.0,
+                    idem_key="key-0")
+    j.append_submit(1, [9, 10], max_new=4, eos_id=2, deadline_s=3.5,
+                    priority=1, tenant=None, submitted_s=1.1)
+    j.append_tokens(0, 0, [11, 12], [-0.5, -0.25])
+    j.append_tokens(1, 0, [13], [-1.0])
+    # re-decode after a crash overwrites the same indices
+    j.append_tokens(0, 1, [12, 14], [-0.25, -0.125])
+    j.append_terminal(1, status="completed", reason="", prompt_len=2,
+                      tokens=[13, 15], logprobs=[-1.0, -0.75],
+                      ttft_s=0.01, queue_s=0.002, tenant=None)
+    j.commit()
+    j.close()
+    return j
+
+
+class TestReplaySemantics:
+    def test_round_trip(self, tmp_path):
+        _write_reference(str(tmp_path))
+        j = Journal(str(tmp_path))
+        rep = j.replay
+        assert rep.records == 6 and rep.truncated_bytes == 0
+        assert rep.next_rid == 2
+        assert set(rep.outstanding) == {0}
+        req = rep.outstanding[0]
+        assert req["prompt"] == [5, 6, 7] and req["tenant"] == "acme"
+        # tokens records applied with overwrite-at-start semantics
+        assert req["tokens"] == [11, 12, 14]
+        assert req["logprobs"] == [-0.5, -0.25, -0.125]
+        assert set(rep.terminals) == {1}
+        assert rep.terminals[1]["tokens"] == [13, 15]
+        assert rep.idempotency == {"key-0": 0}
+        assert rep.replay_ms >= 0.0
+        j.close()
+
+    def test_terminal_clears_outstanding_and_binds_idem(self, tmp_path):
+        j = Journal(str(tmp_path), fsync="none")
+        j.append_submit(3, [1], max_new=2, eos_id=None, deadline_s=None,
+                        priority=0, tenant=None, submitted_s=0.0)
+        j.append_terminal(3, status="completed", reason="", prompt_len=1,
+                          tokens=[7], logprobs=[-0.1], ttft_s=0.0,
+                          idem_key="late-key")
+        j.close()
+        rep = Journal(str(tmp_path)).replay
+        assert rep.outstanding == {} and set(rep.terminals) == {3}
+        assert rep.idempotency == {"late-key": 3}
+        assert rep.next_rid == 4
+
+    def test_unknown_rid_tokens_tolerated(self, tmp_path):
+        j = Journal(str(tmp_path), fsync="none")
+        j.append_tokens(42, 0, [1, 2], [-0.1, -0.2])
+        j.append_terminal(43, status="shed", reason="queue-full",
+                          prompt_len=0, tokens=[], logprobs=[], ttft_s=0.0)
+        j.close()
+        rep = Journal(str(tmp_path)).replay
+        assert rep.outstanding == {}
+        assert set(rep.terminals) == {43}
+        assert rep.next_rid == 44      # terminals advance the high-water
+
+    def test_bad_fsync_policy_rejected(self, tmp_path):
+        with pytest.raises(ValueError, match="fsync"):
+            Journal(str(tmp_path), fsync="sometimes")
+
+    def test_segment_rotation_and_idle_compaction(self, tmp_path):
+        j = Journal(str(tmp_path), fsync="none", segment_bytes=128)
+        for rid in range(8):
+            j.append_submit(rid, [1, 2, 3, 4], max_new=4, eos_id=None,
+                            deadline_s=None, priority=0, tenant=None,
+                            submitted_s=0.0)
+            j.commit()
+        assert j.segments() > 1        # rotated past the tiny budget
+        for rid in range(8):
+            j.append_terminal(rid, status="completed", reason="",
+                              prompt_len=4, tokens=[9], logprobs=[-0.1],
+                              ttft_s=0.0)
+        j.commit(idle=True)            # nothing outstanding: compact
+        assert j.segments() == 1 and j.total_bytes() == 0
+        rep = Journal(str(tmp_path)).replay
+        assert rep.records == 0 and rep.outstanding == {}
+        j.close()
+
+
+class TestTornTail:
+    def test_truncation_at_every_byte_offset(self, tmp_path):
+        """A kill can land mid-write at any byte.  For every prefix
+        length the journal must open cleanly, keep exactly the records
+        fully contained in the prefix (losing at most the torn last
+        one), cut the file back to the last good boundary, and replay
+        to the state obtained by applying just the kept records."""
+        ref_dir = tmp_path / "ref"
+        _write_reference(str(ref_dir))
+        (seg,) = [os.path.join(str(ref_dir), n)
+                  for n in os.listdir(str(ref_dir))]
+        blob = open(seg, "rb").read()
+        full = Journal(str(ref_dir))
+        # record boundaries, from a clean replay of the intact file
+        bounds = [0]
+        records = []
+        off = 0
+        while off < len(blob):
+            (ln,) = struct.unpack_from("<I", blob, off)
+            records.append(json.loads(
+                blob[off + 8:off + 8 + ln].decode()))
+            off += 8 + ln
+            bounds.append(off)
+        assert len(records) == full.replay.records
+        full.close()
+
+        for cut in range(len(blob) + 1):
+            d = tmp_path / f"cut-{cut}"
+            os.makedirs(str(d))
+            with open(os.path.join(str(d), os.path.basename(seg)),
+                      "wb") as f:
+                f.write(blob[:cut])
+            j = Journal(str(d))
+            n_keep = sum(1 for b in bounds[1:] if b <= cut)
+            good = bounds[n_keep]
+            assert j.replay.records == n_keep, f"cut={cut}"
+            assert j.replay.truncated_bytes == cut - good, f"cut={cut}"
+            # the torn bytes are gone from disk: reopening is clean
+            j.close()
+            j2 = Journal(str(d))
+            assert j2.replay.records == n_keep
+            assert j2.replay.truncated_bytes == 0
+            # replayed state == state from exactly the kept records
+            out, term, idem = {}, {}, {}
+            for rec in records[:n_keep]:
+                Journal._apply(rec, out, term, idem)
+            assert j2.replay.outstanding == out, f"cut={cut}"
+            assert j2.replay.terminals == term, f"cut={cut}"
+            assert j2.replay.idempotency == idem, f"cut={cut}"
+            j2.close()
+
+    def test_corrupt_middle_drops_tail_and_later_segments(self, tmp_path):
+        j = Journal(str(tmp_path), fsync="none", segment_bytes=96)
+        for rid in range(6):
+            j.append_submit(rid, [1, 2], max_new=2, eos_id=None,
+                            deadline_s=None, priority=0, tenant=None,
+                            submitted_s=0.0)
+            j.commit()
+        segs = sorted(os.listdir(str(tmp_path)))
+        assert len(segs) >= 2
+        j.close()
+        # flip a payload byte early in the first segment
+        first = os.path.join(str(tmp_path), segs[0])
+        blob = bytearray(open(first, "rb").read())
+        blob[10] ^= 0xFF
+        open(first, "wb").write(bytes(blob))
+        rep = Journal(str(tmp_path)).replay
+        # everything from the corrupt record on is dropped, including
+        # the later segments (they may depend on the lost records)
+        assert rep.records == 0
+        assert sorted(os.listdir(str(tmp_path)))[0] == segs[0]
+        assert len([n for n in os.listdir(str(tmp_path))
+                    if n.startswith("wal-")]) == 1
+
+
+class TestRequestLog:
+    def test_one_line_per_terminal(self, tmp_path):
+        import dataclasses
+
+        from repro.serve.scheduler import Completion
+
+        path = str(tmp_path / "requests.jsonl")
+        log = RequestLog(path)
+        comp = Completion(rid=7, prompt_len=3,
+                          tokens=np.asarray([1, 2], np.int32),
+                          logprobs=np.asarray([-0.5, -0.25], np.float32),
+                          n_steps=2, ttft_s=0.125, status="completed",
+                          reason="", tenant="acme", queue_s=0.5)
+        log.log(comp)
+        log.log(dataclasses.replace(comp, rid=8, status="shed",
+                                    reason="queue-full"))
+        log.close()
+        lines = [json.loads(ln) for ln in open(path)]
+        assert [ln["rid"] for ln in lines] == [7, 8]
+        assert lines[0]["tenant"] == "acme"
+        assert lines[0]["status"] == "completed"
+        assert lines[0]["tokens"] == 2
+        assert lines[0]["ttft_s"] == 0.125
+        assert lines[0]["queue_s"] == 0.5
+        assert lines[1]["reason"] == "queue-full"
+        assert all("ts" in ln for ln in lines)
+
+
+# ---------------------------------------------------------------------
+# Cold-restart recovery through the scheduler + supervisor
+# ---------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    import jax
+
+    from repro.configs import ARCHS
+    from repro.models import build_model
+
+    cfg = ARCHS["qwen2-0.5b"].reduced()
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    return cfg, api, params
+
+
+def _sched(api, params, journal, **kw):
+    from repro.serve import Scheduler
+
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("cache_len", 64)
+    kw.setdefault("buckets", (8, 16))
+    kw.setdefault("block_size", 8)
+    kw.setdefault("stream_tokens", True)
+    kw.setdefault("faults", False)
+    return Scheduler(api, params, journal=journal, **kw)
+
+
+def _ref_tokens(api, params, prompt, max_new):
+    import jax
+
+    from repro.serve import generate
+
+    out = generate(api, params, jax.numpy.asarray(prompt)[None],
+                   max_new=max_new)
+    return np.asarray(out["tokens"][0])
+
+
+def _prompts(cfg, n, seed=0, size=8):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab, size).astype(np.int32)
+            for _ in range(n)]
+
+
+class TestColdRestart:
+    def test_mid_stream_death_resumes_token_identical(self, qwen, tmp_path):
+        """Kill the first supervisor mid-decode (no drain, no snapshot
+        handoff); a second scheduler+supervisor on the same journal
+        directory must re-admit the outstanding requests and finish
+        every stream greedy-token-identically, audit clean."""
+        from repro.serve import FaultInjector, Supervisor
+        from test_supervisor import Collector
+
+        cfg, api, params = qwen
+        p1, p2 = _prompts(cfg, 2, seed=11)
+        jdir = str(tmp_path / "journal")
+
+        sched1 = _sched(api, params, Journal(jdir, fsync="record"),
+                        faults=FaultInjector(0, delay_p=1.0,
+                                             max_delay_s=0.05))
+        sup1 = Supervisor(sched1).start()
+        col1 = Collector()
+        r1 = sup1.submit(p1, max_new=24, on_event=col1,
+                         idempotency_key="cold-1")
+        r2 = sup1.submit(p2, max_new=16, on_event=col1)
+        assert col1.first_token.wait(60.0)
+        # process death: abandon the supervisor mid-flight; only what
+        # the journal already holds survives
+        sup1.stop(drain=False)
+        sched1.journal.close()
+        partial = {rid: [t for _, t in col1.tokens.get(rid, [])]
+                   for rid in (r1, r2)}
+        assert any(partial.values())
+
+        sched2 = _sched(api, params, Journal(jdir, fsync="record"))
+        sup2 = Supervisor(sched2).start()
+        try:
+            assert sup2.replayed == 2 and sup2.replay_ms >= 0.0
+            # the idempotency binding survived the restart
+            assert sup2.idempotent_rid("cold-1") == r1
+            col2 = Collector()
+            assert sup2.attach(r1, col2)
+            assert sup2.attach(r2, col2)
+            for rid, p, m in ((r1, p1, 24), (r2, p2, 16)):
+                comp = col2.wait_done(rid)
+                assert comp.status == "completed"
+                ref = _ref_tokens(api, params, p, m)
+                np.testing.assert_array_equal(comp.tokens, ref)
+                # the reattached stream saw every index exactly once —
+                # including the tokens generated before the death
+                assert [i for i, _ in col2.tokens[rid]] == list(range(m))
+                assert [t for _, t in col2.tokens[rid]] == \
+                    [int(t) for t in ref]
+                assert len(col2.done[rid]) == 1
+                # what the first process delivered is a prefix of it
+                assert partial[rid] == \
+                    [int(t) for t in ref[:len(partial[rid])]]
+            assert sup2.wait_idle(60.0)
+            assert sched2.audit_blocks() == []
+            # fresh submits never collide with replayed rids
+            col3 = Collector()
+            r3 = sup2.submit(p1, max_new=4, on_event=col3)
+            assert r3 not in (r1, r2)
+            col3.wait_done(r3)
+        finally:
+            sup2.stop(drain=False)
+            sched2.journal.close()
+
+    def test_finished_rid_replays_terminal_after_restart(self, qwen,
+                                                         tmp_path):
+        from repro.serve import Supervisor
+        from test_supervisor import Collector
+
+        cfg, api, params = qwen
+        (p,) = _prompts(cfg, 1, seed=12)
+        jdir = str(tmp_path / "journal")
+
+        sched1 = _sched(api, params, Journal(jdir, fsync="record"))
+        sup1 = Supervisor(sched1).start()
+        col1 = Collector()
+        rid = sup1.submit(p, max_new=6, on_event=col1)
+        comp1 = col1.wait_done(rid)
+        sup1.stop(drain=False)
+        sched1.journal.close()
+
+        sched2 = _sched(api, params, Journal(jdir, fsync="record"))
+        sup2 = Supervisor(sched2).start()
+        try:
+            assert sup2.replayed == 0          # nothing was outstanding
+            col2 = Collector()
+            assert sup2.attach(rid, col2)      # replays the Completion
+            comp2 = col2.wait_done(rid, timeout=5.0)
+            assert comp2.status == "completed"
+            np.testing.assert_array_equal(comp2.tokens, comp1.tokens)
+            assert [t for _, t in col2.tokens[rid]] == \
+                [int(t) for t in comp1.tokens]
+            assert not sup2.attach(99999, col2)    # unknown rid
+        finally:
+            sup2.stop(drain=False)
+            sched2.journal.close()
+
+    def test_truncated_journal_replays_to_consistent_scheduler_state(
+            self, qwen, tmp_path):
+        """The scheduler half of the torn-tail property: cut the
+        journal at a handful of offsets (every record boundary plus
+        mid-record cuts) and require each prefix to restore into a
+        scheduler that finishes cleanly with a clean block audit."""
+        from repro.serve import Supervisor
+        from test_supervisor import Collector
+
+        cfg, api, params = qwen
+        p1, p2 = _prompts(cfg, 2, seed=13)
+        jdir = str(tmp_path / "journal")
+        sched1 = _sched(api, params, Journal(jdir, fsync="record"))
+        sup1 = Supervisor(sched1).start()
+        col1 = Collector()
+        sup1.submit(p1, max_new=8, on_event=col1)
+        rid2 = sup1.submit(p2, max_new=8, on_event=col1)
+        col1.wait_done(rid2)
+        sup1.stop(drain=False)
+        sched1.journal.close()
+        (seg,) = [os.path.join(jdir, n) for n in os.listdir(jdir)]
+        blob = open(seg, "rb").read()
+
+        rng = np.random.default_rng(13)
+        cuts = sorted({0, len(blob), *rng.integers(
+            1, len(blob), size=6).tolist()})
+        for cut in cuts:
+            d = str(tmp_path / f"cut-{cut}")
+            os.makedirs(d)
+            with open(os.path.join(d, os.path.basename(seg)), "wb") as f:
+                f.write(blob[:cut])
+            sched = _sched(api, params, Journal(d, fsync="record"))
+            sup = Supervisor(sched).start()
+            try:
+                cols = Collector()
+                for rid in list(sched.outstanding_rids()):
+                    assert sup.attach(rid, cols)
+                    comp = cols.wait_done(rid)
+                    assert comp.status == "completed", f"cut={cut}"
+                assert sup.wait_idle(60.0)
+                assert sched.audit_blocks() == [], f"cut={cut}"
+            finally:
+                sup.stop(drain=False)
+                sched.journal.close()

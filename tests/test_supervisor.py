@@ -258,6 +258,164 @@ class TestCrashRecovery:
             sup.stop(drain=False)
 
 
+class TestResumable:
+    def test_release_grace_expiry_cancels(self, qwen):
+        """A released (disconnected-but-resumable) stream that nobody
+        reclaims is cancelled once its grace window expires — the
+        no-orphaned-slot invariant, on a timer."""
+        cfg, api, params = qwen
+        (p,) = _prompts(cfg, 1, seed=20)
+        sup = Supervisor(_sched(
+            api, params,
+            faults=FaultInjector(0, delay_p=1.0, max_delay_s=0.05),
+        ), resume_grace_s=0.0).start()
+        try:
+            col = Collector()
+            rid = sup.submit(p, max_new=48, on_event=col)
+            assert col.first_token.wait(60.0)
+            sup.release(rid)            # detaches col: poll results
+            t0 = time.monotonic()
+            while rid not in sup.results and time.monotonic() - t0 < 60:
+                time.sleep(0.02)
+            assert sup.results[rid].status == "cancelled"
+            assert sup.wait_idle(60.0)
+            assert sup.scheduler.audit_blocks() == []
+        finally:
+            sup.stop(drain=False)
+
+    def test_release_then_attach_resumes_within_grace(self, qwen):
+        cfg, api, params = qwen
+        (p,) = _prompts(cfg, 1, seed=21)
+        sup = Supervisor(_sched(
+            api, params,
+            faults=FaultInjector(0, delay_p=1.0, max_delay_s=0.05),
+        ), resume_grace_s=30.0).start()
+        try:
+            col = Collector()
+            rid = sup.submit(p, max_new=16, on_event=col)
+            assert col.first_token.wait(60.0)
+            sup.release(rid)
+            # reconnect: replay everything from index 0 into a fresh
+            # subscriber; the stream must still be exactly-once-per-index
+            col2 = Collector()
+            assert sup.attach(rid, col2)
+            comp = col2.wait_done(rid)
+            assert comp.status == "completed"
+            ref = _ref_tokens(api, params, p, 16)
+            assert [i for i, _ in col2.tokens[rid]] == list(range(16))
+            assert [t for _, t in col2.tokens[rid]] == \
+                [int(t) for t in ref]
+            assert len(col2.done[rid]) == 1
+        finally:
+            sup.stop(drain=False)
+
+    def test_idempotency_key_binds_once(self, qwen):
+        from repro.serve import Duplicate
+
+        cfg, api, params = qwen
+        (p,) = _prompts(cfg, 1, seed=22)
+        sup = Supervisor(_sched(api, params)).start()
+        try:
+            col = Collector()
+            rid = sup.submit(p, max_new=4, on_event=col,
+                             idempotency_key="once")
+            assert isinstance(rid, int)
+            dup = sup.submit(p, max_new=4, idempotency_key="once")
+            assert isinstance(dup, Duplicate) and dup.rid == rid
+            assert sup.idempotent_rid("once") == rid
+            assert sup.idempotent_rid(None) is None
+            col.wait_done(rid)
+            # the binding outlives the terminal: late retries re-attach
+            dup2 = sup.submit(p, max_new=4, idempotency_key="once")
+            assert isinstance(dup2, Duplicate) and dup2.rid == rid
+        finally:
+            sup.stop(drain=False)
+
+    def test_shed_does_not_consume_idempotency_key(self, qwen):
+        """A shed is a rejection, not acceptance: the client's retry
+        with the same key must be able to enqueue for real."""
+        cfg, api, params = qwen
+        (p,) = _prompts(cfg, 1, seed=23)
+        sup = Supervisor(_sched(api, params)).start()
+        try:
+            sup.begin_drain()
+            res = sup.submit(p, max_new=4, idempotency_key="retry-me")
+            assert isinstance(res, Shed)
+            assert sup.idempotent_rid("retry-me") is None
+        finally:
+            sup.stop(drain=False)
+
+
+class TestObservability:
+    def test_retry_after_derived_from_drain_budget(self, qwen):
+        cfg, api, params = qwen
+        sup = Supervisor(_sched(api, params)).start()
+        try:
+            assert sup.retry_after_s() == 1     # no drain, no steps yet
+            with sup._lock:
+                sup._step_ewma = 0.5
+                sup._drain_budget = 100
+                sup._drain_steps = 60
+            assert sup.retry_after_s() == 20    # ceil(40 * 0.5)
+            with sup._lock:
+                sup._drain_steps = 100000       # over budget: floor at 1
+            assert sup.retry_after_s() == 1
+            with sup._lock:
+                sup._step_ewma = 60.0
+                sup._drain_steps = 0
+            assert sup.retry_after_s() == 600   # clamped to the ceiling
+        finally:
+            sup.stop(drain=False)
+
+    def test_request_log_one_line_per_terminal(self, qwen, tmp_path):
+        from repro.serve import RequestLog
+
+        cfg, api, params = qwen
+        (p,) = _prompts(cfg, 1, seed=24)
+        path = str(tmp_path / "requests.jsonl")
+        sup = Supervisor(_sched(api, params),
+                         request_log=RequestLog(path)).start()
+        try:
+            col = Collector()
+            rid = sup.submit(p, max_new=4, on_event=col, tenant="acme")
+            col.wait_done(rid)
+            sup.begin_drain()
+            res = sup.submit(p, max_new=4, on_event=col)
+            assert isinstance(res, Shed)
+            col.wait_done(res.rid)
+        finally:
+            sup.stop(drain=False)
+        import json
+        lines = [json.loads(ln) for ln in open(path)]
+        by_rid = {ln["rid"]: ln for ln in lines}
+        assert set(by_rid) == {rid, res.rid}
+        assert by_rid[rid]["status"] == "completed"
+        assert by_rid[rid]["tenant"] == "acme"
+        assert by_rid[rid]["tokens"] == 4
+        assert by_rid[rid]["queue_s"] >= 0.0
+        assert by_rid[res.rid]["status"] == "shed"
+        assert by_rid[res.rid]["reason"].startswith("draining")
+
+    def test_per_tenant_counters(self, qwen):
+        cfg, api, params = qwen
+        p1, p2 = _prompts(cfg, 2, seed=25)
+        sup = Supervisor(_sched(api, params)).start()
+        try:
+            col = Collector()
+            r1 = sup.submit(p1, max_new=4, on_event=col, tenant="acme")
+            r2 = sup.submit(p2, max_new=4, on_event=col)
+            col.wait_done(r1)
+            col.wait_done(r2)
+            t = sup.scheduler.metrics.tenants
+            assert t["acme"]["submitted"] == 1
+            assert t["acme"]["completed"] == 1
+            assert t["acme"]["tokens"] == 4
+            assert t["-"]["submitted"] == 1     # no tenant -> "-" bucket
+            assert t["-"]["completed"] == 1
+        finally:
+            sup.stop(drain=False)
+
+
 class TestDrain:
     def test_drain_finishes_inflight_and_sheds_new(self, qwen):
         cfg, api, params = qwen

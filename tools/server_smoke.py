@@ -15,13 +15,27 @@ drives three probes through real sockets:
 3. **drain** — SIGTERM semantics via ``begin_drain()``: /readyz and a
    fresh submit must both answer 503 with a Retry-After header.
 
+``--kill-restart`` runs the durability smoke instead (its own CI step,
+next to the drain smoke): a **subprocess** server on a journal
+directory is SIGKILLed mid-stream, restarted on the same journal, and
+the resumable client's reconnect loop must assemble a stream
+token-identical to a cold in-process ``generate`` — exactly one done
+frame, no index gaps, clean block audit after the dust settles
+(DESIGN.md §5.1).
+
 Horizons are slowed with a seeded delay injector so the mid-stream
 hangup deterministically lands while the request is still decoding.
 Any failed probe prints the reason and exits 1.
 """
 from __future__ import annotations
 
+import argparse
+import os
+import signal
+import socket
+import subprocess
 import sys
+import tempfile
 import time
 
 import numpy as np
@@ -109,5 +123,171 @@ def main() -> int:
     return 0
 
 
+def kill_restart(max_new: int = 24, seed: int = 0) -> int:
+    """SIGKILL -> restart -> reconnect: the durability smoke.
+
+    The in-process reference and the subprocess server build the same
+    reduced model from the same seed, so greedy decode must produce the
+    same tokens — including across full process death in the middle of
+    the stream.
+    """
+    import threading
+
+    import jax
+    import repro
+
+    from repro.configs import ARCHS
+    from repro.models import build_model
+    from repro.serve import generate
+    from repro.serve.client import get_json, stream_generate
+
+    cfg = ARCHS["qwen2-0.5b"].reduced()
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(seed))
+    rng = np.random.default_rng(seed)
+    prompt = rng.integers(0, cfg.vocab, 8).astype(np.int32)
+    ref = [int(t) for t in np.asarray(
+        generate(api, params, jax.numpy.asarray(prompt)[None],
+                 max_new=max_new)["tokens"][0])]
+
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        port = s.getsockname()[1]
+
+    # repro is a namespace package (no __init__.py): __path__, not __file__
+    src = os.path.dirname(os.path.abspath(list(repro.__path__)[0]))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("REPRO_FAULTS", None)   # no suite-wide injector: the kill
+    # (plus the explicit delay flags below) is the only chaos here
+
+    def spawn(jdir: str, log_path: str) -> subprocess.Popen:
+        log = open(log_path, "ab")
+        try:
+            return subprocess.Popen(
+                [sys.executable, "-m", "repro.launch.serve",
+                 "--arch", "qwen2-0.5b", "--reduced", "--listen",
+                 "--host", "127.0.0.1", "--port", str(port),
+                 "--journal-dir", jdir, "--fsync", "horizon",
+                 "--max-batch", "2", "--cache-len", "64",
+                 "--horizon", "4", "--seed", str(seed),
+                 # slow horizons (output-preserving, seeded) so the
+                 # SIGKILL deterministically lands mid-stream instead
+                 # of racing a millisecond decode to the done frame
+                 "--faults-seed", str(seed), "--fault-delay-p", "1.0",
+                 "--fault-max-delay", "0.25"],
+                env=env, stdout=log, stderr=log,
+                stdin=subprocess.DEVNULL)
+        finally:
+            log.close()
+
+    def wait_ready(proc: subprocess.Popen, timeout: float = 600.0) -> None:
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            if proc.poll() is not None:
+                raise RuntimeError(
+                    f"server exited with {proc.returncode} before ready")
+            try:
+                if get_json("127.0.0.1", port, "/readyz",
+                            timeout=2.0)["status"] == 200:
+                    return
+            except OSError:
+                pass
+            time.sleep(0.1)
+        raise RuntimeError("server not ready in time")
+
+    failures = []
+
+    def check(name, ok, detail=""):
+        print(f"[smoke] {name}: {'ok' if ok else 'FAIL'} {detail}")
+        if not ok:
+            failures.append(name)
+
+    with tempfile.TemporaryDirectory(prefix="repro-smoke-") as tmp:
+        jdir = os.path.join(tmp, "journal")
+        proc = spawn(jdir, os.path.join(tmp, "server-1.log"))
+        result = {}
+        try:
+            wait_ready(proc)
+
+            def client():
+                result.update(stream_generate(
+                    "127.0.0.1", port, prompt, max_new=max_new,
+                    resume=True, max_reconnects=300, backoff_cap_s=1.0,
+                    backoff_seed=seed, idempotency_key="smoke-restart",
+                    timeout=300.0))
+
+            th = threading.Thread(target=client)
+            th.start()
+            # kill once the submit is durable and panels are flowing —
+            # mid-stream, several horizons short of the done frame
+            deadline = time.monotonic() + 600.0
+            while time.monotonic() < deadline:
+                try:
+                    m = get_json("127.0.0.1", port, "/metrics",
+                                 timeout=5.0)
+                except OSError:
+                    m = {}
+                if m.get("journal", {}).get("records_appended", 0) >= 3:
+                    break
+                time.sleep(0.05)
+            time.sleep(0.2)
+            proc.send_signal(signal.SIGKILL)
+            proc.wait(timeout=30.0)
+            print("[smoke] server SIGKILLed mid-stream; restarting on "
+                  "the same journal")
+
+            proc = spawn(jdir, os.path.join(tmp, "server-2.log"))
+            wait_ready(proc)
+            th.join(timeout=600.0)
+            check("client-finished", not th.is_alive())
+
+            m = get_json("127.0.0.1", port, "/metrics", timeout=30.0)
+            jstats = m.get("journal", {})
+            n = len(result.get("tokens", []))
+            check("resume-parity",
+                  result.get("done") is not None
+                  and result["done"].get("status") == "completed"
+                  and result.get("tokens") == ref,
+                  f"tokens={result.get('tokens')} ref={ref}")
+            check("exactly-once",
+                  result.get("indices") == list(range(n))
+                  and n == len(ref),
+                  f"indices={result.get('indices')}")
+            check("reconnected", result.get("reconnects", 0) >= 1,
+                  f"reconnects={result.get('reconnects')}")
+            check("journal-replayed",
+                  jstats.get("replayed_requests", 0) >= 1,
+                  f"journal={jstats}")
+            check("audit-clean-after-restart",
+                  bool(m.get("audit_clean", 0)), f"metrics={m}")
+        finally:
+            for name in ("server-1.log", "server-2.log"):
+                path = os.path.join(tmp, name)
+                if failures and os.path.exists(path):
+                    sys.stderr.write(f"--- {name} ---\n")
+                    with open(path, "r", errors="replace") as fh:
+                        sys.stderr.write(fh.read())
+            if proc.poll() is None:
+                proc.terminate()
+                try:
+                    proc.wait(timeout=60.0)
+                except subprocess.TimeoutExpired:
+                    proc.kill()
+                    proc.wait(timeout=30.0)
+
+    if failures:
+        print(f"[smoke] FAILED: {failures}", file=sys.stderr)
+        return 1
+    print("[smoke] kill-restart probes passed")
+    return 0
+
+
 if __name__ == "__main__":
-    sys.exit(main())
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--kill-restart", action="store_true",
+                    help="run the SIGKILL -> restart -> reconnect "
+                         "durability smoke instead of the in-process "
+                         "probes")
+    args = ap.parse_args()
+    sys.exit(kill_restart() if args.kill_restart else main())
